@@ -1,0 +1,63 @@
+//! Learn per-layer energy allocations (paper Sec. V / Fig. 6) and compare
+//! uniform vs dynamic precision at the same average energy/MAC.
+//!
+//! Run: `cargo run --release --example energy_allocation`
+//! (optionally DYNAPREC_FULL=1 for the longer protocol).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use dynaprec::data::Dataset;
+use dynaprec::ops::ModelOps;
+use dynaprec::optim::{train_energy, Granularity, TrainCfg};
+use dynaprec::runtime::artifact::ModelBundle;
+use dynaprec::runtime::Engine;
+
+fn main() -> Result<()> {
+    let dir = dynaprec::artifacts_dir();
+    let engine = Arc::new(Engine::cpu()?);
+    let bundle = ModelBundle::load(engine, &dir, "tiny_resnet")?;
+    let meta = bundle.meta.clone();
+    let train = Dataset::load(&dir, "vision", "trainsub")?;
+    let eval = Dataset::load(&dir, "vision", "eval")?;
+    let ops = ModelOps::new(&bundle);
+
+    let steps = if dynaprec::full_mode() { 120 } else { 25 };
+    let target = 2.0; // aJ/MAC budget
+    let cfg = TrainCfg {
+        noise_tag: "shot".into(),
+        granularity: Granularity::PerLayer,
+        lr: 0.05,
+        lam: TrainCfg::paper_lambda("shot"),
+        target_avg_e: target,
+        init_e: 8.0,
+        steps,
+        seed: 0,
+    };
+    println!("training energy allocations ({steps} steps, Eq. 14)...");
+    let r = train_energy(&ops, &train, &cfg)?;
+    println!(
+        "loss {:.3} -> {:.3}, achieved avg {:.3} aJ/MAC",
+        r.loss_history.first().unwrap(),
+        r.loss_history.last().unwrap(),
+        r.avg_e
+    );
+    println!("\nper-layer allocations (aJ/MAC): note the first/last layers");
+    for ((_, s), e) in meta.noise_sites().zip(r.e_per_layer.iter()) {
+        let bar = "#".repeat((e / r.avg_e * 10.0).min(60.0) as usize);
+        println!("  {:<16} {:>7.3}  {bar}", s.name, e);
+    }
+
+    // Same-average-energy comparison: uniform vs learned shape.
+    let scale = (r.avg_e / meta.avg_energy_per_mac(&r.e)) as f32;
+    let dynamic: Vec<f32> = r.e.iter().map(|v| v * scale).collect();
+    let uniform = vec![r.avg_e as f32; meta.e_len];
+    let a_u = ops.eval_noisy("shot.fwd", &eval, &uniform, &[0, 1], 8)?;
+    let a_d = ops.eval_noisy("shot.fwd", &eval, &dynamic, &[0, 1], 8)?;
+    println!(
+        "\nat {:.2} aJ/MAC: uniform acc = {a_u:.4}, dynamic acc = {a_d:.4} \
+         (baseline {:.4})",
+        r.avg_e, meta.fp_acc
+    );
+    Ok(())
+}

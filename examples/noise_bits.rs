@@ -1,0 +1,47 @@
+//! Noise-bits analysis (paper Sec. III): reproduce the Table I
+//! correspondence between analog noise and equivalent bit precision on a
+//! single energy point, end to end through the lowbit artifact.
+//!
+//! Run: `cargo run --release --example noise_bits`
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use dynaprec::data::Dataset;
+use dynaprec::ops::ModelOps;
+use dynaprec::quant::noise_bits;
+use dynaprec::runtime::artifact::ModelBundle;
+use dynaprec::runtime::Engine;
+
+fn main() -> Result<()> {
+    let dir = dynaprec::artifacts_dir();
+    let engine = Arc::new(Engine::cpu()?);
+    let bundle = ModelBundle::load(engine, &dir, "tiny_resnet")?;
+    let meta = bundle.meta.clone();
+    let data = Dataset::load(&dir, "vision", "eval")?;
+    let ops = ModelOps::new(&bundle);
+
+    let e = 20.0;
+    let n = meta.noise_sites().count();
+    let bits = noise_bits::model_thermal_bits(
+        &meta, meta.sigma_thermal, &vec![e; n], true,
+    );
+    println!("per-layer noise bits at uniform E={e} (Eq. 8):");
+    for ((_, s), (_, b)) in meta.noise_sites().zip(bits.iter()) {
+        println!("  {:<16} {:>6.2}", s.name, b);
+    }
+    let avg = noise_bits::average_bits(&bits);
+
+    // Accuracy under real analog noise...
+    let ev = vec![e as f32; meta.e_len];
+    let acc_noisy = ops.eval_noisy("thermal.fwd", &data, &ev, &[0], 8)?;
+    // ...vs accuracy with noise replaced by B_eps-bit quantization.
+    let bv = noise_bits::bits_vector_for_lowbit(&meta, &bits, 8.0);
+    let acc_lowbit = ops.eval_lowbit(&data, &bv, 8)?;
+    println!(
+        "\navg bits = {avg:.2}; noisy acc = {acc_noisy:.4}, \
+         equivalent low-bit acc = {acc_lowbit:.4}"
+    );
+    println!("(the paper's Table I claim: these two columns should track)");
+    Ok(())
+}

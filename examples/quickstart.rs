@@ -1,0 +1,54 @@
+//! Quickstart: load a model bundle, run clean + noisy inference, and
+//! inspect the energy/accuracy tradeoff at three precision settings.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use dynaprec::data::Dataset;
+use dynaprec::ops::ModelOps;
+use dynaprec::runtime::artifact::ModelBundle;
+use dynaprec::runtime::Engine;
+
+fn main() -> Result<()> {
+    let dir = dynaprec::artifacts_dir();
+    let engine = Arc::new(Engine::cpu()?);
+    println!("PJRT platform: {}", engine.platform());
+
+    // Load the ResNet-style model exported by `make artifacts`.
+    let bundle = ModelBundle::load(engine, &dir, "tiny_resnet")?;
+    let meta = &bundle.meta;
+    println!(
+        "loaded {}: {} analog matmul sites, {:.1}k params, {:.2} MMACs/sample",
+        meta.name,
+        meta.n_sites,
+        meta.params_len as f64 / 1e3,
+        meta.total_macs / 1e6
+    );
+
+    let data = Dataset::load(&dir, "vision", "eval")?;
+    let ops = ModelOps::new(&bundle);
+
+    // Clean 8-bit baseline.
+    let acc = ops.eval_simple("fwd_quant", &data, 4)?;
+    println!("8-bit clean accuracy:            {acc:.4}");
+
+    // Shot-noise-limited optical inference at three energy budgets.
+    for e in [0.5f32, 2.0, 10.0] {
+        let ev = vec![e; meta.e_len];
+        let acc = ops.eval_noisy("shot.fwd", &data, &ev, &[0], 4)?;
+        println!("shot noise @ {e:>4} aJ/MAC accuracy: {acc:.4}");
+    }
+
+    // Noise-equivalent bits of the first and last layer (paper Eq. 8).
+    let sites: Vec<_> = meta.noise_sites().collect();
+    let (first, last) = (sites[0].1, sites[sites.len() - 1].1);
+    for (label, s) in [("first", first), ("last", last)] {
+        let b = dynaprec::quant::noise_bits::thermal_bits(
+            s, meta.sigma_thermal, 10.0, true,
+        );
+        println!("{label} layer ({}) noise bits at E=10: {b:.2}", s.name);
+    }
+    Ok(())
+}

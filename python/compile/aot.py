@@ -1,0 +1,192 @@
+"""AOT export driver: train -> calibrate -> lower -> artifacts/.
+
+Run as `python -m compile.aot --out ../artifacts` (see Makefile). Emits,
+per model:
+
+  <m>.params.bin                  flat f32 parameter vector (DPT1)
+  <m>.meta.json                   site table + baselines + artifact index
+  <m>.fwd_fp.hlo.txt              float32 clean forward
+  <m>.fwd_quant.hlo.txt           8-bit clean forward (CV models)
+  <m>.lowbit.hlo.txt              fractional-bit forward (CV models)
+  <m>.<noise>.fwd.hlo.txt         noisy forward per noise family
+  <m>.<noise>.grad.hlo.txt        Eq.-14 value-and-grad per noise family
+  tiny_resnet extras: thermal_noclip.{fwd,grad} (Fig. 7),
+                      shot_photonq.{fwd,grad}   (Fig. 4)
+
+plus the frozen data splits `vision.eval.bin`, `vision.trainsub.bin`,
+`nlp.eval.bin`, `nlp.trainsub.bin`.
+
+Interchange format is HLO TEXT (not serialized protos): jax >= 0.5 emits
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import config as C
+from . import data as D
+from . import noisy as N
+from . import serialize as S
+from .calibrate import calibrate
+from .layers import Ctx
+from .models import MODELS
+from .train import train_model, evaluate
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is essential: the default HLO printer
+    # elides arrays above a size threshold as `constant({...})`, which the
+    # xla_extension 0.5.1 text parser silently reads back as zeros —
+    # per-channel quantization ranges then collapse and the quantized
+    # artifacts produce garbage.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_and_write(fn, args, path):
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {os.path.basename(path)} "
+          f"({len(text) / 1e6:.2f} MB, {time.time() - t0:.1f}s)", flush=True)
+
+
+def export_model(name: str, out: str):
+    mod = MODELS[name]
+    kind = "vision" if mod.KIND == "vision" else "nlp"
+    _, _, cx, _, ex, ey = D.splits(kind)
+
+    params_path = os.path.join(out, f"{name}.params.bin")
+    if os.environ.get("DYNAPREC_REUSE") == "1" and os.path.exists(params_path):
+        # Re-export without retraining: load the previously trained flat
+        # params (used when only the lowering pipeline changed).
+        print(f"[{name}] reusing trained params", flush=True)
+        flat_prev = S.read_dpt(params_path)["params"]
+        example = mod.init(C.TRAIN_CFG[name].seed)
+        unflatten, _ = N.make_unflatten(example)
+        params = unflatten(jnp.asarray(flat_prev))
+    else:
+        print(f"[{name}] training...", flush=True)
+        params, _ = train_model(name)
+    specs = calibrate(name, params, cx)
+    e_len = specs[-1].e_offset + specs[-1].n_channels
+    params_len = N.install_unflatten(name, params)
+    flat = np.asarray(N.flatten_params(params))
+
+    # Baseline accuracies over the frozen eval split.
+    @jax.jit
+    def fp_logits(pf, xb):
+        return mod.apply(N._UNFLATTEN[name](pf), xb, Ctx("fp"))
+
+    quant_acc = None
+    if kind == "vision":
+        @jax.jit
+        def q_logits(pf, xb):
+            return mod.apply(N._UNFLATTEN[name](pf), xb,
+                             Ctx("quant", specs=specs))
+        quant_acc = evaluate(q_logits, jnp.asarray(flat), ex, ey)
+    fp_acc_flat = evaluate(fp_logits, jnp.asarray(flat), ex, ey)
+    print(f"[{name}] fp_acc={fp_acc_flat:.4f} quant_acc={quant_acc}",
+          flush=True)
+
+    # ---- lower all entries ----------------------------------------
+    pf = jax.ShapeDtypeStruct((params_len,), jnp.float32)
+    if kind == "vision":
+        xs = jax.ShapeDtypeStruct(
+            (C.BATCH, C.IMG_SIZE, C.IMG_SIZE, C.IMG_CHANNELS), jnp.float32)
+    else:
+        xs = jax.ShapeDtypeStruct((C.BATCH, C.SEQ_LEN), jnp.int32)
+    ys = jax.ShapeDtypeStruct((C.BATCH,), jnp.int32)
+    seed = jax.ShapeDtypeStruct((), jnp.uint32)
+    ev = jax.ShapeDtypeStruct((e_len,), jnp.float32)
+    bits = jax.ShapeDtypeStruct((len(specs),), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    artifacts = {}
+
+    def emit(tag, fn, args):
+        fname = f"{name}.{tag}.hlo.txt"
+        lower_and_write(fn, args, os.path.join(out, fname))
+        artifacts[tag] = fname
+
+    emit("fwd_fp", N.build_fwd_fp(name, specs), (pf, xs))
+    if kind == "vision":
+        emit("fwd_quant", N.build_fwd_quant(name, specs), (pf, xs))
+        emit("lowbit", N.build_fwd_lowbit(name, specs), (pf, xs, bits))
+
+    for noise in C.noises_for(name):
+        clip = noise == "thermal"
+        emit(f"{noise}.fwd",
+             N.build_fwd_noisy(name, specs, noise, clip), (pf, xs, seed, ev))
+        emit(f"{noise}.grad",
+             N.build_grad_e(name, specs, noise, clip),
+             (pf, xs, ys, seed, ev, scalar, scalar))
+
+    if name == "tiny_resnet":
+        emit("thermal_noclip.fwd",
+             N.build_fwd_noisy(name, specs, "thermal", clip=False),
+             (pf, xs, seed, ev))
+        emit("thermal_noclip.grad",
+             N.build_grad_e(name, specs, "thermal", clip=False),
+             (pf, xs, ys, seed, ev, scalar, scalar))
+        emit("shot_photonq.fwd",
+             N.build_fwd_noisy(name, specs, "shot", clip=False,
+                               photon_quant=True), (pf, xs, seed, ev))
+        emit("shot_photonq.grad",
+             N.build_grad_e(name, specs, "shot", clip=False,
+                            photon_quant=True),
+             (pf, xs, ys, seed, ev, scalar, scalar))
+
+    S.write_dpt(os.path.join(out, f"{name}.params.bin"), {"params": flat})
+    S.write_meta(
+        os.path.join(out, f"{name}.meta.json"),
+        name=name, kind=kind, specs=specs, params_len=params_len,
+        e_len=e_len,
+        baselines={"fp_acc": fp_acc_flat, "quant_acc": quant_acc},
+        artifacts=artifacts,
+    )
+    print(f"[{name}] done: {len(artifacts)} artifacts, e_len={e_len}, "
+          f"sites={len(specs)}", flush=True)
+
+
+def export_data(out: str):
+    for kind in ("vision", "nlp"):
+        tx, ty, _, _, ex, ey = D.splits(kind)
+        S.write_dpt(os.path.join(out, f"{kind}.eval.bin"),
+                    {"x": ex, "y": ey})
+        # Energy-allocation training subset (paper: 4% of train set).
+        n = 1024
+        S.write_dpt(os.path.join(out, f"{kind}.trainsub.bin"),
+                    {"x": tx[:n], "y": ty[:n]})
+        print(f"wrote {kind} data splits", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=os.environ.get("DYNAPREC_MODELS", ""))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    models = [m for m in args.models.split(",") if m] or list(MODELS)
+    export_data(args.out)
+    for m in models:
+        export_model(m, args.out)
+    # Sentinel for the Makefile.
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write(",".join(models))
+
+
+if __name__ == "__main__":
+    main()

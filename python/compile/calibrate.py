@@ -1,0 +1,28 @@
+"""Post-training range calibration (paper App. A).
+
+Runs the trained model in calibration mode over a subset of training data,
+recording per-site activation ranges (min/max and percentile-clipped) and
+per-channel weight ranges. The resulting `SiteSpec` list parameterizes
+quantization and every noise model, and is exported to `meta.json`.
+"""
+
+import jax.numpy as jnp
+
+from . import config as C
+from .layers import Ctx
+from .models import MODELS
+from .models.common import site_weights
+
+
+def calibrate(name: str, params, cx, n_batches: int = 4):
+    """Returns the finalized list[SiteSpec] for model `name`."""
+    mod = MODELS[name]
+    ctx = Ctx("calib")
+    for bi in range(n_batches):
+        xb = jnp.asarray(cx[bi * C.BATCH : (bi + 1) * C.BATCH])
+        if bi > 0:
+            # Re-enter with fresh site counter but shared recorders.
+            ctx.idx = 0
+        mod.apply(params, xb, ctx)
+    ctx.finalize_calibration(site_weights(params), C.THERMAL_CLIP_PCT)
+    return ctx.specs

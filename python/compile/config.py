@@ -1,0 +1,77 @@
+"""Global configuration: physical constants, noise defaults, model registry.
+
+These mirror the experimental setup of Garg et al. 2021, Appendix A:
+  - thermal noise sigma_t = 0.01 (relative units)
+  - weight noise  sigma_w = 0.1  (relative units)
+  - shot noise: photon energy 128 zJ at lambda = 1.55 um, responsivity 1
+  - 8-bit affine quantization of inputs/weights for thermal & weight noise
+  - continuous (unquantized) inputs/weights for shot noise
+"""
+
+from dataclasses import dataclass
+
+# ---------------------------------------------------------------- physics
+PHOTON_ENERGY_J = 1.28e-19  # hc/lambda at 1.55um ~ 128 zJ (paper Sec. VI-A)
+ATTOJOULE = 1e-18
+PHOTONS_PER_AJ = ATTOJOULE / PHOTON_ENERGY_J  # ~7.8125 photons per aJ/MAC
+
+# ---------------------------------------------------------------- noise
+SIGMA_THERMAL = 0.01  # paper App. A
+SIGMA_WEIGHT = 0.1    # paper App. A
+
+NOISE_TYPES = ("thermal", "weight", "shot")
+
+# Quantization defaults (paper App. A).
+ACT_BITS = 8
+WEIGHT_BITS = 8
+# Percentile clipping of activation ranges, used for thermal noise only
+# (paper: 99.99th percentile, Fig. 7 ablates it).
+THERMAL_CLIP_PCT = 99.99
+
+# ---------------------------------------------------------------- data
+IMG_SIZE = 24
+IMG_CHANNELS = 3
+NUM_CLASSES = 10
+
+SEQ_LEN = 32
+VOCAB = 64
+NLP_CLASSES = 3
+
+EVAL_SIZE = 512          # frozen eval split exported for the rust side
+CALIB_SIZE = 512         # range-calibration subset
+TRAIN_SIZE = 4096  # single-core build env: keep build-time training short
+BATCH = 32               # batch baked into all AOT artifacts
+
+# ---------------------------------------------------------------- models
+CV_MODELS = (
+    "tiny_resnet",
+    "tiny_mobilenet",
+    "tiny_inception",
+    "tiny_googlenet",
+    "tiny_shufflenet",
+)
+NLP_MODELS = ("mini_bert",)
+ALL_MODELS = CV_MODELS + NLP_MODELS
+
+
+@dataclass(frozen=True)
+class TrainCfg:
+    epochs: int
+    lr: float
+    seed: int = 0
+
+
+# Build-time training budgets (CPU; tiny models converge in a few epochs).
+TRAIN_CFG = {
+    "tiny_resnet": TrainCfg(epochs=3, lr=3e-3),
+    "tiny_mobilenet": TrainCfg(epochs=4, lr=3e-3),
+    "tiny_inception": TrainCfg(epochs=3, lr=3e-3),
+    "tiny_googlenet": TrainCfg(epochs=3, lr=3e-3),
+    "tiny_shufflenet": TrainCfg(epochs=4, lr=3e-3),
+    "mini_bert": TrainCfg(epochs=30, lr=2e-3),
+}
+
+# Noise families exported per model. BERT's activation-activation matmuls
+# are impractical in-memory, so the paper restricts it to shot noise.
+def noises_for(model: str):
+    return ("shot",) if model in NLP_MODELS else NOISE_TYPES

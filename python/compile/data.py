@@ -1,0 +1,131 @@
+"""Synthetic datasets standing in for ImageNet and GLUE/MNLI.
+
+Substitution rationale (DESIGN.md): the paper's method operates on a
+*pretrained* network's per-layer noise sensitivity. What the experiments
+need is (a) a non-trivially trained network, (b) heterogeneous per-layer
+dynamic ranges, (c) an accuracy metric that degrades smoothly with noise.
+A deterministic, seeded synthetic task provides all three while keeping
+`make artifacts` self-contained and reproducible.
+
+Vision task: 10 classes. Each class has a base "texture" (oriented
+sinusoid grating mixed with a class-specific blob layout). Samples apply
+random phase/shift/contrast jitter, additive clutter and pixel noise, so
+the task needs real convolutional features but is learnable to >90% by a
+small CNN.
+
+NLP task: 3-way entailment-style classification over paired token
+sequences (premise, hypothesis separated by SEP). Labels derive from
+rule-based containment / reversal / unrelatedness of a planted pattern,
+so attention over pairs is genuinely required.
+"""
+
+import numpy as np
+
+from . import config as C
+
+
+# ------------------------------------------------------------------ vision
+def _class_prototypes(rng: np.random.Generator) -> np.ndarray:
+    """One [H, W, C] prototype per class: grating + blob layout."""
+    H = W = C_img = None
+    H = W = C.IMG_SIZE
+    protos = np.zeros((C.NUM_CLASSES, H, W, C.IMG_CHANNELS), np.float32)
+    yy, xx = np.mgrid[0:H, 0:W].astype(np.float32) / H
+    for k in range(C.NUM_CLASSES):
+        theta = np.pi * k / C.NUM_CLASSES
+        freq = 3.0 + 1.5 * (k % 4)
+        grating = np.sin(2 * np.pi * freq * (np.cos(theta) * xx + np.sin(theta) * yy))
+        img = np.zeros((H, W, C.IMG_CHANNELS), np.float32)
+        for ch in range(C.IMG_CHANNELS):
+            img[..., ch] = grating * (0.4 + 0.2 * ch) * ((-1) ** (k + ch))
+        # Class-specific blobs (positions fixed per class).
+        for _ in range(3):
+            cy, cx = rng.uniform(0.2, 0.8, 2)
+            sig = rng.uniform(0.08, 0.18)
+            blob = np.exp(-(((yy - cy) ** 2 + (xx - cx) ** 2) / (2 * sig**2)))
+            ch = rng.integers(0, C.IMG_CHANNELS)
+            img[..., ch] += blob * rng.uniform(0.8, 1.4) * rng.choice([-1.0, 1.0])
+        protos[k] = img
+    return protos
+
+
+def make_vision(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Return (x [n,H,W,C] float32 in ~[-2, 2], y [n] int32)."""
+    rng = np.random.default_rng(seed)
+    protos = _class_prototypes(np.random.default_rng(1234))  # fixed prototypes
+    H = W = C.IMG_SIZE
+    y = rng.integers(0, C.NUM_CLASSES, size=n).astype(np.int32)
+    x = np.empty((n, H, W, C.IMG_CHANNELS), np.float32)
+    for i in range(n):
+        p = protos[y[i]]
+        # jitter: circular shift + contrast + phase-ish flip
+        sy, sx = rng.integers(-4, 5, 2)
+        img = np.roll(p, (sy, sx), axis=(0, 1)) * rng.uniform(0.5, 1.4)
+        # clutter: one distractor blob from a random other class
+        other = protos[rng.integers(0, C.NUM_CLASSES)]
+        img = img + 0.55 * np.roll(other, tuple(rng.integers(-8, 9, 2)), axis=(0, 1))
+        img += rng.normal(0.0, 0.35, img.shape).astype(np.float32)
+        x[i] = img
+    return x.astype(np.float32), y
+
+
+# --------------------------------------------------------------------- nlp
+SEP = 1  # token 0 = PAD, 1 = SEP; content tokens start at 2
+
+
+def make_nlp(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Return (tokens [n, SEQ_LEN] int32, y [n] int32).
+
+    Layout: [premise .. SEP hypothesis .. PAD]. Labels:
+      0 (entail):     hypothesis is a contiguous subsequence of premise
+      1 (contradict): hypothesis is a *reversed* premise span
+      2 (neutral):    hypothesis tokens drawn independently
+    """
+    rng = np.random.default_rng(seed)
+    T = C.SEQ_LEN
+    prem_len = T // 2 - 1
+    hyp_len = T - prem_len - 1
+    x = np.zeros((n, T), np.int32)
+    y = rng.integers(0, C.NLP_CLASSES, size=n).astype(np.int32)
+    for i in range(n):
+        prem = rng.integers(2, C.VOCAB, size=prem_len)
+        span_len = min(hyp_len, rng.integers(3, 8))
+        start = rng.integers(0, prem_len - span_len + 1)
+        span = prem[start : start + span_len]
+        if y[i] == 0:
+            hyp = span
+        elif y[i] == 1:
+            hyp = span[::-1]
+        else:
+            hyp = rng.integers(2, C.VOCAB, size=span_len)
+            # ensure it's not accidentally a forward/backward span
+            while _contains(prem, hyp) or _contains(prem, hyp[::-1]):
+                hyp = rng.integers(2, C.VOCAB, size=span_len)
+        row = np.zeros(T, np.int32)
+        row[:prem_len] = prem
+        row[prem_len] = SEP
+        row[prem_len + 1 : prem_len + 1 + len(hyp)] = hyp
+        x[i] = row
+    return x, y
+
+
+def _contains(hay: np.ndarray, needle: np.ndarray) -> bool:
+    n, m = len(hay), len(needle)
+    for s in range(n - m + 1):
+        if np.array_equal(hay[s : s + m], needle):
+            return True
+    return False
+
+
+# ----------------------------------------------------------------- splits
+import functools
+
+
+@functools.lru_cache(maxsize=2)
+def splits(kind: str):
+    """(train_x, train_y, calib_x, calib_y, eval_x, eval_y) — frozen seeds."""
+    mk = make_vision if kind == "vision" else make_nlp
+    tx, ty = mk(C.TRAIN_SIZE, seed=10)
+    cx, cy = mk(C.CALIB_SIZE, seed=20)
+    ex, ey = mk(C.EVAL_SIZE, seed=30)
+    return tx, ty, cx, cy, ex, ey

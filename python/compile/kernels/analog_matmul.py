@@ -1,0 +1,184 @@
+"""L1 Pallas kernel: fused quantize -> matmul -> analog-noise epilogue.
+
+This is the compute hot-spot of the paper's system: every weight-stationary
+matmul site (dense layers, 1x1 convs, im2col'd KxK convs, transformer
+projections) runs through `analog_matmul`, which models one analog
+matrix-vector-multiplier tile:
+
+  - affine fake-quantization of activations (per-tensor) and weights
+    (per-channel) maps values onto the DAC grid (thermal/weight families);
+  - a single MXU-shaped `dot` accumulates the tile in f32 — the analog
+    charge-accumulation step;
+  - the noise epilogue adds the paper's Eq. 9/10/11 noise on the
+    accumulator, scaled by 1/sqrt(E) per output channel (redundant coding).
+
+Hardware adaptation (DESIGN.md): the paper targets analog crossbars /
+homodyne multipliers, so there is no CUDA idiom to port. On a TPU-shaped
+substrate the analog MVM tile maps to one MXU matmul block; we tile rows
+into VMEM-sized blocks via BlockSpec and keep W resident per block
+(weight-stationary, like the crossbar). interpret=True everywhere: real
+TPU lowering emits Mosaic custom-calls the CPU PJRT plugin cannot run.
+
+Differentiation: the kernel is wrapped in `jax.custom_vjp`; the backward
+pass re-runs the pure-jnp reference (ref.py) under `jax.vjp`, which embeds
+the straight-through estimator for rounding. pytest asserts pallas == ref
+to float tolerance, so the VJP is consistent with the forward.
+
+VMEM footprint (per grid step, f32): ROW_TILE*N (x) + M*N (w) + ROW_TILE*M
+(out) + M (e, ranges). For the largest site in the zoo (N=576, M=192,
+ROW_TILE=1024) that is ~3.1 MiB — comfortably under the ~16 MiB VMEM of a
+TPU core, leaving room for double-buffering. ROW_TILE=1024 was chosen by
+measurement (EXPERIMENTS.md §Perf): versus 256 it halves CPU-PJRT execute
+time (fewer interpret-mode grid iterations, larger fused dots) while
+keeping the VMEM estimate under budget; 256 remains fine for TPU if VMEM
+pressure ever dominates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import config as C
+from . import ref as R
+
+ROW_TILE = 1024
+
+
+def _fq(x, lo, hi, levels):
+    """Forward-only affine fake-quant (no STE needed inside the kernel)."""
+    delta = (hi - lo) / (levels - 1)
+    delta = jnp.where(delta <= 0, 1e-12, delta)
+    q = jnp.round((jnp.clip(x, lo, hi) - lo) / delta)
+    return lo + q * delta
+
+
+def _epilogue(noise, y, xd, wd, e, xi_out, x_lo, x_hi, w_lo, w_hi, n_dot):
+    if noise == "thermal":
+        std = (
+            jnp.sqrt(float(n_dot))
+            * (w_hi - w_lo)
+            * (x_hi - x_lo)
+            * C.SIGMA_THERMAL
+            / jnp.sqrt(e)
+        )
+        return y + xi_out * std[None, :]
+    if noise == "shot":
+        xn = jnp.sqrt(jnp.sum(xd * xd, axis=-1))
+        wn = jnp.sqrt(jnp.sum(wd * wd, axis=-1))
+        photons = e * C.PHOTONS_PER_AJ
+        std = xn[:, None] * wn[None, :] / jnp.sqrt(float(n_dot) * photons)[None, :]
+        return y + xi_out * std
+    return y
+
+
+def _kernel(x_ref, w_ref, e_ref, xi_ref, wlo_ref, whi_ref, xiw_ref, o_ref,
+            *, noise, quantize, x_lo, x_hi):
+    """One row-tile of the fused analog matmul. Shapes per block:
+    x [T, N], w [M, N], e [M], xi [T, M], wlo/whi [M], xiw [M, N] (weight
+    noise only; dummy [1, 1] otherwise), o [T, M]."""
+    x = x_ref[...]
+    w = w_ref[...]
+    e = e_ref[...]
+    w_lo = wlo_ref[...]
+    w_hi = whi_ref[...]
+    n_dot = x.shape[-1]
+
+    if quantize:
+        xd = _fq(x, x_lo, x_hi, 2 ** C.ACT_BITS)
+        wd = _fq(w, w_lo[:, None], w_hi[:, None], 2 ** C.WEIGHT_BITS)
+    else:
+        xd, wd = x, w
+
+    if noise == "weight":
+        std = (w_hi - w_lo) * C.SIGMA_WEIGHT / jnp.sqrt(e)
+        w_eff = wd + xiw_ref[...] * std[:, None]
+        o_ref[...] = jnp.dot(xd, w_eff.T, preferred_element_type=jnp.float32)
+        return
+
+    y = jnp.dot(xd, wd.T, preferred_element_type=jnp.float32)
+    o_ref[...] = _epilogue(
+        noise, y, xd, wd, e, xi_ref[...], x_lo, x_hi, w_lo, w_hi, n_dot
+    )
+
+
+def _pallas_forward(x, w, e, xi_out, xi_w, w_lo, w_hi,
+                    *, noise, quantize, x_lo, x_hi):
+    """Launch the tiled kernel. xi_out must be [B, M]; xi_w must be [M, N]
+    (callers pass zeros for the unused one — see `noisy.py`)."""
+    b, n = x.shape
+    m = w.shape[0]
+    # Row tiling: pad B up to a multiple of the tile so BlockSpecs divide.
+    tile = ROW_TILE if b > ROW_TILE else b
+    pad = (-b) % tile
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        xi_out = jnp.pad(xi_out, ((0, pad), (0, 0)))
+    bp = b + pad
+    grid = (bp // tile,)
+
+    kern = functools.partial(
+        _kernel, noise=noise, quantize=quantize, x_lo=x_lo, x_hi=x_hi
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((tile, m), lambda i: (i, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, m), jnp.float32),
+        interpret=True,
+    )(x, w, e, xi_out, w_lo, w_hi, xi_w)
+    return out[:b] if pad else out
+
+
+def make_analog_matmul(*, noise: str, quantize: bool, x_lo: float, x_hi: float):
+    """Build the custom-vjp analog matmul for one site configuration.
+
+    Returns f(x, w, e, xi_out, xi_w, w_lo, w_hi) -> y with:
+      forward  = Pallas kernel (interpret mode),
+      backward = jax.vjp over the pure-jnp reference (STE rounding),
+    so inference artifacts and the Eq.-14 grad artifact share one forward.
+    """
+
+    def ref_fn(x, w, e, xi_out, xi_w, w_lo, w_hi):
+        if noise == "none" and not quantize:
+            return x @ w.T
+        return R.analog_matmul_ref(
+            x, w, e, xi_out, xi_w,
+            noise=noise, x_lo=x_lo, x_hi=x_hi, w_lo=w_lo, w_hi=w_hi,
+        )
+
+    @jax.custom_vjp
+    def f(x, w, e, xi_out, xi_w, w_lo, w_hi):
+        if noise == "none" and not quantize:
+            return x @ w.T
+        return _pallas_forward(
+            x, w, e, xi_out, xi_w, w_lo, w_hi,
+            noise=noise, quantize=quantize, x_lo=x_lo, x_hi=x_hi,
+        )
+
+    def fwd(x, w, e, xi_out, xi_w, w_lo, w_hi):
+        return f(x, w, e, xi_out, xi_w, w_lo, w_hi), (x, w, e, xi_out, xi_w, w_lo, w_hi)
+
+    def bwd(saved, g):
+        _, vjp = jax.vjp(ref_fn, *saved)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def analog_matmul(x, w, e, xi_out, xi_w, *, noise, quantize, x_lo, x_hi,
+                  w_lo, w_hi):
+    """Convenience wrapper: one-shot call (builds the site fn inline)."""
+    fn = make_analog_matmul(noise=noise, quantize=quantize, x_lo=x_lo, x_hi=x_hi)
+    return fn(x, w, e, xi_out, xi_w, w_lo, w_hi)

@@ -1,0 +1,159 @@
+"""Pure-jnp reference oracles for the analog matmul kernels (L1 ground truth).
+
+Implements the paper's noise models (Garg et al. 2021):
+
+  thermal (Eq. 9):  y = x W^T + xi * sqrt(N) * (Wrange)(xrange) * sigma_t/sqrt(E)
+  weight  (Eq. 10): y = x (W + xi_w * Wrange * sigma_w/sqrt(E))^T
+  shot    (Eq. 11): y = x W^T + xi * ||W_i|| ||x|| / sqrt(N * E * lam/(hc))
+
+with 8-bit affine fake-quantization of x (per-tensor) and W (per-channel)
+for the thermal/weight families, and continuous values for shot noise.
+`E` is the per-output-channel energy/MAC vector; noise std scales as
+1/sqrt(E) (redundant coding, Sec. IV).
+
+The rounding in fake-quantization uses the straight-through estimator
+(paper Sec. V), so the Eq.-14 objective is differentiable w.r.t. E *and*
+the noise inputs are reparameterized (xi passed in explicitly).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .. import config as C
+
+
+# ----------------------------------------------------------- quantization
+@jax.custom_vjp
+def ste_round(x):
+    """round(x) with d/dx = 1 (straight-through estimator)."""
+    return jnp.round(x)
+
+
+def _ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+ste_round.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fake_quant(x, lo, hi, levels: int = 256):
+    """Affine uniform fake-quantization (paper Eq. 2), STE backward.
+
+    Maps x into `levels` uniformly spaced values spanning [lo, hi],
+    clipping outside the range. lo/hi may be scalars or broadcastable
+    arrays (per-channel weight ranges).
+    """
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    delta = (hi - lo) / (levels - 1)
+    delta = jnp.where(delta <= 0, 1e-12, delta)
+    q = ste_round((jnp.clip(x, lo, hi) - lo) / delta)
+    return lo + q * delta
+
+
+def fake_quant_frac_bits(x, lo, hi, bits):
+    """Fake-quantization at a *fractional* number of bits.
+
+    Following the paper's footnote 1: B bits corresponds to ceil(2^B)
+    uniformly spaced levels (e.g. 4.644 bits -> 25 levels).
+    """
+    # Small epsilon so B = log2(n) maps back to exactly n levels.
+    levels = jnp.ceil(jnp.exp2(bits) - 1e-6)
+    levels = jnp.maximum(levels, 2.0)
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    delta = (hi - lo) / (levels - 1.0)
+    q = ste_round((jnp.clip(x, lo, hi) - lo) / delta)
+    return lo + q * delta
+
+
+# ------------------------------------------------------------- noise stds
+def thermal_std(n_dot: int, w_lo, w_hi, x_lo, x_hi, e):
+    """Per-channel thermal noise std (Eq. 9). e: [M]."""
+    return (
+        jnp.sqrt(float(n_dot))
+        * (w_hi - w_lo)
+        * (x_hi - x_lo)
+        * C.SIGMA_THERMAL
+        / jnp.sqrt(e)
+    )
+
+
+def weight_std(w_lo, w_hi, e):
+    """Per-channel weight-read noise std (Eq. 10). e: [M]."""
+    return (w_hi - w_lo) * C.SIGMA_WEIGHT / jnp.sqrt(e)
+
+
+def shot_std(x, w, e):
+    """Shot-noise std per (row, channel) (Eq. 11). e in aJ/MAC.
+
+    photons/MAC = E * lambda/(hc) = e_aJ * PHOTONS_PER_AJ.
+    """
+    n_dot = x.shape[-1]
+    xn = jnp.linalg.norm(x, axis=-1)  # [B]
+    wn = jnp.linalg.norm(w, axis=-1)  # [M]
+    photons = e * C.PHOTONS_PER_AJ    # [M]
+    return xn[:, None] * wn[None, :] / jnp.sqrt(n_dot * photons)[None, :]
+
+
+# --------------------------------------------------------------- the op
+def analog_matmul_ref(
+    x,
+    w,
+    e,
+    xi_out,
+    xi_w,
+    *,
+    noise: str,
+    x_lo: float,
+    x_hi: float,
+    w_lo,
+    w_hi,
+):
+    """Reference noisy matmul: y[B, M] = noisy(x[B, N] @ w[M, N]^T).
+
+    Args:
+      x: [B, N] inputs. w: [M, N] weights. e: [M] energy/MAC per channel.
+      xi_out: [B, M] standard normal (thermal/shot) or unused.
+      xi_w: [M, N] standard normal (weight noise) or unused.
+      noise: "thermal" | "weight" | "shot" | "none".
+      x_lo/x_hi: scalar activation range. w_lo/w_hi: [M] channel ranges.
+    """
+    w_lo = jnp.asarray(w_lo, jnp.float32)
+    w_hi = jnp.asarray(w_hi, jnp.float32)
+    if noise in ("thermal", "weight", "none"):
+        xd = fake_quant(x, x_lo, x_hi, 2**C.ACT_BITS)
+        wd = fake_quant(w, w_lo[:, None], w_hi[:, None], 2**C.WEIGHT_BITS)
+    else:  # shot: continuous-valued inputs and weights
+        xd, wd = x, w
+
+    if noise == "weight":
+        wn = wd + xi_w * (weight_std(w_lo, w_hi, e))[:, None]
+        return xd @ wn.T
+
+    y = xd @ wd.T
+    if noise == "thermal":
+        std = thermal_std(x.shape[-1], w_lo, w_hi, x_lo, x_hi, e)
+        y = y + xi_out * std[None, :]
+    elif noise == "shot":
+        y = y + xi_out * shot_std(xd, wd, e)
+    return y
+
+
+def matmul_act_shot_ref(a, b, e, xi):
+    """Activation x activation matmul under shot noise (BERT QK^T / AV).
+
+    a: [..., T, d], b: [..., d, U], e: scalar energy/MAC for the site,
+    xi: [..., T, U] standard normal. Noise std per element (Eq. 11 with
+    both operands as activations): ||a_row|| ||b_col|| / sqrt(d * photons).
+    """
+    n_dot = a.shape[-1]
+    an = jnp.linalg.norm(a, axis=-1)            # [..., T]
+    bn = jnp.linalg.norm(b, axis=-2)            # [..., U]
+    photons = e * C.PHOTONS_PER_AJ
+    std = an[..., :, None] * bn[..., None, :] / jnp.sqrt(n_dot * photons)
+    return a @ b + xi * std

@@ -1,0 +1,481 @@
+"""L2 layer library: every analog matmul site flows through a `Ctx`.
+
+A model's `apply(params, x, ctx)` calls `ctx.conv / ctx.dense /
+ctx.depthwise / ctx.matmul_act / ctx.add` for each linear site. The same
+graph definition is then executed in different modes:
+
+  mode="fp"     — float32 clean compute (build-time training / baselines)
+  mode="calib"  — fp compute + range/statistics recording (numpy, eager)
+  mode="quant"  — 8-bit fake-quantized clean compute (digital baseline)
+  mode="noisy"  — quantized (thermal/weight) or continuous (shot) compute
+                  with the paper's Eq. 9/10/11 noise, std ∝ 1/sqrt(E)
+  mode="lowbit" — 8-bit in/weights, activations quantized to a runtime
+                  per-site *fractional* bit vector (Table I/III protocol)
+
+Dense / conv / grouped-conv sites run the Pallas analog_matmul kernel;
+depthwise and activation-activation (attention) sites use the fused jnp
+path with the same noise formulas (see kernels/analog_matmul.py docstring
+for the rationale).
+"""
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import config as C
+from .kernels import ref as R
+from .kernels.analog_matmul import make_analog_matmul
+
+
+# ------------------------------------------------------------------ specs
+@dataclasses.dataclass
+class SiteSpec:
+    """Static + calibrated description of one analog matmul site."""
+
+    name: str
+    kind: str                 # conv | dense | depthwise | matmul_act | add
+    n_dot: int                # dot-product length N (MACs per output value)
+    n_channels: int           # output channels (len of this site's E slice)
+    macs_per_channel: float   # MACs per sample per output channel
+    e_offset: int = 0         # offset into the concatenated E vector
+    # Calibrated ranges (activations per-tensor, weights per-channel):
+    in_lo: float = 0.0
+    in_hi: float = 0.0
+    in_lo_clip: float = 0.0   # percentile-clipped variants (thermal)
+    in_hi_clip: float = 0.0
+    out_lo: float = 0.0
+    out_hi: float = 0.0
+    out_lo_clip: float = 0.0
+    out_hi_clip: float = 0.0
+    w_lo: Optional[np.ndarray] = None  # [n_channels]
+    w_hi: Optional[np.ndarray] = None
+
+    @property
+    def n_macs(self) -> float:
+        return self.macs_per_channel * self.n_channels
+
+
+class _Recorder:
+    """Range statistics for one tensor during calibration."""
+
+    def __init__(self):
+        self.lo = np.inf
+        self.hi = -np.inf
+        self.samples = []
+
+    def update(self, t: jnp.ndarray):
+        a = np.asarray(t)
+        self.lo = min(self.lo, float(a.min()))
+        self.hi = max(self.hi, float(a.max()))
+        flat = a.reshape(-1)
+        if flat.size > 4096:
+            idx = np.random.default_rng(0).choice(flat.size, 4096, replace=False)
+            flat = flat[idx]
+        self.samples.append(flat)
+
+    def ranges(self, pct: float):
+        vals = np.concatenate(self.samples)
+        lo_c = float(np.percentile(vals, 100.0 - pct))
+        hi_c = float(np.percentile(vals, pct))
+        return self.lo, self.hi, min(lo_c, 0.0), hi_c
+
+
+# -------------------------------------------------------------------- Ctx
+class Ctx:
+    """Execution context threading mode, ranges, energies and noise keys."""
+
+    def __init__(
+        self,
+        mode: str,
+        specs: Optional[list] = None,
+        noise: str = "none",
+        e: Optional[jnp.ndarray] = None,
+        key=None,
+        bits: Optional[jnp.ndarray] = None,
+        clip: bool = False,
+    ):
+        assert mode in ("fp", "calib", "quant", "noisy", "lowbit")
+        self.mode = mode
+        self.noise = noise if mode == "noisy" else "none"
+        self.specs = specs
+        self.e = e
+        self.key = key
+        self.bits = bits  # [n_sites] fractional activation bits (lowbit)
+        self.clip = clip
+        self.idx = 0
+        if mode == "calib":
+            self.specs = []
+            self._in_rec = []
+            self._out_rec = []
+
+    # -------------------------------------------------------- bookkeeping
+    def _quantized(self) -> bool:
+        """Whether this run fake-quantizes inputs/weights to 8 bits."""
+        if self.mode in ("quant", "lowbit"):
+            return True
+        if self.mode == "noisy":
+            return self.noise in ("thermal", "weight", "none")
+        return False
+
+    def _enter(self, name, kind, n_dot, n_ch, macs_pc) -> int:
+        i = self.idx
+        self.idx += 1
+        if self.mode == "calib":
+            if i < len(self.specs):
+                # Subsequent calibration pass: reuse site, keep recorders.
+                assert self.specs[i].name == name
+                return i
+            off = self.specs[-1].e_offset + self.specs[-1].n_channels if self.specs else 0
+            self.specs.append(
+                SiteSpec(name, kind, n_dot, n_ch, macs_pc, e_offset=off)
+            )
+            self._in_rec.append(_Recorder())
+            self._out_rec.append(_Recorder())
+        elif self.specs is not None:
+            s = self.specs[i]
+            assert s.name == name and s.n_channels == n_ch, (
+                f"site order mismatch at {i}: {s.name} vs {name}"
+            )
+        else:
+            assert self.mode == "fp", f"mode {self.mode} requires specs"
+        return i
+
+    def _in_range(self, i):
+        s = self.specs[i]
+        return (s.in_lo_clip, s.in_hi_clip) if self.clip else (s.in_lo, s.in_hi)
+
+    def _out_range(self, i):
+        s = self.specs[i]
+        return (s.out_lo_clip, s.out_hi_clip) if self.clip else (s.out_lo, s.out_hi)
+
+    def _e_slice(self, i):
+        s = self.specs[i]
+        return self.e[s.e_offset : s.e_offset + s.n_channels]
+
+    def _noise_key(self, i):
+        return jax.random.fold_in(self.key, i)
+
+    def _post(self, i, y, act):
+        """Activation + (in quantized modes) 8-bit output requantization,
+        or fractional-bit activation quantization in lowbit mode."""
+        y = apply_act(y, act)
+        if self.mode == "calib":
+            self._out_rec[i].update(y)
+            return y
+        if self.mode == "lowbit":
+            lo, hi = self._out_range(i)
+            return R.fake_quant_frac_bits(y, lo, hi, self.bits[i])
+        if self._quantized():
+            lo, hi = self._out_range(i)
+            return R.fake_quant(y, lo, hi, 2 ** C.ACT_BITS)
+        return y
+
+    # ------------------------------------------------------------- sites
+    def dense(self, name, x, w, b=None, act="none", rows_per_sample=1):
+        """x [R, D] @ w [D, M] + b. One site with M channels.
+
+        rows_per_sample: rows of x per logical sample (e.g. SEQ_LEN for
+        token-wise transformer projections) so n_macs is per-sample."""
+        d, m = w.shape
+        i = self._enter(name, "dense", d, m, float(d * rows_per_sample))
+        if self.mode == "calib":
+            self._in_rec[i].update(x)
+            y = x @ w
+        elif self.mode == "fp":
+            y = x @ w
+        else:
+            y = self._matmul_site(i, x, w)
+        if b is not None:
+            y = y + b
+        return self._post(i, y, act)
+
+    def conv(self, name, x, w, b=None, stride=1, padding="SAME", groups=1,
+             act="none"):
+        """x [B,H,W,Cin], w [kh,kw,Cin/groups,Cout]. One site, Cout channels.
+
+        Executed as im2col + Pallas analog matmul (per group)."""
+        kh, kw, cin_g, cout = w.shape
+        n_dot = kh * kw * cin_g
+        b_, hh, ww_, cin = x.shape
+        ho, wo = _out_hw(hh, ww_, kh, kw, stride, padding)
+        i = self._enter(name, "conv", n_dot, cout, float(ho * wo * n_dot))
+        if self.mode == "calib":
+            self._in_rec[i].update(x)
+        if self.mode in ("fp", "calib"):
+            y = lax.conv_general_dilated(
+                x, w, (stride, stride), padding,
+                feature_group_count=groups,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+        else:
+            cols = _im2col(x, kh, kw, stride, padding)  # [B,Ho,Wo, Cin*kh*kw]
+            rows = cols.reshape(b_ * ho * wo, -1)
+            if groups == 1:
+                # im2col feature order is (Cin, kh, kw) — see _im2col test.
+                wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(n_dot, cout)
+                y2 = self._matmul_site(i, rows, wmat)
+            else:
+                # Grouped conv: split channels; each group is a slice of the
+                # same site (shared name, contiguous E sub-slices).
+                y2 = self._grouped_matmul(i, rows, w, groups, cin, n_dot)
+            y = y2.reshape(b_, ho, wo, cout)
+        if b is not None:
+            y = y + b
+        return self._post(i, y, act)
+
+    def depthwise(self, name, x, w, b=None, stride=1, padding="SAME",
+                  act="none"):
+        """Depthwise conv: w [kh, kw, 1, C]. Fused jnp path (see module doc)."""
+        kh, kw, _, cc = w.shape
+        n_dot = kh * kw
+        b_, hh, ww_, cin = x.shape
+        assert cin == cc
+        ho, wo = _out_hw(hh, ww_, kh, kw, stride, padding)
+        i = self._enter(name, "depthwise", n_dot, cc, float(ho * wo * n_dot))
+        if self.mode == "calib":
+            self._in_rec[i].update(x)
+        if self.mode in ("fp", "calib"):
+            y = lax.conv_general_dilated(
+                x, w, (stride, stride), padding,
+                feature_group_count=cc,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+        else:
+            y = self._depthwise_site(i, x, w, stride, padding, n_dot)
+        if b is not None:
+            y = y + b
+        return self._post(i, y, act)
+
+    def matmul_act(self, name, a, bmat):
+        """Activation x activation matmul (attention QK^T / AV), shot only.
+
+        a [..., T, d], bmat [..., d, U]; scalar-E site (1 channel)."""
+        n_dot = a.shape[-1]
+        t, u = a.shape[-2], bmat.shape[-1]
+        batch = int(np.prod(a.shape[:-2]))
+        i = self._enter(name, "matmul_act", n_dot, 1,
+                        float(batch * t * u * n_dot) / max(a.shape[0], 1))
+        if self.mode == "calib":
+            self._in_rec[i].update(a)
+            y = a @ bmat
+        elif self.mode in ("fp", "quant", "lowbit") or self.noise == "none":
+            y = a @ bmat
+        else:
+            assert self.noise == "shot", "act-act sites support shot noise only"
+            e = self._e_slice(i)[0]
+            xi = jax.random.normal(self._noise_key(i), a.shape[:-1] + (u,))
+            y = R.matmul_act_shot_ref(a, bmat, e, xi)
+        if self.mode == "calib":
+            self._out_rec[i].update(y)
+        return y
+
+    def add(self, name, p, q):
+        """Residual/skip add — requantized to 8 bits in quantized modes.
+
+        Registered as a zero-MAC site so its output range is calibrated."""
+        i = self._enter(name, "add", 1, 1, 0.0)
+        y = p + q
+        if self.mode == "calib":
+            self._in_rec[i].update(y)
+            self._out_rec[i].update(y)
+            return y
+        if self._quantized() or self.mode == "lowbit":
+            lo, hi = self._out_range(i)
+            return R.fake_quant(y, lo, hi, 2 ** C.ACT_BITS)
+        return y
+
+    # --------------------------------------------------------- internals
+    def _matmul_site(self, i, rows, w_dm):
+        """rows [R, N] @ w_dm [N, M] through the Pallas kernel."""
+        s = self.specs[i]
+        wmat = w_dm.T  # [M, N]
+        x_lo, x_hi = self._in_range(i)
+        e = self._e_slice(i) if self.e is not None else jnp.ones(s.n_channels)
+        w_lo = jnp.asarray(s.w_lo, jnp.float32)
+        w_hi = jnp.asarray(s.w_hi, jnp.float32)
+        noise = self.noise if self.mode == "noisy" else "none"
+        quantize = self._quantized()
+        r, m = rows.shape[0], wmat.shape[0]
+        if noise in ("thermal", "shot"):
+            xi_out = jax.random.normal(self._noise_key(i), (r, m))
+        else:
+            xi_out = jnp.zeros((r, m), jnp.float32)
+        if noise == "weight":
+            xi_w = jax.random.normal(self._noise_key(i), wmat.shape)
+        else:
+            xi_w = jnp.zeros(wmat.shape, jnp.float32)
+        fn = make_analog_matmul(
+            noise=noise, quantize=quantize, x_lo=float(x_lo), x_hi=float(x_hi)
+        )
+        return fn(rows, wmat, e, xi_out, xi_w, w_lo, w_hi)
+
+    def _grouped_matmul(self, i, rows, w, groups, cin, n_dot):
+        """Grouped conv as `groups` Pallas calls over channel slices."""
+        kh, kw, cin_g, cout = w.shape
+        cout_g = cout // groups
+        s = self.specs[i]
+        outs = []
+        # im2col feature order is (Cin, kh, kw) — see _im2col.
+        cols3 = rows.reshape(rows.shape[0], cin, kh * kw)
+        for g in range(groups):
+            sub = cols3[:, g * cin_g : (g + 1) * cin_g, :].reshape(
+                rows.shape[0], cin_g * kh * kw
+            )
+            wg = w[:, :, :, g * cout_g : (g + 1) * cout_g]
+            # match (Cin, kh, kw) feature order:
+            wmat = jnp.transpose(wg, (2, 0, 1, 3)).reshape(n_dot, cout_g)
+            x_lo, x_hi = self._in_range(i)
+            e_full = (self._e_slice(i) if self.e is not None
+                      else jnp.ones(cout))
+            e = e_full[g * cout_g : (g + 1) * cout_g]
+            w_lo = jnp.asarray(s.w_lo[g * cout_g : (g + 1) * cout_g], jnp.float32)
+            w_hi = jnp.asarray(s.w_hi[g * cout_g : (g + 1) * cout_g], jnp.float32)
+            noise = self.noise if self.mode == "noisy" else "none"
+            r, m = sub.shape[0], cout_g
+            if noise in ("thermal", "shot"):
+                key = jax.random.fold_in(self._noise_key(i), g)
+                xi_out = jax.random.normal(key, (r, m))
+            else:
+                xi_out = jnp.zeros((r, m), jnp.float32)
+            if noise == "weight":
+                key = jax.random.fold_in(self._noise_key(i), g)
+                xi_w = jax.random.normal(key, (m, n_dot))
+            else:
+                xi_w = jnp.zeros((m, n_dot), jnp.float32)
+            fn = make_analog_matmul(
+                noise=noise, quantize=self._quantized(),
+                x_lo=float(x_lo), x_hi=float(x_hi),
+            )
+            outs.append(fn(sub, wmat.T, e, xi_out, xi_w, w_lo, w_hi))
+        return jnp.concatenate(outs, axis=-1)
+
+    def _depthwise_site(self, i, x, w, stride, padding, n_dot):
+        """Depthwise conv with the same quant + noise semantics, fused jnp."""
+        s = self.specs[i]
+        kh, kw, _, cc = w.shape
+        x_lo, x_hi = self._in_range(i)
+        w_lo = jnp.asarray(s.w_lo, jnp.float32)
+        w_hi = jnp.asarray(s.w_hi, jnp.float32)
+        e = self._e_slice(i) if self.e is not None else jnp.ones(s.n_channels)
+        noise = self.noise
+        if self._quantized():
+            xd = R.fake_quant(x, x_lo, x_hi, 2 ** C.ACT_BITS)
+            wd = R.fake_quant(w, w_lo[None, None, None, :],
+                              w_hi[None, None, None, :], 2 ** C.WEIGHT_BITS)
+        else:
+            xd, wd = x, w
+        if noise == "weight":
+            std = R.weight_std(w_lo, w_hi, e)  # [C]
+            xi_w = jax.random.normal(self._noise_key(i), wd.shape)
+            wd = wd + xi_w * std[None, None, None, :]
+        y = lax.conv_general_dilated(
+            xd, wd, (stride, stride), padding,
+            feature_group_count=cc,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        if noise == "thermal":
+            std = R.thermal_std(n_dot, w_lo, w_hi, x_lo, x_hi, e)  # [C]
+            xi = jax.random.normal(self._noise_key(i), y.shape)
+            y = y + xi * std[None, None, None, :]
+        elif noise == "shot":
+            # ||x_patch|| per output position: conv of x^2 with ones kernel.
+            xsq = lax.conv_general_dilated(
+                xd * xd, jnp.ones((kh, kw, 1, cc), jnp.float32),
+                (stride, stride), padding, feature_group_count=cc,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            xnorm = jnp.sqrt(jnp.maximum(xsq, 1e-12))
+            wnorm = jnp.sqrt(jnp.sum(wd * wd, axis=(0, 1, 2)))  # [C]
+            photons = e * C.PHOTONS_PER_AJ
+            std = xnorm * (wnorm / jnp.sqrt(n_dot * photons))[None, None, None, :]
+            xi = jax.random.normal(self._noise_key(i), y.shape)
+            y = y + xi * std
+        return y
+
+    # ----------------------------------------------- calibration results
+    def finalize_calibration(self, params_w: dict, pct: float):
+        """After calibration batches: fill ranges into specs.
+
+        params_w maps site name -> weight array shaped so that the last
+        axis is the output channel (conv [kh,kw,cin,cout] / dense [D,M] /
+        depthwise [kh,kw,C,1] handled specially)."""
+        for i, s in enumerate(self.specs):
+            s.in_lo, s.in_hi, s.in_lo_clip, s.in_hi_clip = \
+                self._in_rec[i].ranges(pct)
+            s.out_lo, s.out_hi, s.out_lo_clip, s.out_hi_clip = \
+                self._out_rec[i].ranges(pct)
+            if s.kind in ("conv", "dense"):
+                w = np.asarray(params_w[s.name])
+                wm = w.reshape(-1, w.shape[-1])  # [N, M]
+                s.w_lo = wm.min(axis=0).astype(np.float32)
+                s.w_hi = wm.max(axis=0).astype(np.float32)
+            elif s.kind == "depthwise":
+                w = np.asarray(params_w[s.name])  # [kh,kw,1,C]
+                s.w_lo = w.min(axis=(0, 1, 2)).astype(np.float32)
+                s.w_hi = w.max(axis=(0, 1, 2)).astype(np.float32)
+            else:  # matmul_act / add: no weights
+                s.w_lo = np.zeros(s.n_channels, np.float32)
+                s.w_hi = np.zeros(s.n_channels, np.float32)
+            # Guard degenerate ranges.
+            if s.in_hi <= s.in_lo:
+                s.in_hi = s.in_lo + 1e-6
+            if s.out_hi <= s.out_lo:
+                s.out_hi = s.out_lo + 1e-6
+
+
+# ------------------------------------------------------------ fp helpers
+def apply_act(y, act: str):
+    if act == "relu":
+        return jax.nn.relu(y)
+    if act == "gelu":
+        return jax.nn.gelu(y)
+    assert act == "none", act
+    return y
+
+
+def _out_hw(h, w, kh, kw, stride, padding):
+    if padding == "SAME":
+        return -(-h // stride), -(-w // stride)
+    return (h - kh) // stride + 1, (w - kw) // stride + 1
+
+
+def _im2col(x, kh, kw, stride, padding):
+    """Extract patches; feature order (Cin, kh, kw) per lax docs."""
+    return lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def max_pool(x, k=2, stride=2):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, k, k, 1), (1, stride, stride, 1), "SAME"
+    )
+
+
+def avg_pool(x, k=2, stride=2):
+    s = lax.reduce_window(
+        x, 0.0, lax.add, (1, k, k, 1), (1, stride, stride, 1), "SAME"
+    )
+    return s / (k * k)
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return gamma * (x - mu) / jnp.sqrt(var + eps) + beta
+
+
+def channel_shuffle(x, groups: int):
+    b, h, w, c = x.shape
+    x = x.reshape(b, h, w, groups, c // groups)
+    x = jnp.swapaxes(x, 3, 4)
+    return x.reshape(b, h, w, c)

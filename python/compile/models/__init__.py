@@ -1,0 +1,19 @@
+"""Model zoo registry."""
+
+from . import (
+    mini_bert,
+    tiny_googlenet,
+    tiny_inception,
+    tiny_mobilenet,
+    tiny_resnet,
+    tiny_shufflenet,
+)
+
+MODELS = {
+    "tiny_resnet": tiny_resnet,
+    "tiny_mobilenet": tiny_mobilenet,
+    "tiny_inception": tiny_inception,
+    "tiny_googlenet": tiny_googlenet,
+    "tiny_shufflenet": tiny_shufflenet,
+    "mini_bert": mini_bert,
+}

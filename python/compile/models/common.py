@@ -1,0 +1,51 @@
+"""Shared initializers for the model zoo."""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def _key_rng(key):
+    # Derive a numpy RNG from a jax key for simple deterministic init.
+    return np.random.default_rng(int(np.asarray(key)[-1]))
+
+
+class Init:
+    """Deterministic He/Glorot initializer with a counter (no jax.random
+    threading noise in model code)."""
+
+    def __init__(self, seed: int):
+        self.rng = np.random.default_rng(seed)
+
+    def conv(self, kh, kw, cin, cout):
+        fan_in = kh * kw * cin
+        w = self.rng.normal(0, np.sqrt(2.0 / fan_in), (kh, kw, cin, cout))
+        return {"w": jnp.asarray(w, jnp.float32),
+                "b": jnp.zeros((cout,), jnp.float32)}
+
+    def depthwise(self, kh, kw, c):
+        # HWIO with feature_group_count=c: I = 1, O = c.
+        w = self.rng.normal(0, np.sqrt(2.0 / (kh * kw)), (kh, kw, 1, c))
+        return {"w": jnp.asarray(w, jnp.float32),
+                "b": jnp.zeros((c,), jnp.float32)}
+
+    def dense(self, d, m, scale=None):
+        s = scale if scale is not None else np.sqrt(2.0 / d)
+        w = self.rng.normal(0, s, (d, m))
+        return {"w": jnp.asarray(w, jnp.float32),
+                "b": jnp.zeros((m,), jnp.float32)}
+
+    def embed(self, n, d):
+        return jnp.asarray(self.rng.normal(0, 0.05, (n, d)), jnp.float32)
+
+    def layernorm(self, d):
+        return {"g": jnp.ones((d,), jnp.float32),
+                "b": jnp.zeros((d,), jnp.float32)}
+
+
+def site_weights(params: dict) -> dict:
+    """Map site name -> weight array for calibration finalization."""
+    out = {}
+    for k, v in params.items():
+        if isinstance(v, dict) and "w" in v:
+            out[k] = v["w"]
+    return out

@@ -1,0 +1,75 @@
+"""mini_bert — transformer encoder mirroring BERT's per-matmul structure:
+QKV/attn-out/FFN dense sites plus the two activation-activation matmuls
+(QK^T and AV) that the paper evaluates under shot noise (App. A)."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from .. import config as C
+from .. import layers as L
+from .common import Init
+
+KIND = "nlp"
+D = 96
+HEADS = 3
+DH = D // HEADS
+FFN = 192
+NLAYERS = 3
+
+
+def init(seed: int = 0):
+    ini = Init(seed)
+    p = {
+        "tok_emb": ini.embed(C.VOCAB, D),
+        "pos_emb": ini.embed(C.SEQ_LEN, D),
+    }
+    for l in range(NLAYERS):
+        # He-scaled projections: 0.05-scale init stalls training on the
+        # single-core build budget (gradients vanish through 3 blocks).
+        p[f"l{l}_ln1"] = ini.layernorm(D)
+        p[f"l{l}_q"] = ini.dense(D, D)
+        p[f"l{l}_k"] = ini.dense(D, D)
+        p[f"l{l}_v"] = ini.dense(D, D)
+        p[f"l{l}_o"] = ini.dense(D, D)
+        p[f"l{l}_ln2"] = ini.layernorm(D)
+        p[f"l{l}_f1"] = ini.dense(D, FFN)
+        p[f"l{l}_f2"] = ini.dense(FFN, D)
+    p["ln_f"] = ini.layernorm(D)
+    p["cls"] = ini.dense(D, C.NLP_CLASSES, scale=0.05)
+    return p
+
+
+def _split_heads(x, b, t):
+    return jnp.transpose(x.reshape(b, t, HEADS, DH), (0, 2, 1, 3))
+
+
+def apply(p, tokens, ctx):
+    """tokens [B, T] int32 -> logits [B, NLP_CLASSES]."""
+    b, t = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :t]
+    mask = (tokens != 0).astype(jnp.float32)  # PAD = 0
+    for l in range(NLAYERS):
+        h = L.layer_norm(x, p[f"l{l}_ln1"]["g"], p[f"l{l}_ln1"]["b"])
+        hf = h.reshape(b * t, D)
+        q = ctx.dense(f"l{l}_q", hf, **p[f"l{l}_q"], rows_per_sample=t).reshape(b, t, D)
+        k = ctx.dense(f"l{l}_k", hf, **p[f"l{l}_k"], rows_per_sample=t).reshape(b, t, D)
+        v = ctx.dense(f"l{l}_v", hf, **p[f"l{l}_v"], rows_per_sample=t).reshape(b, t, D)
+        qh, kh, vh = (_split_heads(z, b, t) for z in (q, k, v))
+        scores = ctx.matmul_act(f"l{l}_qk", qh, jnp.swapaxes(kh, -1, -2))
+        scores = scores / np.sqrt(DH)
+        scores = scores + (1.0 - mask[:, None, None, :]) * -1e9
+        attn = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+        attn = attn / jnp.sum(attn, axis=-1, keepdims=True)
+        ctxv = ctx.matmul_act(f"l{l}_av", attn, vh)  # [B,H,T,DH]
+        merged = jnp.transpose(ctxv, (0, 2, 1, 3)).reshape(b * t, D)
+        o = ctx.dense(f"l{l}_o", merged, **p[f"l{l}_o"], rows_per_sample=t).reshape(b, t, D)
+        x = x + o
+        h2 = L.layer_norm(x, p[f"l{l}_ln2"]["g"], p[f"l{l}_ln2"]["b"])
+        f = ctx.dense(f"l{l}_f1", h2.reshape(b * t, D), **p[f"l{l}_f1"],
+                      act="gelu", rows_per_sample=t)
+        f = ctx.dense(f"l{l}_f2", f, **p[f"l{l}_f2"], rows_per_sample=t).reshape(b, t, D)
+        x = x + f
+    x = L.layer_norm(x, p["ln_f"]["g"], p["ln_f"]["b"])
+    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    pooled = jnp.sum(x * mask[:, :, None], axis=1) / denom
+    return ctx.dense("cls", pooled, **p["cls"])

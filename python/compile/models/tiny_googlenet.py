@@ -1,0 +1,59 @@
+"""tiny_googlenet — GoogLeNet(InceptionV1)-style: large-kernel stem with
+early downsampling, then inception blocks with avg-pool projection
+branches."""
+
+import jax.numpy as jnp
+
+from .. import layers as L
+from .common import Init
+
+KIND = "vision"
+
+# (b1, b2_red, b2, b3_red, b3, b4)
+BLOCKS = [
+    (16, 16, 32, 4, 8, 8),    # in 48 -> 64
+    (24, 20, 40, 6, 12, 12),  # in 64 -> 88
+]
+
+
+def _block_out(b):
+    return b[0] + b[2] + b[4] + b[5]
+
+
+def init(seed: int = 0):
+    ini = Init(seed)
+    p = {
+        "stem1": ini.conv(5, 5, 3, 24),
+        "stem2": ini.conv(1, 1, 24, 24),
+        "stem3": ini.conv(3, 3, 24, 48),
+    }
+    cin = 48
+    for i, b in enumerate(BLOCKS):
+        b1, b2r, b2, b3r, b3, b4 = b
+        p[f"g{i}_b1"] = ini.conv(1, 1, cin, b1)
+        p[f"g{i}_b2r"] = ini.conv(1, 1, cin, b2r)
+        p[f"g{i}_b2"] = ini.conv(3, 3, b2r, b2)
+        p[f"g{i}_b3r"] = ini.conv(1, 1, cin, b3r)
+        p[f"g{i}_b3"] = ini.conv(3, 3, b3r, b3)
+        p[f"g{i}_b4"] = ini.conv(1, 1, cin, b4)
+        cin = _block_out(b)
+    p["fc"] = ini.dense(cin, 10)
+    return p
+
+
+def apply(p, x, ctx):
+    x = ctx.conv("stem1", x, **p["stem1"], stride=2, act="relu")  # 12x12
+    x = ctx.conv("stem2", x, **p["stem2"], stride=1, act="relu")
+    x = ctx.conv("stem3", x, **p["stem3"], stride=1, act="relu")
+    x = L.max_pool(x, 2, 2)  # 6x6
+    for i, b in enumerate(BLOCKS):
+        y1 = ctx.conv(f"g{i}_b1", x, **p[f"g{i}_b1"], stride=1, act="relu")
+        y2 = ctx.conv(f"g{i}_b2r", x, **p[f"g{i}_b2r"], stride=1, act="relu")
+        y2 = ctx.conv(f"g{i}_b2", y2, **p[f"g{i}_b2"], stride=1, act="relu")
+        y3 = ctx.conv(f"g{i}_b3r", x, **p[f"g{i}_b3r"], stride=1, act="relu")
+        y3 = ctx.conv(f"g{i}_b3", y3, **p[f"g{i}_b3"], stride=1, act="relu")
+        y4 = L.avg_pool(x, 3, 1)
+        y4 = ctx.conv(f"g{i}_b4", y4, **p[f"g{i}_b4"], stride=1, act="relu")
+        x = jnp.concatenate([y1, y2, y3, y4], axis=-1)
+    x = L.global_avg_pool(x)
+    return ctx.dense("fc", x, **p["fc"], act="none")

@@ -1,0 +1,55 @@
+"""tiny_inception — InceptionV3-style multi-branch CNN: parallel 1x1 /
+1x1->3x3 / 1x1->5x5 / pool->1x1 branches concatenated per block."""
+
+import jax.numpy as jnp
+
+from .. import layers as L
+from .common import Init
+
+KIND = "vision"
+
+# Per block: (b1, b2_red, b2, b3_red, b3, b4) output channels.
+BLOCKS = [
+    (16, 12, 24, 6, 12, 12),   # 12x12, in 24  -> out 64
+    (16, 12, 24, 6, 12, 12),   # 12x12, in 64  -> out 64
+    (24, 16, 48, 8, 12, 12),   # 6x6,   in 64  -> out 96
+]
+
+
+def _block_out(b):
+    return b[0] + b[2] + b[4] + b[5]
+
+
+def init(seed: int = 0):
+    ini = Init(seed)
+    p = {"stem": ini.conv(3, 3, 3, 24)}
+    cin = 24
+    for i, b in enumerate(BLOCKS):
+        b1, b2r, b2, b3r, b3, b4 = b
+        p[f"i{i}_b1"] = ini.conv(1, 1, cin, b1)
+        p[f"i{i}_b2r"] = ini.conv(1, 1, cin, b2r)
+        p[f"i{i}_b2"] = ini.conv(3, 3, b2r, b2)
+        p[f"i{i}_b3r"] = ini.conv(1, 1, cin, b3r)
+        p[f"i{i}_b3"] = ini.conv(5, 5, b3r, b3)
+        p[f"i{i}_b4"] = ini.conv(1, 1, cin, b4)
+        cin = _block_out(b)
+    p["fc"] = ini.dense(cin, 10)
+    return p
+
+
+def apply(p, x, ctx):
+    x = ctx.conv("stem", x, **p["stem"], stride=1, act="relu")
+    x = L.max_pool(x, 2, 2)  # 12x12
+    for i, b in enumerate(BLOCKS):
+        if i == 2:
+            x = L.max_pool(x, 2, 2)  # 6x6
+        y1 = ctx.conv(f"i{i}_b1", x, **p[f"i{i}_b1"], stride=1, act="relu")
+        y2 = ctx.conv(f"i{i}_b2r", x, **p[f"i{i}_b2r"], stride=1, act="relu")
+        y2 = ctx.conv(f"i{i}_b2", y2, **p[f"i{i}_b2"], stride=1, act="relu")
+        y3 = ctx.conv(f"i{i}_b3r", x, **p[f"i{i}_b3r"], stride=1, act="relu")
+        y3 = ctx.conv(f"i{i}_b3", y3, **p[f"i{i}_b3"], stride=1, act="relu")
+        y4 = L.max_pool(x, 3, 1)
+        y4 = ctx.conv(f"i{i}_b4", y4, **p[f"i{i}_b4"], stride=1, act="relu")
+        x = jnp.concatenate([y1, y2, y3, y4], axis=-1)
+    x = L.global_avg_pool(x)
+    return ctx.dense("fc", x, **p["fc"], act="none")

@@ -1,0 +1,48 @@
+"""tiny_mobilenet — inverted-residual / depthwise-separable CNN
+(MobileNetV2 motif: expand 1x1 -> depthwise 3x3 -> project 1x1, linear
+bottleneck, residual on stride-1 same-shape blocks). The depthwise sites
+give it the paper's characteristic precision fragility.
+"""
+
+import jax.numpy as jnp
+
+from .. import layers as L
+from .common import Init
+
+KIND = "vision"
+T = 4  # expansion factor
+# (cout, stride, residual)
+BLOCKS = [(24, 2, False), (24, 1, True), (48, 2, False), (48, 1, True),
+          (64, 1, False)]
+
+
+def init(seed: int = 0):
+    ini = Init(seed)
+    p = {"stem": ini.conv(3, 3, 3, 16)}
+    cin = 16
+    for i, (cout, _, _) in enumerate(BLOCKS):
+        mid = cin * T
+        p[f"b{i}_x"] = ini.conv(1, 1, cin, mid)
+        p[f"b{i}_d"] = ini.depthwise(3, 3, mid)
+        p[f"b{i}_p"] = ini.conv(1, 1, mid, cout)
+        cin = cout
+    p["head"] = ini.conv(1, 1, cin, 128)
+    p["fc"] = ini.dense(128, 10)
+    return p
+
+
+def apply(p, x, ctx):
+    x = ctx.conv("stem", x, **p["stem"], stride=1, act="relu")
+    cin = 16
+    for i, (cout, stride, residual) in enumerate(BLOCKS):
+        inp = x
+        x = ctx.conv(f"b{i}_x", x, **p[f"b{i}_x"], stride=1, act="relu")
+        x = ctx.depthwise(f"b{i}_d", x, **p[f"b{i}_d"], stride=stride,
+                          act="relu")
+        x = ctx.conv(f"b{i}_p", x, **p[f"b{i}_p"], stride=1, act="none")
+        if residual:
+            x = ctx.add(f"b{i}_add", x, inp)
+        cin = cout
+    x = ctx.conv("head", x, **p["head"], stride=1, act="relu")
+    x = L.global_avg_pool(x)
+    return ctx.dense("fc", x, **p["fc"], act="none")

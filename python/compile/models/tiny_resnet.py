@@ -1,0 +1,55 @@
+"""tiny_resnet — bottleneck-residual CNN mirroring ResNet50's motif.
+
+Stem conv, three stages of two bottleneck blocks (1x1 reduce -> 3x3 ->
+1x1 expand, identity/projection shortcut), global average pool, linear
+classifier. ~0.2 M params on 24x24x3 inputs.
+"""
+
+import jax.numpy as jnp
+
+from .. import layers as L
+from .common import Init
+
+KIND = "vision"
+STAGES = [(32, 1), (64, 2), (128, 2)]  # (out_channels, first_stride)
+BLOCKS = 2
+REDUCE = 4  # bottleneck reduction factor
+
+
+def init(seed: int = 0):
+    ini = Init(seed)
+    p = {"stem": ini.conv(3, 3, 3, 32)}
+    cin = 32
+    for si, (cout, _) in enumerate(STAGES):
+        mid = cout // REDUCE
+        for bi in range(BLOCKS):
+            pre = f"s{si}b{bi}"
+            c0 = cin if bi == 0 else cout
+            p[f"{pre}_r"] = ini.conv(1, 1, c0, mid)
+            p[f"{pre}_c"] = ini.conv(3, 3, mid, mid)
+            p[f"{pre}_e"] = ini.conv(1, 1, mid, cout)
+            if bi == 0 and (c0 != cout or STAGES[si][1] != 1):
+                p[f"{pre}_p"] = ini.conv(1, 1, c0, cout)
+        cin = cout
+    p["fc"] = ini.dense(cin, 10)
+    return p
+
+
+def apply(p, x, ctx):
+    x = ctx.conv("stem", x, **p["stem"], stride=1, act="relu")
+    cin = 32
+    for si, (cout, stride) in enumerate(STAGES):
+        for bi in range(BLOCKS):
+            pre = f"s{si}b{bi}"
+            s = stride if bi == 0 else 1
+            shortcut = x
+            y = ctx.conv(f"{pre}_r", x, **p[f"{pre}_r"], stride=1, act="relu")
+            y = ctx.conv(f"{pre}_c", y, **p[f"{pre}_c"], stride=s, act="relu")
+            y = ctx.conv(f"{pre}_e", y, **p[f"{pre}_e"], stride=1, act="none")
+            if f"{pre}_p" in p:
+                shortcut = ctx.conv(f"{pre}_p", shortcut, **p[f"{pre}_p"],
+                                    stride=s, act="none")
+            x = L.apply_act(ctx.add(f"{pre}_add", y, shortcut), "relu")
+        cin = cout
+    x = L.global_avg_pool(x)
+    return ctx.dense("fc", x, **p["fc"], act="none")

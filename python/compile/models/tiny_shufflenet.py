@@ -1,0 +1,57 @@
+"""tiny_shufflenet — ShuffleNet motif: grouped 1x1 convs + channel shuffle
++ depthwise 3x3, concat-downsample units (avg-pool shortcut)."""
+
+import jax.numpy as jnp
+
+from .. import layers as L
+from .common import Init
+
+KIND = "vision"
+G = 3  # groups
+
+
+def init(seed: int = 0):
+    ini = Init(seed)
+    p = {"stem": ini.conv(3, 3, 3, 24)}
+
+    def unit(prefix, cin, cout):
+        # grouped 1x1 (cin -> cout) stored as full [1,1,cin/G, cout]
+        p[f"{prefix}_g1"] = ini.conv(1, 1, cin // G, cout)
+        p[f"{prefix}_d"] = ini.depthwise(3, 3, cout)
+        p[f"{prefix}_g2"] = ini.conv(1, 1, cout // G, cout)
+
+    # stage 1: downsample 24 -> concat(24, 24) = 48
+    unit("u0", 24, 24)
+    # stage 1 residual unit at 48
+    unit("u1", 48, 48)
+    # stage 2: downsample 48 -> concat(48, 48) = 96
+    unit("u2", 48, 48)
+    unit("u3", 96, 96)
+    p["fc"] = ini.dense(96, 10)
+    return p
+
+
+def _unit(p, x, ctx, prefix, stride):
+    cin = x.shape[-1]
+    branch = ctx.conv(f"{prefix}_g1", x, **p[f"{prefix}_g1"], stride=1,
+                      groups=G, act="relu")
+    branch = L.channel_shuffle(branch, G)
+    branch = ctx.depthwise(f"{prefix}_d", branch, **p[f"{prefix}_d"],
+                           stride=stride, act="none")
+    branch = ctx.conv(f"{prefix}_g2", branch, **p[f"{prefix}_g2"], stride=1,
+                      groups=G, act="none")
+    if stride == 2:
+        shortcut = L.avg_pool(x, 3, 2)
+        return L.apply_act(jnp.concatenate([shortcut, branch], axis=-1),
+                           "relu")
+    return L.apply_act(ctx.add(f"{prefix}_add", branch, x), "relu")
+
+
+def apply(p, x, ctx):
+    x = ctx.conv("stem", x, **p["stem"], stride=1, act="relu")
+    x = _unit(p, x, ctx, "u0", 2)   # 12x12, 48ch
+    x = _unit(p, x, ctx, "u1", 1)
+    x = _unit(p, x, ctx, "u2", 2)   # 6x6, 96ch
+    x = _unit(p, x, ctx, "u3", 1)
+    x = L.global_avg_pool(x)
+    return ctx.dense("fc", x, **p["fc"], act="none")

@@ -1,0 +1,156 @@
+"""L2 entry-point assembly for AOT export.
+
+Builds the jittable functions that become HLO artifacts. All entries take
+the flat f32 parameter vector as their first argument (kept outside the
+HLO so artifacts stay small and weights live in `params.bin`):
+
+  fwd_fp     (params, x)                          -> logits
+  fwd_quant  (params, x)                          -> logits   (8-bit clean)
+  fwd_noisy  (params, x, seed, e)                 -> logits   (Eq. 9/10/11)
+  fwd_lowbit (params, x, bits)                    -> logits   (Table I/III)
+  grad_e     (params, x, y, seed, loge, lam, log_emax)
+             -> (loss, nll, acc, grad_loge)                   (Eq. 14)
+
+E is always the full per-channel vector; per-layer granularity is a
+broadcast performed by the Rust coordinator. `grad_e` optimizes log-E
+(equivalent reparameterization of the paper's E; guarantees positivity and
+makes Adam scale-free). `photon_quant` restricts E to whole photons/MAC
+via the STE (Fig. 4's discrete-energy mode).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import config as C
+from .kernels.ref import ste_round
+from .layers import Ctx
+from .models import MODELS
+
+
+# ----------------------------------------------------------- params flat
+def flatten_params(params):
+    leaves = jax.tree_util.tree_leaves(params)
+    flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+    return flat
+
+
+def make_unflatten(params_example):
+    leaves, treedef = jax.tree_util.tree_flatten(params_example)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    offsets = np.cumsum([0] + sizes)
+
+    def unflatten(flat):
+        out = [
+            flat[offsets[i] : offsets[i + 1]].reshape(shapes[i])
+            for i in range(len(shapes))
+        ]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return unflatten, int(offsets[-1])
+
+
+# ------------------------------------------------------------ energy aux
+def macs_per_channel_vec(specs) -> np.ndarray:
+    """Concatenated per-channel MACs-per-sample vector (penalty weights)."""
+    e_len = specs[-1].e_offset + specs[-1].n_channels
+    v = np.zeros(e_len, np.float32)
+    for s in specs:
+        v[s.e_offset : s.e_offset + s.n_channels] = s.macs_per_channel
+    return v
+
+
+def total_macs(specs) -> float:
+    return float(sum(s.n_macs for s in specs))
+
+
+def _photon_quantize(e):
+    """Restrict energy to whole photons/MAC (>= 1) with STE rounding."""
+    photons = jnp.maximum(ste_round(e * C.PHOTONS_PER_AJ), 1.0)
+    return photons / C.PHOTONS_PER_AJ
+
+
+# -------------------------------------------------------------- builders
+def build_fwd_fp(name, specs):
+    mod = MODELS[name]
+
+    def f(params_flat, x):
+        unflatten = _UNFLATTEN[name]
+        return (mod.apply(unflatten(params_flat), x, Ctx("fp")),)
+
+    return f
+
+
+def build_fwd_quant(name, specs):
+    mod = MODELS[name]
+
+    def f(params_flat, x):
+        unflatten = _UNFLATTEN[name]
+        return (mod.apply(unflatten(params_flat), x, Ctx("quant", specs=specs)),)
+
+    return f
+
+
+def build_fwd_noisy(name, specs, noise, clip, photon_quant=False):
+    mod = MODELS[name]
+
+    def f(params_flat, x, seed, e):
+        unflatten = _UNFLATTEN[name]
+        if photon_quant:
+            e = _photon_quantize(e)
+        key = jax.random.PRNGKey(seed)
+        ctx = Ctx("noisy", specs=specs, noise=noise, e=e, key=key, clip=clip)
+        return (mod.apply(unflatten(params_flat), x, ctx),)
+
+    return f
+
+
+def build_fwd_lowbit(name, specs):
+    mod = MODELS[name]
+
+    def f(params_flat, x, bits):
+        unflatten = _UNFLATTEN[name]
+        ctx = Ctx("lowbit", specs=specs, bits=bits)
+        return (mod.apply(unflatten(params_flat), x, ctx),)
+
+    return f
+
+
+def build_grad_e(name, specs, noise, clip, photon_quant=False):
+    """Eq. 14: d/d(logE) [ NLL + lam * relu(log sum(E*macs) - log Emax) ]."""
+    mod = MODELS[name]
+    macs = jnp.asarray(macs_per_channel_vec(specs))
+
+    def objective(loge, params_flat, x, y, seed, lam, log_emax):
+        e = jnp.exp(loge)
+        e_for_fwd = _photon_quantize(e) if photon_quant else e
+        key = jax.random.PRNGKey(seed)
+        ctx = Ctx("noisy", specs=specs, noise=noise, e=e_for_fwd, key=key,
+                  clip=clip)
+        logits = mod.apply(_UNFLATTEN[name](params_flat), x, ctx)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        e_pen = _photon_quantize(e) if photon_quant else e
+        log_total = jnp.log(jnp.sum(e_pen * macs))
+        loss = nll + lam * jnp.maximum(log_total - log_emax, 0.0)
+        return loss, (nll, acc)
+
+    def f(params_flat, x, y, seed, loge, lam, log_emax):
+        (loss, (nll, acc)), g = jax.value_and_grad(objective, has_aux=True)(
+            loge, params_flat, x, y, seed, lam, log_emax
+        )
+        return loss, nll, acc, g
+
+    return f
+
+
+# Per-model unflatten closures, installed by aot.py before lowering.
+_UNFLATTEN = {}
+
+
+def install_unflatten(name, params_example):
+    unflatten, n = make_unflatten(params_example)
+    _UNFLATTEN[name] = unflatten
+    return n

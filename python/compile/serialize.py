@@ -1,0 +1,106 @@
+"""Binary tensor container ("DPT1") + meta.json writers.
+
+The Rust side has no serde/npy crates offline, so we define a trivially
+parseable little-endian container:
+
+  magic   4 bytes  b"DPT1"
+  count   u32      number of tensors
+  per tensor:
+    name_len u16, name utf-8
+    dtype    u8   (0 = f32, 1 = i32, 2 = u32)
+    ndim     u8
+    dims     u32 * ndim
+    data     raw little-endian
+
+`meta.json` carries the per-site table the Rust coordinator needs for
+noise-bits analysis (Eq. 7/8), energy bookkeeping and scheduling.
+"""
+
+import json
+import struct
+
+import numpy as np
+
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1,
+           np.dtype(np.uint32): 2}
+
+
+def write_dpt(path: str, tensors: dict):
+    """tensors: name -> np.ndarray (f32/i32/u32)."""
+    with open(path, "wb") as f:
+        f.write(b"DPT1")
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = _DTYPES[arr.dtype]
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def read_dpt(path: str) -> dict:
+    """Inverse of write_dpt (used by python tests)."""
+    inv = {v: k for k, v in _DTYPES.items()}
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"DPT1"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            dt = inv[code]
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(n * 4), dtype=dt).reshape(dims)
+            out[name] = data
+    return out
+
+
+def site_to_json(s) -> dict:
+    return {
+        "name": s.name,
+        "kind": s.kind,
+        "n_dot": s.n_dot,
+        "n_channels": s.n_channels,
+        "macs_per_channel": s.macs_per_channel,
+        "e_offset": s.e_offset,
+        "in_lo": s.in_lo, "in_hi": s.in_hi,
+        "in_lo_clip": s.in_lo_clip, "in_hi_clip": s.in_hi_clip,
+        "out_lo": s.out_lo, "out_hi": s.out_hi,
+        "out_lo_clip": s.out_lo_clip, "out_hi_clip": s.out_hi_clip,
+        "w_lo_layer": float(np.min(s.w_lo)) if s.w_lo is not None else 0.0,
+        "w_hi_layer": float(np.max(s.w_hi)) if s.w_hi is not None else 0.0,
+        "w_lo": [float(v) for v in (s.w_lo if s.w_lo is not None else [])],
+        "w_hi": [float(v) for v in (s.w_hi if s.w_hi is not None else [])],
+    }
+
+
+def write_meta(path: str, *, name, kind, specs, params_len, e_len,
+               baselines, artifacts, extra=None):
+    from . import config as C
+
+    meta = {
+        "name": name,
+        "kind": kind,
+        "batch": C.BATCH,
+        "params_len": params_len,
+        "e_len": e_len,
+        "n_sites": len(specs),
+        "total_macs_per_sample": float(sum(s.n_macs for s in specs)),
+        "sigma_thermal": C.SIGMA_THERMAL,
+        "sigma_weight": C.SIGMA_WEIGHT,
+        "photons_per_aj": C.PHOTONS_PER_AJ,
+        "act_bits": C.ACT_BITS,
+        "baselines": baselines,
+        "artifacts": artifacts,
+        "sites": [site_to_json(s) for s in specs],
+    }
+    if extra:
+        meta.update(extra)
+    with open(path, "w") as f:
+        json.dump(meta, f, indent=1)

@@ -1,0 +1,105 @@
+"""Build-time training of the model zoo (runs once under `make artifacts`).
+
+Plain Adam + cross-entropy on the synthetic tasks. This reproduces the
+paper's precondition — a *pretrained* network — after which network
+weights are frozen; only energy allocations are learned (in Rust, via the
+exported grad artifact).
+"""
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import config as C
+from . import data as D
+from .layers import Ctx
+from .models import MODELS
+
+
+def cross_entropy(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def accuracy(logits, y):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train_model(name: str, verbose: bool = True):
+    """Train one zoo model; returns (params, eval_acc_fp)."""
+    mod = MODELS[name]
+    cfg = C.TRAIN_CFG[name]
+    kind = "vision" if mod.KIND == "vision" else "nlp"
+    tx, ty, _, _, ex, ey = D.splits(kind)
+    params = mod.init(cfg.seed)
+
+    @jax.jit
+    def step(params, opt, xb, yb):
+        def loss_fn(p):
+            logits = mod.apply(p, xb, Ctx("fp"))
+            return cross_entropy(logits, yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, grads, opt, cfg.lr)
+        return params, opt, loss
+
+    @jax.jit
+    def eval_logits(params, xb):
+        return mod.apply(params, xb, Ctx("fp"))
+
+    opt = adam_init(params)
+    n = tx.shape[0]
+    rng = np.random.default_rng(cfg.seed)
+    for epoch in range(cfg.epochs):
+        order = rng.permutation(n)
+        losses = []
+        for s in range(0, n - C.BATCH + 1, C.BATCH):
+            idx = order[s : s + C.BATCH]
+            params, opt, loss = step(params, opt, jnp.asarray(tx[idx]),
+                                     jnp.asarray(ty[idx]))
+            losses.append(float(loss))
+        if verbose:
+            # Eval only on the last epoch (single-core env: eval is ~15% of
+            # an epoch's wall-clock and the final number is what matters).
+            if epoch == cfg.epochs - 1:
+                acc = evaluate(eval_logits, params, ex[:256], ey[:256])
+                print(f"[train {name}] epoch {epoch}: "
+                      f"loss={np.mean(losses):.4f} eval_acc={acc:.4f}",
+                      flush=True)
+            else:
+                print(f"[train {name}] epoch {epoch}: "
+                      f"loss={np.mean(losses):.4f}", flush=True)
+    final_acc = evaluate(eval_logits, params, ex, ey)
+    return params, final_acc
+
+
+def evaluate(eval_fn, params, ex, ey):
+    correct = 0
+    for s in range(0, len(ex) - C.BATCH + 1, C.BATCH):
+        logits = eval_fn(params, jnp.asarray(ex[s : s + C.BATCH]))
+        correct += int(jnp.sum(jnp.argmax(logits, -1) ==
+                               jnp.asarray(ey[s : s + C.BATCH])))
+    n = (len(ex) // C.BATCH) * C.BATCH
+    return correct / n

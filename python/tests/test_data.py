@@ -1,0 +1,55 @@
+"""Synthetic dataset tests: determinism + NLP rule correctness."""
+
+import numpy as np
+
+from compile import config as C
+from compile import data as D
+
+
+def test_vision_deterministic():
+    a, ya = D.make_vision(16, seed=7)
+    b, yb = D.make_vision(16, seed=7)
+    assert np.array_equal(a, b) and np.array_equal(ya, yb)
+    c, _ = D.make_vision(16, seed=8)
+    assert not np.array_equal(a, c)
+
+
+def test_vision_shapes_and_balance():
+    x, y = D.make_vision(500, seed=1)
+    assert x.shape == (500, C.IMG_SIZE, C.IMG_SIZE, C.IMG_CHANNELS)
+    assert x.dtype == np.float32
+    assert y.min() >= 0 and y.max() < C.NUM_CLASSES
+    counts = np.bincount(y, minlength=C.NUM_CLASSES)
+    assert counts.min() > 20  # roughly balanced
+
+
+def test_nlp_rules_hold():
+    x, y = D.make_nlp(300, seed=3)
+    prem_len = C.SEQ_LEN // 2 - 1
+    for i in range(len(x)):
+        row = x[i]
+        assert row[prem_len] == D.SEP
+        prem = row[:prem_len]
+        hyp = row[prem_len + 1 :]
+        hyp = hyp[hyp != 0]
+        if y[i] == 0:
+            assert D._contains(prem, hyp), i
+        elif y[i] == 1:
+            assert D._contains(prem, hyp[::-1]), i
+        else:
+            assert not D._contains(prem, hyp), i
+            assert not D._contains(prem, hyp[::-1]), i
+
+
+def test_nlp_tokens_in_vocab():
+    x, _ = D.make_nlp(100, seed=4)
+    assert x.min() >= 0 and x.max() < C.VOCAB
+
+
+def test_splits_are_disjoint_seeds():
+    tx, _, cx, _, ex, _ = D.splits("vision")
+    assert tx.shape[0] == C.TRAIN_SIZE
+    assert cx.shape[0] == C.CALIB_SIZE
+    assert ex.shape[0] == C.EVAL_SIZE
+    # Different seeds -> different content.
+    assert not np.array_equal(tx[:16], ex[:16])

@@ -1,0 +1,172 @@
+"""L1 Pallas kernel vs pure-jnp oracle — the core correctness signal.
+
+Covers: numerics parity for every noise family and quantization setting,
+the custom-VJP consistency (finite differences on log-E), the paper's
+1/sqrt(E) noise scaling, and the redundant-coding equivalence (executing
+K times and averaging matches a single execution at K x energy).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import config as C
+from compile.kernels import ref as R
+from compile.kernels.analog_matmul import analog_matmul, make_analog_matmul
+
+
+def mk(b, n, m, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, n)).astype(np.float32)
+    w = rng.normal(size=(m, n)).astype(np.float32)
+    xi = rng.normal(size=(b, m)).astype(np.float32)
+    xiw = rng.normal(size=(m, n)).astype(np.float32)
+    e = np.full(m, 5.0, np.float32)
+    return x, w, xi, xiw, e, w.min(1), w.max(1)
+
+
+CASES = [("thermal", True), ("weight", True), ("shot", False), ("none", True)]
+
+
+@pytest.mark.parametrize("noise,quant", CASES)
+def test_pallas_matches_ref(noise, quant):
+    x, w, xi, xiw, e, wlo, whi = mk(70, 27, 16)
+    y1 = analog_matmul(x, w, e, xi, xiw, noise=noise, quantize=quant,
+                       x_lo=-3.0, x_hi=3.0, w_lo=wlo, w_hi=whi)
+    y2 = R.analog_matmul_ref(x, w, e, xi, xiw, noise=noise,
+                             x_lo=-3.0, x_hi=3.0, w_lo=wlo, w_hi=whi)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 40),
+    n=st.integers(1, 64),
+    m=st.integers(1, 24),
+    noise=st.sampled_from(["thermal", "weight", "shot"]),
+)
+def test_pallas_matches_ref_shapes(b, n, m, noise):
+    x, w, xi, xiw, e, wlo, whi = mk(b, n, m, seed=b * 1000 + n * 10 + m)
+    quant = noise != "shot"
+    y1 = analog_matmul(x, w, e, xi, xiw, noise=noise, quantize=quant,
+                       x_lo=-3.0, x_hi=3.0, w_lo=wlo, w_hi=whi)
+    y2 = R.analog_matmul_ref(x, w, e, xi, xiw, noise=noise,
+                             x_lo=-3.0, x_hi=3.0, w_lo=wlo, w_hi=whi)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_row_tiling_padding_path():
+    # B = 300 forces pad to 512 with ROW_TILE = 256.
+    x, w, xi, xiw, e, wlo, whi = mk(300, 27, 8)
+    y1 = analog_matmul(x, w, e, xi, xiw, noise="thermal", quantize=True,
+                       x_lo=-3.0, x_hi=3.0, w_lo=wlo, w_hi=whi)
+    y2 = R.analog_matmul_ref(x, w, e, xi, xiw, noise="thermal",
+                             x_lo=-3.0, x_hi=3.0, w_lo=wlo, w_hi=whi)
+    assert y1.shape == (300, 8)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_noise_std_scales_inverse_sqrt_e():
+    """Paper Sec. IV: noise std proportional to 1/sqrt(E)."""
+    x, w, _, _, _, wlo, whi = mk(64, 27, 16)
+    clean = R.analog_matmul_ref(x, w, jnp.ones(16), jnp.zeros((64, 16)),
+                                jnp.zeros((16, 27)), noise="none",
+                                x_lo=-3.0, x_hi=3.0, w_lo=wlo, w_hi=whi)
+    stds = []
+    for e_val in [1.0, 4.0, 16.0]:
+        devs = []
+        for s in range(8):
+            xi = np.random.default_rng(s).normal(size=(64, 16)).astype(np.float32)
+            y = R.analog_matmul_ref(x, w, jnp.full(16, e_val), xi,
+                                    jnp.zeros((16, 27)), noise="thermal",
+                                    x_lo=-3.0, x_hi=3.0, w_lo=wlo, w_hi=whi)
+            devs.append(np.asarray(y - clean).ravel())
+        stds.append(np.concatenate(devs).std())
+    assert abs(stds[0] / stds[1] - 2.0) < 0.2, stds
+    assert abs(stds[1] / stds[2] - 2.0) < 0.2, stds
+
+
+def test_redundant_coding_equivalence():
+    """Averaging K independent executions at energy E matches one
+    execution at K*E in noise variance (the Fig. 3 averaging identity)."""
+    x, w, _, _, _, wlo, whi = mk(64, 27, 16, seed=3)
+    clean = np.asarray(
+        R.analog_matmul_ref(x, w, jnp.ones(16), jnp.zeros((64, 16)),
+                            jnp.zeros((16, 27)), noise="none",
+                            x_lo=-3.0, x_hi=3.0, w_lo=wlo, w_hi=whi))
+    K, E = 8, 2.0
+    rng = np.random.default_rng(0)
+    avg = np.zeros_like(clean)
+    for _ in range(K):
+        xi = rng.normal(size=(64, 16)).astype(np.float32)
+        avg += np.asarray(
+            R.analog_matmul_ref(x, w, jnp.full(16, E), xi, jnp.zeros((16, 27)),
+                                noise="thermal", x_lo=-3.0, x_hi=3.0,
+                                w_lo=wlo, w_hi=whi))
+    avg /= K
+    var_avg = ((avg - clean) ** 2).mean()
+    devs = []
+    for s in range(K):
+        xi = np.random.default_rng(100 + s).normal(size=(64, 16)).astype(np.float32)
+        y = np.asarray(
+            R.analog_matmul_ref(x, w, jnp.full(16, K * E), xi,
+                                jnp.zeros((16, 27)), noise="thermal",
+                                x_lo=-3.0, x_hi=3.0, w_lo=wlo, w_hi=whi))
+        devs.append(((y - clean) ** 2).mean())
+    var_ke = np.mean(devs)
+    assert abs(var_avg / var_ke - 1.0) < 0.35, (var_avg, var_ke)
+
+
+def test_vjp_matches_finite_difference():
+    x, w, xi, xiw, _, wlo, whi = mk(40, 27, 16)
+    f = make_analog_matmul(noise="thermal", quantize=True, x_lo=-3.0, x_hi=3.0)
+
+    def loss(loge):
+        y = f(x, w, jnp.exp(loge), xi, xiw, wlo, whi)
+        return jnp.sum(y ** 2)
+
+    g = jax.grad(loss)(jnp.zeros(16))
+    eps = 2e-2  # central difference; f32 losses are O(1e4), keep eps coarse
+    for idx in [0, 7, 15]:
+        lp = loss(jnp.zeros(16).at[idx].set(eps))
+        lm = loss(jnp.zeros(16).at[idx].set(-eps))
+        fd = (lp - lm) / (2 * eps)
+        assert abs(fd - g[idx]) < 0.10 * max(1.0, abs(fd)), (idx, fd, g[idx])
+
+
+def test_shot_noise_grad_flows_and_is_negative_for_variance():
+    """More energy -> less noise: d(variance-ish loss)/d(logE) < 0."""
+    x, w, xi, xiw, _, wlo, whi = mk(40, 27, 16, seed=5)
+    f = make_analog_matmul(noise="shot", quantize=False, x_lo=0.0, x_hi=0.0)
+    clean = x @ w.T
+
+    def loss(loge):
+        y = f(x, w, jnp.exp(loge), xi, xiw, wlo, whi)
+        return jnp.sum((y - clean) ** 2)
+
+    g = jax.grad(loss)(jnp.zeros(16) + 1.0)
+    assert np.all(np.asarray(g) < 0), g
+
+
+def test_matmul_act_shot_ref_statistics():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(2, 3, 8, 16)).astype(np.float32)
+    b = rng.normal(size=(2, 3, 16, 8)).astype(np.float32)
+    clean = a @ b
+    e = 4.0
+    devs = []
+    for s in range(16):
+        xi = np.random.default_rng(s).normal(size=(2, 3, 8, 8)).astype(np.float32)
+        y = R.matmul_act_shot_ref(a, b, jnp.float32(e), xi)
+        devs.append(np.asarray(y - clean))
+    emp = np.stack(devs).std(axis=0)
+    an = np.linalg.norm(a, axis=-1)[..., :, None] * \
+        np.linalg.norm(b, axis=-2)[..., None, :]
+    expect = an / np.sqrt(16 * e * C.PHOTONS_PER_AJ)
+    ratio = emp.mean() / expect.mean()
+    assert abs(ratio - 1.0) < 0.3, ratio

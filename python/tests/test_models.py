@@ -1,0 +1,86 @@
+"""Model zoo: shapes, site-order stability across modes, params flatten."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import config as C
+from compile import noisy as N
+from compile.calibrate import calibrate
+from compile import data as D
+from compile.layers import Ctx
+from compile.models import MODELS
+
+
+def _input(mod, b=4):
+    if mod.KIND == "vision":
+        return jnp.zeros((b, C.IMG_SIZE, C.IMG_SIZE, C.IMG_CHANNELS))
+    return jnp.zeros((b, C.SEQ_LEN), jnp.int32)
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_output_shapes(name):
+    mod = MODELS[name]
+    p = mod.init(0)
+    out = mod.apply(p, _input(mod), Ctx("fp"))
+    classes = C.NUM_CLASSES if mod.KIND == "vision" else C.NLP_CLASSES
+    assert out.shape == (4, classes)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_site_order_stable_across_modes(name):
+    """All ctx modes must visit sites in the identical order (the E
+    vector layout depends on it)."""
+    mod = MODELS[name]
+    p = mod.init(0)
+    kind = "vision" if mod.KIND == "vision" else "nlp"
+    _, _, cx, _, _, _ = D.splits(kind)
+    specs = calibrate(name, p, cx, n_batches=1)
+    x = jnp.asarray(cx[:4])
+    etot = specs[-1].e_offset + specs[-1].n_channels
+    # Re-running in noisy mode asserts name/shape agreement per site.
+    for noise in C.noises_for(name):
+        ctx = Ctx("noisy", specs=specs, noise=noise,
+                  e=jnp.full((etot,), 10.0), key=jax.random.PRNGKey(0),
+                  clip=False)
+        mod.apply(p, x, ctx)
+        assert ctx.idx == len(specs)
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_flatten_roundtrip(name):
+    mod = MODELS[name]
+    p = mod.init(0)
+    flat = N.flatten_params(p)
+    unflatten, n = N.make_unflatten(p)
+    assert flat.shape == (n,)
+    p2 = unflatten(flat)
+    for a, b in zip(jax.tree_util.tree_leaves(p), jax.tree_util.tree_leaves(p2)):
+        assert a.shape == b.shape
+        assert np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_e_offsets_contiguous():
+    mod = MODELS["tiny_resnet"]
+    p = mod.init(0)
+    _, _, cx, _, _, _ = D.splits("vision")
+    specs = calibrate("tiny_resnet", p, cx, n_batches=1)
+    off = 0
+    for s in specs:
+        assert s.e_offset == off
+        off += s.n_channels
+    assert sum(s.n_macs for s in specs) > 1e6
+
+
+def test_macs_match_architecture():
+    """Spot-check the stem conv MAC count: Ho*Wo*K*Cout."""
+    mod = MODELS["tiny_resnet"]
+    p = mod.init(0)
+    _, _, cx, _, _, _ = D.splits("vision")
+    specs = calibrate("tiny_resnet", p, cx, n_batches=1)
+    stem = specs[0]
+    assert stem.name == "stem"
+    assert stem.n_dot == 27
+    assert stem.n_macs == 24 * 24 * 27 * 32

@@ -1,0 +1,129 @@
+"""Entry-point assembly (noisy.py): zero-noise limits, Eq.-14 penalty,
+photon quantization, grad wiring."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import config as C
+from compile import data as D
+from compile import noisy as N
+from compile.calibrate import calibrate
+from compile.layers import Ctx
+from compile.models import MODELS
+
+NAME = "tiny_shufflenet"  # smallest model: fastest tests
+
+
+@pytest.fixture(scope="module")
+def setup():
+    mod = MODELS[NAME]
+    p = mod.init(0)
+    _, _, cx, _, ex, ey = D.splits("vision")
+    specs = calibrate(NAME, p, cx, n_batches=1)
+    N.install_unflatten(NAME, p)
+    flat = N.flatten_params(p)
+    etot = specs[-1].e_offset + specs[-1].n_channels
+    return mod, p, specs, flat, etot, ex, ey
+
+
+def test_high_energy_noisy_matches_quant(setup):
+    """E -> inf: thermal/weight noisy forward converges to the 8-bit
+    clean forward."""
+    mod, p, specs, flat, etot, ex, ey = setup
+    x = jnp.asarray(ex[:8])
+    fq = N.build_fwd_quant(NAME, specs)
+    base = fq(flat, x)[0]
+    # Tolerance: infinitesimal noise before the 8-bit output requant can
+    # flip values sitting exactly on a bin boundary by one bin width, so
+    # compare up to one output-quantization step.
+    out_delta = max((s.out_hi - s.out_lo) / 255.0 for s in specs)
+    for noise in ["thermal", "weight"]:
+        f = N.build_fwd_noisy(NAME, specs, noise, clip=False)
+        y = f(flat, x, jnp.uint32(0), jnp.full((etot,), 1e8))[0]
+        np.testing.assert_allclose(np.asarray(y), np.asarray(base),
+                                   rtol=0, atol=out_delta * 1.5 + 1e-3)
+        agree = (np.argmax(np.asarray(y), -1) == np.argmax(np.asarray(base), -1)).mean()
+        assert agree >= 0.95, agree
+
+
+def test_high_energy_shot_matches_fp(setup):
+    mod, p, specs, flat, etot, ex, ey = setup
+    x = jnp.asarray(ex[:8])
+    ffp = N.build_fwd_fp(NAME, specs)
+    base = ffp(flat, x)[0]
+    f = N.build_fwd_noisy(NAME, specs, "shot", clip=False)
+    y = f(flat, x, jnp.uint32(0), jnp.full((etot,), 1e9))[0]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(base),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_seeds_change_output(setup):
+    mod, p, specs, flat, etot, ex, ey = setup
+    x = jnp.asarray(ex[:8])
+    f = N.build_fwd_noisy(NAME, specs, "shot", clip=False)
+    y0 = f(flat, x, jnp.uint32(0), jnp.full((etot,), 1.0))[0]
+    y1 = f(flat, x, jnp.uint32(1), jnp.full((etot,), 1.0))[0]
+    y0b = f(flat, x, jnp.uint32(0), jnp.full((etot,), 1.0))[0]
+    assert not np.allclose(np.asarray(y0), np.asarray(y1))
+    assert np.allclose(np.asarray(y0), np.asarray(y0b))
+
+
+def test_penalty_active_above_budget(setup):
+    """Eq. 14: loss includes lam*(log total - log Emax) when over budget,
+    and the over-budget grad pushes energies down."""
+    mod, p, specs, flat, etot, ex, ey = setup
+    x = jnp.asarray(ex[: C.BATCH])
+    y = jnp.asarray(ey[: C.BATCH])
+    g = N.build_grad_e(NAME, specs, "shot", clip=False)
+    macs = N.macs_per_channel_vec(specs)
+    loge = jnp.zeros(etot)  # E = 1 everywhere
+    total = float(np.sum(np.exp(0.0) * macs))
+    lam = jnp.float32(8.0)
+    # Budget below current total -> penalty active.
+    tight = jnp.float32(np.log(total) - 1.0)
+    loose = jnp.float32(np.log(total) + 1.0)
+    loss_t, nll_t, _, grad_t = g(flat, x, y, jnp.uint32(0), loge, lam, tight)
+    loss_l, nll_l, _, grad_l = g(flat, x, y, jnp.uint32(0), loge, lam, loose)
+    assert float(loss_t) > float(loss_l)
+    assert abs(float(loss_t) - (float(nll_t) + 8.0 * 1.0)) < 0.2
+    # Tight budget: average gradient should push E down (positive grad on
+    # log E means decrease under gradient descent).
+    assert float(jnp.mean(grad_t)) > float(jnp.mean(grad_l))
+
+
+def test_photon_quantization_rounds(setup):
+    mod, p, specs, flat, etot, ex, ey = setup
+    x = jnp.asarray(ex[:8])
+    # Sub-photon energies get clamped to >= 1 photon.
+    e_small = jnp.full((etot,), 0.01)
+    f = N.build_fwd_noisy(NAME, specs, "shot", clip=False, photon_quant=True)
+    y = f(flat, x, jnp.uint32(0), e_small)[0]
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # Same photon count -> identical result.
+    e1 = jnp.full((etot,), 1.00 / C.PHOTONS_PER_AJ)
+    e2 = jnp.full((etot,), 1.30 / C.PHOTONS_PER_AJ)  # rounds to 1 photon
+    y1 = f(flat, x, jnp.uint32(3), e1)[0]
+    y2 = f(flat, x, jnp.uint32(3), e2)[0]
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5)
+
+
+def test_macs_vector_consistency(setup):
+    mod, p, specs, flat, etot, ex, ey = setup
+    macs = N.macs_per_channel_vec(specs)
+    assert macs.shape == (etot,)
+    assert abs(macs.sum() - N.total_macs(specs)) < 1.0
+
+
+def test_lowbit_extremes(setup):
+    """16-bit activations ~ quant baseline; 1-bit destroys accuracy."""
+    mod, p, specs, flat, etot, ex, ey = setup
+    x = jnp.asarray(ex[:32])
+    fq = N.build_fwd_quant(NAME, specs)
+    fl = N.build_fwd_lowbit(NAME, specs)
+    base = np.argmax(np.asarray(fq(flat, x)[0]), -1)
+    hi = np.argmax(np.asarray(fl(flat, x, jnp.full((len(specs),), 16.0))[0]), -1)
+    assert (base == hi).mean() > 0.9
+    lo = np.asarray(fl(flat, x, jnp.full((len(specs),), 1.0))[0])
+    assert bool(np.all(np.isfinite(lo)))

@@ -1,0 +1,71 @@
+"""fake-quantization unit + property tests (paper Eq. 2, footnote 1)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref as R
+
+
+def test_endpoints_exact():
+    x = jnp.array([-1.0, 1.0, 5.0, -5.0])
+    q = R.fake_quant(x, -1.0, 1.0, 256)
+    assert np.allclose(q, [-1.0, 1.0, 1.0, -1.0])
+
+
+def test_three_level_grid():
+    x = jnp.array([0.2, 0.3, 0.8])
+    q = R.fake_quant(x, 0.0, 1.0, 3)
+    assert np.allclose(q, [0.0, 0.5, 1.0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    lo=st.floats(-10, 0),
+    width=st.floats(0.1, 20),
+    levels=st.integers(2, 256),
+)
+def test_quant_error_bounded(lo, width, levels):
+    hi = lo + width
+    x = jnp.linspace(lo - 1, hi + 1, 101)
+    q = np.asarray(R.fake_quant(x, lo, hi, levels))
+    delta = width / (levels - 1)
+    inside = (np.asarray(x) >= lo) & (np.asarray(x) <= hi)
+    assert np.all(np.abs(q[inside] - np.asarray(x)[inside]) <= delta / 2 + 1e-5)
+    assert q.min() >= lo - 1e-5 and q.max() <= hi + 1e-5
+
+
+def test_frac_bits_footnote():
+    # 4.644 bits -> 25 levels: delta = range/24.
+    x = jnp.linspace(0, 1, 200)
+    q = np.asarray(R.fake_quant_frac_bits(x, 0.0, 1.0, jnp.float32(np.log2(25))))
+    vals = np.unique(q)
+    assert len(vals) == 25
+
+
+def test_frac_bits_monotone_in_bits():
+    x = jnp.linspace(-1, 1, 400)
+    errs = []
+    for bits in [2.0, 3.0, 4.5, 6.0, 8.0]:
+        q = R.fake_quant_frac_bits(x, -1.0, 1.0, jnp.float32(bits))
+        errs.append(float(jnp.mean((q - x) ** 2)))
+    assert all(a >= b for a, b in zip(errs, errs[1:])), errs
+
+
+def test_ste_round_gradient_is_identity():
+    g = jax.grad(lambda x: jnp.sum(R.ste_round(x * 3.0)))(jnp.array([0.2, 1.7]))
+    assert np.allclose(g, [3.0, 3.0])
+
+
+def test_fake_quant_gradient_flows():
+    # STE: d/dx fake_quant ~ 1 inside the range.
+    f = lambda x: jnp.sum(R.fake_quant(x, -1.0, 1.0, 16))
+    g = jax.grad(f)(jnp.array([0.3, -0.7]))
+    assert np.allclose(g, [1.0, 1.0])
+
+
+def test_degenerate_range_does_not_nan():
+    q = R.fake_quant(jnp.array([1.0, 2.0]), 1.5, 1.5, 256)
+    assert np.all(np.isfinite(np.asarray(q)))

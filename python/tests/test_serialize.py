@@ -1,0 +1,52 @@
+"""DPT container + meta.json writers."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import serialize as S
+from compile.layers import SiteSpec
+
+
+def test_dpt_roundtrip(tmp_path):
+    path = os.path.join(tmp_path, "t.bin")
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "y": np.array([1, -2, 3], np.int32),
+        "u": np.array([7], np.uint32),
+    }
+    S.write_dpt(path, tensors)
+    back = S.read_dpt(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        assert back[k].dtype == tensors[k].dtype
+        assert np.array_equal(back[k], tensors[k])
+
+
+def test_dpt_rejects_bad_magic(tmp_path):
+    path = os.path.join(tmp_path, "bad.bin")
+    with open(path, "wb") as f:
+        f.write(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(AssertionError):
+        S.read_dpt(path)
+
+
+def test_meta_json_schema(tmp_path):
+    s = SiteSpec("conv1", "conv", 27, 4, 100.0, e_offset=0,
+                 in_lo=-1, in_hi=1, in_lo_clip=-0.9, in_hi_clip=0.9,
+                 out_lo=0, out_hi=2, out_lo_clip=0, out_hi_clip=1.8,
+                 w_lo=np.array([-0.5, -0.4, -0.3, -0.2], np.float32),
+                 w_hi=np.array([0.5, 0.4, 0.3, 0.2], np.float32))
+    path = os.path.join(tmp_path, "m.json")
+    S.write_meta(path, name="m", kind="vision", specs=[s], params_len=10,
+                 e_len=4, baselines={"fp_acc": 0.9, "quant_acc": 0.88},
+                 artifacts={"fwd_fp": "m.fwd_fp.hlo.txt"})
+    meta = json.load(open(path))
+    assert meta["name"] == "m"
+    assert meta["e_len"] == 4
+    assert meta["sites"][0]["w_lo_layer"] == -0.5
+    assert meta["sites"][0]["w_hi_layer"] == 0.5
+    assert meta["total_macs_per_sample"] == 400.0
+    assert meta["sites"][0]["n_dot"] == 27

@@ -1,0 +1,85 @@
+//! L3 hot-path microbenchmarks: batcher, scheduler materialization,
+//! redundancy planner, RNG, JSON parse — the coordinator overhead that
+//! must stay well under artifact execute time (see EXPERIMENTS.md §Perf).
+use std::time::{Duration, Instant};
+
+use dynaprec::analog::{plan_layer, AveragingMode, HardwareConfig};
+use dynaprec::coordinator::{BatcherConfig, DynamicBatcher, EnergyPolicy};
+use dynaprec::coordinator::request::InferRequest;
+use dynaprec::data::Features;
+use dynaprec::runtime::artifact::ModelMeta;
+use dynaprec::util::rng::Rng;
+use dynaprec::util::stats::bench;
+
+fn meta() -> ModelMeta {
+    let text = std::fs::read_to_string(
+        dynaprec::artifacts_dir().join("tiny_resnet.meta.json"),
+    ).expect("run `make artifacts` first");
+    ModelMeta::parse(&text).unwrap()
+}
+
+fn main() {
+    let m = meta();
+
+    // Batcher push+flush for a full batch of 32.
+    let r = bench("batcher_push_flush_32", || {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            batch_size: 32,
+            max_wait: Duration::from_millis(10),
+        });
+        let now = Instant::now();
+        for i in 0..32 {
+            let (tx, _rx) = std::sync::mpsc::channel();
+            b.push(InferRequest {
+                id: i,
+                model: "m".into(),
+                x: Features::F32(vec![0.0; 4]),
+                enqueued: now,
+                resp: tx,
+            });
+        }
+        assert!(b.try_batch(now).is_some());
+    });
+    r.report();
+
+    // Scheduler policy materialization (per-layer broadcast, e_len=912).
+    let pl: Vec<f64> = (0..m.noise_sites().count()).map(|i| 1.0 + i as f64).collect();
+    let pol = EnergyPolicy::PerLayer(pl);
+    let r = bench("policy_e_vector_912ch", || {
+        let e = pol.e_vector(&m);
+        std::hint::black_box(e);
+    });
+    r.report();
+
+    // Redundancy planning for the whole model.
+    let hw = HardwareConfig::homodyne();
+    let e = pol.e_vector(&m);
+    let r = bench("redundancy_plan_model", || {
+        let mut tot = 0.0;
+        for (_, s) in m.noise_sites() {
+            let es: Vec<f64> = e[s.e_offset..s.e_offset + s.n_channels]
+                .iter().map(|&v| v as f64).collect();
+            tot += plan_layer(&hw, AveragingMode::PerRowSpatial, &es,
+                              s.n_dot, s.macs_per_channel, true).energy;
+        }
+        std::hint::black_box(tot);
+    });
+    r.report();
+
+    // Gaussian fill (noise source for host-side simulations).
+    let mut rng = Rng::new(1);
+    let mut buf = vec![0f32; 32 * 912];
+    let r = bench("gaussian_fill_29k", || {
+        rng.fill_gaussian_f32(&mut buf);
+    });
+    r.report();
+
+    // meta.json parse (artifact registry path).
+    let text = std::fs::read_to_string(
+        dynaprec::artifacts_dir().join("tiny_resnet.meta.json")).unwrap();
+    let r = bench("meta_json_parse", || {
+        let m = ModelMeta::parse(&text).unwrap();
+        std::hint::black_box(m.e_len);
+    });
+    r.report();
+}

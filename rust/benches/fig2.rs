@@ -1,0 +1,6 @@
+//! Regenerates paper Fig. 2 (noise bits per layer, fixed sigma_t).
+use dynaprec::experiments::{figures, ExpCtx};
+fn main() {
+    let ctx = ExpCtx::new().expect("artifacts missing — run `make artifacts`");
+    figures::fig2(&ctx, 1.0).unwrap();
+}

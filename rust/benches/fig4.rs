@@ -1,0 +1,6 @@
+//! Regenerates paper Fig. 4 (accuracy vs optical energy/MAC).
+use dynaprec::experiments::{figures, ExpCtx};
+fn main() {
+    let ctx = ExpCtx::new().expect("artifacts missing — run `make artifacts`");
+    figures::fig4(&ctx).unwrap();
+}

@@ -1,0 +1,6 @@
+//! Regenerates paper Fig. 5 (noise bits per layer, dynamic energy).
+use dynaprec::experiments::{figures, ExpCtx};
+fn main() {
+    let ctx = ExpCtx::new().expect("artifacts missing — run `make artifacts`");
+    figures::fig5(&ctx, 20.0).unwrap();
+}

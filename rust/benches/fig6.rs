@@ -1,0 +1,6 @@
+//! Regenerates paper Fig. 6 (per-layer energy allocations, ResNet-like).
+use dynaprec::experiments::{figures, ExpCtx};
+fn main() {
+    let ctx = ExpCtx::new().expect("artifacts missing — run `make artifacts`");
+    figures::fig_alloc(&ctx, "tiny_resnet").unwrap();
+}

@@ -1,0 +1,6 @@
+//! Regenerates paper Fig. 7 (percentile-clipping ablation).
+use dynaprec::experiments::{figures, ExpCtx};
+fn main() {
+    let ctx = ExpCtx::new().expect("artifacts missing — run `make artifacts`");
+    figures::fig7(&ctx).unwrap();
+}

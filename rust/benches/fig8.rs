@@ -1,0 +1,6 @@
+//! Regenerates paper Fig. 8 (BERT per-matmul energy).
+use dynaprec::experiments::{figures, ExpCtx};
+fn main() {
+    let ctx = ExpCtx::new().expect("artifacts missing — run `make artifacts`");
+    figures::fig8(&ctx).unwrap();
+}

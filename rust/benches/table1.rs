@@ -1,0 +1,8 @@
+//! Regenerates paper Table I (thermal noise vs equivalent bit precision).
+use dynaprec::experiments::{tables, ExpCtx};
+fn main() {
+    let ctx = ExpCtx::new().expect("artifacts missing — run `make artifacts`");
+    let t = std::time::Instant::now();
+    tables::table1(&ctx).unwrap();
+    println!("[table1 done in {:?}]", t.elapsed());
+}

@@ -1,0 +1,25 @@
+//! Regenerates paper Table II (min energy/MAC, 5 CV models x 3 noises).
+//! Quick mode by default; DYNAPREC_FULL=1 for the recorded protocol.
+//! Subset with DYNAPREC_MODELS / DYNAPREC_NOISES (comma-separated).
+use dynaprec::experiments::{tables, ExpCtx};
+fn main() {
+    let ctx = ExpCtx::new().expect("artifacts missing — run `make artifacts`");
+    let models_env = std::env::var("DYNAPREC_MODELS").unwrap_or_default();
+    let noises_env = std::env::var("DYNAPREC_NOISES").unwrap_or_default();
+    let models: Vec<&str> = if models_env.is_empty() {
+        vec!["tiny_resnet", "tiny_mobilenet", "tiny_inception",
+             "tiny_googlenet", "tiny_shufflenet"]
+    } else { models_env.split(',').collect() };
+    // Quick mode covers the shot-noise row set (the paper's headline
+    // numbers); DYNAPREC_FULL=1 or DYNAPREC_NOISES=... adds thermal+weight.
+    let noises: Vec<&str> = if !noises_env.is_empty() {
+        noises_env.split(',').collect()
+    } else if std::env::var("DYNAPREC_FULL").as_deref() == Ok("1") {
+        vec!["shot", "thermal", "weight"]
+    } else {
+        vec!["shot"]
+    };
+    let t = std::time::Instant::now();
+    tables::table2(&ctx, &models, &noises).unwrap();
+    println!("[table2 done in {:?}]", t.elapsed());
+}

@@ -1,0 +1,8 @@
+//! Regenerates paper Table III (dynamic precision noise bits).
+use dynaprec::experiments::{tables, ExpCtx};
+fn main() {
+    let ctx = ExpCtx::new().expect("artifacts missing — run `make artifacts`");
+    let t = std::time::Instant::now();
+    tables::table3(&ctx).unwrap();
+    println!("[table3 done in {:?}]", t.elapsed());
+}

@@ -1,0 +1,8 @@
+//! Regenerates paper Table IV (BERT shot-noise energy/MAC).
+use dynaprec::experiments::{tables, ExpCtx};
+fn main() {
+    let ctx = ExpCtx::new().expect("artifacts missing — run `make artifacts`");
+    let t = std::time::Instant::now();
+    tables::table4(&ctx).unwrap();
+    println!("[table4 done in {:?}]", t.elapsed());
+}

@@ -1,0 +1,85 @@
+//! Device models: resistive crossbar and homodyne optical multiplier.
+
+/// Physical/architectural constants of one analog matrix multiplier.
+#[derive(Clone, Debug)]
+pub struct HardwareConfig {
+    /// Crossbar/detector array rows (dot-product length capacity).
+    pub array_rows: usize,
+    /// Array columns (parallel output channels).
+    pub array_cols: usize,
+    /// Clock period in nanoseconds (one MVM issue per cycle).
+    pub cycle_ns: f64,
+    /// Energy/MAC at unit redundancy (E = 1), in attojoules. For the
+    /// shot-noise-limited homodyne multiplier this is the *optical*
+    /// energy; E is then an absolute quantity in aJ (paper Sec. IV).
+    pub base_energy_aj: f64,
+    /// Device kind (affects which noise family dominates).
+    pub model: DeviceModel,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceModel {
+    /// Resistive crossbar (flash/memristor/PCM): thermal + weight noise.
+    Crossbar,
+    /// Homodyne photoelectric multiplier: shot-noise limited.
+    Homodyne,
+    /// Broadcast-and-weight photonics: thermal-noise limited.
+    BroadcastWeight,
+}
+
+impl HardwareConfig {
+    /// Defaults mirroring the paper's reference points.
+    pub fn crossbar() -> Self {
+        HardwareConfig {
+            array_rows: 256,
+            array_cols: 256,
+            cycle_ns: 10.0,
+            base_energy_aj: 1.0, // relative units for thermal/weight noise
+            model: DeviceModel::Crossbar,
+        }
+    }
+
+    pub fn homodyne() -> Self {
+        HardwareConfig {
+            array_rows: 256,
+            array_cols: 256,
+            cycle_ns: 1.0,
+            base_energy_aj: 1.0, // E is absolute aJ for shot noise
+            model: DeviceModel::Homodyne,
+        }
+    }
+
+    /// Natural noise family of this device.
+    pub fn default_noise(&self) -> &'static str {
+        match self.model {
+            DeviceModel::Crossbar => "weight",
+            DeviceModel::Homodyne => "shot",
+            DeviceModel::BroadcastWeight => "thermal",
+        }
+    }
+
+    /// Tiles needed to map an (n_dot x n_channels) weight matrix.
+    pub fn tiles_for(&self, n_dot: usize, n_channels: usize) -> usize {
+        n_dot.div_ceil(self.array_rows) * n_channels.div_ceil(self.array_cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiling() {
+        let hw = HardwareConfig::crossbar();
+        assert_eq!(hw.tiles_for(256, 256), 1);
+        assert_eq!(hw.tiles_for(257, 256), 2);
+        assert_eq!(hw.tiles_for(512, 512), 4);
+        assert_eq!(hw.tiles_for(1, 1), 1);
+    }
+
+    #[test]
+    fn default_noise_per_device() {
+        assert_eq!(HardwareConfig::crossbar().default_noise(), "weight");
+        assert_eq!(HardwareConfig::homodyne().default_noise(), "shot");
+    }
+}

@@ -1,0 +1,94 @@
+//! Energy/throughput accounting for the serving path.
+
+use std::collections::BTreeMap;
+
+/// Accumulates simulated analog costs across served requests.
+#[derive(Clone, Debug, Default)]
+pub struct EnergyLedger {
+    /// Total MACs executed (per sample macs x samples).
+    pub total_macs: f64,
+    /// Total analog energy in base units (aJ for shot noise).
+    pub total_energy: f64,
+    /// Total simulated accelerator cycles.
+    pub total_cycles: f64,
+    /// Samples served.
+    pub samples: u64,
+    /// Per-model breakdown.
+    pub per_model: BTreeMap<String, (f64, f64, u64)>, // (macs, energy, samples)
+}
+
+impl EnergyLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(
+        &mut self,
+        model: &str,
+        samples: u64,
+        macs_per_sample: f64,
+        energy_per_sample: f64,
+        cycles: f64,
+    ) {
+        let macs = macs_per_sample * samples as f64;
+        let energy = energy_per_sample * samples as f64;
+        self.total_macs += macs;
+        self.total_energy += energy;
+        self.total_cycles += cycles;
+        self.samples += samples;
+        let e = self.per_model.entry(model.to_string()).or_default();
+        e.0 += macs;
+        e.1 += energy;
+        e.2 += samples;
+    }
+
+    /// Average energy/MAC across everything served so far.
+    pub fn avg_energy_per_mac(&self) -> f64 {
+        if self.total_macs == 0.0 {
+            return 0.0;
+        }
+        self.total_energy / self.total_macs
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "ledger: {} samples, {:.3e} MACs, {:.3e} energy units, {:.4} units/MAC\n",
+            self.samples,
+            self.total_macs,
+            self.total_energy,
+            self.avg_energy_per_mac()
+        );
+        for (m, (macs, en, n)) in &self.per_model {
+            s.push_str(&format!(
+                "  {m}: {n} samples, {:.3e} MACs, {:.4} units/MAC\n",
+                macs,
+                if *macs > 0.0 { en / macs } else { 0.0 }
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut l = EnergyLedger::new();
+        l.record("m1", 10, 100.0, 250.0, 5.0);
+        l.record("m1", 10, 100.0, 250.0, 5.0);
+        l.record("m2", 5, 10.0, 100.0, 1.0);
+        assert_eq!(l.samples, 25);
+        assert_eq!(l.total_macs, 2050.0);
+        assert_eq!(l.total_energy, 5500.0);
+        let (macs, en, n) = l.per_model["m1"];
+        assert_eq!((macs, en, n), (2000.0, 5000.0, 20));
+        assert!((l.avg_energy_per_mac() - 5500.0 / 2050.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_ledger_is_zero() {
+        assert_eq!(EnergyLedger::new().avg_energy_per_mac(), 0.0);
+    }
+}

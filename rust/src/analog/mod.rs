@@ -1,0 +1,15 @@
+//! Analog accelerator model (paper Secs. II-C and IV).
+//!
+//! The PJRT artifacts compute the *numerics* of noisy inference (the noise
+//! already folded to `sigma/sqrt(E)`); this module models the
+//! *architecture* that realizes a given energy/MAC: how much redundant
+//! coding (K repeats in time or space, Fig. 3) each layer needs, and what
+//! that costs in cycles, devices, area and joules.
+
+pub mod device;
+pub mod ledger;
+pub mod redundancy;
+
+pub use device::{DeviceModel, HardwareConfig};
+pub use ledger::EnergyLedger;
+pub use redundancy::{plan_layer, plan_model, AveragingMode, LayerPlan};

@@ -1,0 +1,261 @@
+//! Redundant-coding planner (paper Sec. IV, Fig. 3).
+//!
+//! Given per-layer energies (relative to the device's base energy/MAC),
+//! choose a redundancy factor K per layer and account for its cost:
+//!
+//!   Fig. 3a  time averaging     — repeat the MVM K cycles, average:
+//!            cycles x K, area x 1, energy x K
+//!   Fig. 3b  spatial averaging  — K device copies of (W, x):
+//!            cycles x 1, area x K, energy x K
+//!   Fig. 3c  per-row spatial    — row i replicated K_i times:
+//!            cycles x 1, area x sum(K_i)/rows, energy x sum(K_i * macs_i)
+//!
+//! Averaging K i.i.d. executions divides noise variance by K, so K = E
+//! (energies are continuous in the paper's ideal case; `quantized`
+//! rounds K up to whole repetitions, the realizable schedule).
+
+use super::device::HardwareConfig;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AveragingMode {
+    Time,
+    Spatial,
+    PerRowSpatial,
+}
+
+/// Cost of executing one layer's MVM stream at the requested precision.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub mode: AveragingMode,
+    /// Redundancy per output channel (len 1 for uniform/time/spatial).
+    pub k_per_channel: Vec<f64>,
+    /// Cycles per input vector (relative to 1 at K = 1).
+    pub cycles: f64,
+    /// Device-area multiplier (tiles x replication), relative to K = 1.
+    pub area: f64,
+    /// Energy for the layer per sample, in base-energy units (aJ for
+    /// homodyne): sum over channels of K_c * macs_c.
+    pub energy: f64,
+    /// Physical tiles occupied (before replication).
+    pub base_tiles: usize,
+}
+
+/// Plan one layer. `e_per_channel` are energies in base-energy units;
+/// `macs_per_channel` is MACs per sample per channel; `quantized` rounds
+/// K up to integers (realizable redundancy).
+pub fn plan_layer(
+    hw: &HardwareConfig,
+    mode: AveragingMode,
+    e_per_channel: &[f64],
+    n_dot: usize,
+    macs_per_channel: f64,
+    quantized: bool,
+) -> LayerPlan {
+    assert!(!e_per_channel.is_empty());
+    let base_tiles = hw.tiles_for(n_dot, e_per_channel.len());
+    let k_of = |e: f64| -> f64 {
+        let k = (e / hw.base_energy_aj).max(f64::MIN_POSITIVE);
+        if quantized {
+            k.ceil().max(1.0)
+        } else {
+            k
+        }
+    };
+    match mode {
+        AveragingMode::Time | AveragingMode::Spatial => {
+            // Uniform K across the layer: take the max requested channel
+            // energy (precision is set by the most demanding channel).
+            let k = e_per_channel.iter().copied().fold(0.0, f64::max);
+            let k = k_of(k);
+            let energy = k * macs_per_channel * e_per_channel.len() as f64;
+            let (cycles, area) = match mode {
+                AveragingMode::Time => (k, base_tiles as f64),
+                _ => (1.0, base_tiles as f64 * k),
+            };
+            LayerPlan {
+                mode,
+                k_per_channel: vec![k],
+                cycles,
+                area,
+                energy,
+                base_tiles,
+            }
+        }
+        AveragingMode::PerRowSpatial => {
+            let ks: Vec<f64> = e_per_channel.iter().map(|&e| k_of(e)).collect();
+            let sum_k: f64 = ks.iter().sum();
+            let mean_k = sum_k / ks.len() as f64;
+            let energy: f64 = ks.iter().map(|k| k * macs_per_channel).sum();
+            LayerPlan {
+                mode,
+                cycles: 1.0,
+                area: base_tiles as f64 * mean_k,
+                energy,
+                base_tiles,
+                k_per_channel: ks,
+            }
+        }
+    }
+}
+
+/// Model-level plan: per-layer plans + totals.
+#[derive(Clone, Debug, Default)]
+pub struct ModelPlan {
+    pub layers: Vec<LayerPlan>,
+    pub total_energy: f64,
+    pub total_cycles: f64,
+    pub peak_area: f64,
+}
+
+/// Plan a whole model given per-layer channel-energy slices.
+pub fn plan_model(
+    hw: &HardwareConfig,
+    mode: AveragingMode,
+    layers: &[(Vec<f64>, usize, f64)], // (e_per_channel, n_dot, macs_per_channel)
+    quantized: bool,
+) -> ModelPlan {
+    let mut plan = ModelPlan::default();
+    for (e, n_dot, mpc) in layers {
+        let lp = plan_layer(hw, mode, e, *n_dot, *mpc, quantized);
+        plan.total_energy += lp.energy;
+        // Layers execute sequentially (layer l+1 consumes layer l).
+        plan.total_cycles += lp.cycles;
+        plan.peak_area = plan.peak_area.max(lp.area);
+        plan.layers.push(lp);
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, default_cases, gens};
+    use crate::util::rng::Rng;
+
+    fn hw() -> HardwareConfig {
+        HardwareConfig::crossbar()
+    }
+
+    #[test]
+    fn time_averaging_trades_cycles() {
+        let p = plan_layer(&hw(), AveragingMode::Time, &[4.0; 8], 27, 100.0, true);
+        assert_eq!(p.cycles, 4.0);
+        assert_eq!(p.area, 1.0); // one tile
+        assert_eq!(p.energy, 4.0 * 100.0 * 8.0);
+    }
+
+    #[test]
+    fn spatial_averaging_trades_area() {
+        let p = plan_layer(&hw(), AveragingMode::Spatial, &[4.0; 8], 27, 100.0, true);
+        assert_eq!(p.cycles, 1.0);
+        assert_eq!(p.area, 4.0);
+        assert_eq!(p.energy, 4.0 * 100.0 * 8.0);
+    }
+
+    #[test]
+    fn per_row_uses_individual_k() {
+        let e = vec![1.0, 9.0];
+        let p = plan_layer(&hw(), AveragingMode::PerRowSpatial, &e, 27, 10.0, true);
+        assert_eq!(p.k_per_channel, vec![1.0, 9.0]);
+        assert_eq!(p.energy, 10.0 + 90.0);
+        // area multiplier is the mean K
+        assert_eq!(p.area, 5.0);
+        assert_eq!(p.cycles, 1.0);
+    }
+
+    #[test]
+    fn quantization_rounds_up() {
+        let p = plan_layer(&hw(), AveragingMode::Time, &[2.3], 10, 1.0, true);
+        assert_eq!(p.k_per_channel[0], 3.0);
+        let pc = plan_layer(&hw(), AveragingMode::Time, &[2.3], 10, 1.0, false);
+        assert!((pc.k_per_channel[0] - 2.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_modes_use_max_channel_energy() {
+        let e = vec![1.0, 7.0, 3.0];
+        let p = plan_layer(&hw(), AveragingMode::Time, &e, 10, 1.0, false);
+        assert_eq!(p.k_per_channel[0], 7.0);
+    }
+
+    #[test]
+    fn model_totals_accumulate() {
+        let layers = vec![
+            (vec![2.0; 4], 27usize, 10.0f64),
+            (vec![8.0; 2], 64, 5.0),
+        ];
+        let mp = plan_model(&hw(), AveragingMode::Time, &layers, false);
+        assert_eq!(mp.layers.len(), 2);
+        assert!((mp.total_energy - (2.0 * 10.0 * 4.0 + 8.0 * 5.0 * 2.0)).abs() < 1e-9);
+        assert_eq!(mp.total_cycles, 10.0);
+    }
+
+    // ------------------------------------------------------- properties
+    #[test]
+    fn prop_quantized_energy_dominates_continuous() {
+        check(
+            "quantized >= continuous energy",
+            default_cases(200),
+            |r: &mut Rng| {
+                let n = gens::usize_in(r, 1, 16);
+                (gens::positive_vec(r, n, 20.0), gens::usize_in(r, 1, 512))
+            },
+            |(e, n_dot)| {
+                let ef: Vec<f64> = e.iter().map(|&v| v as f64).collect();
+                for mode in [
+                    AveragingMode::Time,
+                    AveragingMode::Spatial,
+                    AveragingMode::PerRowSpatial,
+                ] {
+                    let q = plan_layer(&hw(), mode, &ef, *n_dot, 7.0, true);
+                    let c = plan_layer(&hw(), mode, &ef, *n_dot, 7.0, false);
+                    if q.energy + 1e-9 < c.energy {
+                        return Err(format!(
+                            "mode {mode:?}: quantized {} < continuous {}",
+                            q.energy, c.energy
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_per_row_never_costs_more_than_uniform_spatial() {
+        check(
+            "per-row <= uniform spatial energy",
+            default_cases(200),
+            |r: &mut Rng| {
+                let n = gens::usize_in(r, 1, 32);
+                gens::positive_vec(r, n, 30.0)
+            },
+            |e| {
+                let ef: Vec<f64> = e.iter().map(|&v| v as f64).collect();
+                let row = plan_layer(&hw(), AveragingMode::PerRowSpatial, &ef, 64, 3.0, true);
+                let uni = plan_layer(&hw(), AveragingMode::Spatial, &ef, 64, 3.0, true);
+                if row.energy > uni.energy + 1e-9 {
+                    return Err(format!("row {} > uniform {}", row.energy, uni.energy));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_energy_scales_linearly_in_k() {
+        check(
+            "energy linear in K (continuous)",
+            default_cases(100),
+            |r: &mut Rng| gens::f32_in(r, 0.1, 50.0) as f64,
+            |&e| {
+                let p1 = plan_layer(&hw(), AveragingMode::Time, &[e], 10, 2.0, false);
+                let p2 = plan_layer(&hw(), AveragingMode::Time, &[2.0 * e], 10, 2.0, false);
+                if (p2.energy - 2.0 * p1.energy).abs() > 1e-6 * p1.energy.max(1.0) {
+                    return Err(format!("{} vs {}", p2.energy, 2.0 * p1.energy));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,154 @@
+//! Dynamic batching: aggregate single-sample requests into the fixed
+//! batch the AOT artifact was lowered for.
+//!
+//! Policy: dispatch when (a) a full batch is waiting, or (b) the oldest
+//! queued request has waited `max_wait`. Short batches are padded to the
+//! artifact batch size (padding lanes are executed but discarded — the
+//! analog ledger only charges real samples).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::InferRequest;
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    pub batch_size: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { batch_size: 32, max_wait: Duration::from_millis(20) }
+    }
+}
+
+/// Per-model FIFO with deadline-based flush.
+pub struct DynamicBatcher {
+    pub cfg: BatcherConfig,
+    queue: VecDeque<InferRequest>,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        DynamicBatcher { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, r: InferRequest) {
+        self.queue.push_back(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Time until the flush deadline of the oldest request (None if empty).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|r| {
+            let age = now.duration_since(r.enqueued);
+            self.cfg.max_wait.saturating_sub(age)
+        })
+    }
+
+    /// Pop a batch if the dispatch policy fires.
+    pub fn try_batch(&mut self, now: Instant) -> Option<Vec<InferRequest>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let full = self.queue.len() >= self.cfg.batch_size;
+        let expired = self
+            .queue
+            .front()
+            .map(|r| now.duration_since(r.enqueued) >= self.cfg.max_wait)
+            .unwrap_or(false);
+        if !(full || expired) {
+            return None;
+        }
+        let n = self.queue.len().min(self.cfg.batch_size);
+        Some(self.queue.drain(..n).collect())
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<InferRequest> {
+        self.queue.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Features;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64, at: Instant) -> InferRequest {
+        let (tx, _rx) = channel();
+        InferRequest {
+            id,
+            model: "m".into(),
+            x: Features::F32(vec![0.0; 4]),
+            enqueued: at,
+            resp: tx,
+        }
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            batch_size: 4,
+            max_wait: Duration::from_secs(10),
+        });
+        let now = Instant::now();
+        for i in 0..4 {
+            b.push(req(i, now));
+        }
+        let batch = b.try_batch(now).expect("full batch");
+        assert_eq!(batch.len(), 4);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            batch_size: 4,
+            max_wait: Duration::from_millis(5),
+        });
+        let t0 = Instant::now();
+        b.push(req(0, t0));
+        b.push(req(1, t0));
+        assert!(b.try_batch(t0).is_none());
+        let later = t0 + Duration::from_millis(6);
+        let batch = b.try_batch(later).expect("deadline flush");
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn oversized_queue_dispatches_only_batch_size() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            batch_size: 2,
+            max_wait: Duration::from_secs(1),
+        });
+        let now = Instant::now();
+        for i in 0..5 {
+            b.push(req(i, now));
+        }
+        assert_eq!(b.try_batch(now).unwrap().len(), 2);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn deadline_accounts_for_age() {
+        let cfg = BatcherConfig {
+            batch_size: 8,
+            max_wait: Duration::from_millis(10),
+        };
+        let mut b = DynamicBatcher::new(cfg);
+        let t0 = Instant::now();
+        b.push(req(0, t0));
+        let ttd = b.time_to_deadline(t0 + Duration::from_millis(4)).unwrap();
+        assert!(ttd <= Duration::from_millis(6));
+    }
+}

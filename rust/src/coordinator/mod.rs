@@ -1,0 +1,24 @@
+//! L3 coordinator: the serving stack that makes dynamic precision a
+//! *programmable* property of the accelerator (the paper's Sec. IV
+//! proposal, realized as a router + batcher + precision scheduler).
+//!
+//! Architecture (one accelerator, one queue):
+//!
+//!   clients -> Router -> per-model DynamicBatcher -> device thread
+//!                                 ^                      |
+//!                        PrecisionScheduler     PJRT execute (noisy fwd)
+//!                        (per-layer/channel E)          |
+//!                                 EnergyLedger <- responses -> clients
+//!
+//! The device thread owns the PJRT executables (they are !Send by
+//! construction); everything else communicates via channels.
+
+pub mod batcher;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use request::{InferRequest, InferResponse};
+pub use scheduler::{EnergyPolicy, PrecisionScheduler};
+pub use server::{Coordinator, CoordinatorConfig, ServerStats};

@@ -1,0 +1,62 @@
+//! Request/response types for the serving path.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::data::Features;
+
+/// One inference request (a single sample; the batcher aggregates).
+pub struct InferRequest {
+    pub id: u64,
+    pub model: String,
+    pub x: Features,
+    pub enqueued: Instant,
+    /// Response channel back to the client.
+    pub resp: Sender<InferResponse>,
+}
+
+/// Response with telemetry for the client.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    /// Predicted class (argmax).
+    pub pred: i32,
+    /// Queue + batch + execute latency.
+    pub latency_us: u64,
+    /// Samples in the batch this request rode in.
+    pub batch_size: usize,
+    /// Simulated analog energy spent on this sample (base units).
+    pub energy: f64,
+}
+
+impl InferResponse {
+    pub fn from_logits(
+        id: u64,
+        logits: Vec<f32>,
+        latency_us: u64,
+        batch_size: usize,
+        energy: f64,
+    ) -> Self {
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap_or(-1);
+        InferResponse { id, logits, pred, latency_us, batch_size, energy }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_pred() {
+        let r = InferResponse::from_logits(1, vec![0.1, 0.7, 0.2], 10, 4, 1.0);
+        assert_eq!(r.pred, 1);
+        let r = InferResponse::from_logits(2, vec![], 10, 4, 1.0);
+        assert_eq!(r.pred, -1);
+    }
+}

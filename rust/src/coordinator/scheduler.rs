@@ -1,0 +1,197 @@
+//! Precision scheduler: owns the per-model energy tables and turns a
+//! policy (uniform / per-layer / per-channel) into the concrete
+//! per-channel E vector fed to the noisy-forward artifact — the
+//! "programmable precision" register file of the paper's Sec. IV.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::artifact::ModelMeta;
+use crate::util::json::Json;
+
+/// How precision is assigned within one model.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EnergyPolicy {
+    /// Same energy/MAC everywhere (paper Table II "Uniform").
+    Uniform(f64),
+    /// Learned per-layer energies, noise-site order ("Dynamic Per Layer").
+    PerLayer(Vec<f64>),
+    /// Learned per-channel energies ("Dynamic Per Channel").
+    PerChannel(Vec<f32>),
+}
+
+impl EnergyPolicy {
+    /// Materialize the full per-channel vector for a model.
+    pub fn e_vector(&self, meta: &ModelMeta) -> Vec<f32> {
+        match self {
+            EnergyPolicy::Uniform(e) => vec![*e as f32; meta.e_len],
+            EnergyPolicy::PerLayer(v) => meta.broadcast_per_layer(v),
+            EnergyPolicy::PerChannel(v) => {
+                assert_eq!(v.len(), meta.e_len);
+                v.clone()
+            }
+        }
+    }
+
+    /// Average energy/MAC this policy implies.
+    pub fn avg_energy(&self, meta: &ModelMeta) -> f64 {
+        meta.avg_energy_per_mac(&self.e_vector(meta))
+    }
+}
+
+/// Per-model precision assignment (noise family + policy).
+#[derive(Clone, Debug)]
+pub struct ModelPrecision {
+    pub noise: String, // "thermal" | "weight" | "shot"
+    pub policy: EnergyPolicy,
+}
+
+/// Scheduler: model name -> precision setting, hot-swappable at runtime.
+#[derive(Default)]
+pub struct PrecisionScheduler {
+    table: BTreeMap<String, ModelPrecision>,
+}
+
+impl PrecisionScheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&mut self, model: &str, p: ModelPrecision) {
+        self.table.insert(model.to_string(), p);
+    }
+
+    pub fn get(&self, model: &str) -> Option<&ModelPrecision> {
+        self.table.get(model)
+    }
+
+    /// The artifact tag for a model's configured noise family.
+    pub fn fwd_tag(&self, model: &str) -> Result<String> {
+        let p = self
+            .table
+            .get(model)
+            .ok_or_else(|| anyhow!("no precision set for {model}"))?;
+        Ok(format!("{}.fwd", p.noise))
+    }
+
+    /// Load a saved energy table (written by `dynaprec train-energy`).
+    ///
+    /// Format: {"model": ..., "noise": ..., "granularity": "per_layer" |
+    /// "per_channel" | "uniform", "e": [...]} or a top-level array of
+    /// such objects.
+    pub fn load_json(&mut self, text: &str) -> Result<usize> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let entries: Vec<&Json> = match &j {
+            Json::Arr(a) => a.iter().collect(),
+            o => vec![o],
+        };
+        let mut n = 0;
+        for e in entries {
+            let model = e.str_field("model").map_err(|x| anyhow!("{x}"))?;
+            let noise = e.str_field("noise").map_err(|x| anyhow!("{x}"))?;
+            let gran = e.str_field("granularity").map_err(|x| anyhow!("{x}"))?;
+            let ev = e
+                .field("e")
+                .map_err(|x| anyhow!("{x}"))?
+                .f32_vec()
+                .ok_or_else(|| anyhow!("bad e array"))?;
+            let policy = match gran {
+                "uniform" => EnergyPolicy::Uniform(ev[0] as f64),
+                "per_layer" => {
+                    EnergyPolicy::PerLayer(ev.iter().map(|&v| v as f64).collect())
+                }
+                "per_channel" => EnergyPolicy::PerChannel(ev),
+                g => return Err(anyhow!("unknown granularity {g}")),
+            };
+            self.set(model, ModelPrecision { noise: noise.to_string(), policy });
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Serialize an entry for persistence.
+    pub fn entry_json(
+        model: &str,
+        noise: &str,
+        granularity: &str,
+        e: &[f32],
+    ) -> String {
+        let vals: Vec<String> = e.iter().map(|v| format!("{v}")).collect();
+        format!(
+            "{{\"model\":\"{model}\",\"noise\":\"{noise}\",\
+             \"granularity\":\"{granularity}\",\"e\":[{}]}}",
+            vals.join(",")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        // Reuse the artifact test fixture via parse.
+        let text = r#"{
+          "name": "m", "kind": "vision", "batch": 32, "params_len": 10,
+          "e_len": 6, "n_sites": 3, "total_macs_per_sample": 100.0,
+          "sigma_thermal": 0.01, "sigma_weight": 0.1,
+          "photons_per_aj": 7.8125, "act_bits": 8,
+          "baselines": {"fp_acc": 0.9, "quant_acc": null},
+          "artifacts": {},
+          "sites": [
+            {"name": "a", "kind": "conv", "n_dot": 27, "n_channels": 4,
+             "macs_per_channel": 10.0, "e_offset": 0,
+             "in_lo": -1, "in_hi": 1, "in_lo_clip": -1, "in_hi_clip": 1,
+             "out_lo": 0, "out_hi": 2, "out_lo_clip": 0, "out_hi_clip": 2,
+             "w_lo_layer": -0.5, "w_hi_layer": 0.5, "w_lo": [], "w_hi": []},
+            {"name": "r", "kind": "add", "n_dot": 1, "n_channels": 1,
+             "macs_per_channel": 0.0, "e_offset": 4,
+             "in_lo": 0, "in_hi": 1, "in_lo_clip": 0, "in_hi_clip": 1,
+             "out_lo": 0, "out_hi": 1, "out_lo_clip": 0, "out_hi_clip": 1,
+             "w_lo_layer": 0, "w_hi_layer": 0, "w_lo": [], "w_hi": []},
+            {"name": "b", "kind": "dense", "n_dot": 8, "n_channels": 1,
+             "macs_per_channel": 8.0, "e_offset": 5,
+             "in_lo": 0, "in_hi": 1, "in_lo_clip": 0, "in_hi_clip": 1,
+             "out_lo": -3, "out_hi": 3, "out_lo_clip": -3, "out_hi_clip": 3,
+             "w_lo_layer": -1, "w_hi_layer": 1, "w_lo": [], "w_hi": []}
+          ]
+        }"#;
+        ModelMeta::parse(text).unwrap()
+    }
+
+    #[test]
+    fn uniform_policy_fills_vector() {
+        let m = meta();
+        let e = EnergyPolicy::Uniform(5.0).e_vector(&m);
+        assert_eq!(e, vec![5.0f32; 6]);
+        assert!((EnergyPolicy::Uniform(5.0).avg_energy(&m) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_layer_policy_broadcasts() {
+        let m = meta();
+        let e = EnergyPolicy::PerLayer(vec![2.0, 8.0]).e_vector(&m);
+        assert_eq!(&e[0..4], &[2.0f32; 4]);
+        assert_eq!(e[5], 8.0);
+    }
+
+    #[test]
+    fn roundtrip_table() {
+        let m = meta();
+        let mut s = PrecisionScheduler::new();
+        let entry = PrecisionScheduler::entry_json("m", "thermal", "per_layer", &[2.0, 8.0]);
+        let n = s.load_json(&format!("[{entry}]")).unwrap();
+        assert_eq!(n, 1);
+        let p = s.get("m").unwrap();
+        assert_eq!(p.noise, "thermal");
+        assert_eq!(p.policy.e_vector(&m)[0], 2.0);
+        assert_eq!(s.fwd_tag("m").unwrap(), "thermal.fwd");
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let s = PrecisionScheduler::new();
+        assert!(s.fwd_tag("nope").is_err());
+    }
+}

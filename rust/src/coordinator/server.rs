@@ -1,0 +1,353 @@
+//! The coordinator proper: router -> batcher -> device thread.
+//!
+//! `Coordinator::start` spawns the device thread, which owns every
+//! PJRT executable (they hold raw pointers; see runtime::Exec). Clients
+//! submit `InferRequest`s through a cloneable `Sender`; the device loop
+//! drains the channel, batches per model, executes the scheduled noisy
+//! forward and replies on each request's response channel.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::analog::{plan_layer, AveragingMode, EnergyLedger, HardwareConfig};
+use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher};
+use crate::coordinator::request::{InferRequest, InferResponse};
+use crate::coordinator::scheduler::PrecisionScheduler;
+use crate::data::Features;
+use crate::ops::ModelOps;
+use crate::runtime::artifact::ModelBundle;
+use crate::util::stats::Summary;
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub batcher: BatcherConfig,
+    pub hw: HardwareConfig,
+    pub averaging: AveragingMode,
+    /// Base seed for the per-batch noise streams.
+    pub seed: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            batcher: BatcherConfig::default(),
+            hw: HardwareConfig::homodyne(),
+            averaging: AveragingMode::PerRowSpatial,
+            seed: 0,
+        }
+    }
+}
+
+/// Aggregated serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub served: u64,
+    pub batches: u64,
+    pub latency_us: Summary,
+    pub batch_occupancy: Summary,
+    pub exec_us: Summary,
+    pub overhead_us: Summary,
+    pub ledger: EnergyLedger,
+}
+
+impl ServerStats {
+    pub fn report(&self) -> String {
+        format!(
+            "served={} batches={} lat_p50={:.0}us lat_p95={:.0}us \
+             exec_p50={:.0}us overhead_p50={:.0}us occupancy={:.1}\n{}",
+            self.served,
+            self.batches,
+            self.latency_us.percentile(50.0),
+            self.latency_us.percentile(95.0),
+            self.exec_us.percentile(50.0),
+            self.overhead_us.percentile(50.0),
+            self.batch_occupancy.mean(),
+            self.ledger.report()
+        )
+    }
+}
+
+enum Msg {
+    Req(InferRequest),
+    Shutdown,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    device: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<ServerStats>>,
+    next_id: AtomicU64,
+}
+
+impl Coordinator {
+    /// Spawn the device thread. `bundles` and `scheduler` move into it.
+    pub fn start(
+        bundles: Vec<ModelBundle>,
+        scheduler: PrecisionScheduler,
+        cfg: CoordinatorConfig,
+    ) -> Result<Coordinator> {
+        let (tx, rx) = channel::<Msg>();
+        let stats = Arc::new(Mutex::new(ServerStats::default()));
+        let stats2 = stats.clone();
+        let device = std::thread::Builder::new()
+            .name("dynaprec-device".into())
+            .spawn(move || device_loop(bundles, scheduler, cfg, rx, stats2))?;
+        Ok(Coordinator {
+            tx,
+            device: Some(device),
+            stats,
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Submit one sample; returns the response receiver.
+    pub fn submit(
+        &self,
+        model: &str,
+        x: Features,
+    ) -> Receiver<InferResponse> {
+        let (rtx, rrx) = channel();
+        let req = InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            model: model.to_string(),
+            x,
+            enqueued: Instant::now(),
+            resp: rtx,
+        };
+        let _ = self.tx.send(Msg::Req(req));
+        rrx
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Flush outstanding work and join the device thread.
+    pub fn shutdown(mut self) -> ServerStats {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.device.take() {
+            let _ = h.join();
+        }
+        let s = self.stats.lock().unwrap().clone();
+        s
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.device.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn device_loop(
+    bundles: Vec<ModelBundle>,
+    scheduler: PrecisionScheduler,
+    cfg: CoordinatorConfig,
+    rx: Receiver<Msg>,
+    stats: Arc<Mutex<ServerStats>>,
+) {
+    let bundles: BTreeMap<String, ModelBundle> = bundles
+        .into_iter()
+        .map(|b| (b.meta.name.clone(), b))
+        .collect();
+    let mut batchers: BTreeMap<String, DynamicBatcher> = bundles
+        .keys()
+        .map(|k| (k.clone(), DynamicBatcher::new(cfg.batcher.clone())))
+        .collect();
+    let mut seed = cfg.seed as u32;
+    let mut shutdown = false;
+
+    while !shutdown {
+        // Wait bounded by the nearest batch deadline.
+        let now = Instant::now();
+        let wait = batchers
+            .values()
+            .filter_map(|b| b.time_to_deadline(now))
+            .min()
+            .unwrap_or(Duration::from_millis(50));
+        let mut enqueue = |r: InferRequest,
+                           batchers: &mut BTreeMap<String, DynamicBatcher>| {
+            if let Some(b) = batchers.get_mut(&r.model) {
+                b.push(r);
+            } else {
+                // Unknown model: reply with empty logits.
+                let _ = r
+                    .resp
+                    .send(InferResponse::from_logits(r.id, vec![], 0, 0, 0.0));
+            }
+        };
+        match rx.recv_timeout(wait) {
+            Ok(Msg::Req(r)) => enqueue(r, &mut batchers),
+            Ok(Msg::Shutdown) => shutdown = true,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => shutdown = true,
+        }
+        // Drain the backlog non-blockingly: while the device was busy
+        // executing, requests piled up in the channel — without this,
+        // each loop iteration admits one request and the age-based flush
+        // dispatches degenerate 1-sample batches under load.
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                Msg::Req(r) => enqueue(r, &mut batchers),
+                Msg::Shutdown => shutdown = true,
+            }
+        }
+        // Dispatch every ready batch (on shutdown, flush everything).
+        let now = Instant::now();
+        for (model, b) in batchers.iter_mut() {
+            loop {
+                let batch = if shutdown {
+                    let v = b.drain_all();
+                    if v.is_empty() {
+                        None
+                    } else {
+                        Some(v)
+                    }
+                } else {
+                    b.try_batch(now)
+                };
+                let Some(batch) = batch else { break };
+                seed = seed.wrapping_add(1);
+                execute_batch(
+                    &bundles[model],
+                    &scheduler,
+                    &cfg,
+                    batch,
+                    seed,
+                    &stats,
+                );
+            }
+        }
+    }
+}
+
+fn execute_batch(
+    bundle: &ModelBundle,
+    scheduler: &PrecisionScheduler,
+    cfg: &CoordinatorConfig,
+    batch: Vec<InferRequest>,
+    seed: u32,
+    stats: &Arc<Mutex<ServerStats>>,
+) {
+    let meta = &bundle.meta;
+    let bsz = meta.batch;
+    let n = batch.len();
+    // Assemble (and pad) the feature buffer.
+    let sample = match &batch[0].x {
+        Features::F32(v) => v.len(),
+        Features::I32(v) => v.len(),
+    };
+    let x = match &batch[0].x {
+        Features::F32(_) => {
+            let mut buf = vec![0.0f32; bsz * sample];
+            for (i, r) in batch.iter().enumerate() {
+                if let Features::F32(v) = &r.x {
+                    buf[i * sample..(i + 1) * sample].copy_from_slice(v);
+                }
+            }
+            Features::F32(buf)
+        }
+        Features::I32(_) => {
+            let mut buf = vec![0i32; bsz * sample];
+            for (i, r) in batch.iter().enumerate() {
+                if let Features::I32(v) = &r.x {
+                    buf[i * sample..(i + 1) * sample].copy_from_slice(v);
+                }
+            }
+            Features::I32(buf)
+        }
+    };
+
+    let ops = ModelOps::new(bundle);
+    let (tag, e) = match scheduler.get(&meta.name) {
+        Some(p) => (format!("{}.fwd", p.noise), p.policy.e_vector(meta)),
+        None => ("fwd_fp".to_string(), vec![1.0; meta.e_len]),
+    };
+    let t_exec = Instant::now();
+    let logits = if tag == "fwd_fp" {
+        ops.fwd_simple("fwd_fp", &x)
+    } else {
+        ops.fwd_noisy(&tag, &x, seed, &e)
+    };
+    let exec_us = t_exec.elapsed().as_micros() as f64;
+
+    // Simulated analog cost: energy from the scheduler's policy, cycles
+    // from the redundant-coding plan over all noise sites.
+    let (energy_per_sample, cycles) = analog_cost(bundle, scheduler, cfg);
+
+    let classes = match &logits {
+        Ok(l) => l.len() / bsz,
+        Err(_) => 0,
+    };
+    let done = Instant::now();
+    let mut s = stats.lock().unwrap();
+    s.batches += 1;
+    s.exec_us.add(exec_us);
+    s.batch_occupancy.add(n as f64 / bsz as f64);
+    s.ledger.record(
+        &meta.name,
+        n as u64,
+        meta.total_macs,
+        energy_per_sample,
+        cycles,
+    );
+    for (i, r) in batch.into_iter().enumerate() {
+        let latency = done.duration_since(r.enqueued).as_micros() as u64;
+        s.served += 1;
+        s.latency_us.add(latency as f64);
+        s.overhead_us.add((latency as f64 - exec_us).max(0.0));
+        let row = match &logits {
+            Ok(l) => l[i * classes..(i + 1) * classes].to_vec(),
+            Err(_) => vec![],
+        };
+        let _ = r.resp.send(InferResponse::from_logits(
+            r.id,
+            row,
+            latency,
+            n,
+            energy_per_sample,
+        ));
+    }
+}
+
+/// Energy per sample + simulated cycles for the scheduled precision.
+fn analog_cost(
+    bundle: &ModelBundle,
+    scheduler: &PrecisionScheduler,
+    cfg: &CoordinatorConfig,
+) -> (f64, f64) {
+    let meta = &bundle.meta;
+    let Some(p) = scheduler.get(&meta.name) else {
+        return (0.0, 0.0);
+    };
+    let e = p.policy.e_vector(meta);
+    let mut energy = 0.0;
+    let mut cycles = 0.0;
+    for (_, site) in meta.noise_sites() {
+        let es: Vec<f64> = e[site.e_offset..site.e_offset + site.n_channels]
+            .iter()
+            .map(|&v| v as f64)
+            .collect();
+        let plan = plan_layer(
+            &cfg.hw,
+            cfg.averaging,
+            &es,
+            site.n_dot,
+            site.macs_per_channel,
+            false,
+        );
+        energy += plan.energy;
+        cycles += plan.cycles;
+    }
+    (energy, cycles)
+}

@@ -1,0 +1,116 @@
+//! Frozen dataset loading (exported by `make artifacts`).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::dpt;
+
+/// Input features: images (f32) or token ids (i32).
+#[derive(Clone, Debug)]
+pub enum Features {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// An evaluation/training split.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub n: usize,
+    /// Per-sample feature element count.
+    pub sample_size: usize,
+    /// Feature dims per sample (e.g. [24, 24, 3] or [32]).
+    pub sample_dims: Vec<usize>,
+    pub x: Features,
+    pub y: Vec<i32>,
+}
+
+impl Dataset {
+    /// Load `<kind>.eval.bin` / `<kind>.trainsub.bin`.
+    pub fn load(dir: &Path, kind: &str, split: &str) -> Result<Dataset> {
+        let path = dir.join(format!("{kind}.{split}.bin"));
+        let tensors = dpt::read(&path)?;
+        let xt = tensors.get("x").ok_or_else(|| anyhow!("missing x"))?;
+        let yt = tensors.get("y").ok_or_else(|| anyhow!("missing y"))?;
+        let n = xt.shape[0];
+        if yt.shape != vec![n] {
+            bail!("y shape mismatch: {:?} vs n={n}", yt.shape);
+        }
+        let sample_dims = xt.shape[1..].to_vec();
+        let sample_size: usize = sample_dims.iter().product();
+        let x = match &xt.data {
+            dpt::Data::F32(v) => Features::F32(v.clone()),
+            dpt::Data::I32(v) => Features::I32(v.clone()),
+            _ => bail!("unsupported feature dtype"),
+        };
+        let y = yt
+            .data
+            .as_i32()
+            .ok_or_else(|| anyhow!("labels not i32"))?
+            .to_vec();
+        Ok(Dataset { n, sample_size, sample_dims, x, y })
+    }
+
+    /// Number of complete batches of size `b`.
+    pub fn n_batches(&self, b: usize) -> usize {
+        self.n / b
+    }
+
+    /// Feature slice for batch `i` of size `b`.
+    pub fn batch_x(&self, i: usize, b: usize) -> Features {
+        let (s, e) = (i * b * self.sample_size, (i + 1) * b * self.sample_size);
+        match &self.x {
+            Features::F32(v) => Features::F32(v[s..e].to_vec()),
+            Features::I32(v) => Features::I32(v[s..e].to_vec()),
+        }
+    }
+
+    /// Label slice for batch `i` of size `b`.
+    pub fn batch_y(&self, i: usize, b: usize) -> &[i32] {
+        &self.y[i * b..(i + 1) * b]
+    }
+
+    /// Feature slice for a single sample (serving path).
+    pub fn sample_x(&self, i: usize) -> Features {
+        let (s, e) = (i * self.sample_size, (i + 1) * self.sample_size);
+        match &self.x {
+            Features::F32(v) => Features::F32(v[s..e].to_vec()),
+            Features::I32(v) => Features::I32(v[s..e].to_vec()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn fake_dataset(dir: &Path) {
+        let mut m = BTreeMap::new();
+        let n = 8;
+        let x: Vec<f32> = (0..n * 6).map(|i| i as f32).collect();
+        m.insert("x".into(), dpt::Tensor::f32(vec![n, 2, 3], x));
+        m.insert("y".into(), dpt::Tensor::i32(vec![n], (0..n as i32).collect()));
+        dpt::write(&dir.join("vision.eval.bin"), &m).unwrap();
+    }
+
+    #[test]
+    fn load_and_batch() {
+        let dir = std::env::temp_dir().join("dynaprec_data_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_dataset(&dir);
+        let d = Dataset::load(&dir, "vision", "eval").unwrap();
+        assert_eq!(d.n, 8);
+        assert_eq!(d.sample_size, 6);
+        assert_eq!(d.sample_dims, vec![2, 3]);
+        assert_eq!(d.n_batches(4), 2);
+        match d.batch_x(1, 4) {
+            Features::F32(v) => {
+                assert_eq!(v.len(), 24);
+                assert_eq!(v[0], 24.0);
+            }
+            _ => panic!("wrong dtype"),
+        }
+        assert_eq!(d.batch_y(1, 4), &[4, 5, 6, 7]);
+    }
+}

@@ -1,0 +1,115 @@
+//! Shared experiment context + budget knobs.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::ops::ModelOps;
+use crate::optim::{train_energy, Granularity, SearchCfg, TrainCfg};
+use crate::runtime::artifact::ModelBundle;
+use crate::runtime::Engine;
+
+/// Budgets for one experiment run.
+#[derive(Clone, Debug)]
+pub struct Budget {
+    pub train_steps: usize,
+    pub eval_batches: usize,
+    pub eval_seeds: Vec<u32>,
+    pub search_iters: usize,
+    pub search_tol: f64,
+}
+
+impl Budget {
+    pub fn quick() -> Self {
+        Budget {
+            train_steps: 10,
+            eval_batches: 3,
+            eval_seeds: vec![0],
+            search_iters: 3,
+            search_tol: 0.25,
+        }
+    }
+
+    pub fn full() -> Self {
+        Budget {
+            train_steps: 120,
+            eval_batches: 16,
+            eval_seeds: vec![0, 1, 2],
+            search_iters: 10,
+            search_tol: 0.05,
+        }
+    }
+}
+
+pub struct ExpCtx {
+    pub engine: Arc<Engine>,
+    pub dir: PathBuf,
+    pub budget: Budget,
+}
+
+impl ExpCtx {
+    pub fn new() -> Result<Self> {
+        let dir = crate::artifacts_dir();
+        let budget = if crate::full_mode() {
+            Budget::full()
+        } else {
+            Budget::quick()
+        };
+        Ok(ExpCtx { engine: Arc::new(Engine::cpu()?), dir, budget })
+    }
+
+    pub fn bundle(&self, name: &str) -> Result<ModelBundle> {
+        ModelBundle::load(self.engine.clone(), &self.dir, name)
+    }
+
+    pub fn eval_data(&self, kind: &str) -> Result<Dataset> {
+        Dataset::load(&self.dir, kind, "eval")
+    }
+
+    pub fn train_data(&self, kind: &str) -> Result<Dataset> {
+        Dataset::load(&self.dir, kind, "trainsub")
+    }
+
+    pub fn search_cfg(&self) -> SearchCfg {
+        SearchCfg {
+            max_degradation: 0.02,
+            rel_tol: self.budget.search_tol,
+            max_iters: self.budget.search_iters,
+            eval_batches: self.budget.eval_batches,
+            eval_seeds: self.budget.eval_seeds.clone(),
+        }
+    }
+
+    /// Train energy allocations with the run's budget.
+    pub fn train(
+        &self,
+        ops: &ModelOps,
+        data: &Dataset,
+        noise_tag: &str,
+        granularity: Granularity,
+        target_avg_e: f64,
+        init_e: f64,
+    ) -> Result<crate::optim::TrainResult> {
+        let cfg = TrainCfg {
+            noise_tag: noise_tag.to_string(),
+            granularity,
+            lr: 0.05, // faster convergence within the short step budget
+            lam: TrainCfg::paper_lambda(noise_tag),
+            target_avg_e,
+            init_e,
+            steps: self.budget.train_steps,
+            seed: 0,
+        };
+        train_energy(ops, data, &cfg)
+    }
+}
+
+/// Uniform-vs-paper summary row formatting helper.
+pub fn fmt_row(cols: &[String]) -> String {
+    cols.iter()
+        .map(|c| format!("{c:>14}"))
+        .collect::<Vec<_>>()
+        .join(" | ")
+}

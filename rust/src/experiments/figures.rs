@@ -1,0 +1,168 @@
+//! Figure 2, 4–9 drivers. Each prints the figure's series as text
+//! (layer index vs value, or x vs y per curve).
+
+use anyhow::Result;
+
+use crate::experiments::common::ExpCtx;
+use crate::ops::ModelOps;
+use crate::optim::Granularity;
+use crate::quant::noise_bits;
+
+/// Fig. 2: noise bits per layer at *fixed* uniform energy (tiny_resnet).
+pub fn fig2(ctx: &ExpCtx, e: f64) -> Result<Vec<(String, f64)>> {
+    let bundle = ctx.bundle("tiny_resnet")?;
+    let meta = &bundle.meta;
+    let n = meta.noise_sites().count();
+    let bits = noise_bits::model_thermal_bits(
+        meta, meta.sigma_thermal, &vec![e; n], true,
+    );
+    println!("Fig 2 — noise bits per layer at uniform E={e} (tiny_resnet)");
+    let mut out = Vec::new();
+    for ((_, s), (_, b)) in meta.noise_sites().zip(bits.iter()) {
+        println!("  {:<16} {:>6.2} bits", s.name, b);
+        out.push((s.name.clone(), *b));
+    }
+    println!("  average: {:.2}", noise_bits::average_bits(&bits));
+    Ok(out)
+}
+
+/// Fig. 4: accuracy vs optical energy/MAC for uniform, dynamic, and
+/// photon-quantized dynamic precision (tiny_resnet, shot noise).
+pub fn fig4(ctx: &ExpCtx) -> Result<Vec<(f64, f64, f64, f64)>> {
+    let bundle = ctx.bundle("tiny_resnet")?;
+    let data = ctx.eval_data("vision")?;
+    let train = ctx.train_data("vision")?;
+    let ops = ModelOps::new(&bundle);
+    let meta = &bundle.meta;
+    let grid: &[f64] = if crate::full_mode() {
+        &[0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0]
+    } else {
+        &[0.5, 2.0, 8.0]
+    };
+    // One trained shape reused across the sweep (scaled per point).
+    let tr = ctx.train(&ops, &train, "shot", Granularity::PerLayer, 2.0, 8.0)?;
+    println!("Fig 4 — accuracy vs optical energy/MAC (tiny_resnet, shot)");
+    println!("{:>8} {:>10} {:>10} {:>12}", "aJ/MAC", "uniform", "dynamic",
+             "dyn-photonq");
+    let mut rows = Vec::new();
+    for &e in grid {
+        let uni = vec![e as f32; meta.e_len];
+        let a_u = ops.eval_noisy("shot.fwd", &data, &uni,
+                                 &ctx.budget.eval_seeds,
+                                 ctx.budget.eval_batches)?;
+        let scale = (e / tr.avg_e) as f32;
+        let dy: Vec<f32> = tr.e.iter().map(|v| v * scale).collect();
+        let a_d = ops.eval_noisy("shot.fwd", &data, &dy,
+                                 &ctx.budget.eval_seeds,
+                                 ctx.budget.eval_batches)?;
+        let a_q = ops.eval_noisy("shot_photonq.fwd", &data, &dy,
+                                 &ctx.budget.eval_seeds,
+                                 ctx.budget.eval_batches)?;
+        println!("{e:>8.2} {a_u:>10.4} {a_d:>10.4} {a_q:>12.4}");
+        rows.push((e, a_u, a_d, a_q));
+    }
+    Ok(rows)
+}
+
+/// Fig. 5: noise bits per layer under *dynamic* energy (tiny_resnet).
+pub fn fig5(ctx: &ExpCtx, avg_e: f64) -> Result<Vec<(String, f64)>> {
+    let bundle = ctx.bundle("tiny_resnet")?;
+    let train = ctx.train_data("vision")?;
+    let ops = ModelOps::new(&bundle);
+    let meta = &bundle.meta;
+    let tr = ctx.train(&ops, &train, "thermal", Granularity::PerLayer,
+                       avg_e, avg_e * 2.0)?;
+    let bits = noise_bits::model_thermal_bits(
+        meta, meta.sigma_thermal, &tr.e_per_layer, true,
+    );
+    println!("Fig 5 — noise bits per layer at dynamic avg E={avg_e} (tiny_resnet)");
+    let mut out = Vec::new();
+    for ((_, s), (_, b)) in meta.noise_sites().zip(bits.iter()) {
+        println!("  {:<16} {:>6.2} bits", s.name, b);
+        out.push((s.name.clone(), *b));
+    }
+    println!("  average: {:.2}", noise_bits::average_bits(&bits));
+    Ok(out)
+}
+
+/// Fig. 6 (tiny_resnet) / Fig. 9 (tiny_mobilenet): learned energy/MAC
+/// per layer under shot noise.
+pub fn fig_alloc(ctx: &ExpCtx, model: &str) -> Result<Vec<(String, f64)>> {
+    let bundle = ctx.bundle(model)?;
+    let train = ctx.train_data("vision")?;
+    let ops = ModelOps::new(&bundle);
+    let meta = &bundle.meta;
+    let tr = ctx.train(&ops, &train, "shot", Granularity::PerLayer, 2.0, 8.0)?;
+    println!("Fig — learned energy/MAC per layer ({model}, shot)");
+    let mut out = Vec::new();
+    for ((_, s), e) in meta.noise_sites().zip(tr.e_per_layer.iter()) {
+        println!("  {:<16} {:>8.3} aJ/MAC", s.name, e);
+        out.push((s.name.clone(), *e));
+    }
+    println!("  average: {:.3} aJ/MAC", tr.avg_e);
+    Ok(out)
+}
+
+/// Fig. 7: percentile-clipping ablation under thermal noise
+/// (tiny_resnet): accuracy with/without 99.99%-clipped ranges, uniform
+/// and dynamic.
+pub fn fig7(ctx: &ExpCtx) -> Result<Vec<(f64, f64, f64, f64, f64)>> {
+    let bundle = ctx.bundle("tiny_resnet")?;
+    let data = ctx.eval_data("vision")?;
+    let train = ctx.train_data("vision")?;
+    let ops = ModelOps::new(&bundle);
+    let meta = &bundle.meta;
+    let grid: &[f64] = if crate::full_mode() {
+        &[3.0, 10.0, 30.0, 100.0, 300.0]
+    } else {
+        &[10.0, 100.0]
+    };
+    let tr_clip = ctx.train(&ops, &train, "thermal", Granularity::PerLayer,
+                            30.0, 60.0)?;
+    let tr_noclip = ctx.train(&ops, &train, "thermal_noclip",
+                              Granularity::PerLayer, 30.0, 60.0)?;
+    println!("Fig 7 — percentile clipping ablation (tiny_resnet, thermal)");
+    println!("{:>8} {:>10} {:>10} {:>10} {:>10}", "E/MAC", "uni+clip",
+             "uni", "dyn+clip", "dyn");
+    let mut rows = Vec::new();
+    for &e in grid {
+        let uni = vec![e as f32; meta.e_len];
+        let a_uc = ops.eval_noisy("thermal.fwd", &data, &uni,
+                                  &ctx.budget.eval_seeds,
+                                  ctx.budget.eval_batches)?;
+        let a_un = ops.eval_noisy("thermal_noclip.fwd", &data, &uni,
+                                  &ctx.budget.eval_seeds,
+                                  ctx.budget.eval_batches)?;
+        let sc = |tr: &crate::optim::TrainResult| -> Vec<f32> {
+            let s = (e / tr.avg_e) as f32;
+            tr.e.iter().map(|v| v * s).collect()
+        };
+        let a_dc = ops.eval_noisy("thermal.fwd", &data, &sc(&tr_clip),
+                                  &ctx.budget.eval_seeds,
+                                  ctx.budget.eval_batches)?;
+        let a_dn = ops.eval_noisy("thermal_noclip.fwd", &data,
+                                  &sc(&tr_noclip), &ctx.budget.eval_seeds,
+                                  ctx.budget.eval_batches)?;
+        println!("{e:>8.0} {a_uc:>10.4} {a_un:>10.4} {a_dc:>10.4} {a_dn:>10.4}");
+        rows.push((e, a_uc, a_un, a_dc, a_dn));
+    }
+    Ok(rows)
+}
+
+/// Fig. 8: BERT energy/MAC per matmul site (shot noise).
+pub fn fig8(ctx: &ExpCtx) -> Result<Vec<(String, f64)>> {
+    let bundle = ctx.bundle("mini_bert")?;
+    let train = ctx.train_data("nlp")?;
+    let ops = ModelOps::new(&bundle);
+    let meta = &bundle.meta;
+    let tr = ctx.train(&ops, &train, "shot", Granularity::PerLayer, 1.0, 4.0)?;
+    println!("Fig 8 — BERT energy/MAC per matmul (mini_bert, shot)");
+    let mut out = Vec::new();
+    for ((_, s), e) in meta.noise_sites().zip(tr.e_per_layer.iter()) {
+        println!("  {:<10} {:>8.3} aJ/MAC  ({:>10.0} MACs)", s.name, e,
+                 s.n_macs());
+        out.push((s.name.clone(), *e));
+    }
+    println!("  average: {:.3} aJ/MAC", tr.avg_e);
+    Ok(out)
+}

@@ -1,0 +1,11 @@
+//! Experiment drivers: one per paper table/figure (Sec. VI).
+//!
+//! Shared by the `cargo bench` targets and the CLI. Every driver prints
+//! the same rows/series the paper reports; quick mode (default) uses
+//! reduced budgets, `DYNAPREC_FULL=1` runs the recorded protocol.
+
+pub mod common;
+pub mod figures;
+pub mod tables;
+
+pub use common::ExpCtx;

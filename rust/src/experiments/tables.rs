@@ -1,0 +1,192 @@
+//! Table I–IV drivers.
+
+use anyhow::Result;
+
+use crate::experiments::common::{fmt_row, ExpCtx};
+use crate::ops::ModelOps;
+use crate::optim::{binary_search_emax, search::eval_scaled, Granularity};
+use crate::quant::noise_bits;
+
+/// Table I: thermal noise vs noise-equivalent bits vs low-bit accuracy
+/// (uniform energy). Energy grid doubles as the paper's sigma_t grid
+/// (noise std ∝ sigma/sqrt(E), so E = (sigma_base/sigma)^2).
+pub fn table1(ctx: &ExpCtx) -> Result<Vec<(f64, f64, f64, f64)>> {
+    let bundle = ctx.bundle("tiny_resnet")?;
+    let data = ctx.eval_data("vision")?;
+    let ops = ModelOps::new(&bundle);
+    let meta = &bundle.meta;
+    let n_layers = meta.noise_sites().count();
+    let grid: &[f64] = if crate::full_mode() {
+        &[2.0, 5.0, 10.0, 20.0, 29.0, 39.0, 50.0, 99.0, 196.0, 488.0]
+    } else {
+        &[2.0, 10.0, 50.0, 196.0]
+    };
+    println!("Table I — thermal noise vs equivalent bit precision (tiny_resnet)");
+    println!("{}", fmt_row(&["E/MAC".into(), "noisy acc".into(),
+                             "avg bits".into(), "lowbit acc".into()]));
+    let mut rows = Vec::new();
+    for &e in grid {
+        let ev = vec![e as f32; meta.e_len];
+        let acc_noisy = ops.eval_noisy(
+            "thermal.fwd", &data, &ev, &ctx.budget.eval_seeds,
+            ctx.budget.eval_batches,
+        )?;
+        let bits = noise_bits::model_thermal_bits(
+            meta, meta.sigma_thermal, &vec![e; n_layers], true,
+        );
+        let avg_bits = noise_bits::average_bits(&bits);
+        let bv = noise_bits::bits_vector_for_lowbit(meta, &bits, 8.0);
+        let acc_lowbit = ops.eval_lowbit(&data, &bv, ctx.budget.eval_batches)?;
+        println!("{}", fmt_row(&[
+            format!("{e:.0}"),
+            format!("{:.4}", acc_noisy),
+            format!("{:.2}", avg_bits),
+            format!("{:.4}", acc_lowbit),
+        ]));
+        rows.push((e, acc_noisy, avg_bits, acc_lowbit));
+    }
+    Ok(rows)
+}
+
+/// One Table II cell set: (uniform, per-layer, per-channel) minimum
+/// energy/MAC at <2% degradation for one model + noise family.
+pub fn table2_cell(
+    ctx: &ExpCtx,
+    model: &str,
+    noise: &str,
+) -> Result<(f64, f64, f64)> {
+    let bundle = ctx.bundle(model)?;
+    let data = ctx.eval_data("vision")?;
+    let train = ctx.train_data("vision")?;
+    let ops = ModelOps::new(&bundle);
+    let meta = &bundle.meta;
+    let cfg = ctx.search_cfg();
+    let tag = format!("{noise}.fwd");
+    // Baseline measured on the same eval subset as the search probes —
+    // using the full-split meta accuracy would make the <2% target
+    // unreachable whenever the subset's clean accuracy is lower.
+    let clean_tag = if noise == "shot" { "fwd_fp" } else { "fwd_quant" };
+    let baseline = ops.eval_simple(clean_tag, &data, cfg.eval_batches)?;
+
+    // Uniform: scale a flat vector.
+    let flat = vec![1.0f32; meta.e_len];
+    let uni = binary_search_emax(
+        |e| eval_scaled(&ops, &data, &tag, &flat, e, &cfg),
+        baseline, 0.05, 64.0, &cfg,
+    )?;
+
+    // Dynamic: train the allocation shape once at a moderately tight
+    // budget, then scale it through the same search (quick-mode
+    // approximation of the paper's retrain-per-probe protocol; full mode
+    // uses more steps but the same shape-scaling — see DESIGN.md).
+    let dyn_at = |g: Granularity| -> Result<f64> {
+        let target = (uni.min_avg_e * 0.4).max(0.02);
+        let tr = ctx.train(&ops, &train, noise, g, target, uni.min_avg_e)?;
+        let r = binary_search_emax(
+            |e| eval_scaled(&ops, &data, &tag, &tr.e, e, &cfg),
+            baseline, 0.02, uni.min_avg_e.max(1.0) * 2.0, &cfg,
+        )?;
+        Ok(r.min_avg_e)
+    };
+    let per_layer = dyn_at(Granularity::PerLayer)?;
+    let per_channel = dyn_at(Granularity::PerChannel)?;
+    Ok((uni.min_avg_e, per_layer, per_channel))
+}
+
+/// Table II: minimum energy/MAC with <2% degradation across the CV zoo.
+pub fn table2(ctx: &ExpCtx, models: &[&str], noises: &[&str]) -> Result<()> {
+    for noise in noises {
+        println!("\nTable II — {noise} noise, min energy/MAC (<2% degradation)");
+        println!("{}", fmt_row(&["model".into(), "uniform".into(),
+                                 "per-layer".into(), "per-chan".into(),
+                                 "improve%".into()]));
+        for model in models {
+            let (u, l, c) = table2_cell(ctx, model, noise)?;
+            let best = l.min(c);
+            let imp = 100.0 * (1.0 - best / u);
+            println!("{}", fmt_row(&[
+                model.to_string(),
+                format!("{u:.3}"),
+                format!("{l:.3}"),
+                format!("{c:.3}"),
+                format!("{imp:.1}"),
+            ]));
+        }
+    }
+    Ok(())
+}
+
+/// Table III: noise bits under *dynamic* energy allocations.
+pub fn table3(ctx: &ExpCtx) -> Result<Vec<(f64, f64, f64, f64)>> {
+    let bundle = ctx.bundle("tiny_resnet")?;
+    let data = ctx.eval_data("vision")?;
+    let train = ctx.train_data("vision")?;
+    let ops = ModelOps::new(&bundle);
+    let meta = &bundle.meta;
+    let grid: &[f64] = if crate::full_mode() {
+        &[2.0, 5.0, 10.0, 20.0, 50.0, 99.0]
+    } else {
+        &[5.0, 50.0]
+    };
+    println!("Table III — dynamic precision thermal noise vs bits (tiny_resnet)");
+    println!("{}", fmt_row(&["avg E/MAC".into(), "noisy acc".into(),
+                             "avg bits".into(), "lowbit acc".into()]));
+    let mut rows = Vec::new();
+    for &e in grid {
+        let tr = ctx.train(&ops, &train, "thermal", Granularity::PerLayer,
+                           e, e * 2.0)?;
+        // Rescale the learned shape to exactly the target average.
+        let scale = (e / tr.avg_e) as f32;
+        let ev: Vec<f32> = tr.e.iter().map(|v| v * scale).collect();
+        let acc_noisy = ops.eval_noisy(
+            "thermal.fwd", &data, &ev, &ctx.budget.eval_seeds,
+            ctx.budget.eval_batches,
+        )?;
+        let e_layers = meta.per_layer_mean(&ev);
+        let bits = noise_bits::model_thermal_bits(
+            meta, meta.sigma_thermal, &e_layers, true,
+        );
+        let avg_bits = noise_bits::average_bits(&bits);
+        let bv = noise_bits::bits_vector_for_lowbit(meta, &bits, 8.0);
+        let acc_lowbit = ops.eval_lowbit(&data, &bv, ctx.budget.eval_batches)?;
+        println!("{}", fmt_row(&[
+            format!("{e:.0}"),
+            format!("{acc_noisy:.4}"),
+            format!("{avg_bits:.2}"),
+            format!("{acc_lowbit:.4}"),
+        ]));
+        rows.push((e, acc_noisy, avg_bits, acc_lowbit));
+    }
+    Ok(rows)
+}
+
+/// Table IV: BERT shot-noise constrained energy/MAC (uniform vs
+/// per-layer dynamic).
+pub fn table4(ctx: &ExpCtx) -> Result<(f64, f64)> {
+    let bundle = ctx.bundle("mini_bert")?;
+    let data = ctx.eval_data("nlp")?;
+    let train = ctx.train_data("nlp")?;
+    let ops = ModelOps::new(&bundle);
+    let meta = &bundle.meta;
+    let cfg = ctx.search_cfg();
+    // Subset-matched baseline (see table2_cell).
+    let baseline = ops.eval_simple("fwd_fp", &data, cfg.eval_batches)?;
+
+    let flat = vec![1.0f32; meta.e_len];
+    let uni = binary_search_emax(
+        |e| eval_scaled(&ops, &data, "shot.fwd", &flat, e, &cfg),
+        baseline, 0.05, 64.0, &cfg,
+    )?;
+    let tr = ctx.train(&ops, &train, "shot", Granularity::PerLayer,
+                       (uni.min_avg_e * 0.4).max(0.02), uni.min_avg_e)?;
+    let dy = binary_search_emax(
+        |e| eval_scaled(&ops, &data, "shot.fwd", &tr.e, e, &cfg),
+        baseline, 0.02, uni.min_avg_e.max(1.0) * 2.0, &cfg,
+    )?;
+    println!("Table IV — BERT (mini_bert) shot-noise energy/MAC (aJ)");
+    println!("  uniform:   {:.3}", uni.min_avg_e);
+    println!("  per-layer: {:.3}", dy.min_avg_e);
+    println!("  improvement: {:.1}%",
+             100.0 * (1.0 - dy.min_avg_e / uni.min_avg_e));
+    Ok((uni.min_avg_e, dy.min_avg_e))
+}

@@ -1,0 +1,32 @@
+//! dynaprec — Dynamic Precision Analog Computing for Neural Networks.
+//!
+//! Rust coordinator (L3) over AOT-compiled JAX/Pallas artifacts (L2/L1),
+//! reproducing Garg, Lou, Jain & Nahmias, "Dynamic Precision Analog
+//! Computing for Neural Networks" (2021).
+
+pub mod analog;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod ops;
+pub mod optim;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Artifacts directory resolution: $DYNAPREC_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("DYNAPREC_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// Quick-mode toggle for benches/experiments: full protocol only when
+/// DYNAPREC_FULL=1.
+pub fn full_mode() -> bool {
+    std::env::var("DYNAPREC_FULL").map(|v| v == "1").unwrap_or(false)
+}

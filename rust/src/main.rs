@@ -1,0 +1,261 @@
+//! dynaprec CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   info          — list models, sites, artifact inventory
+//!   eval          — accuracy of a model under a noise family / energy
+//!   train-energy  — learn Eq.-14 energy allocations, save a table
+//!   search        — min energy/MAC at <2% degradation (binary search)
+//!   serve         — run the serving coordinator on synthetic load
+//!   bits          — noise-bits analysis (Eq. 8) for a model
+//!
+//! Example: dynaprec eval --model tiny_resnet --noise shot --e 10
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use dynaprec::coordinator::{
+    Coordinator, CoordinatorConfig, EnergyPolicy, PrecisionScheduler,
+};
+use dynaprec::coordinator::scheduler::ModelPrecision;
+use dynaprec::data::Dataset;
+use dynaprec::ops::ModelOps;
+use dynaprec::optim::{
+    binary_search_emax, train_energy, Granularity, SearchCfg, TrainCfg,
+};
+use dynaprec::quant::noise_bits;
+use dynaprec::runtime::artifact::ModelBundle;
+use dynaprec::runtime::Engine;
+use dynaprec::util::cli::Args;
+
+fn main() {
+    let args = Args::parse_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let r = match cmd {
+        "info" => cmd_info(&args),
+        "eval" => cmd_eval(&args),
+        "train-energy" => cmd_train(&args),
+        "search" => cmd_search(&args),
+        "serve" => cmd_serve(&args),
+        "bits" => cmd_bits(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "dynaprec {} — dynamic precision analog computing\n\
+         usage: dynaprec <info|eval|train-energy|search|serve|bits> [--flags]\n\
+         common flags: --model NAME --noise thermal|weight|shot --e AVG_E\n\
+         see README.md for full usage",
+        dynaprec::version()
+    );
+}
+
+fn load_bundle(args: &Args) -> Result<(Arc<Engine>, ModelBundle, Dataset)> {
+    let dir = dynaprec::artifacts_dir();
+    let model = args
+        .get("model")
+        .ok_or_else(|| anyhow!("--model required"))?
+        .to_string();
+    let engine = Arc::new(Engine::cpu()?);
+    let bundle = ModelBundle::load(engine.clone(), &dir, &model)?;
+    let data = Dataset::load(&dir, &bundle.meta.kind, "eval")?;
+    Ok((engine, bundle, data))
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = dynaprec::artifacts_dir();
+    if let Some(model) = args.get("model") {
+        let engine = Arc::new(Engine::cpu()?);
+        let b = ModelBundle::load(engine, &dir, model)?;
+        let m = &b.meta;
+        println!(
+            "{}: kind={} sites={} e_len={} params={} macs/sample={:.3e}",
+            m.name, m.kind, m.n_sites, m.e_len, m.params_len, m.total_macs
+        );
+        println!("baselines: fp={:.4} quant={:?}", m.fp_acc, m.quant_acc);
+        println!("artifacts: {:?}", m.artifacts.keys().collect::<Vec<_>>());
+        println!("{:<4}{:<16}{:<11}{:>6}{:>8}{:>12}", "idx", "site", "kind",
+                 "N", "chan", "macs");
+        for (i, s) in m.sites.iter().enumerate() {
+            println!(
+                "{:<4}{:<16}{:<11}{:>6}{:>8}{:>12.0}",
+                i, s.name, s.kind, s.n_dot, s.n_channels, s.n_macs()
+            );
+        }
+    } else {
+        for entry in std::fs::read_dir(&dir)? {
+            let p = entry?.path();
+            if p.extension().map(|e| e == "json").unwrap_or(false) {
+                println!("{}", p.file_name().unwrap().to_string_lossy());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let (_eng, bundle, data) = load_bundle(args)?;
+    let ops = ModelOps::new(&bundle);
+    let noise = args.str_or("noise", "shot");
+    let e_avg = args.f64_or("e", 10.0);
+    let batches = args.usize_or("batches", 16);
+    let seeds: Vec<u32> = (0..args.usize_or("seeds", 1) as u32).collect();
+    let e = vec![e_avg as f32; bundle.meta.e_len];
+    let acc_clean = if bundle.meta.kind == "vision" {
+        ops.eval_simple("fwd_quant", &data, batches)?
+    } else {
+        ops.eval_simple("fwd_fp", &data, batches)?
+    };
+    let acc = ops.eval_noisy(&format!("{noise}.fwd"), &data, &e, &seeds, batches)?;
+    println!(
+        "model={} noise={noise} E={e_avg} acc={acc:.4} clean={acc_clean:.4} \
+         (meta fp={:.4})",
+        bundle.meta.name, bundle.meta.fp_acc
+    );
+    Ok(())
+}
+
+fn cmd_bits(args: &Args) -> Result<()> {
+    let (_eng, bundle, _data) = load_bundle(args)?;
+    let m = &bundle.meta;
+    let e = args.f64_or("e", 1.0);
+    let sigma = args.f64_or("sigma", m.sigma_thermal);
+    let clip = !args.bool("noclip");
+    let n_layers = m.noise_sites().count();
+    let bits = noise_bits::model_thermal_bits(m, sigma, &vec![e; n_layers], clip);
+    println!("thermal noise bits at sigma_t={sigma}, E={e} (clip={clip}):");
+    for ((i, s), (_, b)) in m.noise_sites().zip(bits.iter()) {
+        println!("  {:<4}{:<16}{:>8.2} bits", i, s.name, b);
+    }
+    println!("average: {:.2} bits", noise_bits::average_bits(&bits));
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (_eng, bundle, _eval) = load_bundle(args)?;
+    let dir = dynaprec::artifacts_dir();
+    let train = Dataset::load(&dir, &bundle.meta.kind, "trainsub")?;
+    let ops = ModelOps::new(&bundle);
+    let noise = args.str_or("noise", "shot");
+    let gran = match args.str_or("granularity", "per_layer").as_str() {
+        "per_channel" => Granularity::PerChannel,
+        _ => Granularity::PerLayer,
+    };
+    let cfg = TrainCfg {
+        noise_tag: noise.clone(),
+        granularity: gran,
+        lr: args.f64_or("lr", 0.01) as f32,
+        lam: args.f64_or("lam", TrainCfg::paper_lambda(&noise) as f64) as f32,
+        target_avg_e: args.f64_or("e", 5.0),
+        init_e: args.f64_or("init-e", 20.0),
+        steps: args.usize_or("steps", 100),
+        seed: args.u64_or("seed", 0) as u32,
+    };
+    let r = train_energy(&ops, &train, &cfg)?;
+    println!(
+        "trained {} {} steps: avg_e={:.3} acc={:.4} loss[{:.3}->{:.3}]",
+        bundle.meta.name,
+        cfg.steps,
+        r.avg_e,
+        r.final_acc,
+        r.loss_history.first().unwrap_or(&0.0),
+        r.loss_history.last().unwrap_or(&0.0),
+    );
+    println!("per-layer E: {:?}", round3(&r.e_per_layer));
+    if let Some(path) = args.get("save") {
+        let gran_s = match gran {
+            Granularity::PerLayer => "per_layer",
+            Granularity::PerChannel => "per_channel",
+        };
+        let e_out: Vec<f32> = match gran {
+            Granularity::PerLayer => {
+                r.e_per_layer.iter().map(|&v| v as f32).collect()
+            }
+            Granularity::PerChannel => r.e.clone(),
+        };
+        let entry = PrecisionScheduler::entry_json(
+            &bundle.meta.name, &noise, gran_s, &e_out,
+        );
+        std::fs::write(path, format!("[{entry}]"))?;
+        println!("saved energy table to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let (_eng, bundle, data) = load_bundle(args)?;
+    let ops = ModelOps::new(&bundle);
+    let noise = args.str_or("noise", "shot");
+    let cfg = SearchCfg {
+        eval_batches: args.usize_or("batches", 8),
+        ..Default::default()
+    };
+    let baseline = bundle.meta.baseline_acc(&noise);
+    let shape = vec![1.0f32; bundle.meta.e_len];
+    let tag = format!("{noise}.fwd");
+    let r = binary_search_emax(
+        |e| dynaprec::optim::search::eval_scaled(&ops, &data, &tag, &shape, e, &cfg),
+        baseline,
+        args.f64_or("lo", 0.05),
+        args.f64_or("hi", 64.0),
+        &cfg,
+    )?;
+    println!(
+        "model={} noise={noise} uniform min E/MAC = {:.3} (acc {:.4}, \
+         baseline {:.4}, {} probes)",
+        bundle.meta.name, r.min_avg_e, r.acc, baseline, r.probes.len()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = dynaprec::artifacts_dir();
+    let engine = Arc::new(Engine::cpu()?);
+    let model = args.str_or("model", "tiny_resnet");
+    let bundle = ModelBundle::load(engine.clone(), &dir, &model)?;
+    let data = Dataset::load(&dir, &bundle.meta.kind, "eval")?;
+    let noise = args.str_or("noise", "shot");
+    let e = args.f64_or("e", 10.0);
+    let n_requests = args.usize_or("requests", 256);
+
+    let mut sched = PrecisionScheduler::new();
+    sched.set(
+        &model,
+        ModelPrecision { noise: noise.clone(), policy: EnergyPolicy::Uniform(e) },
+    );
+    // Warm the executable cache before serving.
+    bundle.exec(&format!("{noise}.fwd"))?;
+    let coord = Coordinator::start(
+        vec![bundle],
+        sched,
+        CoordinatorConfig::default(),
+    )?;
+    let mut receivers = Vec::new();
+    for i in 0..n_requests {
+        receivers.push((i, coord.submit(&model, data.sample_x(i % data.n))));
+    }
+    let mut correct = 0;
+    for (i, rx) in receivers {
+        let resp = rx.recv()?;
+        if resp.pred == data.y[i % data.n] {
+            correct += 1;
+        }
+    }
+    let stats = coord.shutdown();
+    println!("accuracy: {:.4}", correct as f64 / n_requests as f64);
+    println!("{}", stats.report());
+    Ok(())
+}
+
+fn round3(v: &[f64]) -> Vec<f64> {
+    v.iter().map(|x| (x * 1000.0).round() / 1000.0).collect()
+}

@@ -1,0 +1,228 @@
+//! High-level model operations over the PJRT artifacts.
+//!
+//! Everything the coordinator, optimizer and experiment drivers need:
+//! noisy/clean/low-bit forwards, accuracy evaluation over a dataset, and
+//! the Eq.-14 value-and-grad step.
+
+use anyhow::{bail, Result};
+
+use crate::data::{Dataset, Features};
+use crate::runtime::artifact::ModelBundle;
+use crate::runtime::lit;
+
+/// Output of one grad-artifact invocation.
+#[derive(Clone, Debug)]
+pub struct GradOut {
+    pub loss: f32,
+    pub nll: f32,
+    pub acc: f32,
+    pub grad_loge: Vec<f32>,
+}
+
+pub struct ModelOps<'a> {
+    pub bundle: &'a ModelBundle,
+}
+
+impl<'a> ModelOps<'a> {
+    pub fn new(bundle: &'a ModelBundle) -> Self {
+        ModelOps { bundle }
+    }
+
+    fn x_literal(&self, x: &Features, batch: usize) -> Result<xla::Literal> {
+        let meta = &self.bundle.meta;
+        let mut dims = vec![batch];
+        match x {
+            Features::F32(v) => {
+                dims.extend(infer_sample_dims(meta, v.len() / batch));
+                lit::f32_tensor(&dims, v)
+            }
+            Features::I32(v) => {
+                dims.push(v.len() / batch);
+                lit::i32_tensor(&dims, v)
+            }
+        }
+    }
+
+    /// Noisy forward: tag is "thermal.fwd", "weight.fwd", "shot.fwd",
+    /// "thermal_noclip.fwd" or "shot_photonq.fwd".
+    pub fn fwd_noisy(
+        &self,
+        tag: &str,
+        x: &Features,
+        seed: u32,
+        e: &[f32],
+    ) -> Result<Vec<f32>> {
+        let meta = &self.bundle.meta;
+        if e.len() != meta.e_len {
+            bail!("E length {} != {}", e.len(), meta.e_len);
+        }
+        let exec = self.bundle.exec(tag)?;
+        let xl = self.x_literal(x, meta.batch)?;
+        let seed_l = lit::u32_scalar(seed)?;
+        let el = lit::f32_tensor(&[e.len()], e)?;
+        let out = exec.run(&[&self.bundle.params, &xl, &seed_l, &el])?;
+        lit::to_f32_vec(&out[0])
+    }
+
+    /// Clean forward: tag "fwd_fp" or "fwd_quant".
+    pub fn fwd_simple(&self, tag: &str, x: &Features) -> Result<Vec<f32>> {
+        let exec = self.bundle.exec(tag)?;
+        let xl = self.x_literal(x, self.bundle.meta.batch)?;
+        let out = exec.run(&[&self.bundle.params, &xl])?;
+        lit::to_f32_vec(&out[0])
+    }
+
+    /// Low-bit forward (Table I/III): per-site fractional activation bits.
+    pub fn fwd_lowbit(&self, x: &Features, bits: &[f32]) -> Result<Vec<f32>> {
+        let meta = &self.bundle.meta;
+        if bits.len() != meta.n_sites {
+            bail!("bits length {} != {}", bits.len(), meta.n_sites);
+        }
+        let exec = self.bundle.exec("lowbit")?;
+        let xl = self.x_literal(x, meta.batch)?;
+        let bl = lit::f32_tensor(&[bits.len()], bits)?;
+        let out = exec.run(&[&self.bundle.params, &xl, &bl])?;
+        lit::to_f32_vec(&out[0])
+    }
+
+    /// Eq.-14 value-and-grad step: tag "thermal.grad" etc.
+    pub fn grad_step(
+        &self,
+        tag: &str,
+        x: &Features,
+        y: &[i32],
+        seed: u32,
+        loge: &[f32],
+        lam: f32,
+        log_emax: f32,
+    ) -> Result<GradOut> {
+        let meta = &self.bundle.meta;
+        let exec = self.bundle.exec(tag)?;
+        let xl = self.x_literal(x, meta.batch)?;
+        let yl = lit::i32_tensor(&[y.len()], y)?;
+        let seed_l = lit::u32_scalar(seed)?;
+        let el = lit::f32_tensor(&[loge.len()], loge)?;
+        let laml = lit::f32_scalar(lam)?;
+        let emaxl = lit::f32_scalar(log_emax)?;
+        let out = exec.run(&[
+            &self.bundle.params,
+            &xl,
+            &yl,
+            &seed_l,
+            &el,
+            &laml,
+            &emaxl,
+        ])?;
+        Ok(GradOut {
+            loss: lit::to_f32(&out[0])?,
+            nll: lit::to_f32(&out[1])?,
+            acc: lit::to_f32(&out[2])?,
+            grad_loge: lit::to_f32_vec(&out[3])?,
+        })
+    }
+
+    // ------------------------------------------------------- evaluation
+    /// Accuracy of a noisy forward over (a prefix of) the dataset,
+    /// averaged over `seeds` noise draws.
+    pub fn eval_noisy(
+        &self,
+        tag: &str,
+        data: &Dataset,
+        e: &[f32],
+        seeds: &[u32],
+        max_batches: usize,
+    ) -> Result<f64> {
+        let b = self.bundle.meta.batch;
+        let nb = data.n_batches(b).min(max_batches);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for &seed in seeds {
+            for i in 0..nb {
+                let logits =
+                    self.fwd_noisy(tag, &data.batch_x(i, b), seed + i as u32, e)?;
+                correct += count_correct(&logits, data.batch_y(i, b));
+                total += b;
+            }
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Accuracy of a clean forward.
+    pub fn eval_simple(
+        &self,
+        tag: &str,
+        data: &Dataset,
+        max_batches: usize,
+    ) -> Result<f64> {
+        let b = self.bundle.meta.batch;
+        let nb = data.n_batches(b).min(max_batches);
+        let mut correct = 0usize;
+        for i in 0..nb {
+            let logits = self.fwd_simple(tag, &data.batch_x(i, b))?;
+            correct += count_correct(&logits, data.batch_y(i, b));
+        }
+        Ok(correct as f64 / (nb * b).max(1) as f64)
+    }
+
+    /// Accuracy of the low-bit forward.
+    pub fn eval_lowbit(
+        &self,
+        data: &Dataset,
+        bits: &[f32],
+        max_batches: usize,
+    ) -> Result<f64> {
+        let b = self.bundle.meta.batch;
+        let nb = data.n_batches(b).min(max_batches);
+        let mut correct = 0usize;
+        for i in 0..nb {
+            let logits = self.fwd_lowbit(&data.batch_x(i, b), bits)?;
+            correct += count_correct(&logits, data.batch_y(i, b));
+        }
+        Ok(correct as f64 / (nb * b).max(1) as f64)
+    }
+}
+
+/// argmax-match count for a [batch, classes] logits buffer.
+pub fn count_correct(logits: &[f32], y: &[i32]) -> usize {
+    let classes = logits.len() / y.len();
+    y.iter()
+        .enumerate()
+        .filter(|(i, &label)| {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j as i32)
+                .unwrap_or(-1);
+            pred == label
+        })
+        .count()
+}
+
+fn infer_sample_dims(
+    meta: &crate::runtime::artifact::ModelMeta,
+    sample_size: usize,
+) -> Vec<usize> {
+    if meta.kind == "vision" {
+        // [H, W, C] with H = W and C = 3.
+        let hw = ((sample_size / 3) as f64).sqrt() as usize;
+        vec![hw, hw, 3]
+    } else {
+        vec![sample_size]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_correct_counts() {
+        // 3 samples, 2 classes
+        let logits = [0.9, 0.1, 0.2, 0.8, 0.6, 0.4];
+        assert_eq!(count_correct(&logits, &[0, 1, 0]), 3);
+        assert_eq!(count_correct(&logits, &[1, 1, 0]), 2);
+        assert_eq!(count_correct(&logits, &[1, 0, 1]), 0);
+    }
+}

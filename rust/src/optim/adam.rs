@@ -1,0 +1,79 @@
+//! Adam optimizer (Kingma & Ba 2014) over a flat f32 parameter vector.
+//! The paper trains energy allocations with Adam at lr = 0.01 (App. A).
+
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u32,
+}
+
+impl Adam {
+    pub fn new(n: usize, lr: f32) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+        }
+    }
+
+    /// In-place parameter update from a gradient.
+    pub fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+            self.v[i] =
+                self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mh = self.m[i] / b1t;
+            let vh = self.v[i] / b2t;
+            params[i] -= self.lr * mh / (vh.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = sum (x - 3)^2, grad = 2(x - 3)
+        let mut x = vec![0.0f32; 4];
+        let mut opt = Adam::new(4, 0.1);
+        for _ in 0..500 {
+            let g: Vec<f32> = x.iter().map(|&v| 2.0 * (v - 3.0)).collect();
+            opt.step(&mut x, &g);
+        }
+        for v in &x {
+            assert!((v - 3.0).abs() < 1e-2, "{v}");
+        }
+    }
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        let mut x = vec![0.0f32];
+        let mut opt = Adam::new(1, 0.01);
+        opt.step(&mut x, &[5.0]);
+        // Adam's first step is ~lr regardless of gradient scale.
+        assert!((x[0] + 0.01).abs() < 1e-4, "{}", x[0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_panics() {
+        let mut x = vec![0.0f32; 2];
+        Adam::new(2, 0.1).step(&mut x, &[1.0]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Energy-allocation optimization (paper Sec. V) and the minimum-energy
+//! binary search (Sec. VI-A).
+
+pub mod adam;
+pub mod search;
+pub mod trainer;
+
+pub use adam::Adam;
+pub use search::{binary_search_emax, SearchCfg, SearchResult};
+pub use trainer::{train_energy, Granularity, TrainCfg, TrainResult};

@@ -1,0 +1,172 @@
+//! Binary search for the minimum energy/MAC at bounded accuracy loss
+//! (paper Sec. VI-A: "<2% degradation, within 0.1%, by binary search on
+//! the target energy/MAC").
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::ops::ModelOps;
+
+#[derive(Clone, Debug)]
+pub struct SearchCfg {
+    /// Allowed accuracy degradation vs baseline (paper: 0.02).
+    pub max_degradation: f64,
+    /// Multiplicative convergence tolerance on energy (hi/lo - 1).
+    pub rel_tol: f64,
+    /// Bisection iteration cap.
+    pub max_iters: usize,
+    /// Eval sampling: batches and noise seeds per accuracy estimate.
+    pub eval_batches: usize,
+    pub eval_seeds: Vec<u32>,
+}
+
+impl Default for SearchCfg {
+    fn default() -> Self {
+        SearchCfg {
+            max_degradation: 0.02,
+            rel_tol: 0.08,
+            max_iters: 10,
+            eval_batches: 8,
+            eval_seeds: vec![0],
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    /// Minimum average energy/MAC meeting the accuracy bound.
+    pub min_avg_e: f64,
+    /// Accuracy at that energy.
+    pub acc: f64,
+    /// (energy, accuracy) probes, in evaluation order.
+    pub probes: Vec<(f64, f64)>,
+}
+
+/// Bisect the average energy/MAC. `eval_at(avg_e)` must return accuracy
+/// at that (scaled) energy; `baseline` is the clean reference accuracy.
+///
+/// Precondition handling: grows `hi` geometrically until feasible (up to
+/// 2^8 x), shrinks `lo` until infeasible (so the bracket is valid).
+pub fn binary_search_emax<F>(
+    mut eval_at: F,
+    baseline: f64,
+    mut lo: f64,
+    mut hi: f64,
+    cfg: &SearchCfg,
+) -> Result<SearchResult>
+where
+    F: FnMut(f64) -> Result<f64>,
+{
+    let target = baseline - cfg.max_degradation;
+    let mut probes = Vec::new();
+    let mut feasible: Option<(f64, f64)> = None;
+
+    // Ensure hi is feasible.
+    for _ in 0..8 {
+        let acc = eval_at(hi)?;
+        probes.push((hi, acc));
+        if acc >= target {
+            feasible = Some((hi, acc));
+            break;
+        }
+        lo = hi;
+        hi *= 4.0;
+    }
+    let Some(mut best) = feasible else {
+        // Even the highest energy fails: report it.
+        let (e, a) = *probes.last().unwrap();
+        return Ok(SearchResult { min_avg_e: e, acc: a, probes });
+    };
+
+    // Ensure lo is infeasible (otherwise lo itself is the answer).
+    let acc_lo = eval_at(lo)?;
+    probes.push((lo, acc_lo));
+    if acc_lo >= target {
+        return Ok(SearchResult { min_avg_e: lo, acc: acc_lo, probes });
+    }
+
+    for _ in 0..cfg.max_iters {
+        if hi / lo - 1.0 <= cfg.rel_tol {
+            break;
+        }
+        let mid = (lo * hi).sqrt(); // geometric bisection
+        let acc = eval_at(mid)?;
+        probes.push((mid, acc));
+        if acc >= target {
+            hi = mid;
+            best = (mid, acc);
+        } else {
+            lo = mid;
+        }
+    }
+    Ok(SearchResult { min_avg_e: best.0, acc: best.1, probes })
+}
+
+/// Evaluate a model's noisy accuracy with a globally scaled energy
+/// vector: e_scaled = shape * (avg_e / avg(shape)).
+pub fn eval_scaled(
+    ops: &ModelOps,
+    data: &Dataset,
+    fwd_tag: &str,
+    shape: &[f32],
+    avg_e: f64,
+    cfg: &SearchCfg,
+) -> Result<f64> {
+    let meta = &ops.bundle.meta;
+    let cur = meta.avg_energy_per_mac(shape);
+    let scale = (avg_e / cur) as f32;
+    let e: Vec<f32> = shape.iter().map(|&v| v * scale).collect();
+    ops.eval_noisy(fwd_tag, data, &e, &cfg.eval_seeds, cfg.eval_batches)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SearchCfg {
+        SearchCfg { rel_tol: 0.01, max_iters: 40, ..Default::default() }
+    }
+
+    #[test]
+    fn finds_threshold_of_monotone_curve() {
+        // acc(E) = 0.9 - 0.5/E: target 0.88 -> E* = 25.
+        let r = binary_search_emax(
+            |e| Ok(0.9 - 0.5 / e),
+            0.9,
+            0.1,
+            100.0,
+            &cfg(),
+        )
+        .unwrap();
+        assert!((r.min_avg_e - 25.0).abs() / 25.0 < 0.05, "{}", r.min_avg_e);
+        assert!(r.acc >= 0.88);
+    }
+
+    #[test]
+    fn grows_hi_when_infeasible() {
+        // Needs E >= 400 to be feasible; initial hi = 10.
+        let r = binary_search_emax(
+            |e| Ok(if e >= 400.0 { 0.9 } else { 0.5 }),
+            0.9,
+            1.0,
+            10.0,
+            &cfg(),
+        )
+        .unwrap();
+        assert!(r.min_avg_e >= 400.0);
+        assert!(r.min_avg_e <= 640.0 * 1.02, "{}", r.min_avg_e);
+    }
+
+    #[test]
+    fn returns_lo_if_already_feasible() {
+        let r = binary_search_emax(|_| Ok(0.95), 0.9, 0.5, 10.0, &cfg()).unwrap();
+        assert_eq!(r.min_avg_e, 0.5);
+    }
+
+    #[test]
+    fn impossible_target_reports_highest_probe() {
+        let r = binary_search_emax(|_| Ok(0.1), 0.9, 1.0, 2.0, &cfg()).unwrap();
+        assert!(r.acc < 0.88);
+        assert!(r.min_avg_e >= 2.0);
+    }
+}

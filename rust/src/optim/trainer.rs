@@ -1,0 +1,218 @@
+//! Eq.-14 energy-allocation training loop (paper Sec. V).
+//!
+//! Runs Adam over log-E, calling the AOT grad artifact for the
+//! Monte-Carlo value-and-grad of
+//!
+//!   L(E) = NLL(y | x, xi; theta, E)
+//!        + lambda * max(log sum_l E_l n_mac_l - log E_max, 0)
+//!
+//! Network weights theta stay frozen (they live in params.bin); only E
+//! moves. Per-layer granularity ties channels within a site: the full
+//! per-channel gradient is summed per site (chain rule of the tie).
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::ops::ModelOps;
+use crate::optim::adam::Adam;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    PerLayer,
+    PerChannel,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    /// Artifact tag prefix: "thermal", "weight", "shot",
+    /// "thermal_noclip", "shot_photonq".
+    pub noise_tag: String,
+    pub granularity: Granularity,
+    /// Adam learning rate on log-E (paper: 0.01).
+    pub lr: f32,
+    /// Penalty weight lambda (paper: 2 for shot, 8 for thermal/weight).
+    pub lam: f32,
+    /// Energy budget as average energy/MAC (converted to log total).
+    pub target_avg_e: f64,
+    /// Initial energy/MAC for all layers.
+    pub init_e: f64,
+    pub steps: usize,
+    pub seed: u32,
+}
+
+impl TrainCfg {
+    pub fn paper_lambda(noise: &str) -> f32 {
+        if noise.starts_with("shot") {
+            2.0
+        } else {
+            8.0
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    /// Final per-channel energy vector.
+    pub e: Vec<f32>,
+    /// Per-layer mean energies (noise sites, in order).
+    pub e_per_layer: Vec<f64>,
+    /// Average energy/MAC achieved.
+    pub avg_e: f64,
+    pub loss_history: Vec<f32>,
+    pub final_acc: f32,
+}
+
+pub fn train_energy(
+    ops: &ModelOps,
+    data: &Dataset,
+    cfg: &TrainCfg,
+) -> Result<TrainResult> {
+    let meta = &ops.bundle.meta;
+    let grad_tag = format!("{}.grad", cfg.noise_tag);
+    let n_layers = meta.noise_sites().count();
+    let b = meta.batch;
+    let n_batches = data.n_batches(b).max(1);
+
+    // Trainable vector: per-layer or per-channel log-E.
+    let n_train = match cfg.granularity {
+        Granularity::PerLayer => n_layers,
+        Granularity::PerChannel => meta.e_len,
+    };
+    let mut loge = vec![(cfg.init_e as f32).ln(); n_train];
+    let mut opt = Adam::new(n_train, cfg.lr);
+
+    // Budget: log of total energy at the target average.
+    let log_emax = (cfg.target_avg_e * meta.total_macs).ln() as f32;
+
+    let mut history = Vec::with_capacity(cfg.steps);
+    let mut acc = 0.0f32;
+    for step in 0..cfg.steps {
+        let bi = step % n_batches;
+        let x = data.batch_x(bi, b);
+        let y = data.batch_y(bi, b);
+        let loge_full = expand(meta, cfg.granularity, &loge);
+        let out = ops.grad_step(
+            &grad_tag,
+            &x,
+            y,
+            cfg.seed.wrapping_add(step as u32),
+            &loge_full,
+            cfg.lam,
+            log_emax,
+        )?;
+        let g = compress(meta, cfg.granularity, &out.grad_loge);
+        opt.step(&mut loge, &g);
+        history.push(out.loss);
+        acc = out.acc;
+    }
+
+    let e_full: Vec<f32> = expand(meta, cfg.granularity, &loge)
+        .iter()
+        .map(|l| l.exp())
+        .collect();
+    let avg_e = meta.avg_energy_per_mac(&e_full);
+    let e_per_layer = meta.per_layer_mean(&e_full);
+    Ok(TrainResult {
+        e: e_full,
+        e_per_layer,
+        avg_e,
+        loss_history: history,
+        final_acc: acc,
+    })
+}
+
+/// Expand the trainable vector into the artifact's per-channel layout.
+fn expand(
+    meta: &crate::runtime::artifact::ModelMeta,
+    g: Granularity,
+    loge: &[f32],
+) -> Vec<f32> {
+    match g {
+        Granularity::PerChannel => loge.to_vec(),
+        Granularity::PerLayer => {
+            let mut full = vec![0.0f32; meta.e_len];
+            for (li, (_, s)) in meta.noise_sites().enumerate() {
+                for c in 0..s.n_channels {
+                    full[s.e_offset + c] = loge[li];
+                }
+            }
+            full
+        }
+    }
+}
+
+/// Compress a per-channel gradient back to the trainable layout.
+fn compress(
+    meta: &crate::runtime::artifact::ModelMeta,
+    g: Granularity,
+    grad_full: &[f32],
+) -> Vec<f32> {
+    match g {
+        Granularity::PerChannel => grad_full.to_vec(),
+        Granularity::PerLayer => meta
+            .noise_sites()
+            .map(|(_, s)| {
+                grad_full[s.e_offset..s.e_offset + s.n_channels]
+                    .iter()
+                    .sum::<f32>()
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::ModelMeta;
+
+    fn meta() -> ModelMeta {
+        let text = r#"{
+          "name": "m", "kind": "vision", "batch": 32, "params_len": 10,
+          "e_len": 5, "n_sites": 2, "total_macs_per_sample": 48.0,
+          "sigma_thermal": 0.01, "sigma_weight": 0.1,
+          "photons_per_aj": 7.8125, "act_bits": 8,
+          "baselines": {"fp_acc": 0.9, "quant_acc": null},
+          "artifacts": {},
+          "sites": [
+            {"name": "a", "kind": "conv", "n_dot": 27, "n_channels": 4,
+             "macs_per_channel": 10.0, "e_offset": 0,
+             "in_lo": -1, "in_hi": 1, "in_lo_clip": -1, "in_hi_clip": 1,
+             "out_lo": 0, "out_hi": 2, "out_lo_clip": 0, "out_hi_clip": 2,
+             "w_lo_layer": -0.5, "w_hi_layer": 0.5, "w_lo": [], "w_hi": []},
+            {"name": "b", "kind": "dense", "n_dot": 8, "n_channels": 1,
+             "macs_per_channel": 8.0, "e_offset": 4,
+             "in_lo": 0, "in_hi": 1, "in_lo_clip": 0, "in_hi_clip": 1,
+             "out_lo": -3, "out_hi": 3, "out_lo_clip": -3, "out_hi_clip": 3,
+             "w_lo_layer": -1, "w_hi_layer": 1, "w_lo": [], "w_hi": []}
+          ]
+        }"#;
+        ModelMeta::parse(text).unwrap()
+    }
+
+    #[test]
+    fn expand_compress_roundtrip_per_layer() {
+        let m = meta();
+        let loge = vec![1.0f32, 3.0];
+        let full = expand(&m, Granularity::PerLayer, &loge);
+        assert_eq!(full, vec![1.0, 1.0, 1.0, 1.0, 3.0]);
+        let grad = vec![0.5f32, 0.5, 0.5, 0.5, 2.0];
+        let c = compress(&m, Granularity::PerLayer, &grad);
+        assert_eq!(c, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn per_channel_is_identity() {
+        let m = meta();
+        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(expand(&m, Granularity::PerChannel, &v), v);
+        assert_eq!(compress(&m, Granularity::PerChannel, &v), v);
+    }
+
+    #[test]
+    fn paper_lambdas() {
+        assert_eq!(TrainCfg::paper_lambda("shot"), 2.0);
+        assert_eq!(TrainCfg::paper_lambda("shot_photonq"), 2.0);
+        assert_eq!(TrainCfg::paper_lambda("thermal"), 8.0);
+        assert_eq!(TrainCfg::paper_lambda("weight"), 8.0);
+    }
+}

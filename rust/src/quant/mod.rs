@@ -1,0 +1,77 @@
+//! Quantization math + the paper's noise-bits theory (Sec. III).
+
+pub mod noise_bits;
+
+/// Affine uniform fake-quantization (paper Eq. 2): map `x` onto `levels`
+/// uniformly spaced values spanning [lo, hi], clipping outside.
+pub fn fake_quant(x: f32, lo: f32, hi: f32, levels: u32) -> f32 {
+    debug_assert!(levels >= 2);
+    let delta = (hi - lo) / (levels - 1) as f32;
+    if delta <= 0.0 {
+        return lo;
+    }
+    let q = ((x.clamp(lo, hi) - lo) / delta).round();
+    lo + q * delta
+}
+
+/// Quantization-noise variance for B bits over a range (paper Eq. 6):
+/// Var = ((hi-lo)/(2^B - 1))^2 / 12. B may be fractional.
+pub fn quant_noise_var(range: f64, bits: f64) -> f64 {
+    let delta = range / (2f64.powf(bits) - 1.0);
+    delta * delta / 12.0
+}
+
+/// Levels for a fractional bit count (paper footnote 1: B bits ->
+/// ceil(2^B) levels, e.g. 4.644 bits -> 25 levels).
+pub fn levels_for_bits(bits: f64) -> u32 {
+    // Small epsilon so B = log2(n) maps back to exactly n levels.
+    ((2f64.powf(bits) - 1e-6).ceil() as u32).max(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fake_quant_endpoints_exact() {
+        assert_eq!(fake_quant(-1.0, -1.0, 1.0, 256), -1.0);
+        assert_eq!(fake_quant(1.0, -1.0, 1.0, 256), 1.0);
+        assert_eq!(fake_quant(5.0, -1.0, 1.0, 256), 1.0); // clip
+        assert_eq!(fake_quant(-5.0, -1.0, 1.0, 256), -1.0);
+    }
+
+    #[test]
+    fn fake_quant_grid() {
+        // 3 levels over [0, 1]: {0, 0.5, 1}
+        assert_eq!(fake_quant(0.2, 0.0, 1.0, 3), 0.0);
+        assert_eq!(fake_quant(0.3, 0.0, 1.0, 3), 0.5);
+        assert_eq!(fake_quant(0.8, 0.0, 1.0, 3), 1.0);
+    }
+
+    #[test]
+    fn quant_error_bounded_by_half_delta() {
+        let (lo, hi, levels) = (-2.0f32, 3.0f32, 256u32);
+        let delta = (hi - lo) / (levels - 1) as f32;
+        for i in 0..1000 {
+            let x = lo + (hi - lo) * (i as f32 / 999.0);
+            let err = (fake_quant(x, lo, hi, levels) - x).abs();
+            assert!(err <= delta / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn fractional_levels_match_paper_footnote() {
+        // "quantization over 25 uniformly spaced bins requires 4.644 bits"
+        assert_eq!(levels_for_bits(25f64.log2()), 25);
+        assert_eq!(levels_for_bits(8.0), 256);
+        assert_eq!(levels_for_bits(1.0), 2);
+    }
+
+    #[test]
+    fn quant_var_matches_uniform_model() {
+        // 8 bits over range 1: delta = 1/255, var = delta^2/12.
+        let v = quant_noise_var(1.0, 8.0);
+        let delta = 1.0 / 255.0f64;
+        assert!((v - delta * delta / 12.0).abs() < 1e-18);
+    }
+}

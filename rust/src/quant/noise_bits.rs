@@ -1,0 +1,165 @@
+//! Noise-equivalent bit precision (paper Sec. III, Eq. 6-8).
+//!
+//! `B_eps` for a layer is the (fractional) bit count at which uniform
+//! quantization noise over the layer's *output* range has the same
+//! variance as the analog noise. For thermal noise (Eq. 3/9) this has the
+//! closed form of Eq. 8; for weight noise we evaluate the variance from
+//! the meta ranges; shot noise is signal-dependent and handled by the
+//! empirical path (Table I/III use thermal, as in the paper).
+
+use crate::runtime::artifact::{ModelMeta, SiteMeta};
+
+/// Noise bits from an analog noise variance and the layer output range
+/// (paper Eq. 7): B = log2(range / sqrt(12 Var) + 1).
+pub fn bits_from_var(out_range: f64, var: f64) -> f64 {
+    if var <= 0.0 {
+        return f64::INFINITY;
+    }
+    (out_range / (12.0 * var).sqrt() + 1.0).log2()
+}
+
+/// Thermal-noise variance of one site's output at energy/MAC `e`
+/// (paper Eq. 9): Var = N * (Wrange * Xrange * sigma_t)^2 / e.
+pub fn thermal_var(site: &SiteMeta, sigma_t: f64, e: f64, clip: bool) -> f64 {
+    let w_range = site.w_hi_layer - site.w_lo_layer;
+    let x_range = if clip {
+        site.in_hi_clip - site.in_lo_clip
+    } else {
+        site.in_hi - site.in_lo
+    };
+    let std = (site.n_dot as f64).sqrt() * w_range * x_range * sigma_t / e.sqrt();
+    std * std
+}
+
+/// Weight-read-noise variance proxy of one site's output at energy `e`
+/// (paper Eq. 10): per-weight std (Wrange * sigma_w / sqrt(e)); the dot
+/// product of N noisy weights with inputs of RMS ~ Xrange/sqrt(12) gives
+/// Var ~ N * (Wrange * sigma_w)^2/e * E[x^2].
+pub fn weight_var(site: &SiteMeta, sigma_w: f64, e: f64) -> f64 {
+    let w_range = site.w_hi_layer - site.w_lo_layer;
+    let x_range = site.in_hi - site.in_lo;
+    // E[x^2] for a uniform distribution over the input range (paper's
+    // uniform-signal approximation in Sec. III).
+    let ex2 = x_range * x_range / 12.0;
+    (site.n_dot as f64) * (w_range * sigma_w).powi(2) / e * ex2
+}
+
+/// Thermal noise bits of one site (paper Eq. 8).
+pub fn thermal_bits(site: &SiteMeta, sigma_t: f64, e: f64, clip: bool) -> f64 {
+    let out_range = if clip {
+        site.out_hi_clip - site.out_lo_clip
+    } else {
+        site.out_hi - site.out_lo
+    };
+    bits_from_var(out_range, thermal_var(site, sigma_t, e, clip))
+}
+
+/// Per-noise-site thermal noise bits for a whole model at per-layer
+/// energies `e_layers` (len = number of noise sites). Returns (site
+/// index, bits) pairs in site order.
+pub fn model_thermal_bits(
+    meta: &ModelMeta,
+    sigma_t: f64,
+    e_layers: &[f64],
+    clip: bool,
+) -> Vec<(usize, f64)> {
+    meta.noise_sites()
+        .zip(e_layers.iter())
+        .map(|((i, s), &e)| (i, thermal_bits(s, sigma_t, e, clip)))
+        .collect()
+}
+
+/// Average bits across noise sites (paper Tables I/III report this).
+pub fn average_bits(bits: &[(usize, f64)]) -> f64 {
+    let finite: Vec<f64> = bits
+        .iter()
+        .map(|&(_, b)| b)
+        .filter(|b| b.is_finite())
+        .collect();
+    finite.iter().sum::<f64>() / finite.len().max(1) as f64
+}
+
+/// Full bit vector (one entry per site, NaN for non-noise sites) for the
+/// lowbit artifact input.
+pub fn bits_vector_for_lowbit(
+    meta: &ModelMeta,
+    site_bits: &[(usize, f64)],
+    default_bits: f64,
+) -> Vec<f32> {
+    let mut v = vec![default_bits as f32; meta.n_sites];
+    for &(i, b) in site_bits {
+        // Cap at 16 bits: above that the quantization grid underflows f32
+        // and "effectively fp" is what the paper's Table I rows show.
+        v[i] = b.min(16.0) as f32;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn site() -> SiteMeta {
+        SiteMeta {
+            name: "s".into(),
+            kind: "conv".into(),
+            n_dot: 27,
+            n_channels: 8,
+            macs_per_channel: 100.0,
+            e_offset: 0,
+            in_lo: -1.0,
+            in_hi: 1.0,
+            in_lo_clip: -0.9,
+            in_hi_clip: 0.9,
+            out_lo: -2.0,
+            out_hi: 2.0,
+            out_lo_clip: -1.8,
+            out_hi_clip: 1.8,
+            w_lo_layer: -0.5,
+            w_hi_layer: 0.5,
+            w_lo: vec![],
+            w_hi: vec![],
+        }
+    }
+
+    #[test]
+    fn eq8_closed_form_matches_composition() {
+        // Eq. 8 is bits_from_var(out_range, thermal_var): check the
+        // explicit formula.
+        let s = site();
+        let (sigma, e) = (0.01, 4.0);
+        let b = thermal_bits(&s, sigma, e, false);
+        let denom =
+            sigma / e.sqrt() * 1.0 * 2.0 * (12.0f64 * 27.0).sqrt();
+        let expect = (4.0 / denom + 1.0).log2();
+        assert!((b - expect).abs() < 1e-12, "{b} vs {expect}");
+    }
+
+    #[test]
+    fn more_energy_more_bits() {
+        let s = site();
+        let b1 = thermal_bits(&s, 0.01, 1.0, false);
+        let b4 = thermal_bits(&s, 0.01, 4.0, false);
+        // 4x energy halves the noise std -> ~+1 bit in the high-SNR regime.
+        assert!(b4 > b1);
+        assert!((b4 - b1 - 1.0).abs() < 0.1, "b1={b1} b4={b4}");
+    }
+
+    #[test]
+    fn zero_noise_is_infinite_bits() {
+        assert!(bits_from_var(1.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn clip_ranges_reduce_noise() {
+        let s = site();
+        // Clipped input range is smaller -> smaller thermal noise var.
+        assert!(thermal_var(&s, 0.01, 1.0, true) < thermal_var(&s, 0.01, 1.0, false));
+    }
+
+    #[test]
+    fn average_ignores_infinities() {
+        let b = vec![(0, 4.0), (1, f64::INFINITY), (2, 6.0)];
+        assert_eq!(average_bits(&b), 5.0);
+    }
+}

@@ -1,0 +1,305 @@
+//! Artifact registry: per-model metadata (`meta.json`), parameters
+//! (`params.bin`) and compiled entry points.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::{lit, Engine, Exec};
+use crate::util::json::Json;
+
+/// One analog matmul site (mirrors python `SiteSpec`).
+#[derive(Clone, Debug)]
+pub struct SiteMeta {
+    pub name: String,
+    pub kind: String,
+    pub n_dot: usize,
+    pub n_channels: usize,
+    pub macs_per_channel: f64,
+    pub e_offset: usize,
+    pub in_lo: f64,
+    pub in_hi: f64,
+    pub in_lo_clip: f64,
+    pub in_hi_clip: f64,
+    pub out_lo: f64,
+    pub out_hi: f64,
+    pub out_lo_clip: f64,
+    pub out_hi_clip: f64,
+    pub w_lo_layer: f64,
+    pub w_hi_layer: f64,
+    pub w_lo: Vec<f32>,
+    pub w_hi: Vec<f32>,
+}
+
+impl SiteMeta {
+    /// Sites that carry analog noise (and energy): everything but the
+    /// requantized residual adds.
+    pub fn is_noise_site(&self) -> bool {
+        self.kind != "add"
+    }
+
+    pub fn n_macs(&self) -> f64 {
+        self.macs_per_channel * self.n_channels as f64
+    }
+}
+
+/// Parsed `<model>.meta.json`.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub kind: String, // "vision" | "nlp"
+    pub batch: usize,
+    pub params_len: usize,
+    pub e_len: usize,
+    pub n_sites: usize,
+    pub total_macs: f64,
+    pub sigma_thermal: f64,
+    pub sigma_weight: f64,
+    pub photons_per_aj: f64,
+    pub act_bits: u32,
+    pub fp_acc: f64,
+    pub quant_acc: Option<f64>,
+    pub artifacts: std::collections::BTreeMap<String, String>,
+    pub sites: Vec<SiteMeta>,
+}
+
+impl ModelMeta {
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let sites = j
+            .field("sites")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("sites not an array"))?
+            .iter()
+            .map(parse_site)
+            .collect::<Result<Vec<_>>>()?;
+        let baselines = j.field("baselines").map_err(|e| anyhow!("{e}"))?;
+        let artifacts = j
+            .field("artifacts")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts not an object"))?
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_str().unwrap_or_default().to_string()))
+            .collect();
+        let f = |k: &str| -> Result<f64> {
+            j.f64_field(k).map_err(|e| anyhow!("{e}"))
+        };
+        Ok(ModelMeta {
+            name: j.str_field("name").map_err(|e| anyhow!("{e}"))?.to_string(),
+            kind: j.str_field("kind").map_err(|e| anyhow!("{e}"))?.to_string(),
+            batch: f("batch")? as usize,
+            params_len: f("params_len")? as usize,
+            e_len: f("e_len")? as usize,
+            n_sites: f("n_sites")? as usize,
+            total_macs: f("total_macs_per_sample")?,
+            sigma_thermal: f("sigma_thermal")?,
+            sigma_weight: f("sigma_weight")?,
+            photons_per_aj: f("photons_per_aj")?,
+            act_bits: f("act_bits")? as u32,
+            fp_acc: baselines.f64_field("fp_acc").map_err(|e| anyhow!("{e}"))?,
+            quant_acc: baselines.get("quant_acc").and_then(|v| v.as_f64()),
+            artifacts,
+            sites,
+        })
+    }
+
+    /// Baseline accuracy against which degradation is measured (paper
+    /// App. A: 8-bit baseline when 8-bit quantization already degrades
+    /// >1%, fp otherwise; shot noise always compares to fp).
+    pub fn baseline_acc(&self, noise: &str) -> f64 {
+        if noise == "shot" {
+            return self.fp_acc;
+        }
+        match self.quant_acc {
+            Some(q) if self.fp_acc - q > 0.01 => q,
+            _ => self.fp_acc,
+        }
+    }
+
+    /// Noise-site indices (skip residual adds).
+    pub fn noise_sites(&self) -> impl Iterator<Item = (usize, &SiteMeta)> {
+        self.sites
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_noise_site())
+    }
+
+    /// Broadcast per-layer energies to the full per-channel vector.
+    pub fn broadcast_per_layer(&self, per_layer: &[f64]) -> Vec<f32> {
+        let mut e = vec![1.0f32; self.e_len];
+        let mut li = 0;
+        for s in &self.sites {
+            if !s.is_noise_site() {
+                continue;
+            }
+            for c in 0..s.n_channels {
+                e[s.e_offset + c] = per_layer[li] as f32;
+            }
+            li += 1;
+        }
+        assert_eq!(li, per_layer.len(), "per-layer length mismatch");
+        e
+    }
+
+    /// Average energy/MAC implied by a per-channel vector.
+    pub fn avg_energy_per_mac(&self, e: &[f32]) -> f64 {
+        let mut tot = 0.0;
+        let mut macs = 0.0;
+        for s in &self.sites {
+            for c in 0..s.n_channels {
+                tot += e[s.e_offset + c] as f64 * s.macs_per_channel;
+                macs += s.macs_per_channel;
+            }
+        }
+        tot / macs
+    }
+
+    /// Per-layer mean energy extracted from a per-channel vector
+    /// (noise sites only, in site order).
+    pub fn per_layer_mean(&self, e: &[f32]) -> Vec<f64> {
+        self.noise_sites()
+            .map(|(_, s)| {
+                let sl = &e[s.e_offset..s.e_offset + s.n_channels];
+                sl.iter().map(|&v| v as f64).sum::<f64>() / s.n_channels as f64
+            })
+            .collect()
+    }
+}
+
+fn parse_site(j: &Json) -> Result<SiteMeta> {
+    let f = |k: &str| -> Result<f64> { j.f64_field(k).map_err(|e| anyhow!("{e}")) };
+    Ok(SiteMeta {
+        name: j.str_field("name").map_err(|e| anyhow!("{e}"))?.to_string(),
+        kind: j.str_field("kind").map_err(|e| anyhow!("{e}"))?.to_string(),
+        n_dot: f("n_dot")? as usize,
+        n_channels: f("n_channels")? as usize,
+        macs_per_channel: f("macs_per_channel")?,
+        e_offset: f("e_offset")? as usize,
+        in_lo: f("in_lo")?,
+        in_hi: f("in_hi")?,
+        in_lo_clip: f("in_lo_clip")?,
+        in_hi_clip: f("in_hi_clip")?,
+        out_lo: f("out_lo")?,
+        out_hi: f("out_hi")?,
+        out_lo_clip: f("out_lo_clip")?,
+        out_hi_clip: f("out_hi_clip")?,
+        w_lo_layer: f("w_lo_layer")?,
+        w_hi_layer: f("w_hi_layer")?,
+        w_lo: j.field("w_lo").map_err(|e| anyhow!("{e}"))?.f32_vec().unwrap_or_default(),
+        w_hi: j.field("w_hi").map_err(|e| anyhow!("{e}"))?.f32_vec().unwrap_or_default(),
+    })
+}
+
+/// A loaded model: meta + params literal + lazily compiled entries.
+pub struct ModelBundle {
+    pub meta: ModelMeta,
+    pub dir: PathBuf,
+    pub params: xla::Literal,
+    engine: Arc<Engine>,
+}
+
+unsafe impl Send for ModelBundle {}
+
+impl ModelBundle {
+    pub fn load(engine: Arc<Engine>, dir: &Path, name: &str) -> Result<Self> {
+        let meta_text = std::fs::read_to_string(dir.join(format!("{name}.meta.json")))
+            .with_context(|| format!("reading {name}.meta.json"))?;
+        let meta = ModelMeta::parse(&meta_text)?;
+        let tensors = crate::util::dpt::read(&dir.join(format!("{name}.params.bin")))?;
+        let p = tensors
+            .get("params")
+            .ok_or_else(|| anyhow!("params tensor missing"))?;
+        let data = p
+            .data
+            .as_f32()
+            .ok_or_else(|| anyhow!("params not f32"))?;
+        if data.len() != meta.params_len {
+            bail!("params length {} != meta {}", data.len(), meta.params_len);
+        }
+        let params = lit::f32_tensor(&[data.len()], data)?;
+        Ok(ModelBundle { meta, dir: dir.to_path_buf(), params, engine })
+    }
+
+    /// Compile (or fetch cached) the executable for an artifact tag,
+    /// e.g. "thermal.fwd", "shot.grad", "fwd_quant", "lowbit".
+    pub fn exec(&self, tag: &str) -> Result<Arc<Exec>> {
+        let fname = self
+            .meta
+            .artifacts
+            .get(tag)
+            .ok_or_else(|| anyhow!("model {} has no artifact '{tag}'", self.meta.name))?;
+        self.engine.load(&self.dir.join(fname))
+    }
+
+    pub fn has(&self, tag: &str) -> bool {
+        self.meta.artifacts.contains_key(tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META: &str = r#"{
+      "name": "m", "kind": "vision", "batch": 32, "params_len": 10,
+      "e_len": 6, "n_sites": 3, "total_macs_per_sample": 100.0,
+      "sigma_thermal": 0.01, "sigma_weight": 0.1, "photons_per_aj": 7.8125,
+      "act_bits": 8,
+      "baselines": {"fp_acc": 0.9, "quant_acc": 0.895},
+      "artifacts": {"fwd_fp": "m.fwd_fp.hlo.txt"},
+      "sites": [
+        {"name": "a", "kind": "conv", "n_dot": 27, "n_channels": 4,
+         "macs_per_channel": 10.0, "e_offset": 0,
+         "in_lo": -1, "in_hi": 1, "in_lo_clip": -0.9, "in_hi_clip": 0.9,
+         "out_lo": 0, "out_hi": 2, "out_lo_clip": 0, "out_hi_clip": 1.8,
+         "w_lo_layer": -0.5, "w_hi_layer": 0.5,
+         "w_lo": [-0.5, -0.4, -0.3, -0.2], "w_hi": [0.5, 0.4, 0.3, 0.2]},
+        {"name": "r", "kind": "add", "n_dot": 1, "n_channels": 1,
+         "macs_per_channel": 0.0, "e_offset": 4,
+         "in_lo": 0, "in_hi": 1, "in_lo_clip": 0, "in_hi_clip": 1,
+         "out_lo": 0, "out_hi": 1, "out_lo_clip": 0, "out_hi_clip": 1,
+         "w_lo_layer": 0, "w_hi_layer": 0, "w_lo": [0], "w_hi": [0]},
+        {"name": "b", "kind": "dense", "n_dot": 8, "n_channels": 1,
+         "macs_per_channel": 8.0, "e_offset": 5,
+         "in_lo": 0, "in_hi": 1, "in_lo_clip": 0, "in_hi_clip": 1,
+         "out_lo": -3, "out_hi": 3, "out_lo_clip": -2.5, "out_hi_clip": 2.5,
+         "w_lo_layer": -1, "w_hi_layer": 1, "w_lo": [-1], "w_hi": [1]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_meta() {
+        let m = ModelMeta::parse(META).unwrap();
+        assert_eq!(m.name, "m");
+        assert_eq!(m.sites.len(), 3);
+        assert_eq!(m.e_len, 6);
+        assert_eq!(m.noise_sites().count(), 2);
+        assert_eq!(m.sites[0].w_lo.len(), 4);
+    }
+
+    #[test]
+    fn broadcast_and_average() {
+        let m = ModelMeta::parse(META).unwrap();
+        let e = m.broadcast_per_layer(&[2.0, 8.0]);
+        assert_eq!(e.len(), 6);
+        assert_eq!(&e[0..4], &[2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(e[5], 8.0);
+        // avg = (2*40 + 8*8) / 48 = 3.0
+        let avg = m.avg_energy_per_mac(&e);
+        assert!((avg - 3.0).abs() < 1e-9, "avg {avg}");
+        let pl = m.per_layer_mean(&e);
+        assert_eq!(pl, vec![2.0, 8.0]);
+    }
+
+    #[test]
+    fn baseline_selection() {
+        let mut m = ModelMeta::parse(META).unwrap();
+        assert_eq!(m.baseline_acc("shot"), 0.9);
+        assert_eq!(m.baseline_acc("thermal"), 0.9); // quant within 1%
+        m.quant_acc = Some(0.85);
+        assert_eq!(m.baseline_acc("thermal"), 0.85);
+    }
+}

@@ -1,0 +1,86 @@
+//! Literal construction/extraction helpers around the `xla` crate.
+
+use anyhow::{anyhow, Result};
+use xla::ElementType;
+
+/// f32 tensor literal from flat data + dims.
+pub fn f32_tensor(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    let bytes = as_bytes(data);
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// i32 tensor literal.
+pub fn i32_tensor(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    let bytes = as_bytes(data);
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// u32 scalar (e.g. PRNG seed).
+pub fn u32_scalar(v: u32) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        ElementType::U32,
+        &[],
+        &v.to_le_bytes(),
+    )?)
+}
+
+/// f32 scalar (e.g. lambda, log E_max).
+pub fn f32_scalar(v: f32) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        &[],
+        &v.to_le_bytes(),
+    )?)
+}
+
+/// Extract f32 data from a literal.
+pub fn to_f32_vec(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Extract a f32 scalar.
+pub fn to_f32(l: &xla::Literal) -> Result<f32> {
+    l.to_vec::<f32>()?
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow!("empty literal"))
+}
+
+fn as_bytes<T>(data: &[T]) -> &[u8] {
+    // SAFETY: plain-old-data reinterpretation for f32/i32 slices.
+    unsafe {
+        std::slice::from_raw_parts(
+            data.as_ptr() as *const u8,
+            std::mem::size_of_val(data),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let l = f32_tensor(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(to_f32_vec(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn scalars() {
+        let l = f32_scalar(2.5).unwrap();
+        assert_eq!(to_f32(&l).unwrap(), 2.5);
+        let s = u32_scalar(7).unwrap();
+        assert_eq!(s.element_count(), 1);
+    }
+}

@@ -1,0 +1,98 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `compile` -> `execute`. HLO *text*
+//! is the interchange format — jax >= 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Python never runs here: artifacts are produced once by
+//! `make artifacts` and the coordinator is self-contained afterwards.
+
+pub mod artifact;
+pub mod lit;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// A compiled executable plus bookkeeping.
+pub struct Exec {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub compile_ms: f64,
+}
+
+// SAFETY: the PJRT CPU client is thread-safe for compilation and
+// execution (PJRT API contract); the wrapper types are `!Send` only
+// because they hold raw pointers. The coordinator still funnels all
+// executions through a single device thread (see coordinator::device),
+// matching the "one accelerator, one queue" architecture.
+unsafe impl Send for Exec {}
+
+impl Exec {
+    /// Execute and flatten the (always 1-level) output tuple.
+    pub fn run(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        // Artifacts are lowered with return_tuple=True.
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// PJRT engine: client + executable cache keyed by artifact path.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Exec>>>,
+}
+
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached per path).
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<Exec>> {
+        if let Some(e) = self.cache.lock().unwrap().get(path) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let name = path
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let exec = std::sync::Arc::new(Exec {
+            exe,
+            name,
+            compile_ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), exec.clone());
+        Ok(exec)
+    }
+}

