@@ -1,0 +1,189 @@
+//! Precision control plane demo: an SLO-driven autotuner stepping
+//! precision down under a synthetic load ramp and back up when it
+//! subsides, with admission control as the last line of defense.
+//!
+//! No artifacts are required: the coordinator serves a *synthetic*
+//! model bundle (forwards return empty logits), but batching, queueing,
+//! the analog cost model and the simulated device time (redundancy-plan
+//! cycles x cycle_ns) are all real — which is exactly what the control
+//! plane acts on. Watch the precision scale, the noise-bits proxy, the
+//! energy/MAC ledger and the p95 latency respond to load.
+//!
+//! Run: `cargo run --release --example serve_autotune`
+//! (set DYNAPREC_CONTROL_LOG=1 to trace every controller decision)
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
+use dynaprec::control::{
+    bits_drop, AdmissionConfig, AutotunerConfig, ControlConfig,
+    GovernorConfig,
+};
+use dynaprec::coordinator::scheduler::ModelPrecision;
+use dynaprec::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, EnergyPolicy,
+    PrecisionScheduler,
+};
+use dynaprec::data::Features;
+use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+
+const MODEL: &str = "synth_resnet";
+
+fn phase(
+    coord: &Coordinator,
+    name: &str,
+    rate_per_s: f64,
+    dur: Duration,
+    macs_before: f64,
+    energy_before: f64,
+) -> (f64, f64) {
+    let gap = Duration::from_secs_f64(1.0 / rate_per_s);
+    let t0 = Instant::now();
+    let mut sent = 0u64;
+    while t0.elapsed() < dur {
+        drop(coord.submit(MODEL, Features::F32(vec![0.0; 4])));
+        sent += 1;
+        // Open-loop arrivals: pace to the offered rate, not to service.
+        let target = gap.mul_f64(sent as f64);
+        if let Some(sleep) = target.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+    }
+    // Let in-flight work and the controller settle before reading.
+    std::thread::sleep(Duration::from_millis(300));
+    let s = coord.stats();
+    let scale = s.scales[MODEL];
+    let d_macs = s.ledger.total_macs - macs_before;
+    let d_energy = s.ledger.total_energy - energy_before;
+    let e_per_mac = if d_macs > 0.0 { d_energy / d_macs } else { 0.0 };
+    println!(
+        "{name:<22} offered={rate_per_s:>6.0}/s  p95={:>7.1}ms  \
+         scale={scale:>5.3} (-{:.2} bits)  energy/MAC={e_per_mac:>6.2}  \
+         served={}  shed={}  queue={:.0}",
+        s.window.p95_lat_us / 1e3,
+        bits_drop(scale),
+        s.served,
+        s.shed,
+        s.window.mean_queue_depth,
+    );
+    (s.ledger.total_macs, s.ledger.total_energy)
+}
+
+fn main() -> Result<()> {
+    // Synthetic ResNet-ish profile: 3 noise sites x 4 channels, 4800
+    // MACs/sample. At the learned per-layer energies [12, 20, 16] a
+    // sample costs 12+20+16 = 48 device cycles (Time averaging: K = E)
+    // and 76.8k energy units.
+    let meta = ModelMeta::synthetic(MODEL, 16, 3, 4, 36, 400.0);
+    let learned = EnergyPolicy::PerLayer(vec![12.0, 20.0, 16.0]);
+    let avg_e = learned.avg_energy(&meta)?;
+    println!(
+        "model {MODEL}: {} noise sites, {:.0} MACs/sample, learned \
+         policy at {avg_e:.2} units/MAC",
+        meta.noise_sites().count(),
+        meta.total_macs
+    );
+
+    let mut sched = PrecisionScheduler::new();
+    sched.set(
+        MODEL,
+        ModelPrecision { noise: "shot".into(), policy: learned },
+    );
+
+    // 48 cycles/sample at 4us/cycle = 192us of device time per sample at
+    // full precision: ~5.2k samples/s capacity, ~21k/s at the 0.25
+    // floor. SLO: p95 under 25ms.
+    let slo_us = 25_000.0;
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: 16,
+            max_wait: Duration::from_millis(5),
+        },
+        hw: HardwareConfig {
+            array_rows: 256,
+            array_cols: 256,
+            cycle_ns: 4000.0,
+            base_energy_aj: 1.0,
+            model: DeviceModel::Homodyne,
+        },
+        averaging: AveragingMode::Time,
+        seed: 0,
+        control: ControlConfig {
+            enabled: true,
+            tick: Duration::from_millis(10),
+            telemetry_capacity: 1024,
+            window: 48,
+            max_sample_age: Duration::from_millis(1000),
+            autotuner: AutotunerConfig {
+                slo_p95_us: slo_us,
+                floor_scale: 0.25, // at most 1 noise-bit of degradation
+                step_down: 0.6,
+                step_up: 1.2,
+                headroom: 0.5,
+                cooldown_ticks: 1,
+                min_batches: 3,
+            },
+            governor: GovernorConfig::default(),
+            admission: AdmissionConfig {
+                queue_soft_limit: 2000,
+                queue_hard_limit: 50_000,
+            },
+        },
+        simulate_device_time: true,
+    };
+    let coord = Coordinator::start(
+        vec![ModelBundle::synthetic(meta)],
+        sched,
+        cfg,
+    )?;
+
+    println!(
+        "\nSLO: p95 < {:.0}ms; precision floor 0.25 (= -1.0 bits); \
+         admission sheds only at the floor\n",
+        slo_us / 1e3
+    );
+    let (m1, e1) = phase(
+        &coord,
+        "warmup (light)",
+        800.0,
+        Duration::from_millis(1500),
+        0.0,
+        0.0,
+    );
+    let (m2, e2) = phase(
+        &coord,
+        "ramp (overload)",
+        30_000.0,
+        Duration::from_millis(2500),
+        m1,
+        e1,
+    );
+    let (m3, e3) = phase(
+        &coord,
+        "sustained overload",
+        30_000.0,
+        Duration::from_millis(2000),
+        m2,
+        e2,
+    );
+    let (_m4, _e4) = phase(
+        &coord,
+        "subsided (light)",
+        800.0,
+        Duration::from_millis(2500),
+        m3,
+        e3,
+    );
+
+    let stats = coord.shutdown();
+    println!("\nfinal state:\n{}", stats.report());
+    println!(
+        "expected: scale ~1.0 when light; pinned at the 0.25 floor under \
+         overload (energy/MAC down ~4x, throughput up ~4x); 30k/s \
+         exceeds even floor capacity (~21k/s), so once the queue passes \
+         the soft limit the gate sheds the excess — precision degrades \
+         first, rejection is last; scale climbs back once load subsides."
+    );
+    Ok(())
+}

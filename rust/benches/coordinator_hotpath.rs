@@ -46,14 +46,14 @@ fn main() {
     let pl: Vec<f64> = (0..m.noise_sites().count()).map(|i| 1.0 + i as f64).collect();
     let pol = EnergyPolicy::PerLayer(pl);
     let r = bench("policy_e_vector_912ch", || {
-        let e = pol.e_vector(&m);
+        let e = pol.e_vector(&m).unwrap();
         std::hint::black_box(e);
     });
     r.report();
 
     // Redundancy planning for the whole model.
     let hw = HardwareConfig::homodyne();
-    let e = pol.e_vector(&m);
+    let e = pol.e_vector(&m).unwrap();
     let r = bench("redundancy_plan_model", || {
         let mut tot = 0.0;
         for (_, s) in m.noise_sites() {

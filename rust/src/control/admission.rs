@@ -1,0 +1,167 @@
+//! Queue-depth-aware admission control: under overload the control
+//! plane degrades precision *first* and rejects *last*. A request is
+//! shed only when (a) the queue is past its soft limit AND precision has
+//! already hit its floor (nothing left to trade), or (b) the queue is
+//! past the hard backstop regardless of precision.
+//!
+//! The gate lives on the router path, so it is all relaxed atomics —
+//! no locks, no allocation, nanoseconds per decision.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// Shed beyond this queue depth once precision is at its floor.
+    pub queue_soft_limit: usize,
+    /// Absolute backstop: shed beyond this depth no matter what.
+    pub queue_hard_limit: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { queue_soft_limit: 256, queue_hard_limit: 4096 }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Admit,
+    Shed,
+}
+
+/// Per-model admission gate shared between the router (submit path),
+/// the device loop (completion path) and the control thread (which
+/// publishes the current precision scale and floor).
+pub struct AdmissionGate {
+    cfg: AdmissionConfig,
+    /// In-flight requests: admitted but not yet responded to.
+    depth: AtomicUsize,
+    /// Current precision scale, stored as f64 bits.
+    scale_bits: AtomicU64,
+    /// Precision floor, stored as f64 bits.
+    floor_bits: AtomicU64,
+    shed: AtomicU64,
+}
+
+impl AdmissionGate {
+    pub fn new(cfg: AdmissionConfig, floor: f64) -> Self {
+        AdmissionGate {
+            cfg,
+            depth: AtomicUsize::new(0),
+            scale_bits: AtomicU64::new(1.0f64.to_bits()),
+            floor_bits: AtomicU64::new(floor.to_bits()),
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn scale(&self) -> f64 {
+        f64::from_bits(self.scale_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn set_scale(&self, scale: f64) {
+        self.scale_bits.store(scale.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn floor(&self) -> f64 {
+        f64::from_bits(self.floor_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn at_floor(&self) -> bool {
+        self.scale() <= self.floor() * (1.0 + 1e-9)
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Router-side decision. With `gated` false (control plane
+    /// disabled) every request is admitted; depth is still tracked for
+    /// telemetry.
+    pub fn on_submit(&self, gated: bool) -> Verdict {
+        if gated {
+            let d = self.depth.load(Ordering::Relaxed);
+            if d >= self.cfg.queue_hard_limit
+                || (d >= self.cfg.queue_soft_limit && self.at_floor())
+            {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                return Verdict::Shed;
+            }
+        }
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        Verdict::Admit
+    }
+
+    /// Device-side completion of `n` admitted requests.
+    pub fn on_complete(&self, n: usize) {
+        self.depth.fetch_sub(n, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gate(soft: usize, hard: usize, floor: f64) -> AdmissionGate {
+        AdmissionGate::new(
+            AdmissionConfig { queue_soft_limit: soft, queue_hard_limit: hard },
+            floor,
+        )
+    }
+
+    #[test]
+    fn admits_below_limits() {
+        let g = gate(2, 10, 0.25);
+        assert_eq!(g.on_submit(true), Verdict::Admit);
+        assert_eq!(g.on_submit(true), Verdict::Admit);
+        assert_eq!(g.depth(), 2);
+        assert_eq!(g.shed_total(), 0);
+    }
+
+    #[test]
+    fn soft_limit_sheds_only_at_floor() {
+        let g = gate(2, 1000, 0.25);
+        g.on_submit(true);
+        g.on_submit(true);
+        // Past soft limit but precision still has room: admit.
+        assert_eq!(g.on_submit(true), Verdict::Admit);
+        // Precision hits the floor: now the soft limit sheds.
+        g.set_scale(0.25);
+        assert!(g.at_floor());
+        assert_eq!(g.on_submit(true), Verdict::Shed);
+        assert_eq!(g.shed_total(), 1);
+        // Shed requests do not occupy queue depth.
+        assert_eq!(g.depth(), 3);
+    }
+
+    #[test]
+    fn hard_limit_sheds_regardless_of_precision() {
+        let g = gate(2, 4, 0.25);
+        for _ in 0..4 {
+            assert_eq!(g.on_submit(true), Verdict::Admit);
+        }
+        assert_eq!(g.scale(), 1.0); // nowhere near the floor
+        assert_eq!(g.on_submit(true), Verdict::Shed);
+    }
+
+    #[test]
+    fn completion_reopens_the_gate() {
+        let g = gate(1, 2, 1.0); // floor 1.0: always at floor
+        assert_eq!(g.on_submit(true), Verdict::Admit);
+        assert_eq!(g.on_submit(true), Verdict::Shed);
+        g.on_complete(1);
+        assert_eq!(g.depth(), 0);
+        assert_eq!(g.on_submit(true), Verdict::Admit);
+    }
+
+    #[test]
+    fn ungated_always_admits_but_tracks_depth() {
+        let g = gate(0, 0, 1.0);
+        assert_eq!(g.on_submit(false), Verdict::Admit);
+        assert_eq!(g.depth(), 1);
+        assert_eq!(g.shed_total(), 0);
+    }
+}

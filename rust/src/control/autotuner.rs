@@ -1,0 +1,195 @@
+//! Hill-climbing SLO controller: trades precision for throughput under
+//! load pressure and climbs back once it subsides.
+//!
+//! The knob is a single scale factor in `[floor_scale, 1.0]` applied
+//! uniformly over the model's learned per-layer/per-channel energy
+//! vectors. The accuracy proxy is the paper's noise-bits relation
+//! (Eq. 7-8): scaling all channel energies by `s` shifts every site's
+//! noise-equivalent precision by `0.5 * log2(s)` bits, so a floor on
+//! the scale is a bound on precision degradation. `floor_for_bits_drop`
+//! converts a "lose at most b bits" budget into the floor.
+
+use super::telemetry::WindowStats;
+
+#[derive(Clone, Debug)]
+pub struct AutotunerConfig {
+    /// Target p95 latency (microseconds) for enqueue->response.
+    pub slo_p95_us: f64,
+    /// Lowest admissible scale (accuracy-proxy degradation bound).
+    pub floor_scale: f64,
+    /// Multiplicative step when over SLO, in (0, 1).
+    pub step_down: f64,
+    /// Multiplicative step when comfortably under SLO, > 1.
+    pub step_up: f64,
+    /// Step up only when p95 < headroom * SLO (hysteresis), in (0, 1).
+    pub headroom: f64,
+    /// Ticks to hold after a change so the window refreshes before the
+    /// next decision.
+    pub cooldown_ticks: u32,
+    /// Minimum batches in the window before acting.
+    pub min_batches: usize,
+}
+
+impl Default for AutotunerConfig {
+    fn default() -> Self {
+        AutotunerConfig {
+            slo_p95_us: 50_000.0,
+            floor_scale: floor_for_bits_drop(1.5),
+            step_down: 0.7,
+            step_up: 1.15,
+            headroom: 0.5,
+            cooldown_ticks: 2,
+            min_batches: 4,
+        }
+    }
+}
+
+/// Precision lost (in noise-equivalent bits, per Eq. 7-8) when every
+/// channel energy is scaled by `scale` <= 1.
+pub fn bits_drop(scale: f64) -> f64 {
+    -0.5 * scale.log2()
+}
+
+/// The scale floor implied by a "lose at most `max_drop` bits" bound:
+/// energy scales 4x per bit, so floor = 4^-max_drop.
+pub fn floor_for_bits_drop(max_drop: f64) -> f64 {
+    0.25f64.powf(max_drop)
+}
+
+pub struct Autotuner {
+    cfg: AutotunerConfig,
+    scale: f64,
+    cooldown: u32,
+}
+
+impl Autotuner {
+    pub fn new(cfg: AutotunerConfig) -> Self {
+        Autotuner { cfg, scale: 1.0, cooldown: 0 }
+    }
+
+    pub fn cfg(&self) -> &AutotunerConfig {
+        &self.cfg
+    }
+
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Adopt an externally decided scale (e.g. after the governor
+    /// tightened it further) so subsequent climbing starts from there.
+    pub fn set_scale(&mut self, scale: f64) {
+        self.scale = scale.clamp(self.cfg.floor_scale, 1.0);
+    }
+
+    pub fn at_floor(&self) -> bool {
+        self.scale <= self.cfg.floor_scale * (1.0 + 1e-9)
+    }
+
+    /// One control tick: returns the (possibly updated) scale.
+    pub fn step(&mut self, w: &WindowStats) -> f64 {
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return self.scale;
+        }
+        if w.batches < self.cfg.min_batches {
+            return self.scale;
+        }
+        if w.p95_lat_us > self.cfg.slo_p95_us {
+            let next =
+                (self.scale * self.cfg.step_down).max(self.cfg.floor_scale);
+            if next < self.scale {
+                self.scale = next;
+                self.cooldown = self.cfg.cooldown_ticks;
+            }
+        } else if w.p95_lat_us < self.cfg.headroom * self.cfg.slo_p95_us
+            && self.scale < 1.0
+        {
+            self.scale = (self.scale * self.cfg.step_up).min(1.0);
+            self.cooldown = self.cfg.cooldown_ticks;
+        }
+        self.scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window(p95: f64, batches: usize) -> WindowStats {
+        WindowStats { batches, p95_lat_us: p95, ..Default::default() }
+    }
+
+    fn tuner() -> Autotuner {
+        Autotuner::new(AutotunerConfig {
+            slo_p95_us: 10_000.0,
+            floor_scale: 0.25,
+            step_down: 0.5,
+            step_up: 2.0,
+            headroom: 0.5,
+            cooldown_ticks: 0,
+            min_batches: 2,
+        })
+    }
+
+    #[test]
+    fn bits_math_roundtrips() {
+        assert!((bits_drop(0.25) - 1.0).abs() < 1e-12);
+        assert!((floor_for_bits_drop(1.0) - 0.25).abs() < 1e-12);
+        assert!((bits_drop(floor_for_bits_drop(1.5)) - 1.5).abs() < 1e-12);
+        assert_eq!(bits_drop(1.0), 0.0);
+    }
+
+    #[test]
+    fn steps_down_under_pressure_until_floor() {
+        let mut t = tuner();
+        assert_eq!(t.step(&window(20_000.0, 8)), 0.5);
+        assert_eq!(t.step(&window(20_000.0, 8)), 0.25);
+        // At the floor: stays, reports at_floor.
+        assert_eq!(t.step(&window(20_000.0, 8)), 0.25);
+        assert!(t.at_floor());
+    }
+
+    #[test]
+    fn climbs_back_with_headroom_only() {
+        let mut t = tuner();
+        t.set_scale(0.25);
+        // p95 between headroom*SLO and SLO: hold.
+        assert_eq!(t.step(&window(7_000.0, 8)), 0.25);
+        // Comfortably under: climb, capped at 1.0.
+        assert_eq!(t.step(&window(2_000.0, 8)), 0.5);
+        assert_eq!(t.step(&window(2_000.0, 8)), 1.0);
+        assert_eq!(t.step(&window(2_000.0, 8)), 1.0);
+    }
+
+    #[test]
+    fn cooldown_defers_decisions() {
+        let mut t = Autotuner::new(AutotunerConfig {
+            cooldown_ticks: 2,
+            min_batches: 1,
+            slo_p95_us: 10_000.0,
+            floor_scale: 0.1,
+            step_down: 0.5,
+            step_up: 2.0,
+            headroom: 0.5,
+        });
+        assert_eq!(t.step(&window(20_000.0, 4)), 0.5); // acts, arms cooldown
+        assert_eq!(t.step(&window(20_000.0, 4)), 0.5); // cooling
+        assert_eq!(t.step(&window(20_000.0, 4)), 0.5); // cooling
+        assert_eq!(t.step(&window(20_000.0, 4)), 0.25); // acts again
+    }
+
+    #[test]
+    fn thin_window_holds() {
+        let mut t = tuner();
+        assert_eq!(t.step(&window(1e9, 1)), 1.0);
+    }
+
+    #[test]
+    fn set_scale_clamps_to_bounds() {
+        let mut t = tuner();
+        t.set_scale(0.01);
+        assert_eq!(t.scale(), 0.25);
+        t.set_scale(3.0);
+        assert_eq!(t.scale(), 1.0);
+    }
+}

@@ -1,0 +1,238 @@
+//! Energy-budget governor: keeps a model's analog energy spend under a
+//! configured budget (base units per second and/or per request) by
+//! proposing a uniform scale factor over the model's learned energy
+//! policy. Cost is *predicted* with `redundancy::plan_layer` before a
+//! scale is committed, so the governor never has to observe an
+//! over-budget batch to correct for quantized redundancy (K is rounded
+//! up to whole repetitions, which inflates realized cost above the
+//! continuous request).
+//!
+//! For the shot-noise-limited homodyne device the base unit is the
+//! attojoule, so `budget_aj_per_s` literally is an aJ/s power budget
+//! (paper Sec. IV).
+
+use anyhow::Result;
+
+use super::telemetry::WindowStats;
+use crate::analog::{plan_layer, AveragingMode, HardwareConfig};
+use crate::coordinator::scheduler::EnergyPolicy;
+use crate::runtime::artifact::ModelMeta;
+
+#[derive(Clone, Debug)]
+pub struct GovernorConfig {
+    /// Energy budget in base units (aJ for homodyne) per second.
+    pub budget_aj_per_s: Option<f64>,
+    /// Energy budget in base units per served request.
+    pub budget_aj_per_req: Option<f64>,
+    /// Largest relative scale change per control tick, in (0, 1); the
+    /// proposed scale stays within [cur*max_step, cur/max_step].
+    pub max_step: f64,
+    /// Dead band around the budget (relative) inside which the governor
+    /// holds the current scale.
+    pub slack: f64,
+    /// Minimum batches in the window before the governor acts.
+    pub min_batches: usize,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        GovernorConfig {
+            budget_aj_per_s: None,
+            budget_aj_per_req: None,
+            max_step: 0.5,
+            slack: 0.05,
+            min_batches: 2,
+        }
+    }
+}
+
+pub struct EnergyGovernor {
+    pub cfg: GovernorConfig,
+}
+
+impl EnergyGovernor {
+    pub fn new(cfg: GovernorConfig) -> Self {
+        EnergyGovernor { cfg }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.budget_aj_per_s.is_some()
+            || self.cfg.budget_aj_per_req.is_some()
+    }
+
+    /// Worst overspend ratio across the configured budgets (>1 = over).
+    fn overspend(&self, w: &WindowStats) -> f64 {
+        let mut over: f64 = 0.0;
+        if let Some(b) = self.cfg.budget_aj_per_s {
+            if w.energy_rate > 0.0 && b > 0.0 {
+                over = over.max(w.energy_rate / b);
+            }
+        }
+        if let Some(b) = self.cfg.budget_aj_per_req {
+            if w.energy_per_req > 0.0 && b > 0.0 {
+                over = over.max(w.energy_per_req / b);
+            }
+        }
+        over
+    }
+
+    /// Propose a scale from the observed window. The observed spend was
+    /// produced at `cur_scale`, and energy is linear in the scale, so
+    /// dividing by the overspend ratio lands on the budget; the move is
+    /// clamped to `max_step` per tick and the dead band suppresses
+    /// oscillation around the budget.
+    pub fn propose(&self, w: &WindowStats, cur_scale: f64) -> f64 {
+        if !self.enabled() || w.batches < self.cfg.min_batches {
+            return cur_scale;
+        }
+        let over = self.overspend(w);
+        if over <= 0.0 {
+            return cur_scale;
+        }
+        let in_band =
+            over <= 1.0 + self.cfg.slack && over >= 1.0 - self.cfg.slack;
+        if in_band {
+            return cur_scale;
+        }
+        let target = cur_scale / over;
+        target.clamp(
+            cur_scale * self.cfg.max_step,
+            cur_scale / self.cfg.max_step,
+        )
+    }
+
+    /// Predicted (energy, cycles) per sample for a policy, from the
+    /// quantized redundancy plan — the realizable schedule, which upper-
+    /// bounds the continuous-K cost the ledger charges.
+    pub fn predict(
+        meta: &ModelMeta,
+        hw: &HardwareConfig,
+        mode: AveragingMode,
+        policy: &EnergyPolicy,
+    ) -> Result<(f64, f64)> {
+        let e = policy.e_vector(meta)?;
+        let mut energy = 0.0;
+        let mut cycles = 0.0;
+        for (_, site) in meta.noise_sites() {
+            let es: Vec<f64> = e[site.e_offset..site.e_offset + site.n_channels]
+                .iter()
+                .map(|&v| v as f64)
+                .collect();
+            let plan =
+                plan_layer(hw, mode, &es, site.n_dot, site.macs_per_channel, true);
+            energy += plan.energy;
+            cycles += plan.cycles;
+        }
+        Ok((energy, cycles))
+    }
+
+    /// Refine `scale` downward until the *predicted* quantized cost of
+    /// `base.scaled(scale)` fits the per-request budget (bounded
+    /// iterations; quantization makes cost piecewise in the scale).
+    pub fn fit_to_request_budget(
+        &self,
+        meta: &ModelMeta,
+        hw: &HardwareConfig,
+        mode: AveragingMode,
+        base: &EnergyPolicy,
+        mut scale: f64,
+        floor: f64,
+    ) -> f64 {
+        let Some(budget) = self.cfg.budget_aj_per_req else {
+            return scale;
+        };
+        for _ in 0..4 {
+            if scale <= floor {
+                return floor;
+            }
+            let Ok((energy, _)) =
+                Self::predict(meta, hw, mode, &base.scaled(scale))
+            else {
+                return scale;
+            };
+            if energy <= budget * (1.0 + self.cfg.slack) {
+                break;
+            }
+            scale = (scale * (budget / energy)).max(floor);
+        }
+        scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::telemetry::WindowStats;
+
+    fn window(rate: f64, per_req: f64) -> WindowStats {
+        WindowStats {
+            batches: 8,
+            served: 80,
+            energy_rate: rate,
+            energy_per_req: per_req,
+            ..Default::default()
+        }
+    }
+
+    fn gov(per_s: Option<f64>, per_req: Option<f64>) -> EnergyGovernor {
+        EnergyGovernor::new(GovernorConfig {
+            budget_aj_per_s: per_s,
+            budget_aj_per_req: per_req,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn disabled_governor_holds_scale() {
+        let g = gov(None, None);
+        assert!(!g.enabled());
+        assert_eq!(g.propose(&window(1e12, 1e6), 0.7), 0.7);
+    }
+
+    #[test]
+    fn overspend_scales_down_proportionally() {
+        let g = gov(Some(1000.0), None);
+        // Spending 2000/s at scale 1.0 -> propose 0.5.
+        let s = g.propose(&window(2000.0, 0.0), 1.0);
+        assert!((s - 0.5).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn max_step_limits_the_move() {
+        let g = gov(Some(1000.0), None);
+        // 10x over budget, but a tick can at most halve (max_step 0.5).
+        let s = g.propose(&window(10_000.0, 0.0), 1.0);
+        assert!((s - 0.5).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn underspend_relaxes_within_step_limit() {
+        let g = gov(Some(1000.0), None);
+        // Spending 250/s at scale 0.2 -> budget allows 0.8, step caps 0.4.
+        let s = g.propose(&window(250.0, 0.0), 0.2);
+        assert!((s - 0.4).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn dead_band_holds() {
+        let g = gov(Some(1000.0), None);
+        let s = g.propose(&window(1030.0, 0.0), 0.9);
+        assert_eq!(s, 0.9);
+    }
+
+    #[test]
+    fn per_request_budget_uses_worst_ratio() {
+        let g = gov(Some(1000.0), Some(10.0));
+        // Rate fine (1x) but 20 units/req = 2x over -> halve.
+        let s = g.propose(&window(1000.0, 20.0), 1.0);
+        assert!((s - 0.5).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn too_few_batches_holds() {
+        let g = gov(Some(1000.0), None);
+        let mut w = window(9000.0, 0.0);
+        w.batches = 1;
+        assert_eq!(g.propose(&w, 1.0), 1.0);
+    }
+}

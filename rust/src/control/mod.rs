@@ -1,0 +1,257 @@
+//! Precision control plane: closes the loop from observed serving
+//! telemetry back into the `PrecisionScheduler`, making the paper's
+//! precision <-> energy/throughput tradeoff (Sec. IV, Table II) a
+//! runtime-programmable property of the serving stack instead of a
+//! static table.
+//!
+//!   device loop --publishes--> TelemetryRing (per model, lock-light)
+//!                                   |
+//!                         control thread (this module)
+//!                    Autotuner (SLO)  +  EnergyGovernor (budget)
+//!                                   |
+//!            PrecisionScheduler <--hot-swap scaled policy
+//!            AdmissionGate      <--publish scale/floor
+//!                                   |
+//!   router --consults gate--> degrade precision first, shed last
+//!
+//! The controller owns the *base* (learned) policies captured at
+//! startup; every decision is a uniform scale in `[floor, 1]` over the
+//! base energy vectors, predicted with `redundancy::plan_layer` before
+//! being committed.
+
+pub mod admission;
+pub mod autotuner;
+pub mod governor;
+pub mod telemetry;
+
+pub use admission::{AdmissionConfig, AdmissionGate, Verdict};
+pub use autotuner::{
+    bits_drop, floor_for_bits_drop, Autotuner, AutotunerConfig,
+};
+pub use governor::{EnergyGovernor, GovernorConfig};
+pub use telemetry::{window_stats, BatchSample, TelemetryRing, WindowStats};
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::analog::{AveragingMode, HardwareConfig};
+use crate::coordinator::scheduler::{ModelPrecision, PrecisionScheduler};
+use crate::runtime::artifact::ModelMeta;
+
+#[derive(Clone, Debug)]
+pub struct ControlConfig {
+    /// Master switch; when false the coordinator behaves like the
+    /// pre-control-plane stack (telemetry is still recorded).
+    pub enabled: bool,
+    /// Control loop period.
+    pub tick: Duration,
+    /// Per-model telemetry ring capacity (batches).
+    pub telemetry_capacity: usize,
+    /// Batches considered per decision window.
+    pub window: usize,
+    /// Ignore samples older than this when deciding.
+    pub max_sample_age: Duration,
+    pub autotuner: AutotunerConfig,
+    pub governor: GovernorConfig,
+    pub admission: AdmissionConfig,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            enabled: false,
+            tick: Duration::from_millis(20),
+            telemetry_capacity: 1024,
+            window: 64,
+            max_sample_age: Duration::from_secs(2),
+            autotuner: AutotunerConfig::default(),
+            governor: GovernorConfig::default(),
+            admission: AdmissionConfig::default(),
+        }
+    }
+}
+
+impl ControlConfig {
+    /// Enabled control plane targeting a p95 latency SLO (microseconds).
+    pub fn with_slo_p95_us(slo_p95_us: f64) -> Self {
+        ControlConfig {
+            enabled: true,
+            autotuner: AutotunerConfig { slo_p95_us, ..Default::default() },
+            ..Default::default()
+        }
+    }
+}
+
+/// Per-model shared state between router, device loop and controller.
+pub struct ModelControl {
+    pub ring: Arc<TelemetryRing>,
+    pub gate: Arc<AdmissionGate>,
+}
+
+/// All models' control state; built once at coordinator startup.
+pub struct ControlShared {
+    pub models: BTreeMap<String, Arc<ModelControl>>,
+}
+
+impl ControlShared {
+    pub fn new<'a, I: IntoIterator<Item = &'a String>>(
+        model_names: I,
+        cfg: &ControlConfig,
+    ) -> Arc<ControlShared> {
+        let epoch = Instant::now();
+        let models = model_names
+            .into_iter()
+            .map(|name| {
+                (
+                    name.clone(),
+                    Arc::new(ModelControl {
+                        ring: Arc::new(TelemetryRing::with_epoch(
+                            cfg.telemetry_capacity,
+                            epoch,
+                        )),
+                        gate: Arc::new(AdmissionGate::new(
+                            cfg.admission.clone(),
+                            cfg.autotuner.floor_scale,
+                        )),
+                    }),
+                )
+            })
+            .collect();
+        Arc::new(ControlShared { models })
+    }
+
+    pub fn get(&self, model: &str) -> Option<&Arc<ModelControl>> {
+        self.models.get(model)
+    }
+}
+
+/// Everything the control thread needs that is immutable after startup.
+pub struct ControllerCtx {
+    pub metas: BTreeMap<String, ModelMeta>,
+    /// Base (learned) policies snapshotted from the scheduler at start;
+    /// decisions scale these, never the previously scaled table entry.
+    pub base: BTreeMap<String, ModelPrecision>,
+    pub hw: HardwareConfig,
+    pub averaging: AveragingMode,
+}
+
+/// The control thread body: consume telemetry, decide a scale per model
+/// (autotuner for the SLO, governor for the energy budget, the tighter
+/// one wins), predict cost, and hot-swap scaled policies through the
+/// scheduler between batches.
+pub fn control_loop(
+    cfg: ControlConfig,
+    ctx: ControllerCtx,
+    shared: Arc<ControlShared>,
+    scheduler: Arc<RwLock<PrecisionScheduler>>,
+    stop: Arc<AtomicBool>,
+) {
+    let verbose = std::env::var("DYNAPREC_CONTROL_LOG")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    let governor = EnergyGovernor::new(cfg.governor.clone());
+    let floor = cfg.autotuner.floor_scale;
+    let mut tuners: BTreeMap<String, Autotuner> = shared
+        .models
+        .keys()
+        .map(|m| (m.clone(), Autotuner::new(cfg.autotuner.clone())))
+        .collect();
+    let max_age_us = cfg.max_sample_age.as_micros() as u64;
+
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(cfg.tick);
+        for (model, mc) in &shared.models {
+            let (Some(base), Some(meta)) =
+                (ctx.base.get(model), ctx.metas.get(model))
+            else {
+                // No base policy (model serves clean fp): there is no
+                // precision to trade, so mark the gate "at floor" —
+                // otherwise the soft queue limit could never fire and
+                // the model would be protected only by the hard cap.
+                mc.gate.set_scale(mc.gate.floor());
+                continue;
+            };
+            let tuner = tuners.get_mut(model).expect("tuner per model");
+
+            let now = mc.ring.now_us();
+            let samples: Vec<BatchSample> = mc
+                .ring
+                .snapshot(cfg.window)
+                .into_iter()
+                .filter(|s| now.saturating_sub(s.t_us) <= max_age_us)
+                .collect();
+            let w = window_stats(&samples);
+
+            let committed = mc.gate.scale();
+            let mut scale = tuner.step(&w);
+            if governor.enabled() {
+                scale = scale.min(governor.propose(&w, committed).min(1.0));
+                scale = governor.fit_to_request_budget(
+                    meta,
+                    &ctx.hw,
+                    ctx.averaging,
+                    &base.policy,
+                    scale,
+                    floor,
+                );
+            }
+            let scale = scale.clamp(floor, 1.0);
+            tuner.set_scale(scale);
+
+            if (scale - committed).abs() > 1e-12 {
+                let policy = base.policy.scaled(scale);
+                // Commit only a policy that materializes: a bad client
+                // policy degrades to "hold", never a dead device thread.
+                if policy.e_vector(meta).is_ok() {
+                    scheduler.write().unwrap().set(
+                        model,
+                        ModelPrecision {
+                            noise: base.noise.clone(),
+                            policy,
+                        },
+                    );
+                    mc.gate.set_scale(scale);
+                    if verbose {
+                        eprintln!(
+                            "control[{model}]: scale {committed:.3} -> \
+                             {scale:.3} (p95 {:.0}us, {} batches, \
+                             queue {:.0}, {:.3e} units/s)",
+                            w.p95_lat_us,
+                            w.batches,
+                            w.mean_queue_depth,
+                            w.energy_rate
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_state_per_model() {
+        let names = vec!["a".to_string(), "b".to_string()];
+        let shared = ControlShared::new(&names, &ControlConfig::default());
+        assert_eq!(shared.models.len(), 2);
+        assert!(shared.get("a").is_some());
+        assert!(shared.get("c").is_none());
+        // Rings share an epoch: timestamps are comparable across models.
+        let ta = shared.get("a").unwrap().ring.now_us();
+        let tb = shared.get("b").unwrap().ring.now_us();
+        assert!(ta.abs_diff(tb) < 1_000_000);
+    }
+
+    #[test]
+    fn default_config_is_disabled() {
+        assert!(!ControlConfig::default().enabled);
+        let c = ControlConfig::with_slo_p95_us(5_000.0);
+        assert!(c.enabled);
+        assert_eq!(c.autotuner.slo_p95_us, 5_000.0);
+    }
+}

@@ -1,0 +1,386 @@
+//! Lock-light serving telemetry: a fixed-capacity seqlock ring of
+//! per-batch samples, written by the device thread and read by the
+//! control thread (and `Coordinator::stats`) without ever blocking the
+//! writer.
+//!
+//! Every field of a [`BatchSample`] is packed into `AtomicU64` words and
+//! published under a per-slot version counter (odd = write in progress).
+//! Readers retry a bounded number of times on a version change; a slot
+//! that keeps changing is simply skipped — this is monitoring data, and
+//! the freshest overwrite is at least as useful as the one it replaced.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// One dispatched batch, as observed by the device loop.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BatchSample {
+    /// Microseconds since the ring's epoch (shared across models).
+    pub t_us: u64,
+    /// Real (non-padding) samples in the batch.
+    pub served: u32,
+    /// Router queue depth right after this batch completed.
+    pub queue_depth: u32,
+    /// served / artifact batch size.
+    pub occupancy: f32,
+    /// Execute time (incl. simulated device time), microseconds.
+    pub exec_us: f32,
+    /// Mean enqueue->response latency over the batch, microseconds.
+    pub lat_mean_us: f32,
+    /// Max enqueue->response latency over the batch, microseconds.
+    pub lat_max_us: f32,
+    /// Total simulated analog energy charged to the batch (base units).
+    pub energy: f64,
+}
+
+const WORDS: usize = 5;
+
+fn pack(s: &BatchSample) -> [u64; WORDS] {
+    [
+        s.t_us,
+        ((s.served as u64) << 32) | s.queue_depth as u64,
+        ((s.occupancy.to_bits() as u64) << 32) | s.exec_us.to_bits() as u64,
+        ((s.lat_mean_us.to_bits() as u64) << 32)
+            | s.lat_max_us.to_bits() as u64,
+        s.energy.to_bits(),
+    ]
+}
+
+fn unpack(w: &[u64; WORDS]) -> BatchSample {
+    BatchSample {
+        t_us: w[0],
+        served: (w[1] >> 32) as u32,
+        queue_depth: w[1] as u32,
+        occupancy: f32::from_bits((w[2] >> 32) as u32),
+        exec_us: f32::from_bits(w[2] as u32),
+        lat_mean_us: f32::from_bits((w[3] >> 32) as u32),
+        lat_max_us: f32::from_bits(w[3] as u32),
+        energy: f64::from_bits(w[4]),
+    }
+}
+
+struct Slot {
+    /// Even = stable, odd = write in progress.
+    version: AtomicU64,
+    words: [AtomicU64; WORDS],
+}
+
+/// Single-writer, multi-reader telemetry ring.
+pub struct TelemetryRing {
+    epoch: Instant,
+    cap: usize,
+    /// Total pushes ever (head % cap is the next slot).
+    head: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl TelemetryRing {
+    pub fn new(cap: usize) -> TelemetryRing {
+        Self::with_epoch(cap, Instant::now())
+    }
+
+    /// Share `epoch` across rings so `t_us` is comparable between models.
+    pub fn with_epoch(cap: usize, epoch: Instant) -> TelemetryRing {
+        let cap = cap.max(8);
+        let slots: Vec<Slot> = (0..cap)
+            .map(|_| Slot {
+                version: AtomicU64::new(0),
+                words: std::array::from_fn(|_| AtomicU64::new(0)),
+            })
+            .collect();
+        TelemetryRing {
+            epoch,
+            cap,
+            head: AtomicU64::new(0),
+            slots: slots.into_boxed_slice(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Microseconds since the ring epoch (for stamping `t_us`).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Total batches ever pushed.
+    pub fn pushed(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Publish one sample. Intended for a single writer (the device
+    /// thread); a handful of uncontended atomic stores, no allocation,
+    /// no lock — readers can never block this.
+    pub fn push(&self, s: &BatchSample) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(h % self.cap as u64) as usize];
+        let v = slot.version.load(Ordering::Relaxed);
+        slot.version.store(v.wrapping_add(1), Ordering::SeqCst); // odd
+        for (word, value) in slot.words.iter().zip(pack(s)) {
+            word.store(value, Ordering::SeqCst);
+        }
+        slot.version.store(v.wrapping_add(2), Ordering::SeqCst); // even
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    fn read_slot(&self, idx: usize) -> Option<BatchSample> {
+        let slot = &self.slots[idx];
+        for _ in 0..4 {
+            let v1 = slot.version.load(Ordering::SeqCst);
+            if v1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let mut words = [0u64; WORDS];
+            for (out, word) in words.iter_mut().zip(slot.words.iter()) {
+                *out = word.load(Ordering::SeqCst);
+            }
+            let v2 = slot.version.load(Ordering::SeqCst);
+            if v1 == v2 {
+                return Some(unpack(&words));
+            }
+        }
+        None
+    }
+
+    /// Snapshot (up to) the last `window` samples, oldest first. Slots
+    /// overwritten mid-read yield their newer contents; the result is
+    /// re-sorted by timestamp.
+    pub fn snapshot(&self, window: usize) -> Vec<BatchSample> {
+        let head = self.head.load(Ordering::Acquire);
+        let n = window.min(self.cap).min(head as usize);
+        let mut out = Vec::with_capacity(n);
+        for i in (head - n as u64)..head {
+            if let Some(s) = self.read_slot((i % self.cap as u64) as usize) {
+                out.push(s);
+            }
+        }
+        out.sort_by_key(|s| s.t_us);
+        out
+    }
+}
+
+/// Request-weighted percentile: smallest value whose cumulative request
+/// weight reaches p% of the window's served requests. Weighting by
+/// batch size keeps a few full slow batches from being drowned out by
+/// many small fast ones (and vice versa).
+fn weighted_percentile(pairs: &mut [(f64, u64)], p: f64) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let total: u64 = pairs.iter().map(|x| x.1).sum();
+    if total == 0 {
+        return pairs[pairs.len() - 1].0;
+    }
+    let target = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+    let mut cum = 0u64;
+    for (v, w) in pairs.iter() {
+        cum += w;
+        if cum >= target {
+            return *v;
+        }
+    }
+    pairs[pairs.len() - 1].0
+}
+
+/// Windowed aggregate over a snapshot of batch samples.
+///
+/// Latency percentiles are request-weighted per-batch statistics: p50
+/// over batch *mean* latencies, p95 over batch *max* latencies. Using
+/// the batch max for every request in the batch upper-bounds the true
+/// request-level p95 — the conservative direction for an SLO
+/// controller.
+#[derive(Clone, Debug, Default)]
+pub struct WindowStats {
+    pub batches: usize,
+    pub served: u64,
+    /// Window span (first to last batch), microseconds.
+    pub span_us: u64,
+    pub p50_lat_us: f64,
+    pub p95_lat_us: f64,
+    pub mean_exec_us: f64,
+    pub mean_occupancy: f64,
+    pub mean_queue_depth: f64,
+    /// Total simulated analog energy over the window (base units).
+    pub energy: f64,
+    pub energy_per_req: f64,
+    /// Energy spend rate, base units per second (0 if span too short).
+    pub energy_rate: f64,
+    /// Served requests per second over the window (0 if span too short).
+    pub req_rate: f64,
+}
+
+pub fn window_stats(samples: &[BatchSample]) -> WindowStats {
+    let mut w = WindowStats { batches: samples.len(), ..Default::default() };
+    if samples.is_empty() {
+        return w;
+    }
+    let mut means: Vec<(f64, u64)> = Vec::with_capacity(samples.len());
+    let mut maxes: Vec<(f64, u64)> = Vec::with_capacity(samples.len());
+    for s in samples {
+        w.served += s.served as u64;
+        w.energy += s.energy;
+        w.mean_exec_us += s.exec_us as f64;
+        w.mean_occupancy += s.occupancy as f64;
+        w.mean_queue_depth += s.queue_depth as f64;
+        means.push((s.lat_mean_us as f64, s.served as u64));
+        maxes.push((s.lat_max_us as f64, s.served as u64));
+    }
+    let n = samples.len() as f64;
+    w.mean_exec_us /= n;
+    w.mean_occupancy /= n;
+    w.mean_queue_depth /= n;
+    w.p50_lat_us = weighted_percentile(&mut means, 50.0);
+    w.p95_lat_us = weighted_percentile(&mut maxes, 95.0);
+    if w.served > 0 {
+        w.energy_per_req = w.energy / w.served as f64;
+    }
+    w.span_us = samples.last().unwrap().t_us - samples[0].t_us;
+    if samples.len() >= 2 && w.span_us > 0 {
+        let secs = w.span_us as f64 / 1e6;
+        w.energy_rate = w.energy / secs;
+        w.req_rate = w.served as f64 / secs;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    fn sample(t_us: u64, served: u32, lat: f32, energy: f64) -> BatchSample {
+        BatchSample {
+            t_us,
+            served,
+            queue_depth: 3,
+            occupancy: served as f32 / 32.0,
+            exec_us: 100.0,
+            lat_mean_us: lat,
+            lat_max_us: lat * 2.0,
+            energy,
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let s = sample(123456, 17, 250.5, 1.5e9);
+        assert_eq!(unpack(&pack(&s)), s);
+    }
+
+    #[test]
+    fn push_and_snapshot_in_order() {
+        let ring = TelemetryRing::new(16);
+        for i in 0..10u64 {
+            ring.push(&sample(i * 1000, 8, 100.0, 1.0));
+        }
+        let snap = ring.snapshot(4);
+        assert_eq!(snap.len(), 4);
+        assert_eq!(snap[0].t_us, 6000);
+        assert_eq!(snap[3].t_us, 9000);
+        assert_eq!(ring.pushed(), 10);
+    }
+
+    #[test]
+    fn wraparound_keeps_latest() {
+        let ring = TelemetryRing::new(8);
+        for i in 0..100u64 {
+            ring.push(&sample(i, 1, 1.0, 0.0));
+        }
+        let snap = ring.snapshot(100);
+        assert_eq!(snap.len(), 8);
+        assert_eq!(snap[0].t_us, 92);
+        assert_eq!(snap[7].t_us, 99);
+    }
+
+    #[test]
+    fn window_stats_math() {
+        // Two batches 1 second apart: 10 + 30 requests, energy 100 + 300.
+        let samples = vec![
+            sample(0, 10, 100.0, 100.0),
+            sample(1_000_000, 30, 300.0, 300.0),
+        ];
+        let w = window_stats(&samples);
+        assert_eq!(w.batches, 2);
+        assert_eq!(w.served, 40);
+        assert!((w.energy - 400.0).abs() < 1e-9);
+        assert!((w.energy_per_req - 10.0).abs() < 1e-9);
+        assert!((w.req_rate - 40.0).abs() < 1e-6);
+        assert!((w.energy_rate - 400.0).abs() < 1e-6);
+        // Request-weighted: 30 of 40 requests sit in the second batch,
+        // so p50 lands on its mean (300) and p95 on its max (600).
+        assert!((w.p50_lat_us - 300.0).abs() < 1e-9);
+        assert!((w.p95_lat_us - 600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p95_weights_by_batch_size_not_batch_count() {
+        // One slow full batch of 8 among 19 fast single-sample batches:
+        // the slow batch holds 8/27 ~ 30% of requests, so the weighted
+        // p95 must surface its latency even though it is 1 of 20
+        // batches. An unweighted per-batch percentile would report ~1ms.
+        let mut samples = vec![sample(0, 8, 100_000.0, 0.0)];
+        for i in 1..20u64 {
+            samples.push(sample(i * 1000, 1, 1_000.0, 0.0));
+        }
+        let w = window_stats(&samples);
+        assert_eq!(w.served, 27);
+        assert!(
+            (w.p95_lat_us - 200_000.0).abs() < 1e-6,
+            "p95 {} must reflect the slow batch max",
+            w.p95_lat_us
+        );
+    }
+
+    #[test]
+    fn empty_window_is_zeroed() {
+        let w = window_stats(&[]);
+        assert_eq!(w.batches, 0);
+        assert_eq!(w.req_rate, 0.0);
+    }
+
+    #[test]
+    fn concurrent_reads_never_tear() {
+        // One writer hammers the ring with samples whose fields are all
+        // derived from the same counter; readers must only ever observe
+        // internally consistent samples.
+        let ring = Arc::new(TelemetryRing::new(32));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut readers = Vec::new();
+        for _ in 0..3 {
+            let ring = ring.clone();
+            let stop = stop.clone();
+            readers.push(std::thread::spawn(move || {
+                let mut checked = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    for s in ring.snapshot(32) {
+                        assert_eq!(s.served as u64, s.t_us % 1000);
+                        assert_eq!(s.energy, s.t_us as f64 * 3.0);
+                        checked += 1;
+                    }
+                }
+                checked
+            }));
+        }
+        for i in 0..200_000u64 {
+            ring.push(&BatchSample {
+                t_us: i,
+                served: (i % 1000) as u32,
+                queue_depth: 0,
+                occupancy: 0.0,
+                exec_us: 0.0,
+                lat_mean_us: 0.0,
+                lat_max_us: 0.0,
+                energy: i as f64 * 3.0,
+            });
+        }
+        stop.store(true, Ordering::Relaxed);
+        for r in readers {
+            assert!(r.join().unwrap() > 0);
+        }
+    }
+}

@@ -5,13 +5,20 @@
 //! Architecture (one accelerator, one queue):
 //!
 //!   clients -> Router -> per-model DynamicBatcher -> device thread
-//!                                 ^                      |
-//!                        PrecisionScheduler     PJRT execute (noisy fwd)
-//!                        (per-layer/channel E)          |
-//!                                 EnergyLedger <- responses -> clients
+//!              | ^                ^                      |
+//!   AdmissionGate |      PrecisionScheduler     PJRT execute (noisy fwd)
+//!              |  |      (per-layer/channel E)          |
+//!              |  |               ^         TelemetryRing + EnergyLedger
+//!              |  |               |                     |
+//!              |  +---- control thread (crate::control) <--+
+//!              |        autotuner (SLO) + energy governor
+//!              +------- responses -> clients
 //!
 //! The device thread owns the PJRT executables (they are !Send by
-//! construction); everything else communicates via channels.
+//! construction); everything else communicates via channels. The
+//! optional control plane (see `crate::control`) closes the loop from
+//! batch telemetry back into the scheduler: precision degrades first
+//! under overload, admission sheds last.
 
 pub mod batcher;
 pub mod request;

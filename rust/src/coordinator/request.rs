@@ -28,6 +28,9 @@ pub struct InferResponse {
     pub batch_size: usize,
     /// Simulated analog energy spent on this sample (base units).
     pub energy: f64,
+    /// True when admission control rejected the request (no inference
+    /// ran); overload sheds only after precision has hit its floor.
+    pub shed: bool,
 }
 
 impl InferResponse {
@@ -44,7 +47,28 @@ impl InferResponse {
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .map(|(i, _)| i as i32)
             .unwrap_or(-1);
-        InferResponse { id, logits, pred, latency_us, batch_size, energy }
+        InferResponse {
+            id,
+            logits,
+            pred,
+            latency_us,
+            batch_size,
+            energy,
+            shed: false,
+        }
+    }
+
+    /// Immediate rejection from the router's admission gate.
+    pub fn rejected(id: u64) -> Self {
+        InferResponse {
+            id,
+            logits: vec![],
+            pred: -1,
+            latency_us: 0,
+            batch_size: 0,
+            energy: 0.0,
+            shed: true,
+        }
     }
 }
 
@@ -56,7 +80,17 @@ mod tests {
     fn argmax_pred() {
         let r = InferResponse::from_logits(1, vec![0.1, 0.7, 0.2], 10, 4, 1.0);
         assert_eq!(r.pred, 1);
+        assert!(!r.shed);
         let r = InferResponse::from_logits(2, vec![], 10, 4, 1.0);
         assert_eq!(r.pred, -1);
+    }
+
+    #[test]
+    fn rejected_is_marked_shed() {
+        let r = InferResponse::rejected(7);
+        assert!(r.shed);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.pred, -1);
+        assert!(r.logits.is_empty());
     }
 }

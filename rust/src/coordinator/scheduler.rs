@@ -5,7 +5,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::artifact::ModelMeta;
 use crate::util::json::Json;
@@ -23,20 +23,55 @@ pub enum EnergyPolicy {
 
 impl EnergyPolicy {
     /// Materialize the full per-channel vector for a model.
-    pub fn e_vector(&self, meta: &ModelMeta) -> Vec<f32> {
+    ///
+    /// Errors (rather than panicking) on a malformed policy — e.g. a
+    /// per-channel table whose length doesn't match the model — so a bad
+    /// client policy can never kill the device thread.
+    pub fn e_vector(&self, meta: &ModelMeta) -> Result<Vec<f32>> {
         match self {
-            EnergyPolicy::Uniform(e) => vec![*e as f32; meta.e_len],
+            EnergyPolicy::Uniform(e) => {
+                if !e.is_finite() || *e <= 0.0 {
+                    bail!(
+                        "uniform policy energy {e} for model {} must be \
+                         positive and finite",
+                        meta.name
+                    );
+                }
+                Ok(vec![*e as f32; meta.e_len])
+            }
             EnergyPolicy::PerLayer(v) => meta.broadcast_per_layer(v),
             EnergyPolicy::PerChannel(v) => {
-                assert_eq!(v.len(), meta.e_len);
-                v.clone()
+                if v.len() != meta.e_len {
+                    bail!(
+                        "per-channel policy has {} entries but model {} \
+                         has e_len {}",
+                        v.len(),
+                        meta.name,
+                        meta.e_len
+                    );
+                }
+                Ok(v.clone())
             }
         }
     }
 
     /// Average energy/MAC this policy implies.
-    pub fn avg_energy(&self, meta: &ModelMeta) -> f64 {
-        meta.avg_energy_per_mac(&self.e_vector(meta))
+    pub fn avg_energy(&self, meta: &ModelMeta) -> Result<f64> {
+        Ok(meta.avg_energy_per_mac(&self.e_vector(meta)?))
+    }
+
+    /// The same policy with every energy scaled by `factor` — the knob
+    /// the control plane turns (precision <-> energy/throughput).
+    pub fn scaled(&self, factor: f64) -> EnergyPolicy {
+        match self {
+            EnergyPolicy::Uniform(e) => EnergyPolicy::Uniform(e * factor),
+            EnergyPolicy::PerLayer(v) => {
+                EnergyPolicy::PerLayer(v.iter().map(|x| x * factor).collect())
+            }
+            EnergyPolicy::PerChannel(v) => EnergyPolicy::PerChannel(
+                v.iter().map(|&x| (x as f64 * factor) as f32).collect(),
+            ),
+        }
     }
 }
 
@@ -163,17 +198,43 @@ mod tests {
     #[test]
     fn uniform_policy_fills_vector() {
         let m = meta();
-        let e = EnergyPolicy::Uniform(5.0).e_vector(&m);
+        let e = EnergyPolicy::Uniform(5.0).e_vector(&m).unwrap();
         assert_eq!(e, vec![5.0f32; 6]);
-        assert!((EnergyPolicy::Uniform(5.0).avg_energy(&m) - 5.0).abs() < 1e-9);
+        let avg = EnergyPolicy::Uniform(5.0).avg_energy(&m).unwrap();
+        assert!((avg - 5.0).abs() < 1e-9);
     }
 
     #[test]
     fn per_layer_policy_broadcasts() {
         let m = meta();
-        let e = EnergyPolicy::PerLayer(vec![2.0, 8.0]).e_vector(&m);
+        let e = EnergyPolicy::PerLayer(vec![2.0, 8.0]).e_vector(&m).unwrap();
         assert_eq!(&e[0..4], &[2.0f32; 4]);
         assert_eq!(e[5], 8.0);
+    }
+
+    #[test]
+    fn malformed_policies_error_instead_of_panicking() {
+        let m = meta();
+        // Wrong per-channel length (e_len is 6).
+        assert!(EnergyPolicy::PerChannel(vec![1.0; 4]).e_vector(&m).is_err());
+        // Wrong per-layer length (2 noise sites).
+        assert!(EnergyPolicy::PerLayer(vec![1.0; 3]).e_vector(&m).is_err());
+        // Non-physical uniform energies.
+        assert!(EnergyPolicy::Uniform(0.0).e_vector(&m).is_err());
+        assert!(EnergyPolicy::Uniform(f64::NAN).e_vector(&m).is_err());
+    }
+
+    #[test]
+    fn scaled_policy_scales_all_granularities() {
+        let m = meta();
+        let u = EnergyPolicy::Uniform(8.0).scaled(0.5);
+        assert!((u.avg_energy(&m).unwrap() - 4.0).abs() < 1e-9);
+        let pl = EnergyPolicy::PerLayer(vec![2.0, 8.0]).scaled(0.25);
+        let e = pl.e_vector(&m).unwrap();
+        assert_eq!(&e[0..4], &[0.5f32; 4]);
+        assert_eq!(e[5], 2.0);
+        let pc = EnergyPolicy::PerChannel(vec![4.0; 6]).scaled(0.5);
+        assert_eq!(pc.e_vector(&m).unwrap(), vec![2.0f32; 6]);
     }
 
     #[test]
@@ -185,7 +246,7 @@ mod tests {
         assert_eq!(n, 1);
         let p = s.get("m").unwrap();
         assert_eq!(p.noise, "thermal");
-        assert_eq!(p.policy.e_vector(&m)[0], 2.0);
+        assert_eq!(p.policy.e_vector(&m).unwrap()[0], 2.0);
         assert_eq!(s.fwd_tag("m").unwrap(), "thermal.fwd");
     }
 

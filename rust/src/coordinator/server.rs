@@ -1,28 +1,39 @@
-//! The coordinator proper: router -> batcher -> device thread.
+//! The coordinator proper: router -> batcher -> device thread, plus the
+//! precision control plane.
 //!
 //! `Coordinator::start` spawns the device thread, which owns every
 //! PJRT executable (they hold raw pointers; see runtime::Exec). Clients
 //! submit `InferRequest`s through a cloneable `Sender`; the device loop
 //! drains the channel, batches per model, executes the scheduled noisy
 //! forward and replies on each request's response channel.
+//!
+//! With `CoordinatorConfig::control.enabled` a control thread also runs:
+//! the device loop publishes per-batch telemetry into a lock-light ring,
+//! the controller (autotuner + energy governor) hot-swaps scaled
+//! precision policies through the shared `PrecisionScheduler` between
+//! batches, and the router consults a per-model admission gate so
+//! overload degrades precision first and sheds load last.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::analog::{plan_layer, AveragingMode, EnergyLedger, HardwareConfig};
+use crate::control::{
+    control_loop, window_stats, BatchSample, ControlConfig, ControllerCtx,
+    ControlShared, ModelControl, Verdict, WindowStats,
+};
 use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher};
 use crate::coordinator::request::{InferRequest, InferResponse};
 use crate::coordinator::scheduler::PrecisionScheduler;
 use crate::data::Features;
 use crate::ops::ModelOps;
-use crate::runtime::artifact::ModelBundle;
-use crate::util::stats::Summary;
+use crate::runtime::artifact::{ModelBundle, ModelMeta};
 
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -31,6 +42,13 @@ pub struct CoordinatorConfig {
     pub averaging: AveragingMode,
     /// Base seed for the per-batch noise streams.
     pub seed: u64,
+    /// Precision control plane (disabled by default).
+    pub control: ControlConfig,
+    /// Sleep out the simulated analog execution time (plan cycles x
+    /// `hw.cycle_ns` x batch) in the device loop. This makes the
+    /// precision <-> throughput coupling physically observable without
+    /// hardware; leave off when serving real artifacts.
+    pub simulate_device_time: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -40,37 +58,76 @@ impl Default for CoordinatorConfig {
             hw: HardwareConfig::homodyne(),
             averaging: AveragingMode::PerRowSpatial,
             seed: 0,
+            control: ControlConfig::default(),
+            simulate_device_time: false,
         }
     }
 }
 
-/// Aggregated serving statistics.
+/// Aggregated serving statistics: lifetime counters + the energy ledger
+/// + a recent-window view derived from the telemetry rings (the rings
+/// replaced the old unbounded per-request accumulation).
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
     pub served: u64,
+    /// Requests rejected by admission control.
+    pub shed: u64,
     pub batches: u64,
-    pub latency_us: Summary,
-    pub batch_occupancy: Summary,
-    pub exec_us: Summary,
-    pub overhead_us: Summary,
     pub ledger: EnergyLedger,
+    /// Stats over the most recent telemetry window (across all models).
+    pub window: WindowStats,
+    /// Current control-plane precision scale per model (1.0 = the full
+    /// learned policy).
+    pub scales: BTreeMap<String, f64>,
 }
 
 impl ServerStats {
+    /// Simulated analog energy per served request, in base units (aJ
+    /// for the homodyne device).
+    pub fn energy_per_request(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.ledger.total_energy / self.served as f64
+        }
+    }
+
     pub fn report(&self) -> String {
+        let scales: Vec<String> = self
+            .scales
+            .iter()
+            .map(|(m, s)| format!("{m}={s:.3}"))
+            .collect();
         format!(
-            "served={} batches={} lat_p50={:.0}us lat_p95={:.0}us \
-             exec_p50={:.0}us overhead_p50={:.0}us occupancy={:.1}\n{}",
+            "served={} shed={} batches={} | window[{} batches]: \
+             lat_p50={:.0}us lat_p95={:.0}us exec_mean={:.0}us \
+             occupancy={:.2} queue={:.1}\n\
+             energy/request: {:.4e} units; precision scales: {}\n{}",
             self.served,
+            self.shed,
             self.batches,
-            self.latency_us.percentile(50.0),
-            self.latency_us.percentile(95.0),
-            self.exec_us.percentile(50.0),
-            self.overhead_us.percentile(50.0),
-            self.batch_occupancy.mean(),
+            self.window.batches,
+            self.window.p50_lat_us,
+            self.window.p95_lat_us,
+            self.window.mean_exec_us,
+            self.window.mean_occupancy,
+            self.window.mean_queue_depth,
+            self.energy_per_request(),
+            if scales.is_empty() { "-".to_string() } else { scales.join(" ") },
             self.ledger.report()
         )
     }
+}
+
+#[derive(Debug, Default)]
+struct DeviceCounters {
+    served: u64,
+    batches: u64,
+    /// Requests rejected because the scheduled policy failed to
+    /// materialize (counted into `ServerStats::shed` so that
+    /// served + shed always equals the requests admitted + rejected).
+    policy_rejected: u64,
+    ledger: EnergyLedger,
 }
 
 enum Msg {
@@ -82,40 +139,112 @@ enum Msg {
 pub struct Coordinator {
     tx: Sender<Msg>,
     device: Option<JoinHandle<()>>,
-    stats: Arc<Mutex<ServerStats>>,
+    controller: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    counters: Arc<Mutex<DeviceCounters>>,
+    shared: Arc<ControlShared>,
+    scheduler: Arc<RwLock<PrecisionScheduler>>,
+    control_enabled: bool,
+    window: usize,
     next_id: AtomicU64,
 }
 
 impl Coordinator {
-    /// Spawn the device thread. `bundles` and `scheduler` move into it.
+    /// Spawn the device thread (and, if enabled, the control thread).
+    /// `bundles` move into the device thread; `scheduler` becomes shared
+    /// behind a `RwLock` so the control plane can hot-swap policies.
     pub fn start(
         bundles: Vec<ModelBundle>,
         scheduler: PrecisionScheduler,
         cfg: CoordinatorConfig,
     ) -> Result<Coordinator> {
+        let metas: BTreeMap<String, ModelMeta> = bundles
+            .iter()
+            .map(|b| (b.meta.name.clone(), b.meta.clone()))
+            .collect();
+        let shared = ControlShared::new(metas.keys(), &cfg.control);
+        let scheduler = Arc::new(RwLock::new(scheduler));
         let (tx, rx) = channel::<Msg>();
-        let stats = Arc::new(Mutex::new(ServerStats::default()));
-        let stats2 = stats.clone();
-        let device = std::thread::Builder::new()
-            .name("dynaprec-device".into())
-            .spawn(move || device_loop(bundles, scheduler, cfg, rx, stats2))?;
+        let counters = Arc::new(Mutex::new(DeviceCounters::default()));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let device = {
+            let scheduler = scheduler.clone();
+            let counters = counters.clone();
+            let shared = shared.clone();
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("dynaprec-device".into())
+                .spawn(move || {
+                    device_loop(bundles, scheduler, cfg, rx, counters, shared)
+                })?
+        };
+
+        let controller = if cfg.control.enabled {
+            // Snapshot the base (learned) policies: the controller
+            // always scales these, never its own previous output.
+            let base = {
+                let s = scheduler.read().unwrap();
+                metas
+                    .keys()
+                    .filter_map(|m| {
+                        s.get(m).cloned().map(|p| (m.clone(), p))
+                    })
+                    .collect()
+            };
+            let ctx = ControllerCtx {
+                metas,
+                base,
+                hw: cfg.hw.clone(),
+                averaging: cfg.averaging,
+            };
+            let control_cfg = cfg.control.clone();
+            let shared = shared.clone();
+            let scheduler = scheduler.clone();
+            let stop = stop.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("dynaprec-control".into())
+                    .spawn(move || {
+                        control_loop(control_cfg, ctx, shared, scheduler, stop)
+                    })?,
+            )
+        } else {
+            None
+        };
+
         Ok(Coordinator {
             tx,
             device: Some(device),
-            stats,
+            controller,
+            stop,
+            counters,
+            shared,
+            scheduler,
+            control_enabled: cfg.control.enabled,
+            window: cfg.control.window,
             next_id: AtomicU64::new(0),
         })
     }
 
-    /// Submit one sample; returns the response receiver.
+    /// Submit one sample; returns the response receiver. Under overload
+    /// with the control plane enabled, the admission gate may reject
+    /// immediately (response arrives with `shed == true`).
     pub fn submit(
         &self,
         model: &str,
         x: Features,
     ) -> Receiver<InferResponse> {
         let (rtx, rrx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if let Some(mc) = self.shared.get(model) {
+            if mc.gate.on_submit(self.control_enabled) == Verdict::Shed {
+                let _ = rtx.send(InferResponse::rejected(id));
+                return rrx;
+            }
+        }
         let req = InferRequest {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            id,
             model: model.to_string(),
             x,
             enqueued: Instant::now(),
@@ -125,44 +254,88 @@ impl Coordinator {
         rrx
     }
 
-    pub fn stats(&self) -> ServerStats {
-        self.stats.lock().unwrap().clone()
+    /// The shared scheduler, for out-of-band policy management (e.g.
+    /// loading a new energy table while serving).
+    pub fn scheduler(&self) -> Arc<RwLock<PrecisionScheduler>> {
+        self.scheduler.clone()
     }
 
-    /// Flush outstanding work and join the device thread.
+    /// Recent-window telemetry for one model.
+    pub fn telemetry(&self, model: &str) -> Option<WindowStats> {
+        self.shared
+            .get(model)
+            .map(|mc| window_stats(&mc.ring.snapshot(self.window)))
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        let (served, batches, policy_rejected, ledger) = {
+            let c = self.counters.lock().unwrap();
+            (c.served, c.batches, c.policy_rejected, c.ledger.clone())
+        };
+        let mut shed = policy_rejected;
+        let mut scales = BTreeMap::new();
+        let mut samples: Vec<BatchSample> = Vec::new();
+        for (m, mc) in &self.shared.models {
+            shed += mc.gate.shed_total();
+            scales.insert(m.clone(), mc.gate.scale());
+            samples.extend(mc.ring.snapshot(self.window));
+        }
+        samples.sort_by_key(|s| s.t_us);
+        ServerStats {
+            served,
+            shed,
+            batches,
+            ledger,
+            window: window_stats(&samples),
+            scales,
+        }
+    }
+
+    /// Flush outstanding work and join the device + control threads.
     pub fn shutdown(mut self) -> ServerStats {
+        self.stop_threads();
+        self.stats()
+    }
+
+    fn stop_threads(&mut self) {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(h) = self.device.take() {
             let _ = h.join();
         }
-        let s = self.stats.lock().unwrap().clone();
-        s
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.controller.take() {
+            let _ = h.join();
+        }
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.device.take() {
-            let _ = h.join();
-        }
+        self.stop_threads();
     }
 }
 
 fn device_loop(
     bundles: Vec<ModelBundle>,
-    scheduler: PrecisionScheduler,
+    scheduler: Arc<RwLock<PrecisionScheduler>>,
     cfg: CoordinatorConfig,
     rx: Receiver<Msg>,
-    stats: Arc<Mutex<ServerStats>>,
+    counters: Arc<Mutex<DeviceCounters>>,
+    shared: Arc<ControlShared>,
 ) {
     let bundles: BTreeMap<String, ModelBundle> = bundles
         .into_iter()
         .map(|b| (b.meta.name.clone(), b))
         .collect();
+    // Per-model batchers, batch size clamped to the artifact's lowered
+    // batch so an oversized global config can't overrun the pad buffer.
     let mut batchers: BTreeMap<String, DynamicBatcher> = bundles
-        .keys()
-        .map(|k| (k.clone(), DynamicBatcher::new(cfg.batcher.clone())))
+        .iter()
+        .map(|(k, b)| {
+            let mut bc = cfg.batcher.clone();
+            bc.batch_size = bc.batch_size.min(b.meta.batch).max(1);
+            (k.clone(), DynamicBatcher::new(bc))
+        })
         .collect();
     let mut seed = cfg.seed as u32;
     let mut shutdown = false;
@@ -224,24 +397,69 @@ fn device_loop(
                     &cfg,
                     batch,
                     seed,
-                    &stats,
+                    &counters,
+                    shared.get(model),
                 );
             }
         }
     }
 }
 
+/// How this batch will execute: which artifact, at which energies.
+enum BatchPlan {
+    /// No precision scheduled: clean fp forward, no analog cost.
+    Fp,
+    Noisy { tag: String, e: Vec<f32> },
+}
+
 fn execute_batch(
     bundle: &ModelBundle,
-    scheduler: &PrecisionScheduler,
+    scheduler: &Arc<RwLock<PrecisionScheduler>>,
     cfg: &CoordinatorConfig,
     batch: Vec<InferRequest>,
     seed: u32,
-    stats: &Arc<Mutex<ServerStats>>,
+    counters: &Arc<Mutex<DeviceCounters>>,
+    mc: Option<&Arc<ModelControl>>,
 ) {
     let meta = &bundle.meta;
     let bsz = meta.batch;
     let n = batch.len();
+
+    // Read the scheduled precision; the read guard is dropped before
+    // execution so the control thread can swap policies between batches.
+    let plan = {
+        let s = scheduler.read().unwrap();
+        match s.get(&meta.name) {
+            None => Ok(BatchPlan::Fp),
+            Some(p) => match p.policy.e_vector(meta) {
+                Ok(e) => Ok(BatchPlan::Noisy {
+                    tag: format!("{}.fwd", p.noise),
+                    e,
+                }),
+                Err(err) => Err(format!("{err:#}")),
+            },
+        }
+    };
+    let plan = match plan {
+        Ok(p) => p,
+        Err(msg) => {
+            // A malformed policy fails the batch, not the device thread.
+            eprintln!(
+                "dynaprec: bad precision policy for {}: {msg}; \
+                 rejecting batch",
+                meta.name
+            );
+            counters.lock().unwrap().policy_rejected += n as u64;
+            for r in batch {
+                let _ = r.resp.send(InferResponse::rejected(r.id));
+            }
+            if let Some(mc) = mc {
+                mc.gate.on_complete(n);
+            }
+            return;
+        }
+    };
+
     // Assemble (and pad) the feature buffer.
     let sample = match &batch[0].x {
         Features::F32(v) => v.len(),
@@ -269,68 +487,83 @@ fn execute_batch(
     };
 
     let ops = ModelOps::new(bundle);
-    let (tag, e) = match scheduler.get(&meta.name) {
-        Some(p) => (format!("{}.fwd", p.noise), p.policy.e_vector(meta)),
-        None => ("fwd_fp".to_string(), vec![1.0; meta.e_len]),
-    };
     let t_exec = Instant::now();
-    let logits = if tag == "fwd_fp" {
-        ops.fwd_simple("fwd_fp", &x)
-    } else {
-        ops.fwd_noisy(&tag, &x, seed, &e)
+    let logits = match &plan {
+        BatchPlan::Fp => ops.fwd_simple("fwd_fp", &x),
+        BatchPlan::Noisy { tag, e } => ops.fwd_noisy(tag, &x, seed, e),
     };
-    let exec_us = t_exec.elapsed().as_micros() as f64;
 
-    // Simulated analog cost: energy from the scheduler's policy, cycles
+    // Simulated analog cost: energy from the scheduled e-vector, cycles
     // from the redundant-coding plan over all noise sites.
-    let (energy_per_sample, cycles) = analog_cost(bundle, scheduler, cfg);
+    let (energy_per_sample, cycles) = match &plan {
+        BatchPlan::Fp => (0.0, 0.0),
+        BatchPlan::Noisy { e, .. } => analog_cost(meta, e, cfg),
+    };
+    if cfg.simulate_device_time {
+        let ns = cycles * cfg.hw.cycle_ns * n as f64;
+        if ns >= 1.0 {
+            std::thread::sleep(Duration::from_nanos(ns as u64));
+        }
+    }
+    let exec_us = t_exec.elapsed().as_micros() as f64;
 
     let classes = match &logits {
         Ok(l) => l.len() / bsz,
         Err(_) => 0,
     };
     let done = Instant::now();
-    let mut s = stats.lock().unwrap();
-    s.batches += 1;
-    s.exec_us.add(exec_us);
-    s.batch_occupancy.add(n as f64 / bsz as f64);
-    s.ledger.record(
-        &meta.name,
-        n as u64,
-        meta.total_macs,
-        energy_per_sample,
-        cycles,
-    );
-    for (i, r) in batch.into_iter().enumerate() {
-        let latency = done.duration_since(r.enqueued).as_micros() as u64;
-        s.served += 1;
-        s.latency_us.add(latency as f64);
-        s.overhead_us.add((latency as f64 - exec_us).max(0.0));
-        let row = match &logits {
-            Ok(l) => l[i * classes..(i + 1) * classes].to_vec(),
-            Err(_) => vec![],
-        };
-        let _ = r.resp.send(InferResponse::from_logits(
-            r.id,
-            row,
-            latency,
-            n,
+    let occupancy = n as f64 / bsz as f64;
+    let mut lat_sum = 0.0f64;
+    let mut lat_max = 0.0f64;
+    {
+        let mut c = counters.lock().unwrap();
+        c.batches += 1;
+        c.ledger.record(
+            &meta.name,
+            n as u64,
+            meta.total_macs,
             energy_per_sample,
-        ));
+            cycles,
+        );
+        for (i, r) in batch.into_iter().enumerate() {
+            let latency = done.duration_since(r.enqueued).as_micros() as u64;
+            lat_sum += latency as f64;
+            lat_max = lat_max.max(latency as f64);
+            c.served += 1;
+            let row = match &logits {
+                Ok(l) => l[i * classes..(i + 1) * classes].to_vec(),
+                Err(_) => vec![],
+            };
+            let _ = r.resp.send(InferResponse::from_logits(
+                r.id,
+                row,
+                latency,
+                n,
+                energy_per_sample,
+            ));
+        }
+    }
+    if let Some(mc) = mc {
+        mc.gate.on_complete(n);
+        mc.ring.push(&BatchSample {
+            t_us: mc.ring.now_us(),
+            served: n as u32,
+            queue_depth: mc.gate.depth() as u32,
+            occupancy: occupancy as f32,
+            exec_us: exec_us as f32,
+            lat_mean_us: (lat_sum / n as f64) as f32,
+            lat_max_us: lat_max as f32,
+            energy: energy_per_sample * n as f64,
+        });
     }
 }
 
-/// Energy per sample + simulated cycles for the scheduled precision.
+/// Energy per sample + simulated cycles for a materialized e-vector.
 fn analog_cost(
-    bundle: &ModelBundle,
-    scheduler: &PrecisionScheduler,
+    meta: &ModelMeta,
+    e: &[f32],
     cfg: &CoordinatorConfig,
 ) -> (f64, f64) {
-    let meta = &bundle.meta;
-    let Some(p) = scheduler.get(&meta.name) else {
-        return (0.0, 0.0);
-    };
-    let e = p.policy.e_vector(meta);
     let mut energy = 0.0;
     let mut cycles = 0.0;
     for (_, site) in meta.noise_sites() {

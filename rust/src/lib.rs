@@ -5,6 +5,7 @@
 //! Computing for Neural Networks" (2021).
 
 pub mod analog;
+pub mod control;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;

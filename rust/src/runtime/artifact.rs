@@ -65,6 +65,61 @@ pub struct ModelMeta {
 }
 
 impl ModelMeta {
+    /// Programmatic synthetic profile — `n_sites` uniform noise sites of
+    /// `n_channels` output channels and `macs_per_channel` MACs/sample
+    /// each. Shared by the control-plane tests, the `control_plane`
+    /// bench and the `serve_autotune` example, which exercise the
+    /// serving stack without compiled artifacts (pair with
+    /// [`ModelBundle::synthetic`]).
+    pub fn synthetic(
+        name: &str,
+        batch: usize,
+        n_sites: usize,
+        n_channels: usize,
+        n_dot: usize,
+        macs_per_channel: f64,
+    ) -> ModelMeta {
+        let sites: Vec<SiteMeta> = (0..n_sites)
+            .map(|i| SiteMeta {
+                name: format!("site{i}"),
+                kind: "conv".to_string(),
+                n_dot,
+                n_channels,
+                macs_per_channel,
+                e_offset: i * n_channels,
+                in_lo: -1.0,
+                in_hi: 1.0,
+                in_lo_clip: -1.0,
+                in_hi_clip: 1.0,
+                out_lo: 0.0,
+                out_hi: 2.0,
+                out_lo_clip: 0.0,
+                out_hi_clip: 2.0,
+                w_lo_layer: -0.5,
+                w_hi_layer: 0.5,
+                w_lo: vec![],
+                w_hi: vec![],
+            })
+            .collect();
+        ModelMeta {
+            name: name.to_string(),
+            kind: "vision".to_string(),
+            batch,
+            params_len: 0,
+            e_len: n_sites * n_channels,
+            n_sites,
+            total_macs: macs_per_channel * (n_sites * n_channels) as f64,
+            sigma_thermal: 0.01,
+            sigma_weight: 0.1,
+            photons_per_aj: 7.8125,
+            act_bits: 8,
+            fp_acc: 0.9,
+            quant_acc: None,
+            artifacts: std::collections::BTreeMap::new(),
+            sites,
+        }
+    }
+
     pub fn parse(text: &str) -> Result<ModelMeta> {
         let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
         let sites = j
@@ -128,7 +183,19 @@ impl ModelMeta {
     }
 
     /// Broadcast per-layer energies to the full per-channel vector.
-    pub fn broadcast_per_layer(&self, per_layer: &[f64]) -> Vec<f32> {
+    /// Errors on a length mismatch (one energy per noise site expected)
+    /// so a malformed policy can't panic the serving path.
+    pub fn broadcast_per_layer(&self, per_layer: &[f64]) -> Result<Vec<f32>> {
+        let n_noise = self.noise_sites().count();
+        if per_layer.len() != n_noise {
+            bail!(
+                "per-layer policy has {} entries but model {} has {} \
+                 noise sites",
+                per_layer.len(),
+                self.name,
+                n_noise
+            );
+        }
         let mut e = vec![1.0f32; self.e_len];
         let mut li = 0;
         for s in &self.sites {
@@ -140,8 +207,7 @@ impl ModelMeta {
             }
             li += 1;
         }
-        assert_eq!(li, per_layer.len(), "per-layer length mismatch");
-        e
+        Ok(e)
     }
 
     /// Average energy/MAC implied by a per-channel vector.
@@ -198,12 +264,23 @@ pub struct ModelBundle {
     pub meta: ModelMeta,
     pub dir: PathBuf,
     pub params: xla::Literal,
-    engine: Arc<Engine>,
+    /// None for synthetic bundles (no runtime; `exec` errors cleanly).
+    engine: Option<Arc<Engine>>,
 }
 
 unsafe impl Send for ModelBundle {}
 
 impl ModelBundle {
+    /// A bundle with metadata only and no PJRT engine: forwards error
+    /// cleanly, but batching, scheduling and the analog cost model all
+    /// work. Used by the control-plane tests and `serve_autotune`, which
+    /// exercise the serving stack without compiled artifacts.
+    pub fn synthetic(meta: ModelMeta) -> Self {
+        let params =
+            lit::f32_tensor(&[0], &[]).expect("empty literal");
+        ModelBundle { meta, dir: PathBuf::new(), params, engine: None }
+    }
+
     pub fn load(engine: Arc<Engine>, dir: &Path, name: &str) -> Result<Self> {
         let meta_text = std::fs::read_to_string(dir.join(format!("{name}.meta.json")))
             .with_context(|| format!("reading {name}.meta.json"))?;
@@ -220,18 +297,26 @@ impl ModelBundle {
             bail!("params length {} != meta {}", data.len(), meta.params_len);
         }
         let params = lit::f32_tensor(&[data.len()], data)?;
-        Ok(ModelBundle { meta, dir: dir.to_path_buf(), params, engine })
+        Ok(ModelBundle {
+            meta,
+            dir: dir.to_path_buf(),
+            params,
+            engine: Some(engine),
+        })
     }
 
     /// Compile (or fetch cached) the executable for an artifact tag,
     /// e.g. "thermal.fwd", "shot.grad", "fwd_quant", "lowbit".
     pub fn exec(&self, tag: &str) -> Result<Arc<Exec>> {
+        let engine = self.engine.as_ref().ok_or_else(|| {
+            anyhow!("model {} is a synthetic bundle (no engine)", self.meta.name)
+        })?;
         let fname = self
             .meta
             .artifacts
             .get(tag)
             .ok_or_else(|| anyhow!("model {} has no artifact '{tag}'", self.meta.name))?;
-        self.engine.load(&self.dir.join(fname))
+        engine.load(&self.dir.join(fname))
     }
 
     pub fn has(&self, tag: &str) -> bool {
@@ -283,7 +368,7 @@ mod tests {
     #[test]
     fn broadcast_and_average() {
         let m = ModelMeta::parse(META).unwrap();
-        let e = m.broadcast_per_layer(&[2.0, 8.0]);
+        let e = m.broadcast_per_layer(&[2.0, 8.0]).unwrap();
         assert_eq!(e.len(), 6);
         assert_eq!(&e[0..4], &[2.0, 2.0, 2.0, 2.0]);
         assert_eq!(e[5], 8.0);
@@ -292,6 +377,35 @@ mod tests {
         assert!((avg - 3.0).abs() < 1e-9, "avg {avg}");
         let pl = m.per_layer_mean(&e);
         assert_eq!(pl, vec![2.0, 8.0]);
+    }
+
+    #[test]
+    fn broadcast_length_mismatch_errors() {
+        let m = ModelMeta::parse(META).unwrap();
+        assert!(m.broadcast_per_layer(&[2.0]).is_err());
+        assert!(m.broadcast_per_layer(&[2.0, 8.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn synthetic_bundle_has_no_engine() {
+        let m = ModelMeta::parse(META).unwrap();
+        let b = ModelBundle::synthetic(m);
+        assert!(b.has("fwd_fp"));
+        let err = b.exec("fwd_fp").unwrap_err();
+        assert!(format!("{err}").contains("synthetic"));
+    }
+
+    #[test]
+    fn synthetic_meta_is_consistent() {
+        let m = ModelMeta::synthetic("s", 8, 2, 4, 64, 250.0);
+        assert_eq!(m.e_len, 8);
+        assert_eq!(m.noise_sites().count(), 2);
+        assert_eq!(m.total_macs, 2000.0);
+        assert_eq!(m.sites[1].e_offset, 4);
+        // Policy machinery works end to end on a synthetic meta.
+        let e = m.broadcast_per_layer(&[2.0, 8.0]).unwrap();
+        assert_eq!(e.len(), 8);
+        assert!((m.avg_energy_per_mac(&e) - 5.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,365 @@
+//! Control-plane integration tests — no artifacts required.
+//!
+//! These run the *real* coordinator stack (router -> admission gate ->
+//! batcher -> device loop -> telemetry -> control thread) over a
+//! synthetic model bundle. Forwards fail cleanly (no PJRT engine), but
+//! everything the control plane acts on — batching, queueing, the
+//! analog cost model, and the simulated device time (plan cycles x
+//! cycle_ns) — is real, so precision stepping measurably changes
+//! throughput, latency and the energy ledger.
+//!
+//! Controller-convergence tests poll with generous deadlines instead of
+//! asserting after fixed sleeps, so a loaded CI runner slows them down
+//! rather than flaking them.
+
+use std::time::{Duration, Instant};
+
+use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
+use dynaprec::control::{
+    AdmissionConfig, AutotunerConfig, ControlConfig, GovernorConfig,
+};
+use dynaprec::coordinator::scheduler::ModelPrecision;
+use dynaprec::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, EnergyPolicy,
+    PrecisionScheduler,
+};
+use dynaprec::data::Features;
+use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+
+/// Two noise sites x 4 channels, 2000 MACs/sample. With the Time
+/// averaging mode and a per-layer energy of 16, a sample costs
+/// 16 + 16 = 32 device cycles and 32000 energy units (avg 16
+/// units/MAC).
+fn synthetic_bundle() -> ModelBundle {
+    ModelBundle::synthetic(ModelMeta::synthetic("synth", 8, 2, 4, 64, 250.0))
+}
+
+fn scheduler_with_policy() -> PrecisionScheduler {
+    let mut s = PrecisionScheduler::new();
+    s.set(
+        "synth",
+        ModelPrecision {
+            noise: "shot".into(),
+            policy: EnergyPolicy::PerLayer(vec![16.0, 16.0]),
+        },
+    );
+    s
+}
+
+fn hw(cycle_ns: f64) -> HardwareConfig {
+    HardwareConfig {
+        array_rows: 256,
+        array_cols: 256,
+        cycle_ns,
+        base_energy_aj: 1.0,
+        model: DeviceModel::Homodyne,
+    }
+}
+
+fn sample() -> Features {
+    Features::F32(vec![0.0; 4])
+}
+
+#[test]
+fn stats_ledger_and_telemetry_without_control() {
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: 8,
+            max_wait: Duration::from_millis(5),
+        },
+        hw: hw(100.0),
+        averaging: AveragingMode::Time,
+        simulate_device_time: true,
+        ..Default::default()
+    };
+    assert!(!cfg.control.enabled);
+    let coord =
+        Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
+            .unwrap();
+    let receivers: Vec<_> = (0..20).map(|_| coord.submit("synth", sample())).collect();
+    for rx in receivers {
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(!resp.shed);
+        // No PJRT engine: logits are empty, but the analog cost model ran.
+        assert!(resp.logits.is_empty());
+        assert!((resp.energy - 32_000.0).abs() < 1e-6, "{}", resp.energy);
+    }
+    let stats = coord.shutdown();
+    assert_eq!(stats.served, 20);
+    assert_eq!(stats.shed, 0);
+    assert!(stats.batches >= 3, "batches {}", stats.batches);
+    let avg = stats.ledger.avg_energy_per_mac();
+    assert!((avg - 16.0).abs() < 1e-6, "avg energy/MAC {avg}");
+    assert!(stats.window.batches > 0);
+    assert!((stats.window.energy_per_req - 32_000.0).abs() < 1e-6);
+    assert_eq!(stats.scales["synth"], 1.0);
+    // Energy-per-request reporting (derived from ledger totals).
+    assert!((stats.energy_per_request() - 32_000.0).abs() < 1e-6);
+    assert!(stats.report().contains("energy/request"));
+}
+
+#[test]
+fn autotuner_degrades_under_overload_and_recovers() {
+    // At 4us/cycle a sample costs 32 cycles = 128us of device time at
+    // full precision (scale 1), so one 8-sample batch takes ~1ms and
+    // capacity is ~7.8k samples/s (~31k/s at the 0.25 floor). The ramp
+    // offers ~40k/s — beyond even floor capacity — so the SLO blows,
+    // the autotuner pins to the floor, and admission never fires
+    // (limits are huge).
+    let control = ControlConfig {
+        enabled: true,
+        tick: Duration::from_millis(10),
+        telemetry_capacity: 512,
+        window: 32,
+        max_sample_age: Duration::from_millis(800),
+        autotuner: AutotunerConfig {
+            slo_p95_us: 20_000.0,
+            floor_scale: 0.25,
+            step_down: 0.6,
+            step_up: 1.2,
+            headroom: 0.5,
+            cooldown_ticks: 1,
+            min_batches: 3,
+        },
+        governor: GovernorConfig::default(),
+        admission: AdmissionConfig {
+            queue_soft_limit: 500_000,
+            queue_hard_limit: 1_000_000,
+        },
+    };
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: 8,
+            max_wait: Duration::from_millis(5),
+        },
+        hw: hw(4000.0),
+        averaging: AveragingMode::Time,
+        seed: 0,
+        control,
+        simulate_device_time: true,
+    };
+    let coord =
+        Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
+            .unwrap();
+
+    // Overload ramp (~40k/s) until the tuner has measurably degraded
+    // precision AND the recent window shows the reduced energy/MAC
+    // (ledger-verified); generous deadline instead of a fixed sleep.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut mid_scale = 1.0f64;
+    let mut mid_e_per_mac = f64::INFINITY;
+    let mut converged = false;
+    while Instant::now() < deadline {
+        for _ in 0..320 {
+            drop(coord.submit("synth", sample()));
+        }
+        std::thread::sleep(Duration::from_millis(8));
+        let s = coord.stats();
+        mid_scale = s.scales["synth"];
+        mid_e_per_mac = s.window.energy_per_req / 2000.0;
+        if mid_scale <= 0.5 && mid_e_per_mac < 12.8 {
+            converged = true;
+            break;
+        }
+    }
+    assert!(
+        converged,
+        "overload never degraded precision: scale {mid_scale}, \
+         window energy/MAC {mid_e_per_mac} (base 16)"
+    );
+    assert_eq!(
+        coord.stats().shed,
+        0,
+        "admission must not fire before the floor"
+    );
+
+    // Let the backlog drain at the degraded precision.
+    std::thread::sleep(Duration::from_millis(800));
+
+    // Load subsides: ~250/s. p95 falls under the SLO headroom and the
+    // tuner climbs back up, again with a generous deadline.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut recovered = false;
+    let mut last = (0.0, 0.0);
+    while Instant::now() < deadline {
+        for _ in 0..8 {
+            drop(coord.submit("synth", sample()));
+            std::thread::sleep(Duration::from_millis(4));
+        }
+        let s = coord.stats();
+        last = (s.scales["synth"], s.window.p95_lat_us);
+        if last.0 > mid_scale + 0.1 && last.1 < 20_000.0 {
+            recovered = true;
+            break;
+        }
+    }
+    assert!(
+        recovered,
+        "precision should recover under light load: scale {} (was \
+         {mid_scale}), p95 {}us (SLO 20000us)",
+        last.0, last.1
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn admission_sheds_only_after_precision_floor() {
+    // Floor pinned at 1.0: precision has nothing to trade, so the soft
+    // queue limit sheds immediately under a burst.
+    let control = ControlConfig {
+        enabled: true,
+        tick: Duration::from_millis(10),
+        autotuner: AutotunerConfig {
+            slo_p95_us: 20_000.0,
+            floor_scale: 1.0,
+            ..Default::default()
+        },
+        admission: AdmissionConfig {
+            queue_soft_limit: 16,
+            queue_hard_limit: 1000,
+        },
+        ..Default::default()
+    };
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: 8,
+            max_wait: Duration::from_millis(5),
+        },
+        hw: hw(4000.0),
+        averaging: AveragingMode::Time,
+        seed: 0,
+        control,
+        simulate_device_time: true,
+    };
+    let coord =
+        Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
+            .unwrap();
+    let receivers: Vec<_> =
+        (0..200).map(|_| coord.submit("synth", sample())).collect();
+    let mut shed = 0u64;
+    let mut ok = 0u64;
+    for rx in receivers {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        if resp.shed {
+            shed += 1;
+        } else {
+            ok += 1;
+        }
+    }
+    assert!(shed > 0, "burst past the soft limit at the floor must shed");
+    assert!(ok >= 16, "requests under the limit must be served, got {ok}");
+    let stats = coord.shutdown();
+    assert_eq!(stats.shed, shed);
+    assert_eq!(stats.served, ok);
+
+    // Same burst with precision room (floor 0.25) and a generous soft
+    // limit: nothing is shed — overload degrades precision instead.
+    let control = ControlConfig {
+        enabled: true,
+        tick: Duration::from_millis(10),
+        autotuner: AutotunerConfig {
+            slo_p95_us: 20_000.0,
+            floor_scale: 0.25,
+            ..Default::default()
+        },
+        admission: AdmissionConfig {
+            queue_soft_limit: 100_000,
+            queue_hard_limit: 200_000,
+        },
+        ..Default::default()
+    };
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: 8,
+            max_wait: Duration::from_millis(5),
+        },
+        hw: hw(4000.0),
+        averaging: AveragingMode::Time,
+        seed: 0,
+        control,
+        simulate_device_time: true,
+    };
+    let coord =
+        Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
+            .unwrap();
+    let receivers: Vec<_> =
+        (0..200).map(|_| coord.submit("synth", sample())).collect();
+    for rx in receivers {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(!resp.shed);
+    }
+    let stats = coord.shutdown();
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.served, 200);
+}
+
+#[test]
+fn governor_enforces_per_request_energy_budget() {
+    // Base policy spends 32000 units/request; the governor is budgeted
+    // 12000 (-> scale 0.375). The SLO is effectively infinite so only
+    // the governor constrains the scale. The quantized plan_layer
+    // prediction makes 0.375 a fixed point: K = ceil(0.375 * 16) = 6,
+    // 6 * 250 * 4 * 2 = 12000.
+    let control = ControlConfig {
+        enabled: true,
+        tick: Duration::from_millis(10),
+        window: 32,
+        max_sample_age: Duration::from_millis(800),
+        autotuner: AutotunerConfig {
+            slo_p95_us: 1e9,
+            floor_scale: 0.1,
+            step_up: 1.2,
+            cooldown_ticks: 1,
+            min_batches: 2,
+            ..Default::default()
+        },
+        governor: GovernorConfig {
+            budget_aj_per_req: Some(12_000.0),
+            budget_aj_per_s: None,
+            max_step: 0.5,
+            slack: 0.05,
+            min_batches: 2,
+        },
+        ..Default::default()
+    };
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: 8,
+            max_wait: Duration::from_millis(5),
+        },
+        hw: hw(500.0),
+        averaging: AveragingMode::Time,
+        seed: 0,
+        control,
+        simulate_device_time: true,
+    };
+    let coord =
+        Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
+            .unwrap();
+    // Light open-loop load (~500/s) while polling for convergence.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut converged = false;
+    let mut last = (0.0, 0.0);
+    while Instant::now() < deadline {
+        for _ in 0..25 {
+            drop(coord.submit("synth", sample()));
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let s = coord.stats();
+        last = (s.scales["synth"], s.window.energy_per_req);
+        if (last.0 - 0.375).abs() < 0.15
+            && last.1 < 18_000.0
+            && last.1 > 6_000.0
+        {
+            converged = true;
+            break;
+        }
+    }
+    assert!(
+        converged,
+        "governor never settled near the budget: scale {}, window \
+         energy/request {} (budget 12000)",
+        last.0, last.1
+    );
+    coord.shutdown();
+}

@@ -203,6 +203,6 @@ fn scheduler_table_roundtrip_with_real_meta() {
     let mut s = PrecisionScheduler::new();
     s.load_json(&format!("[{entry}]")).unwrap();
     let p = s.get("tiny_shufflenet").unwrap();
-    let ev = p.policy.e_vector(&bundle.meta);
+    let ev = p.policy.e_vector(&bundle.meta).unwrap();
     assert_eq!(ev.len(), bundle.meta.e_len);
 }

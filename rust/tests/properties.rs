@@ -130,6 +130,134 @@ fn prop_redundancy_area_time_duality() {
 }
 
 #[test]
+fn prop_plan_layer_k_monotone_in_energy() {
+    // Raising every requested channel energy can only raise K (and the
+    // energy actually spent), in all averaging modes, quantized or not.
+    check(
+        "K monotone in requested energy",
+        default_cases(150),
+        |r: &mut Rng| {
+            let n = gens::usize_in(r, 1, 12);
+            (
+                gens::positive_vec(r, n, 20.0),
+                gens::f32_in(r, 1.1, 4.0),
+                gens::usize_in(r, 1, 300),
+            )
+        },
+        |(e, lam, n_dot)| {
+            let hw = HardwareConfig::crossbar();
+            let lo: Vec<f64> = e.iter().map(|&v| v as f64).collect();
+            let hi: Vec<f64> = lo.iter().map(|v| v * *lam as f64).collect();
+            for mode in [
+                AveragingMode::Time,
+                AveragingMode::Spatial,
+                AveragingMode::PerRowSpatial,
+            ] {
+                for quantized in [false, true] {
+                    let p_lo = plan_layer(&hw, mode, &lo, *n_dot, 5.0, quantized);
+                    let p_hi = plan_layer(&hw, mode, &hi, *n_dot, 5.0, quantized);
+                    if p_hi.energy + 1e-9 < p_lo.energy {
+                        return Err(format!(
+                            "{mode:?} q={quantized}: energy {} < {}",
+                            p_hi.energy, p_lo.energy
+                        ));
+                    }
+                    for (a, b) in
+                        p_lo.k_per_channel.iter().zip(&p_hi.k_per_channel)
+                    {
+                        if *b + 1e-12 < *a {
+                            return Err(format!(
+                                "{mode:?} q={quantized}: K {b} < {a}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_plan_layer_cycles_area_energy_consistent() {
+    // Cross-mode accounting for the same inputs: energy must equal the
+    // K-weighted MAC sum implied by k_per_channel; time and spatial
+    // averaging agree on energy and on the cycle x area product (they
+    // spend the same resource, in different dimensions); per-row spatial
+    // is single-cycle with mean-K area and never spends more than the
+    // uniform modes.
+    check(
+        "plan_layer mode consistency",
+        default_cases(150),
+        |r: &mut Rng| {
+            let n = gens::usize_in(r, 1, 16);
+            (gens::positive_vec(r, n, 25.0), gens::usize_in(r, 1, 400))
+        },
+        |(e, n_dot)| {
+            let hw = HardwareConfig::crossbar();
+            let macs = 7.0;
+            let ef: Vec<f64> = e.iter().map(|&v| v as f64).collect();
+            let nch = ef.len() as f64;
+            let t = plan_layer(&hw, AveragingMode::Time, &ef, *n_dot, macs, true);
+            let s =
+                plan_layer(&hw, AveragingMode::Spatial, &ef, *n_dot, macs, true);
+            let p = plan_layer(
+                &hw,
+                AveragingMode::PerRowSpatial,
+                &ef,
+                *n_dot,
+                macs,
+                true,
+            );
+            let tol = 1e-9 * (1.0 + t.energy.abs());
+            // (a) energy == sum_c K_c * macs_c for every mode.
+            let t_expect = t.k_per_channel[0] * macs * nch;
+            let s_expect = s.k_per_channel[0] * macs * nch;
+            let p_expect: f64 = p.k_per_channel.iter().map(|k| k * macs).sum();
+            if (t.energy - t_expect).abs() > tol
+                || (s.energy - s_expect).abs() > tol
+                || (p.energy - p_expect).abs() > tol
+            {
+                return Err(format!(
+                    "energy != K-weighted MACs: {} {} {}",
+                    t.energy, s.energy, p.energy
+                ));
+            }
+            // (b) time/spatial duality: same energy, same cycle x area.
+            if (t.energy - s.energy).abs() > tol {
+                return Err(format!("t {} != s {}", t.energy, s.energy));
+            }
+            if (t.cycles * t.area - s.cycles * s.area).abs() > 1e-6 {
+                return Err("cycle-area product mismatch".into());
+            }
+            // (c) per-row: one cycle, mean-K area, cheapest energy.
+            if p.cycles != 1.0 {
+                return Err(format!("per-row cycles {}", p.cycles));
+            }
+            let mean_k: f64 = p.k_per_channel.iter().sum::<f64>() / nch;
+            if (p.area - p.base_tiles as f64 * mean_k).abs() > 1e-6 {
+                return Err(format!("per-row area {}", p.area));
+            }
+            if p.energy > t.energy + tol {
+                return Err(format!(
+                    "per-row {} > uniform {}",
+                    p.energy, t.energy
+                ));
+            }
+            // (d) every mode occupies at least the base tiles' resources.
+            for plan in [&t, &s, &p] {
+                if plan.cycles * plan.area + 1e-9
+                    < plan.base_tiles as f64
+                {
+                    return Err("resources below base tiles".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_json_roundtrip_numeric_arrays() {
     check(
         "json roundtrip",

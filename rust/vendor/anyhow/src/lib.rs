@@ -1,0 +1,220 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The dynaprec workspace builds with no network access, so instead of
+//! the crates.io `anyhow` this vendored shim provides the subset of the
+//! API the codebase uses: `Error`, `Result`, `anyhow!`, `bail!`,
+//! `ensure!`, and the `Context` extension trait. Error values carry a
+//! flattened message chain (outermost context first); `{e}` prints the
+//! top message, `{e:#}` the full chain joined with ": ", matching the
+//! real crate's formatting closely enough for logs and tests.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` with a defaulted error type, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamically typed error: a message plus its chain of causes.
+pub struct Error {
+    /// stack[0] is the outermost (most recent context) message; later
+    /// entries are the causes, ending with the root cause.
+    stack: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { stack: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.stack.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate the message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.stack.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.stack.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.stack.join(": "))
+        } else {
+            write!(f, "{}", self.stack.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.stack.first().map(String::as_str).unwrap_or(""))?;
+        if self.stack.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.stack[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// std::error::Error; that keeps this blanket conversion coherent.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut stack = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            stack.push(s.to_string());
+            src = s.source();
+        }
+        Error { stack }
+    }
+}
+
+mod private {
+    pub trait Sealed {}
+    impl<T, E> Sealed for std::result::Result<T, E> {}
+}
+
+/// Context extension for `Result`, mirroring `anyhow::Context`.
+pub trait Context<T, E>: private::Sealed {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+mod ext {
+    use super::{Error, StdError};
+
+    /// Either a std error or an `Error`; both can absorb context.
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+impl<T, E: ext::IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e = Error::msg("root").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root");
+    }
+
+    #[test]
+    fn from_std_error_and_question_mark() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(format!("{e}").contains("gone"));
+    }
+
+    #[test]
+    fn context_on_std_and_anyhow_results() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading x").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading x: gone");
+
+        let r: Result<()> = Err(anyhow!("inner {}", 3));
+        let e = r.with_context(|| format!("step {}", 1)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 1: inner 3");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x == 0 {
+                bail!("zero");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(format!("{}", f(0).unwrap_err()), "zero");
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative: -1");
+    }
+}

@@ -1,0 +1,240 @@
+//! Offline stub of the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The container image used for CI has no `xla_extension` C++ runtime,
+//! so this vendored crate keeps the dynaprec workspace building and the
+//! host-side tests running without it. The split:
+//!
+//! - [`Literal`] is a *real* in-memory tensor container (shape + bytes),
+//!   so literal construction/extraction round-trips work.
+//! - The PJRT types ([`PjRtClient`], [`PjRtLoadedExecutable`], ...) type-
+//!   check but return a descriptive error at compile/execute time.
+//!
+//! To run real artifacts, point the `xla` dependency of the `dynaprec`
+//! package at an xla-rs checkout with `xla_extension` installed; the
+//! API surface here matches the subset dynaprec calls.
+
+use std::error::Error as StdError;
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (implements `std::error::Error`, so `?` converts it
+/// into `anyhow::Error` at call sites).
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl StdError for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB_MSG: &str = "xla stub: PJRT runtime unavailable in the offline build \
+     (vendored rust/vendor/xla); point the `xla` dependency at a real \
+     xla-rs checkout to execute artifacts";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+}
+
+/// Element types storable in a [`Literal`] (all 4-byte here).
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        i32::from_le_bytes(bytes)
+    }
+}
+
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        u32::from_le_bytes(bytes)
+    }
+}
+
+/// In-memory tensor literal: element type, dims, little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if data.len() != n * 4 {
+            return Err(Error(format!(
+                "literal data is {} bytes but shape {:?} needs {}",
+                data.len(),
+                dims,
+                n * 4
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len() / 4
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Flatten a tuple literal. Stub literals are never tuples; this is
+    /// only reachable through execution results, which the stub never
+    /// produces.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Succeeds so host-side setup (engine construction, registry
+    /// loading) works; only compilation/execution errors out.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient(()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        // Keep the filesystem contract (missing artifact => error here).
+        std::fs::read(path.as_ref()).map_err(|e| {
+            Error(format!("reading {}: {e}", path.as_ref().display()))
+        })?;
+        Ok(HloModuleProto(()))
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.0f32, -2.5, 3.0];
+        let bytes: Vec<u8> =
+            data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let l = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(l.element_count(), 3);
+        assert_eq!(l.to_vec::<f32>().unwrap(), data.to_vec());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_has_one_element() {
+        let l = Literal::create_from_shape_and_untyped_data(
+            ElementType::U32,
+            &[],
+            &7u32.to_le_bytes(),
+        )
+        .unwrap();
+        assert_eq!(l.element_count(), 1);
+        assert_eq!(l.to_vec::<u32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let r = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2],
+            &[0u8; 4],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn runtime_paths_error_descriptively() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub-cpu");
+        let missing = HloModuleProto::from_text_file("/nonexistent/x.hlo");
+        assert!(missing.is_err());
+    }
+}
