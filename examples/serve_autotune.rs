@@ -131,6 +131,7 @@ fn main() -> Result<()> {
             },
         },
         simulate_device_time: true,
+        ..Default::default()
     };
     let coord = Coordinator::start(
         vec![ModelBundle::synthetic(meta)],

@@ -1,0 +1,165 @@
+//! Sharded fleet demo: a heterogeneous 4-device fleet (2x fast homodyne
+//! + 2x slow-but-efficient crossbar) absorbing a load ramp, with the
+//! precision control plane assigning per-model scales from fleet-wide
+//! telemetry.
+//!
+//! No artifacts are required: the fleet serves a *synthetic* model
+//! bundle (forwards return empty logits), but batching, dispatch, the
+//! per-device analog cost model and the simulated device time
+//! (redundancy-plan cycles x each device's cycle_ns) are all real.
+//! Watch batches spread across devices, each device's ledger charge its
+//! own energy, and precision degrade fleet-wide under overload instead
+//! of shedding.
+//!
+//! Run: `cargo run --release --example serve_fleet`
+//! (set DYNAPREC_CONTROL_LOG=1 to trace every controller decision)
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
+use dynaprec::control::{
+    bits_drop, AdmissionConfig, AutotunerConfig, ControlConfig,
+};
+use dynaprec::coordinator::scheduler::ModelPrecision;
+use dynaprec::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, DeviceSpec,
+    DispatchPolicy, EnergyPolicy, FleetConfig, PrecisionScheduler,
+};
+use dynaprec::data::Features;
+use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+
+const MODEL: &str = "synth_resnet";
+
+/// 2x homodyne (fast cycle, full base energy) + 2x crossbar (3x slower
+/// cycle, but base_energy 2.0 halves the redundancy K a given E needs,
+/// so each sample costs half the energy units).
+fn fleet() -> Vec<DeviceSpec> {
+    let homodyne = HardwareConfig {
+        array_rows: 256,
+        array_cols: 256,
+        cycle_ns: 4000.0,
+        base_energy_aj: 1.0,
+        model: DeviceModel::Homodyne,
+    };
+    let crossbar = HardwareConfig {
+        array_rows: 256,
+        array_cols: 256,
+        cycle_ns: 12000.0,
+        base_energy_aj: 2.0,
+        model: DeviceModel::Crossbar,
+    };
+    vec![
+        DeviceSpec::new("homodyne-0", homodyne.clone(), AveragingMode::Time),
+        DeviceSpec::new("homodyne-1", homodyne, AveragingMode::Time),
+        DeviceSpec::new("crossbar-0", crossbar.clone(), AveragingMode::Time),
+        DeviceSpec::new("crossbar-1", crossbar, AveragingMode::Time),
+    ]
+}
+
+fn phase(coord: &Coordinator, name: &str, rate_per_s: f64, dur: Duration) {
+    let gap = Duration::from_secs_f64(1.0 / rate_per_s);
+    let t0 = Instant::now();
+    let mut sent = 0u64;
+    while t0.elapsed() < dur {
+        drop(coord.submit(MODEL, Features::F32(vec![0.0; 4])));
+        sent += 1;
+        // Open-loop arrivals: pace to the offered rate, not to service.
+        let target = gap.mul_f64(sent as f64);
+        if let Some(sleep) = target.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+    }
+    // Let in-flight work and the controller settle before reading.
+    std::thread::sleep(Duration::from_millis(300));
+    let s = coord.stats();
+    let f = coord.fleet_stats();
+    let scale = s.scales[MODEL];
+    println!(
+        "\n{name}: offered={rate_per_s:.0}/s p95={:.1}ms \
+         scale={scale:.3} (-{:.2} bits) served={} shed={}",
+        s.window.p95_lat_us / 1e3,
+        bits_drop(scale),
+        s.served,
+        s.shed,
+    );
+    print!("{}", f.report());
+}
+
+fn main() -> Result<()> {
+    // Synthetic profile: 2 noise sites x 4 channels, 2000 MACs/sample.
+    // Learned per-layer energies [16, 16]: on a homodyne device a sample
+    // needs K = 16 repeats/site = 32 cycles and 32k energy units; on a
+    // base-2.0 crossbar K = 8, 16 cycles, 16k units.
+    let meta = ModelMeta::synthetic(MODEL, 16, 2, 4, 64, 250.0);
+    let mut sched = PrecisionScheduler::new();
+    sched.set(
+        MODEL,
+        ModelPrecision {
+            noise: "shot".into(),
+            policy: EnergyPolicy::PerLayer(vec![16.0, 16.0]),
+        },
+    );
+
+    // Fleet capacity at full precision: 2 x ~7.8k/s (homodyne, 128us
+    // per sample) + 2 x ~5.2k/s (crossbar, 192us) ~ 26k/s; ~4x that at
+    // the 0.25 floor. The ramp offers 40k/s: the fleet absorbs it by
+    // degrading precision instead of shedding.
+    let slo_us = 25_000.0;
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: 16,
+            max_wait: Duration::from_millis(5),
+        },
+        averaging: AveragingMode::Time,
+        control: ControlConfig {
+            enabled: true,
+            tick: Duration::from_millis(10),
+            autotuner: AutotunerConfig {
+                slo_p95_us: slo_us,
+                floor_scale: 0.25, // at most 1 noise-bit of degradation
+                step_down: 0.6,
+                step_up: 1.2,
+                headroom: 0.5,
+                cooldown_ticks: 1,
+                min_batches: 3,
+            },
+            admission: AdmissionConfig {
+                queue_soft_limit: 20_000,
+                queue_hard_limit: 200_000,
+            },
+            ..Default::default()
+        },
+        fleet: FleetConfig {
+            devices: fleet(),
+            policy: DispatchPolicy::LeastQueueDepth,
+        },
+        simulate_device_time: true,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(
+        vec![ModelBundle::synthetic(meta)],
+        sched,
+        cfg,
+    )?;
+
+    println!(
+        "4-device heterogeneous fleet, least-queue-depth dispatch; \
+         SLO p95 < {:.0}ms, precision floor 0.25 (-1.0 bits)",
+        slo_us / 1e3
+    );
+    phase(&coord, "warmup (light)", 1_500.0, Duration::from_millis(1500));
+    phase(&coord, "ramp (overload)", 40_000.0, Duration::from_millis(2500));
+    phase(&coord, "subsided (light)", 1_500.0, Duration::from_millis(2000));
+
+    let stats = coord.shutdown();
+    println!("\nfinal state:\n{}", stats.report());
+    println!(
+        "expected: all four devices serve batches (least-queue dispatch \
+         balances the slower crossbars against the faster homodynes); \
+         crossbar ledgers show ~half the energy/sample of the homodynes; \
+         under the 40k/s ramp the fleet-wide autotuner pins the scale \
+         near the 0.25 floor and recovers once load subsides."
+    );
+    Ok(())
+}

@@ -32,6 +32,7 @@ fn sample(i: u64) -> BatchSample {
         lat_mean_us: 1200.0,
         lat_max_us: 2100.0,
         energy: 2.56e5,
+        device: 0,
     }
 }
 

@@ -27,6 +27,17 @@ pub enum DeviceModel {
     BroadcastWeight,
 }
 
+impl DeviceModel {
+    /// Short stable label for fleet reports and logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            DeviceModel::Crossbar => "crossbar",
+            DeviceModel::Homodyne => "homodyne",
+            DeviceModel::BroadcastWeight => "broadcast",
+        }
+    }
+}
+
 impl HardwareConfig {
     /// Defaults mirroring the paper's reference points.
     pub fn crossbar() -> Self {
@@ -46,6 +57,16 @@ impl HardwareConfig {
             cycle_ns: 1.0,
             base_energy_aj: 1.0, // E is absolute aJ for shot noise
             model: DeviceModel::Homodyne,
+        }
+    }
+
+    pub fn broadcast_weight() -> Self {
+        HardwareConfig {
+            array_rows: 256,
+            array_cols: 256,
+            cycle_ns: 2.0,
+            base_energy_aj: 1.0, // relative units for thermal noise
+            model: DeviceModel::BroadcastWeight,
         }
     }
 
@@ -81,5 +102,16 @@ mod tests {
     fn default_noise_per_device() {
         assert_eq!(HardwareConfig::crossbar().default_noise(), "weight");
         assert_eq!(HardwareConfig::homodyne().default_noise(), "shot");
+        assert_eq!(
+            HardwareConfig::broadcast_weight().default_noise(),
+            "thermal"
+        );
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(DeviceModel::Crossbar.label(), "crossbar");
+        assert_eq!(DeviceModel::Homodyne.label(), "homodyne");
+        assert_eq!(DeviceModel::BroadcastWeight.label(), "broadcast");
     }
 }

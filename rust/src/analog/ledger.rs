@@ -42,6 +42,22 @@ impl EnergyLedger {
         e.2 += samples;
     }
 
+    /// Fold another ledger into this one (fleet aggregation: the
+    /// coordinator merges each device worker's private ledger into the
+    /// fleet-wide view without any shared-lock traffic on the hot path).
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        self.total_macs += other.total_macs;
+        self.total_energy += other.total_energy;
+        self.total_cycles += other.total_cycles;
+        self.samples += other.samples;
+        for (m, (macs, energy, samples)) in &other.per_model {
+            let e = self.per_model.entry(m.clone()).or_default();
+            e.0 += macs;
+            e.1 += energy;
+            e.2 += samples;
+        }
+    }
+
     /// Average energy/MAC across everything served so far.
     pub fn avg_energy_per_mac(&self) -> f64 {
         if self.total_macs == 0.0 {
@@ -90,5 +106,28 @@ mod tests {
     #[test]
     fn empty_ledger_is_zero() {
         assert_eq!(EnergyLedger::new().avg_energy_per_mac(), 0.0);
+    }
+
+    #[test]
+    fn merge_equals_sequential_recording() {
+        // Recording everything into one ledger and merging two
+        // per-device ledgers must agree exactly.
+        let mut all = EnergyLedger::new();
+        all.record("m1", 10, 100.0, 250.0, 5.0);
+        all.record("m2", 5, 10.0, 100.0, 1.0);
+
+        let mut a = EnergyLedger::new();
+        a.record("m1", 10, 100.0, 250.0, 5.0);
+        let mut b = EnergyLedger::new();
+        b.record("m2", 5, 10.0, 100.0, 1.0);
+        let mut merged = EnergyLedger::new();
+        merged.merge(&a);
+        merged.merge(&b);
+
+        assert_eq!(merged.samples, all.samples);
+        assert_eq!(merged.total_macs, all.total_macs);
+        assert_eq!(merged.total_energy, all.total_energy);
+        assert_eq!(merged.total_cycles, all.total_cycles);
+        assert_eq!(merged.per_model, all.per_model);
     }
 }

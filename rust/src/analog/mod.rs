@@ -5,6 +5,16 @@
 //! *architecture* that realizes a given energy/MAC: how much redundant
 //! coding (K repeats in time or space, Fig. 3) each layer needs, and what
 //! that costs in cycles, devices, area and joules.
+//!
+//! Three pieces:
+//!
+//! - [`device`] — physical constants of one analog matrix multiplier
+//!   ([`HardwareConfig`]); a fleet may mix several (see
+//!   `coordinator::fleet`).
+//! - [`redundancy`] — the Fig.-3 planner: energy request -> repetition
+//!   factor K -> cycles/area/energy ([`plan_layer`], [`plan_model`]).
+//! - [`ledger`] — serving-time accounting ([`EnergyLedger`]); each
+//!   fleet device keeps its own and the coordinator merges them.
 
 pub mod device;
 pub mod ledger;

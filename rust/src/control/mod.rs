@@ -4,8 +4,8 @@
 //! runtime-programmable property of the serving stack instead of a
 //! static table.
 //!
-//!   device loop --publishes--> TelemetryRing (per model, lock-light)
-//!                                   |
+//!   device workers --publish--> TelemetryRing (per model, lock-light,
+//!                                   |          samples device-stamped)
 //!                         control thread (this module)
 //!                    Autotuner (SLO)  +  EnergyGovernor (budget)
 //!                                   |
@@ -17,7 +17,10 @@
 //! The controller owns the *base* (learned) policies captured at
 //! startup; every decision is a uniform scale in `[floor, 1]` over the
 //! base energy vectors, predicted with `redundancy::plan_layer` before
-//! being committed.
+//! being committed. Decisions are per *model* and fleet-wide: the SLO
+//! window aggregates every device's batches, the energy-budget fit is
+//! checked against every device's hardware, and the admission gate
+//! tracks fleet-wide in-flight depth.
 
 pub mod admission;
 pub mod autotuner;
@@ -29,14 +32,17 @@ pub use autotuner::{
     bits_drop, floor_for_bits_drop, Autotuner, AutotunerConfig,
 };
 pub use governor::{EnergyGovernor, GovernorConfig};
-pub use telemetry::{window_stats, BatchSample, TelemetryRing, WindowStats};
+pub use telemetry::{
+    window_stats, window_stats_per_device, BatchSample, TelemetryRing,
+    WindowStats,
+};
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
-use crate::analog::{AveragingMode, HardwareConfig};
+use crate::coordinator::fleet::DeviceSpec;
 use crate::coordinator::scheduler::{ModelPrecision, PrecisionScheduler};
 use crate::runtime::artifact::ModelMeta;
 
@@ -133,8 +139,10 @@ pub struct ControllerCtx {
     /// Base (learned) policies snapshotted from the scheduler at start;
     /// decisions scale these, never the previously scaled table entry.
     pub base: BTreeMap<String, ModelPrecision>,
-    pub hw: HardwareConfig,
-    pub averaging: AveragingMode,
+    /// Every device in the fleet. Budget fits are conservative: a scale
+    /// must fit the per-request budget on *every* device's hardware,
+    /// since the dispatcher may route a batch anywhere.
+    pub devices: Vec<DeviceSpec>,
 }
 
 /// The control thread body: consume telemetry, decide a scale per model
@@ -188,14 +196,19 @@ pub fn control_loop(
             let mut scale = tuner.step(&w);
             if governor.enabled() {
                 scale = scale.min(governor.propose(&w, committed).min(1.0));
-                scale = governor.fit_to_request_budget(
-                    meta,
-                    &ctx.hw,
-                    ctx.averaging,
-                    &base.policy,
-                    scale,
-                    floor,
-                );
+                // Fit the per-request budget on every device: predicted
+                // cost is monotone in the scale, so applying the fits in
+                // sequence lands on a scale that fits the whole fleet.
+                for d in &ctx.devices {
+                    scale = governor.fit_to_request_budget(
+                        meta,
+                        &d.hw,
+                        d.averaging,
+                        &base.policy,
+                        scale,
+                        floor,
+                    );
+                }
             }
             let scale = scale.clamp(floor, 1.0);
             tuner.set_scale(scale);

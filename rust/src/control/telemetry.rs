@@ -9,10 +9,11 @@
 //! that keeps changing is simply skipped — this is monitoring data, and
 //! the freshest overwrite is at least as useful as the one it replaced.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-/// One dispatched batch, as observed by the device loop.
+/// One dispatched batch, as observed by the device worker that ran it.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct BatchSample {
     /// Microseconds since the ring's epoch (shared across models).
@@ -31,9 +32,11 @@ pub struct BatchSample {
     pub lat_max_us: f32,
     /// Total simulated analog energy charged to the batch (base units).
     pub energy: f64,
+    /// Fleet device id that executed the batch (0 for a single device).
+    pub device: u32,
 }
 
-const WORDS: usize = 5;
+const WORDS: usize = 6;
 
 fn pack(s: &BatchSample) -> [u64; WORDS] {
     [
@@ -43,6 +46,7 @@ fn pack(s: &BatchSample) -> [u64; WORDS] {
         ((s.lat_mean_us.to_bits() as u64) << 32)
             | s.lat_max_us.to_bits() as u64,
         s.energy.to_bits(),
+        s.device as u64,
     ]
 }
 
@@ -56,6 +60,7 @@ fn unpack(w: &[u64; WORDS]) -> BatchSample {
         lat_mean_us: f32::from_bits((w[3] >> 32) as u32),
         lat_max_us: f32::from_bits(w[3] as u32),
         energy: f64::from_bits(w[4]),
+        device: w[5] as u32,
     }
 }
 
@@ -247,6 +252,22 @@ pub fn window_stats(samples: &[BatchSample]) -> WindowStats {
     w
 }
 
+/// Windowed aggregates split by the device that executed each batch.
+/// Rings are per *model*; this regroups a (possibly multi-model)
+/// snapshot per *device* so fleet telemetry can report each shard.
+pub fn window_stats_per_device(
+    samples: &[BatchSample],
+) -> BTreeMap<u32, WindowStats> {
+    let mut by_dev: BTreeMap<u32, Vec<BatchSample>> = BTreeMap::new();
+    for s in samples {
+        by_dev.entry(s.device).or_default().push(*s);
+    }
+    by_dev
+        .into_iter()
+        .map(|(d, v)| (d, window_stats(&v)))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -263,12 +284,14 @@ mod tests {
             lat_mean_us: lat,
             lat_max_us: lat * 2.0,
             energy,
+            device: 0,
         }
     }
 
     #[test]
     fn pack_unpack_roundtrip() {
-        let s = sample(123456, 17, 250.5, 1.5e9);
+        let mut s = sample(123456, 17, 250.5, 1.5e9);
+        s.device = 3;
         assert_eq!(unpack(&pack(&s)), s);
     }
 
@@ -344,6 +367,29 @@ mod tests {
     }
 
     #[test]
+    fn per_device_split_partitions_the_window() {
+        // Device 0: 10 + 30 requests; device 1: 5 requests.
+        let mut s0 = sample(0, 10, 100.0, 100.0);
+        s0.device = 0;
+        let mut s1 = sample(1_000_000, 30, 300.0, 300.0);
+        s1.device = 0;
+        let mut s2 = sample(500_000, 5, 50.0, 25.0);
+        s2.device = 1;
+        let by_dev = window_stats_per_device(&[s0, s1, s2]);
+        assert_eq!(by_dev.len(), 2);
+        assert_eq!(by_dev[&0].served, 40);
+        assert_eq!(by_dev[&0].batches, 2);
+        assert_eq!(by_dev[&1].served, 5);
+        assert!((by_dev[&1].energy - 25.0).abs() < 1e-9);
+        // The per-device windows partition the fleet-wide one.
+        let fleet = window_stats(&[s0, s1, s2]);
+        assert_eq!(
+            fleet.served,
+            by_dev.values().map(|w| w.served).sum::<u64>()
+        );
+    }
+
+    #[test]
     fn concurrent_reads_never_tear() {
         // One writer hammers the ring with samples whose fields are all
         // derived from the same counter; readers must only ever observe
@@ -360,6 +406,7 @@ mod tests {
                     for s in ring.snapshot(32) {
                         assert_eq!(s.served as u64, s.t_us % 1000);
                         assert_eq!(s.energy, s.t_us as f64 * 3.0);
+                        assert_eq!(s.device as u64, s.t_us % 7);
                         checked += 1;
                     }
                 }
@@ -376,6 +423,7 @@ mod tests {
                 lat_mean_us: 0.0,
                 lat_max_us: 0.0,
                 energy: i as f64 * 3.0,
+                device: (i % 7) as u32,
             });
         }
         stop.store(true, Ordering::Relaxed);

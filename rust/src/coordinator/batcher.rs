@@ -2,9 +2,12 @@
 //! batch the AOT artifact was lowered for.
 //!
 //! Policy: dispatch when (a) a full batch is waiting, or (b) the oldest
-//! queued request has waited `max_wait`. Short batches are padded to the
-//! artifact batch size (padding lanes are executed but discarded — the
-//! analog ledger only charges real samples).
+//! queued request has waited `max_wait`. Short batches are padded to
+//! the artifact batch size downstream, by the device worker that
+//! executes them (padding lanes are executed but discarded — the analog
+//! ledger only charges real samples). The batcher itself never pads:
+//! the fleet dispatcher routes the short batch as-is so the worker can
+//! report true occupancy.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -72,9 +75,12 @@ impl DynamicBatcher {
         Some(self.queue.drain(..n).collect())
     }
 
-    /// Drain everything (shutdown path).
-    pub fn drain_all(&mut self) -> Vec<InferRequest> {
-        self.queue.drain(..).collect()
+    /// Pop up to one batch unconditionally (shutdown flush path). Never
+    /// exceeds `batch_size`: an oversized flush would overrun the fixed
+    /// pad buffer the executing worker assembles for the artifact.
+    pub fn drain_batch(&mut self) -> Vec<InferRequest> {
+        let n = self.queue.len().min(self.cfg.batch_size);
+        self.queue.drain(..n).collect()
     }
 }
 
@@ -137,6 +143,53 @@ mod tests {
         }
         assert_eq!(b.try_batch(now).unwrap().len(), 2);
         assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn drain_batch_chunks_an_oversized_backlog() {
+        // A shutdown flush of a deep backlog must come out in
+        // batch-size chunks — a single oversized batch would overrun
+        // the worker's fixed pad buffer.
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            batch_size: 4,
+            max_wait: Duration::from_secs(1),
+        });
+        let now = Instant::now();
+        for i in 0..10 {
+            b.push(req(i, now));
+        }
+        assert_eq!(b.drain_batch().len(), 4);
+        assert_eq!(b.drain_batch().len(), 4);
+        assert_eq!(b.drain_batch().len(), 2);
+        assert!(b.drain_batch().is_empty());
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_flush_empties_queue_and_rearms() {
+        // A deadline flush hands out a *short* batch (padded downstream
+        // by the executing worker); the queue must be fully drained and
+        // the deadline must re-arm from the next request's enqueue time.
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            batch_size: 8,
+            max_wait: Duration::from_millis(5),
+        });
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.push(req(i, t0));
+        }
+        let later = t0 + Duration::from_millis(6);
+        let batch = b.try_batch(later).expect("deadline flush");
+        assert_eq!(batch.len(), 3, "short batch, padded by the worker");
+        assert!(b.is_empty());
+        assert!(b.time_to_deadline(later).is_none());
+        // A fresh request starts a fresh deadline, not the expired one.
+        b.push(req(3, later));
+        assert!(b.try_batch(later).is_none());
+        assert_eq!(
+            b.time_to_deadline(later).unwrap(),
+            Duration::from_millis(5)
+        );
     }
 
     #[test]

@@ -1,0 +1,898 @@
+//! Sharded multi-device serving fleet.
+//!
+//! `DeviceFleet` owns N worker threads, each wrapping one simulated
+//! analog device (its own [`HardwareConfig`] + averaging mode — fleets
+//! may be heterogeneous, e.g. two fast homodyne multipliers next to two
+//! slow-but-cheap crossbars). The coordinator's dispatcher routes every
+//! batch flushed by the per-model `DynamicBatcher` to one device via a
+//! pluggable [`DispatchPolicy`]:
+//!
+//! - `RoundRobin` — rotate over devices with queue capacity left.
+//! - `LeastQueueDepth` — the device with the fewest in-flight batches.
+//! - `EnergyAware` — the device with the lowest projected energy:
+//!   accumulated [`EnergyLedger`] total + `plan_layer`-predicted cost of
+//!   this batch on that device's hardware, scaled by its queue depth so
+//!   in-flight work counts.
+//!
+//! Every device has a bounded dispatch queue (`DeviceSpec::queue_cap`,
+//! unbounded by default); a batch that finds *every* device full is
+//! rejected (responses arrive with `shed == true`), preserving the
+//! conservation invariant `served + shed == submitted`. Workers publish
+//! per-batch telemetry stamped with their device id, so the control
+//! plane sees both per-device and fleet-wide windows while the
+//! admission gate keeps watching fleet-wide queue depth.
+//!
+//! ```
+//! use dynaprec::analog::{AveragingMode, HardwareConfig};
+//! use dynaprec::coordinator::{
+//!     Coordinator, CoordinatorConfig, DeviceSpec, DispatchPolicy,
+//!     FleetConfig, PrecisionScheduler,
+//! };
+//! use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+//!
+//! let mut cfg = CoordinatorConfig::default();
+//! cfg.fleet = FleetConfig {
+//!     devices: vec![
+//!         DeviceSpec::new(
+//!             "homodyne-0",
+//!             HardwareConfig::homodyne(),
+//!             AveragingMode::Time,
+//!         ),
+//!         DeviceSpec::new(
+//!             "crossbar-0",
+//!             HardwareConfig::crossbar(),
+//!             AveragingMode::Time,
+//!         ),
+//!     ],
+//!     policy: DispatchPolicy::LeastQueueDepth,
+//! };
+//! let meta = ModelMeta::synthetic("m", 8, 2, 4, 64, 250.0);
+//! let coord = Coordinator::start(
+//!     vec![ModelBundle::synthetic(meta)],
+//!     PrecisionScheduler::new(),
+//!     cfg,
+//! )
+//! .unwrap();
+//! assert_eq!(coord.fleet_stats().devices.len(), 2);
+//! coord.shutdown();
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, PoisonError, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::analog::{
+    plan_layer, AveragingMode, EnergyLedger, HardwareConfig,
+};
+use crate::control::{
+    AdmissionGate, BatchSample, ControlShared, ModelControl, WindowStats,
+};
+use crate::coordinator::request::{InferRequest, InferResponse};
+use crate::coordinator::scheduler::PrecisionScheduler;
+use crate::data::Features;
+use crate::ops::ModelOps;
+use crate::runtime::artifact::{ModelBundle, ModelMeta};
+
+/// One device slot in the fleet: a name for reports, the simulated
+/// hardware it runs, and its dispatch-queue bound.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: String,
+    pub hw: HardwareConfig,
+    pub averaging: AveragingMode,
+    /// Batches this device will hold queued (dispatched, not yet
+    /// completed) before the dispatcher routes elsewhere. When every
+    /// device is at its cap the batch is shed. `usize::MAX` = unbounded.
+    pub queue_cap: usize,
+}
+
+impl DeviceSpec {
+    pub fn new(
+        name: impl Into<String>,
+        hw: HardwareConfig,
+        averaging: AveragingMode,
+    ) -> DeviceSpec {
+        DeviceSpec {
+            name: name.into(),
+            hw,
+            averaging,
+            queue_cap: usize::MAX,
+        }
+    }
+
+    /// Bound this device's dispatch queue (in batches).
+    pub fn with_queue_cap(mut self, cap: usize) -> DeviceSpec {
+        self.queue_cap = cap;
+        self
+    }
+}
+
+/// How the dispatcher picks a device for each flushed batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Rotate over devices that have queue capacity left.
+    RoundRobin,
+    /// Fewest in-flight batches first (throughput under load).
+    LeastQueueDepth,
+    /// Lowest projected energy: accumulated ledger total plus the
+    /// `plan_layer`-predicted cost of this batch on that device.
+    EnergyAware,
+}
+
+/// Fleet topology + dispatch policy, carried by `CoordinatorConfig`.
+/// An empty `devices` list means "one device synthesized from the
+/// coordinator's top-level `hw`/`averaging`" — the pre-fleet behavior.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub devices: Vec<DeviceSpec>,
+    pub policy: DispatchPolicy,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            devices: Vec::new(),
+            policy: DispatchPolicy::RoundRobin,
+        }
+    }
+}
+
+/// Point-in-time view of one device shard.
+#[derive(Clone, Debug)]
+pub struct DeviceStats {
+    pub id: u32,
+    pub name: String,
+    /// Device-kind label ("homodyne", "crossbar", "broadcast").
+    pub kind: &'static str,
+    /// Batches dispatched to this device and not yet completed.
+    pub pending_batches: usize,
+    pub served: u64,
+    pub batches: u64,
+    /// Requests this device rejected because the scheduled policy
+    /// failed to materialize.
+    pub rejected: u64,
+    pub ledger: EnergyLedger,
+    /// Recent telemetry window restricted to this device's batches.
+    pub window: WindowStats,
+}
+
+/// Fleet-wide snapshot: one entry per device plus the combined window.
+#[derive(Clone, Debug, Default)]
+pub struct FleetStats {
+    pub devices: Vec<DeviceStats>,
+    /// Requests shed at dispatch: full/dead fleet or unknown model.
+    pub dispatch_shed: u64,
+    /// Recent telemetry window across all devices and models.
+    pub fleet: WindowStats,
+}
+
+impl FleetStats {
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for d in &self.devices {
+            s.push_str(&format!(
+                "  dev{} {:<12} [{}] served={} batches={} pending={} \
+                 p95={:.0}us energy={:.3e} ({:.1e}/req)\n",
+                d.id,
+                d.name,
+                d.kind,
+                d.served,
+                d.batches,
+                d.pending_batches,
+                d.window.p95_lat_us,
+                d.ledger.total_energy,
+                d.window.energy_per_req,
+            ));
+        }
+        s.push_str(&format!(
+            "  fleet: {} devices, dispatch_shed={}, window served={} \
+             p95={:.0}us\n",
+            self.devices.len(),
+            self.dispatch_shed,
+            self.fleet.served,
+            self.fleet.p95_lat_us,
+        ));
+        s
+    }
+}
+
+#[derive(Debug, Default)]
+struct DeviceCounters {
+    served: u64,
+    batches: u64,
+    /// Requests rejected because the scheduled policy failed to
+    /// materialize (counted into `ServerStats::shed` so that
+    /// served + shed always equals the requests admitted).
+    policy_rejected: u64,
+    ledger: EnergyLedger,
+}
+
+struct DeviceBatch {
+    model: String,
+    batch: Vec<InferRequest>,
+    seed: u32,
+}
+
+enum WorkerMsg {
+    Batch(DeviceBatch),
+    Shutdown,
+}
+
+struct Worker {
+    spec: DeviceSpec,
+    /// Dispatch channel into the worker thread. Only the dispatcher
+    /// sends batches, but shutdown may race with it, hence the mutex.
+    tx: Mutex<Sender<WorkerMsg>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+    /// Batches dispatched to this worker and not yet completed.
+    pending: Arc<AtomicUsize>,
+    counters: Arc<Mutex<DeviceCounters>>,
+}
+
+/// N device worker threads plus the dispatch state that routes flushed
+/// batches onto them. Shared between the coordinator (stats, shutdown)
+/// and the dispatcher thread (routing); all mutation is behind atomics
+/// or per-worker locks, so `&self` suffices everywhere.
+pub struct DeviceFleet {
+    workers: Vec<Worker>,
+    policy: DispatchPolicy,
+    /// Round-robin cursor.
+    rr: AtomicUsize,
+    /// Requests shed because every device queue was at its cap.
+    rejected: AtomicU64,
+    metas: BTreeMap<String, ModelMeta>,
+    scheduler: Arc<RwLock<PrecisionScheduler>>,
+}
+
+impl DeviceFleet {
+    /// Spawn one worker thread per device spec. `bundles` are shared by
+    /// every worker (PJRT compilation/execution is thread-safe; see
+    /// `runtime::Exec`); each worker keeps its own counters and ledger.
+    pub fn start(
+        specs: &[DeviceSpec],
+        policy: DispatchPolicy,
+        bundles: Vec<ModelBundle>,
+        scheduler: Arc<RwLock<PrecisionScheduler>>,
+        shared: Arc<ControlShared>,
+        simulate_device_time: bool,
+    ) -> Result<DeviceFleet> {
+        let bundles: Arc<BTreeMap<String, ModelBundle>> = Arc::new(
+            bundles
+                .into_iter()
+                .map(|b| (b.meta.name.clone(), b))
+                .collect(),
+        );
+        let metas: BTreeMap<String, ModelMeta> = bundles
+            .iter()
+            .map(|(k, b)| (k.clone(), b.meta.clone()))
+            .collect();
+        let mut workers = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.iter().enumerate() {
+            let (tx, rx) = channel::<WorkerMsg>();
+            let pending = Arc::new(AtomicUsize::new(0));
+            let counters = Arc::new(Mutex::new(DeviceCounters::default()));
+            let handle = {
+                let spec = spec.clone();
+                let bundles = bundles.clone();
+                let scheduler = scheduler.clone();
+                let shared = shared.clone();
+                let pending = pending.clone();
+                let counters = counters.clone();
+                std::thread::Builder::new()
+                    .name(format!("dynaprec-dev{i}"))
+                    .spawn(move || {
+                        worker_loop(
+                            i as u32,
+                            spec,
+                            bundles,
+                            scheduler,
+                            shared,
+                            rx,
+                            pending,
+                            counters,
+                            simulate_device_time,
+                        )
+                    })?
+            };
+            workers.push(Worker {
+                spec: spec.clone(),
+                tx: Mutex::new(tx),
+                handle: Mutex::new(Some(handle)),
+                pending,
+                counters,
+            });
+        }
+        Ok(DeviceFleet {
+            workers,
+            policy,
+            rr: AtomicUsize::new(0),
+            rejected: AtomicU64::new(0),
+            metas,
+            scheduler,
+        })
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn policy(&self) -> DispatchPolicy {
+        self.policy
+    }
+
+    /// Requests shed at dispatch: every device queue was full (or
+    /// dead), or the request named an unknown model.
+    pub fn dispatch_shed(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Total batches dispatched and not yet completed, fleet-wide.
+    pub fn pending_batches(&self) -> usize {
+        self.workers
+            .iter()
+            .map(|w| w.pending.load(Ordering::Acquire))
+            .sum()
+    }
+
+    /// Route one flushed batch to a device per the dispatch policy.
+    /// A dead worker (panicked thread) is excluded and the batch
+    /// re-routed to the next healthy device; with every device at its
+    /// queue cap (or dead) the batch is shed: each request gets an
+    /// immediate `shed` response and the admission gate's fleet-wide
+    /// depth is released.
+    ///
+    /// Cost note: all routing work here (including the energy-aware
+    /// `plan_layer` predictions) is per *batch*, not per request, so it
+    /// amortizes over `batch_size` samples against a device execution
+    /// that is itself O(batch).
+    pub fn dispatch(
+        &self,
+        model: &str,
+        batch: Vec<InferRequest>,
+        seed: u32,
+        mc: Option<&Arc<ModelControl>>,
+    ) {
+        let n = batch.len();
+        if n == 0 {
+            return;
+        }
+        let pending: Vec<usize> = self
+            .workers
+            .iter()
+            .map(|w| w.pending.load(Ordering::Acquire))
+            .collect();
+        let mut caps: Vec<usize> =
+            self.workers.iter().map(|w| w.spec.queue_cap).collect();
+        let energy = if self.policy == DispatchPolicy::EnergyAware {
+            self.energy_scores(model, n)
+        } else {
+            vec![0.0; self.workers.len()]
+        };
+        let rr = self.rr.fetch_add(1, Ordering::Relaxed);
+        let mut batch = batch;
+        loop {
+            let Some(i) = pick_device(self.policy, rr, &pending, &caps, &energy)
+            else {
+                return self.reject(batch, mc);
+            };
+            let w = &self.workers[i];
+            w.pending.fetch_add(1, Ordering::AcqRel);
+            let sent = w
+                .tx
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .send(WorkerMsg::Batch(DeviceBatch {
+                    model: model.to_string(),
+                    batch,
+                    seed,
+                }));
+            match sent {
+                Ok(()) => return,
+                Err(e) => {
+                    // Worker gone (panicked): recover the batch, exclude
+                    // the dead device and re-route instead of shedding
+                    // while healthy devices have capacity.
+                    w.pending.fetch_sub(1, Ordering::AcqRel);
+                    caps[i] = 0;
+                    let WorkerMsg::Batch(b) = e.0 else { return };
+                    batch = b.batch;
+                }
+            }
+        }
+    }
+
+    /// Shed a single request that never formed a batch (unknown model):
+    /// counted into `dispatch_shed` so `served + shed == submitted`
+    /// still holds.
+    pub(crate) fn reject_request(&self, r: InferRequest) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        let _ = r.resp.send(InferResponse::rejected(r.id));
+    }
+
+    fn reject(
+        &self,
+        batch: Vec<InferRequest>,
+        mc: Option<&Arc<ModelControl>>,
+    ) {
+        let n = batch.len();
+        self.rejected.fetch_add(n as u64, Ordering::Relaxed);
+        for r in batch {
+            let _ = r.resp.send(InferResponse::rejected(r.id));
+        }
+        if let Some(mc) = mc {
+            mc.gate.on_complete(n);
+        }
+    }
+
+    /// Projected energy per device for one `n`-sample batch of `model`:
+    /// the device ledger's accumulated total plus the plan-predicted
+    /// cost of this batch at the currently scheduled precision, scaled
+    /// by the device's queue depth + 1 (in-flight batches will charge a
+    /// comparable amount before this one lands — without that term a
+    /// burst dispatched faster than it executes would pile onto one
+    /// device whose ledger hasn't caught up yet).
+    fn energy_scores(&self, model: &str, n: usize) -> Vec<f64> {
+        let e = {
+            let s = self
+                .scheduler
+                .read()
+                .unwrap_or_else(PoisonError::into_inner);
+            s.get(model).and_then(|p| {
+                self.metas
+                    .get(model)
+                    .and_then(|m| p.policy.e_vector(m).ok())
+            })
+        };
+        self.workers
+            .iter()
+            .map(|w| {
+                let spent = w
+                    .counters
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .ledger
+                    .total_energy;
+                let queued = w.pending.load(Ordering::Acquire) as f64 + 1.0;
+                let predicted = match (&e, self.metas.get(model)) {
+                    (Some(e), Some(meta)) => {
+                        analog_cost(meta, e, &w.spec.hw, w.spec.averaging).0
+                            * n as f64
+                    }
+                    _ => 0.0,
+                };
+                spent + predicted * queued
+            })
+            .collect()
+    }
+
+    /// Per-device counters (windows are filled in by the coordinator,
+    /// which owns the telemetry rings).
+    pub fn device_stats(&self) -> Vec<DeviceStats> {
+        self.workers
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let c = w
+                    .counters
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner);
+                DeviceStats {
+                    id: i as u32,
+                    name: w.spec.name.clone(),
+                    kind: w.spec.hw.model.label(),
+                    pending_batches: w.pending.load(Ordering::Acquire),
+                    served: c.served,
+                    batches: c.batches,
+                    rejected: c.policy_rejected,
+                    ledger: c.ledger.clone(),
+                    window: WindowStats::default(),
+                }
+            })
+            .collect()
+    }
+
+    /// Fleet-wide counter aggregation:
+    /// (served, batches, policy_rejected, merged ledger).
+    pub(crate) fn aggregate(&self) -> (u64, u64, u64, EnergyLedger) {
+        let mut served = 0u64;
+        let mut batches = 0u64;
+        let mut policy_rejected = 0u64;
+        let mut ledger = EnergyLedger::new();
+        for w in &self.workers {
+            let c = w.counters.lock().unwrap_or_else(PoisonError::into_inner);
+            served += c.served;
+            batches += c.batches;
+            policy_rejected += c.policy_rejected;
+            ledger.merge(&c.ledger);
+        }
+        (served, batches, policy_rejected, ledger)
+    }
+
+    /// Flush outstanding batches and join every worker. Idempotent.
+    pub fn shutdown(&self) {
+        for w in &self.workers {
+            let _ = w
+                .tx
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .send(WorkerMsg::Shutdown);
+        }
+        for w in &self.workers {
+            let handle = w
+                .handle
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .take();
+            if let Some(h) = handle {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for DeviceFleet {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Pure device selection: pick among devices whose `pending` is under
+/// their cap. Factored out of `dispatch` so policies are unit-testable
+/// without threads.
+fn pick_device(
+    policy: DispatchPolicy,
+    rr: usize,
+    pending: &[usize],
+    caps: &[usize],
+    energy: &[f64],
+) -> Option<usize> {
+    let avail: Vec<usize> = (0..pending.len())
+        .filter(|&i| pending[i] < caps[i])
+        .collect();
+    if avail.is_empty() {
+        return None;
+    }
+    let pick = match policy {
+        DispatchPolicy::RoundRobin => avail[rr % avail.len()],
+        DispatchPolicy::LeastQueueDepth => {
+            *avail.iter().min_by_key(|&&i| pending[i]).unwrap()
+        }
+        DispatchPolicy::EnergyAware => *avail
+            .iter()
+            .min_by(|&&a, &&b| {
+                energy[a]
+                    .partial_cmp(&energy[b])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap(),
+    };
+    Some(pick)
+}
+
+/// Decrements a worker's pending-batch count when dropped, so a panic
+/// inside batch execution cannot leak the count and permanently skew
+/// dispatch decisions (or wedge a `queue_cap`-bounded device shut).
+struct PendingGuard<'a>(&'a AtomicUsize);
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    device: u32,
+    spec: DeviceSpec,
+    bundles: Arc<BTreeMap<String, ModelBundle>>,
+    scheduler: Arc<RwLock<PrecisionScheduler>>,
+    shared: Arc<ControlShared>,
+    rx: Receiver<WorkerMsg>,
+    pending: Arc<AtomicUsize>,
+    counters: Arc<Mutex<DeviceCounters>>,
+    simulate_device_time: bool,
+) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Batch(b) => {
+                let _guard = PendingGuard(&pending);
+                if let Some(bundle) = bundles.get(&b.model) {
+                    execute_batch(
+                        device,
+                        &spec,
+                        bundle,
+                        &scheduler,
+                        b.batch,
+                        b.seed,
+                        &counters,
+                        shared.get(&b.model),
+                        simulate_device_time,
+                    );
+                } else {
+                    // The dispatcher only routes models it has bundles
+                    // for; answer defensively instead of hanging clients.
+                    for r in b.batch {
+                        let _ = r.resp.send(InferResponse::rejected(r.id));
+                    }
+                }
+            }
+            WorkerMsg::Shutdown => break,
+        }
+    }
+}
+
+/// How this batch will execute: which artifact, at which energies.
+enum BatchPlan {
+    /// No precision scheduled: clean fp forward, no analog cost.
+    Fp,
+    Noisy { tag: String, e: Vec<f32> },
+}
+
+/// Releases the admission gate's fleet-wide depth for one batch when
+/// dropped — every exit path of `execute_batch` (success, policy
+/// rejection, panic mid-execute) must give the depth back exactly once.
+struct GateGuard {
+    gate: Option<Arc<AdmissionGate>>,
+    n: usize,
+}
+
+impl Drop for GateGuard {
+    fn drop(&mut self) {
+        if let Some(g) = &self.gate {
+            g.on_complete(self.n);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn execute_batch(
+    device: u32,
+    spec: &DeviceSpec,
+    bundle: &ModelBundle,
+    scheduler: &Arc<RwLock<PrecisionScheduler>>,
+    batch: Vec<InferRequest>,
+    seed: u32,
+    counters: &Arc<Mutex<DeviceCounters>>,
+    mc: Option<&Arc<ModelControl>>,
+    simulate_device_time: bool,
+) {
+    let meta = &bundle.meta;
+    let bsz = meta.batch;
+    let n = batch.len();
+    let gate_guard = GateGuard { gate: mc.map(|m| m.gate.clone()), n };
+
+    // Read the scheduled precision; the read guard is dropped before
+    // execution so the control thread can swap policies between batches.
+    let plan = {
+        let s = scheduler.read().unwrap_or_else(PoisonError::into_inner);
+        match s.get(&meta.name) {
+            None => Ok(BatchPlan::Fp),
+            Some(p) => match p.policy.e_vector(meta) {
+                Ok(e) => Ok(BatchPlan::Noisy {
+                    tag: format!("{}.fwd", p.noise),
+                    e,
+                }),
+                Err(err) => Err(format!("{err:#}")),
+            },
+        }
+    };
+    let plan = match plan {
+        Ok(p) => p,
+        Err(msg) => {
+            // A malformed policy fails the batch, not the worker thread.
+            eprintln!(
+                "dynaprec: bad precision policy for {}: {msg}; \
+                 rejecting batch",
+                meta.name
+            );
+            counters
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .policy_rejected += n as u64;
+            for r in batch {
+                let _ = r.resp.send(InferResponse::rejected(r.id));
+            }
+            return; // gate_guard releases the admitted depth
+        }
+    };
+
+    // Assemble (and pad) the feature buffer.
+    let sample = match &batch[0].x {
+        Features::F32(v) => v.len(),
+        Features::I32(v) => v.len(),
+    };
+    let x = match &batch[0].x {
+        Features::F32(_) => {
+            let mut buf = vec![0.0f32; bsz * sample];
+            for (i, r) in batch.iter().enumerate() {
+                if let Features::F32(v) = &r.x {
+                    buf[i * sample..(i + 1) * sample].copy_from_slice(v);
+                }
+            }
+            Features::F32(buf)
+        }
+        Features::I32(_) => {
+            let mut buf = vec![0i32; bsz * sample];
+            for (i, r) in batch.iter().enumerate() {
+                if let Features::I32(v) = &r.x {
+                    buf[i * sample..(i + 1) * sample].copy_from_slice(v);
+                }
+            }
+            Features::I32(buf)
+        }
+    };
+
+    let ops = ModelOps::new(bundle);
+    let t_exec = Instant::now();
+    let logits = match &plan {
+        BatchPlan::Fp => ops.fwd_simple("fwd_fp", &x),
+        BatchPlan::Noisy { tag, e } => ops.fwd_noisy(tag, &x, seed, e),
+    };
+
+    // Simulated analog cost on *this* device: energy from the scheduled
+    // e-vector, cycles from the redundant-coding plan over all sites.
+    let (energy_per_sample, cycles) = match &plan {
+        BatchPlan::Fp => (0.0, 0.0),
+        BatchPlan::Noisy { e, .. } => {
+            analog_cost(meta, e, &spec.hw, spec.averaging)
+        }
+    };
+    if simulate_device_time {
+        let ns = cycles * spec.hw.cycle_ns * n as f64;
+        if ns >= 1.0 {
+            std::thread::sleep(Duration::from_nanos(ns as u64));
+        }
+    }
+    let exec_us = t_exec.elapsed().as_micros() as f64;
+
+    let classes = match &logits {
+        Ok(l) => l.len() / bsz,
+        Err(_) => 0,
+    };
+    let done = Instant::now();
+    let occupancy = n as f64 / bsz as f64;
+    let mut lat_sum = 0.0f64;
+    let mut lat_max = 0.0f64;
+    {
+        let mut c = counters.lock().unwrap_or_else(PoisonError::into_inner);
+        c.batches += 1;
+        c.ledger.record(
+            &meta.name,
+            n as u64,
+            meta.total_macs,
+            energy_per_sample,
+            cycles,
+        );
+        for (i, r) in batch.into_iter().enumerate() {
+            let latency = done.duration_since(r.enqueued).as_micros() as u64;
+            lat_sum += latency as f64;
+            lat_max = lat_max.max(latency as f64);
+            c.served += 1;
+            let row = match &logits {
+                Ok(l) => l[i * classes..(i + 1) * classes].to_vec(),
+                Err(_) => vec![],
+            };
+            let _ = r.resp.send(InferResponse::from_logits(
+                r.id,
+                row,
+                latency,
+                n,
+                energy_per_sample,
+                device,
+            ));
+        }
+    }
+    // Release the gate before sampling so the telemetry queue depth
+    // reflects this batch's completion.
+    drop(gate_guard);
+    if let Some(mc) = mc {
+        mc.ring.push(&BatchSample {
+            t_us: mc.ring.now_us(),
+            served: n as u32,
+            queue_depth: mc.gate.depth() as u32,
+            occupancy: occupancy as f32,
+            exec_us: exec_us as f32,
+            lat_mean_us: (lat_sum / n as f64) as f32,
+            lat_max_us: lat_max as f32,
+            energy: energy_per_sample * n as f64,
+            device,
+        });
+    }
+}
+
+/// Energy per sample + simulated cycles for a materialized e-vector on
+/// one device's hardware (continuous K, matching the ledger's charge).
+pub(crate) fn analog_cost(
+    meta: &ModelMeta,
+    e: &[f32],
+    hw: &HardwareConfig,
+    averaging: AveragingMode,
+) -> (f64, f64) {
+    let mut energy = 0.0;
+    let mut cycles = 0.0;
+    for (_, site) in meta.noise_sites() {
+        let es: Vec<f64> = e[site.e_offset..site.e_offset + site.n_channels]
+            .iter()
+            .map(|&v| v as f64)
+            .collect();
+        let plan = plan_layer(
+            hw,
+            averaging,
+            &es,
+            site.n_dot,
+            site.macs_per_channel,
+            false,
+        );
+        energy += plan.energy;
+        cycles += plan.cycles;
+    }
+    (energy, cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_rotates_and_skips_full() {
+        let pending = [0usize, 5, 0];
+        let caps = [10usize, 5, 10]; // device 1 is at its cap
+        let e = [0.0f64; 3];
+        let p = DispatchPolicy::RoundRobin;
+        // Available devices are {0, 2}; the cursor alternates over them.
+        assert_eq!(pick_device(p, 0, &pending, &caps, &e), Some(0));
+        assert_eq!(pick_device(p, 1, &pending, &caps, &e), Some(2));
+        assert_eq!(pick_device(p, 2, &pending, &caps, &e), Some(0));
+    }
+
+    #[test]
+    fn least_queue_depth_picks_min_pending() {
+        let pending = [3usize, 1, 2];
+        let caps = [usize::MAX; 3];
+        let e = [0.0f64; 3];
+        let p = DispatchPolicy::LeastQueueDepth;
+        assert_eq!(pick_device(p, 7, &pending, &caps, &e), Some(1));
+    }
+
+    #[test]
+    fn energy_aware_picks_cheapest_available() {
+        let pending = [0usize, 0, 0];
+        let mut caps = [usize::MAX; 3];
+        let e = [30.0f64, 10.0, 20.0];
+        let p = DispatchPolicy::EnergyAware;
+        assert_eq!(pick_device(p, 0, &pending, &caps, &e), Some(1));
+        // The cheapest device at its cap falls to the next cheapest.
+        caps[1] = 0;
+        assert_eq!(pick_device(p, 0, &pending, &caps, &e), Some(2));
+    }
+
+    #[test]
+    fn all_full_sheds() {
+        let pending = [1usize, 1];
+        let caps = [1usize, 1];
+        let e = [0.0f64; 2];
+        for p in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::LeastQueueDepth,
+            DispatchPolicy::EnergyAware,
+        ] {
+            assert_eq!(pick_device(p, 0, &pending, &caps, &e), None);
+        }
+    }
+
+    #[test]
+    fn spec_builder_bounds_queue() {
+        let s = DeviceSpec::new(
+            "d0",
+            HardwareConfig::homodyne(),
+            AveragingMode::Time,
+        );
+        assert_eq!(s.queue_cap, usize::MAX);
+        assert_eq!(s.with_queue_cap(4).queue_cap, 4);
+    }
+}

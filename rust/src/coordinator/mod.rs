@@ -1,31 +1,46 @@
 //! L3 coordinator: the serving stack that makes dynamic precision a
 //! *programmable* property of the accelerator (the paper's Sec. IV
-//! proposal, realized as a router + batcher + precision scheduler).
+//! proposal, realized as a router + batcher + precision scheduler over
+//! a sharded device fleet).
 //!
-//! Architecture (one accelerator, one queue):
+//! Architecture (N devices, one dispatcher):
 //!
-//!   clients -> Router -> per-model DynamicBatcher -> device thread
+//!   clients -> Router -> per-model DynamicBatcher -> dispatcher
 //!              | ^                ^                      |
-//!   AdmissionGate |      PrecisionScheduler     PJRT execute (noisy fwd)
-//!              |  |      (per-layer/channel E)          |
-//!              |  |               ^         TelemetryRing + EnergyLedger
+//!   AdmissionGate |      PrecisionScheduler      DispatchPolicy
+//!   (fleet-wide   |      (per-layer/channel E)   (round-robin /
+//!    queue depth) |               ^               least-queue /
+//!              |  |               |               energy-aware)
+//!              |  |               |                 /   |   \
+//!              |  |               |            device workers 0..N
+//!              |  |               |            (own HardwareConfig,
+//!              |  |               |             EnergyLedger; PJRT
+//!              |  |               |             execute noisy fwd)
 //!              |  |               |                     |
+//!              |  |               |     TelemetryRing (device-stamped)
 //!              |  +---- control thread (crate::control) <--+
 //!              |        autotuner (SLO) + energy governor
 //!              +------- responses -> clients
 //!
-//! The device thread owns the PJRT executables (they are !Send by
-//! construction); everything else communicates via channels. The
-//! optional control plane (see `crate::control`) closes the loop from
-//! batch telemetry back into the scheduler: precision degrades first
-//! under overload, admission sheds last.
+//! The dispatcher owns the batchers; each device worker owns its
+//! simulated hardware and private counters (PJRT executables are shared
+//! across workers — the PJRT API contract makes compile/execute
+//! thread-safe; see `runtime::Exec`). Everything else communicates via
+//! channels. The optional control plane (see `crate::control`) closes
+//! the loop from batch telemetry back into the scheduler: precision
+//! degrades first under overload, admission sheds last.
 
 pub mod batcher;
+pub mod fleet;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use fleet::{
+    DeviceFleet, DeviceSpec, DeviceStats, DispatchPolicy, FleetConfig,
+    FleetStats,
+};
 pub use request::{InferRequest, InferResponse};
 pub use scheduler::{EnergyPolicy, PrecisionScheduler};
 pub use server::{Coordinator, CoordinatorConfig, ServerStats};

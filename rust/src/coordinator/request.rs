@@ -28,6 +28,9 @@ pub struct InferResponse {
     pub batch_size: usize,
     /// Simulated analog energy spent on this sample (base units).
     pub energy: f64,
+    /// Fleet device id that executed the batch (`u32::MAX` when the
+    /// request was shed and never reached a device).
+    pub device: u32,
     /// True when admission control rejected the request (no inference
     /// ran); overload sheds only after precision has hit its floor.
     pub shed: bool,
@@ -40,6 +43,7 @@ impl InferResponse {
         latency_us: u64,
         batch_size: usize,
         energy: f64,
+        device: u32,
     ) -> Self {
         let pred = logits
             .iter()
@@ -54,11 +58,13 @@ impl InferResponse {
             latency_us,
             batch_size,
             energy,
+            device,
             shed: false,
         }
     }
 
-    /// Immediate rejection from the router's admission gate.
+    /// Immediate rejection (admission gate, full fleet, or a policy
+    /// that failed to materialize).
     pub fn rejected(id: u64) -> Self {
         InferResponse {
             id,
@@ -67,6 +73,7 @@ impl InferResponse {
             latency_us: 0,
             batch_size: 0,
             energy: 0.0,
+            device: u32::MAX,
             shed: true,
         }
     }
@@ -78,10 +85,12 @@ mod tests {
 
     #[test]
     fn argmax_pred() {
-        let r = InferResponse::from_logits(1, vec![0.1, 0.7, 0.2], 10, 4, 1.0);
+        let r =
+            InferResponse::from_logits(1, vec![0.1, 0.7, 0.2], 10, 4, 1.0, 2);
         assert_eq!(r.pred, 1);
+        assert_eq!(r.device, 2);
         assert!(!r.shed);
-        let r = InferResponse::from_logits(2, vec![], 10, 4, 1.0);
+        let r = InferResponse::from_logits(2, vec![], 10, 4, 1.0, 0);
         assert_eq!(r.pred, -1);
     }
 
@@ -91,6 +100,7 @@ mod tests {
         assert!(r.shed);
         assert_eq!(r.id, 7);
         assert_eq!(r.pred, -1);
+        assert_eq!(r.device, u32::MAX);
         assert!(r.logits.is_empty());
     }
 }

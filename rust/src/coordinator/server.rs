@@ -1,51 +1,62 @@
-//! The coordinator proper: router -> batcher -> device thread, plus the
+//! The coordinator proper: router -> batcher -> device fleet, plus the
 //! precision control plane.
 //!
-//! `Coordinator::start` spawns the device thread, which owns every
-//! PJRT executable (they hold raw pointers; see runtime::Exec). Clients
-//! submit `InferRequest`s through a cloneable `Sender`; the device loop
-//! drains the channel, batches per model, executes the scheduled noisy
-//! forward and replies on each request's response channel.
+//! `Coordinator::start` spawns a dispatcher thread (owns the per-model
+//! `DynamicBatcher`s) and a [`DeviceFleet`] of device worker threads
+//! (each owns its own simulated hardware; PJRT executables are shared —
+//! see `runtime::Exec`). Clients submit `InferRequest`s through a
+//! cloneable `Sender`; the dispatcher drains the channel, batches per
+//! model, and routes every flushed batch to a device by the configured
+//! [`DispatchPolicy`]; the worker executes the scheduled noisy forward
+//! and replies on each request's response channel.
 //!
 //! With `CoordinatorConfig::control.enabled` a control thread also runs:
-//! the device loop publishes per-batch telemetry into a lock-light ring,
-//! the controller (autotuner + energy governor) hot-swaps scaled
-//! precision policies through the shared `PrecisionScheduler` between
-//! batches, and the router consults a per-model admission gate so
+//! workers publish per-batch telemetry (stamped with their device id)
+//! into lock-light rings, the controller (autotuner + energy governor)
+//! hot-swaps scaled precision policies through the shared
+//! `PrecisionScheduler` between batches, and the router consults a
+//! per-model admission gate watching *fleet-wide* queue depth, so
 //! overload degrades precision first and sheds load last.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::analog::{plan_layer, AveragingMode, EnergyLedger, HardwareConfig};
+use crate::analog::{AveragingMode, EnergyLedger, HardwareConfig};
 use crate::control::{
-    control_loop, window_stats, BatchSample, ControlConfig, ControllerCtx,
-    ControlShared, ModelControl, Verdict, WindowStats,
+    control_loop, window_stats, window_stats_per_device, BatchSample,
+    ControlConfig, ControlShared, ControllerCtx, Verdict, WindowStats,
 };
 use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher};
+use crate::coordinator::fleet::{
+    DeviceFleet, DeviceSpec, FleetConfig, FleetStats,
+};
 use crate::coordinator::request::{InferRequest, InferResponse};
 use crate::coordinator::scheduler::PrecisionScheduler;
 use crate::data::Features;
-use crate::ops::ModelOps;
 use crate::runtime::artifact::{ModelBundle, ModelMeta};
 
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     pub batcher: BatcherConfig,
+    /// Hardware of the default single device (used when `fleet.devices`
+    /// is empty — the pre-fleet one-accelerator configuration).
     pub hw: HardwareConfig,
     pub averaging: AveragingMode,
     /// Base seed for the per-batch noise streams.
     pub seed: u64,
     /// Precision control plane (disabled by default).
     pub control: ControlConfig,
+    /// Device fleet topology + dispatch policy. Empty `devices` means
+    /// one device built from `hw`/`averaging` above.
+    pub fleet: FleetConfig,
     /// Sleep out the simulated analog execution time (plan cycles x
-    /// `hw.cycle_ns` x batch) in the device loop. This makes the
+    /// `hw.cycle_ns` x batch) in each device worker. This makes the
     /// precision <-> throughput coupling physically observable without
     /// hardware; leave off when serving real artifacts.
     pub simulate_device_time: bool,
@@ -59,22 +70,41 @@ impl Default for CoordinatorConfig {
             averaging: AveragingMode::PerRowSpatial,
             seed: 0,
             control: ControlConfig::default(),
+            fleet: FleetConfig::default(),
             simulate_device_time: false,
         }
     }
 }
 
-/// Aggregated serving statistics: lifetime counters + the energy ledger
-/// + a recent-window view derived from the telemetry rings (the rings
-/// replaced the old unbounded per-request accumulation).
+impl CoordinatorConfig {
+    /// The effective device list: the configured fleet, or one device
+    /// synthesized from the top-level `hw`/`averaging`.
+    pub fn device_specs(&self) -> Vec<DeviceSpec> {
+        if self.fleet.devices.is_empty() {
+            vec![DeviceSpec::new(
+                "device-0",
+                self.hw.clone(),
+                self.averaging,
+            )]
+        } else {
+            self.fleet.devices.clone()
+        }
+    }
+}
+
+/// Aggregated serving statistics: lifetime counters + the merged
+/// per-device energy ledgers + a recent-window view derived from the
+/// telemetry rings (the rings replaced the old unbounded per-request
+/// accumulation).
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
     pub served: u64,
-    /// Requests rejected by admission control.
+    /// Requests rejected: admission gate + full fleet + bad policies.
     pub shed: u64,
     pub batches: u64,
     pub ledger: EnergyLedger,
-    /// Stats over the most recent telemetry window (across all models).
+    /// Stats over the most recent telemetry window (across all models
+    /// and devices).
     pub window: WindowStats,
     /// Current control-plane precision scale per model (1.0 = the full
     /// learned policy).
@@ -119,17 +149,6 @@ impl ServerStats {
     }
 }
 
-#[derive(Debug, Default)]
-struct DeviceCounters {
-    served: u64,
-    batches: u64,
-    /// Requests rejected because the scheduled policy failed to
-    /// materialize (counted into `ServerStats::shed` so that
-    /// served + shed always equals the requests admitted + rejected).
-    policy_rejected: u64,
-    ledger: EnergyLedger,
-}
-
 enum Msg {
     Req(InferRequest),
     Shutdown,
@@ -138,10 +157,10 @@ enum Msg {
 /// Handle to a running coordinator.
 pub struct Coordinator {
     tx: Sender<Msg>,
-    device: Option<JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<()>>,
     controller: Option<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
-    counters: Arc<Mutex<DeviceCounters>>,
+    fleet: Arc<DeviceFleet>,
     shared: Arc<ControlShared>,
     scheduler: Arc<RwLock<PrecisionScheduler>>,
     control_enabled: bool,
@@ -150,9 +169,29 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Spawn the device thread (and, if enabled, the control thread).
-    /// `bundles` move into the device thread; `scheduler` becomes shared
-    /// behind a `RwLock` so the control plane can hot-swap policies.
+    /// Spawn the device fleet, the dispatcher thread and (if enabled)
+    /// the control thread. `bundles` are shared by every device worker;
+    /// `scheduler` becomes shared behind a `RwLock` so the control
+    /// plane can hot-swap policies.
+    ///
+    /// ```
+    /// use dynaprec::coordinator::{
+    ///     Coordinator, CoordinatorConfig, PrecisionScheduler,
+    /// };
+    /// use dynaprec::data::Features;
+    /// use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+    ///
+    /// let meta = ModelMeta::synthetic("m", 8, 2, 4, 64, 250.0);
+    /// let coord = Coordinator::start(
+    ///     vec![ModelBundle::synthetic(meta)],
+    ///     PrecisionScheduler::new(),
+    ///     CoordinatorConfig::default(),
+    /// )
+    /// .unwrap();
+    /// let rx = coord.submit("m", Features::F32(vec![0.0; 4]));
+    /// assert!(!rx.recv().unwrap().shed);
+    /// assert_eq!(coord.shutdown().served, 1);
+    /// ```
     pub fn start(
         bundles: Vec<ModelBundle>,
         scheduler: PrecisionScheduler,
@@ -162,22 +201,29 @@ impl Coordinator {
             .iter()
             .map(|b| (b.meta.name.clone(), b.meta.clone()))
             .collect();
+        let specs = cfg.device_specs();
         let shared = ControlShared::new(metas.keys(), &cfg.control);
         let scheduler = Arc::new(RwLock::new(scheduler));
         let (tx, rx) = channel::<Msg>();
-        let counters = Arc::new(Mutex::new(DeviceCounters::default()));
         let stop = Arc::new(AtomicBool::new(false));
 
-        let device = {
-            let scheduler = scheduler.clone();
-            let counters = counters.clone();
+        let fleet = Arc::new(DeviceFleet::start(
+            &specs,
+            cfg.fleet.policy,
+            bundles,
+            scheduler.clone(),
+            shared.clone(),
+            cfg.simulate_device_time,
+        )?);
+
+        let dispatcher = {
+            let fleet = fleet.clone();
             let shared = shared.clone();
+            let metas = metas.clone();
             let cfg = cfg.clone();
             std::thread::Builder::new()
-                .name("dynaprec-device".into())
-                .spawn(move || {
-                    device_loop(bundles, scheduler, cfg, rx, counters, shared)
-                })?
+                .name("dynaprec-dispatch".into())
+                .spawn(move || dispatcher_loop(metas, fleet, cfg, rx, shared))?
         };
 
         let controller = if cfg.control.enabled {
@@ -192,12 +238,7 @@ impl Coordinator {
                     })
                     .collect()
             };
-            let ctx = ControllerCtx {
-                metas,
-                base,
-                hw: cfg.hw.clone(),
-                averaging: cfg.averaging,
-            };
+            let ctx = ControllerCtx { metas, base, devices: specs };
             let control_cfg = cfg.control.clone();
             let shared = shared.clone();
             let scheduler = scheduler.clone();
@@ -215,10 +256,10 @@ impl Coordinator {
 
         Ok(Coordinator {
             tx,
-            device: Some(device),
+            dispatcher: Some(dispatcher),
             controller,
             stop,
-            counters,
+            fleet,
             shared,
             scheduler,
             control_enabled: cfg.control.enabled,
@@ -260,7 +301,7 @@ impl Coordinator {
         self.scheduler.clone()
     }
 
-    /// Recent-window telemetry for one model.
+    /// Recent-window telemetry for one model (across all devices).
     pub fn telemetry(&self, model: &str) -> Option<WindowStats> {
         self.shared
             .get(model)
@@ -268,11 +309,9 @@ impl Coordinator {
     }
 
     pub fn stats(&self) -> ServerStats {
-        let (served, batches, policy_rejected, ledger) = {
-            let c = self.counters.lock().unwrap();
-            (c.served, c.batches, c.policy_rejected, c.ledger.clone())
-        };
-        let mut shed = policy_rejected;
+        let (served, batches, policy_rejected, ledger) =
+            self.fleet.aggregate();
+        let mut shed = policy_rejected + self.fleet.dispatch_shed();
         let mut scales = BTreeMap::new();
         let mut samples: Vec<BatchSample> = Vec::new();
         for (m, mc) in &self.shared.models {
@@ -291,7 +330,30 @@ impl Coordinator {
         }
     }
 
-    /// Flush outstanding work and join the device + control threads.
+    /// Per-device shard view: counters + ledger per device, each
+    /// device's recent telemetry window, and the fleet-wide window.
+    pub fn fleet_stats(&self) -> FleetStats {
+        let mut samples: Vec<BatchSample> = Vec::new();
+        for mc in self.shared.models.values() {
+            samples.extend(mc.ring.snapshot(self.window));
+        }
+        samples.sort_by_key(|s| s.t_us);
+        let per_dev = window_stats_per_device(&samples);
+        let mut devices = self.fleet.device_stats();
+        for d in devices.iter_mut() {
+            if let Some(w) = per_dev.get(&d.id) {
+                d.window = w.clone();
+            }
+        }
+        FleetStats {
+            devices,
+            dispatch_shed: self.fleet.dispatch_shed(),
+            fleet: window_stats(&samples),
+        }
+    }
+
+    /// Flush outstanding work and join dispatcher, fleet and control
+    /// threads.
     pub fn shutdown(mut self) -> ServerStats {
         self.stop_threads();
         self.stats()
@@ -299,9 +361,12 @@ impl Coordinator {
 
     fn stop_threads(&mut self) {
         let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.device.take() {
+        if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
+        // The dispatcher has flushed every batcher into the fleet;
+        // workers drain their queues before honoring shutdown.
+        self.fleet.shutdown();
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.controller.take() {
             let _ = h.join();
@@ -315,25 +380,20 @@ impl Drop for Coordinator {
     }
 }
 
-fn device_loop(
-    bundles: Vec<ModelBundle>,
-    scheduler: Arc<RwLock<PrecisionScheduler>>,
+fn dispatcher_loop(
+    metas: BTreeMap<String, ModelMeta>,
+    fleet: Arc<DeviceFleet>,
     cfg: CoordinatorConfig,
     rx: Receiver<Msg>,
-    counters: Arc<Mutex<DeviceCounters>>,
     shared: Arc<ControlShared>,
 ) {
-    let bundles: BTreeMap<String, ModelBundle> = bundles
-        .into_iter()
-        .map(|b| (b.meta.name.clone(), b))
-        .collect();
     // Per-model batchers, batch size clamped to the artifact's lowered
     // batch so an oversized global config can't overrun the pad buffer.
-    let mut batchers: BTreeMap<String, DynamicBatcher> = bundles
+    let mut batchers: BTreeMap<String, DynamicBatcher> = metas
         .iter()
-        .map(|(k, b)| {
+        .map(|(k, m)| {
             let mut bc = cfg.batcher.clone();
-            bc.batch_size = bc.batch_size.min(b.meta.batch).max(1);
+            bc.batch_size = bc.batch_size.min(m.batch).max(1);
             (k.clone(), DynamicBatcher::new(bc))
         })
         .collect();
@@ -353,10 +413,9 @@ fn device_loop(
             if let Some(b) = batchers.get_mut(&r.model) {
                 b.push(r);
             } else {
-                // Unknown model: reply with empty logits.
-                let _ = r
-                    .resp
-                    .send(InferResponse::from_logits(r.id, vec![], 0, 0, 0.0));
+                // Unknown model: shed (and count it), so that
+                // served + shed == submitted still holds.
+                fleet.reject_request(r);
             }
         };
         match rx.recv_timeout(wait) {
@@ -365,7 +424,7 @@ fn device_loop(
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => shutdown = true,
         }
-        // Drain the backlog non-blockingly: while the device was busy
+        // Drain the backlog non-blockingly: while the fleet was busy
         // executing, requests piled up in the channel — without this,
         // each loop iteration admits one request and the age-based flush
         // dispatches degenerate 1-sample batches under load.
@@ -375,12 +434,14 @@ fn device_loop(
                 Msg::Shutdown => shutdown = true,
             }
         }
-        // Dispatch every ready batch (on shutdown, flush everything).
+        // Route every ready batch (on shutdown, flush everything in
+        // batch-size chunks — an oversized flush would overrun the
+        // worker's fixed pad buffer).
         let now = Instant::now();
         for (model, b) in batchers.iter_mut() {
             loop {
                 let batch = if shutdown {
-                    let v = b.drain_all();
+                    let v = b.drain_batch();
                     if v.is_empty() {
                         None
                     } else {
@@ -391,196 +452,8 @@ fn device_loop(
                 };
                 let Some(batch) = batch else { break };
                 seed = seed.wrapping_add(1);
-                execute_batch(
-                    &bundles[model],
-                    &scheduler,
-                    &cfg,
-                    batch,
-                    seed,
-                    &counters,
-                    shared.get(model),
-                );
+                fleet.dispatch(model, batch, seed, shared.get(model));
             }
         }
     }
-}
-
-/// How this batch will execute: which artifact, at which energies.
-enum BatchPlan {
-    /// No precision scheduled: clean fp forward, no analog cost.
-    Fp,
-    Noisy { tag: String, e: Vec<f32> },
-}
-
-fn execute_batch(
-    bundle: &ModelBundle,
-    scheduler: &Arc<RwLock<PrecisionScheduler>>,
-    cfg: &CoordinatorConfig,
-    batch: Vec<InferRequest>,
-    seed: u32,
-    counters: &Arc<Mutex<DeviceCounters>>,
-    mc: Option<&Arc<ModelControl>>,
-) {
-    let meta = &bundle.meta;
-    let bsz = meta.batch;
-    let n = batch.len();
-
-    // Read the scheduled precision; the read guard is dropped before
-    // execution so the control thread can swap policies between batches.
-    let plan = {
-        let s = scheduler.read().unwrap();
-        match s.get(&meta.name) {
-            None => Ok(BatchPlan::Fp),
-            Some(p) => match p.policy.e_vector(meta) {
-                Ok(e) => Ok(BatchPlan::Noisy {
-                    tag: format!("{}.fwd", p.noise),
-                    e,
-                }),
-                Err(err) => Err(format!("{err:#}")),
-            },
-        }
-    };
-    let plan = match plan {
-        Ok(p) => p,
-        Err(msg) => {
-            // A malformed policy fails the batch, not the device thread.
-            eprintln!(
-                "dynaprec: bad precision policy for {}: {msg}; \
-                 rejecting batch",
-                meta.name
-            );
-            counters.lock().unwrap().policy_rejected += n as u64;
-            for r in batch {
-                let _ = r.resp.send(InferResponse::rejected(r.id));
-            }
-            if let Some(mc) = mc {
-                mc.gate.on_complete(n);
-            }
-            return;
-        }
-    };
-
-    // Assemble (and pad) the feature buffer.
-    let sample = match &batch[0].x {
-        Features::F32(v) => v.len(),
-        Features::I32(v) => v.len(),
-    };
-    let x = match &batch[0].x {
-        Features::F32(_) => {
-            let mut buf = vec![0.0f32; bsz * sample];
-            for (i, r) in batch.iter().enumerate() {
-                if let Features::F32(v) = &r.x {
-                    buf[i * sample..(i + 1) * sample].copy_from_slice(v);
-                }
-            }
-            Features::F32(buf)
-        }
-        Features::I32(_) => {
-            let mut buf = vec![0i32; bsz * sample];
-            for (i, r) in batch.iter().enumerate() {
-                if let Features::I32(v) = &r.x {
-                    buf[i * sample..(i + 1) * sample].copy_from_slice(v);
-                }
-            }
-            Features::I32(buf)
-        }
-    };
-
-    let ops = ModelOps::new(bundle);
-    let t_exec = Instant::now();
-    let logits = match &plan {
-        BatchPlan::Fp => ops.fwd_simple("fwd_fp", &x),
-        BatchPlan::Noisy { tag, e } => ops.fwd_noisy(tag, &x, seed, e),
-    };
-
-    // Simulated analog cost: energy from the scheduled e-vector, cycles
-    // from the redundant-coding plan over all noise sites.
-    let (energy_per_sample, cycles) = match &plan {
-        BatchPlan::Fp => (0.0, 0.0),
-        BatchPlan::Noisy { e, .. } => analog_cost(meta, e, cfg),
-    };
-    if cfg.simulate_device_time {
-        let ns = cycles * cfg.hw.cycle_ns * n as f64;
-        if ns >= 1.0 {
-            std::thread::sleep(Duration::from_nanos(ns as u64));
-        }
-    }
-    let exec_us = t_exec.elapsed().as_micros() as f64;
-
-    let classes = match &logits {
-        Ok(l) => l.len() / bsz,
-        Err(_) => 0,
-    };
-    let done = Instant::now();
-    let occupancy = n as f64 / bsz as f64;
-    let mut lat_sum = 0.0f64;
-    let mut lat_max = 0.0f64;
-    {
-        let mut c = counters.lock().unwrap();
-        c.batches += 1;
-        c.ledger.record(
-            &meta.name,
-            n as u64,
-            meta.total_macs,
-            energy_per_sample,
-            cycles,
-        );
-        for (i, r) in batch.into_iter().enumerate() {
-            let latency = done.duration_since(r.enqueued).as_micros() as u64;
-            lat_sum += latency as f64;
-            lat_max = lat_max.max(latency as f64);
-            c.served += 1;
-            let row = match &logits {
-                Ok(l) => l[i * classes..(i + 1) * classes].to_vec(),
-                Err(_) => vec![],
-            };
-            let _ = r.resp.send(InferResponse::from_logits(
-                r.id,
-                row,
-                latency,
-                n,
-                energy_per_sample,
-            ));
-        }
-    }
-    if let Some(mc) = mc {
-        mc.gate.on_complete(n);
-        mc.ring.push(&BatchSample {
-            t_us: mc.ring.now_us(),
-            served: n as u32,
-            queue_depth: mc.gate.depth() as u32,
-            occupancy: occupancy as f32,
-            exec_us: exec_us as f32,
-            lat_mean_us: (lat_sum / n as f64) as f32,
-            lat_max_us: lat_max as f32,
-            energy: energy_per_sample * n as f64,
-        });
-    }
-}
-
-/// Energy per sample + simulated cycles for a materialized e-vector.
-fn analog_cost(
-    meta: &ModelMeta,
-    e: &[f32],
-    cfg: &CoordinatorConfig,
-) -> (f64, f64) {
-    let mut energy = 0.0;
-    let mut cycles = 0.0;
-    for (_, site) in meta.noise_sites() {
-        let es: Vec<f64> = e[site.e_offset..site.e_offset + site.n_channels]
-            .iter()
-            .map(|&v| v as f64)
-            .collect();
-        let plan = plan_layer(
-            &cfg.hw,
-            cfg.averaging,
-            &es,
-            site.n_dot,
-            site.macs_per_channel,
-            false,
-        );
-        energy += plan.energy;
-        cycles += plan.cycles;
-    }
-    (energy, cycles)
 }

@@ -3,6 +3,11 @@
 //! Rust coordinator (L3) over AOT-compiled JAX/Pallas artifacts (L2/L1),
 //! reproducing Garg, Lou, Jain & Nahmias, "Dynamic Precision Analog
 //! Computing for Neural Networks" (2021).
+//!
+//! Start at [`coordinator`] (router -> batcher -> sharded device fleet)
+//! and [`control`] (the precision control plane that closes the
+//! telemetry -> precision loop); `docs/ARCHITECTURE.md` in the repo
+//! maps the request lifecycle and the paper's math onto these modules.
 
 pub mod analog;
 pub mod control;

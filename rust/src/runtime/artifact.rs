@@ -268,7 +268,13 @@ pub struct ModelBundle {
     engine: Option<Arc<Engine>>,
 }
 
+// SAFETY: shared fleet access to a bundle is read-only — `params` is
+// only ever passed as `&Literal` into thread-safe PJRT execution, and
+// `Engine` is itself `Sync` (executable cache behind a mutex). `Sync`
+// lets every device worker share one `Arc<BTreeMap<_, ModelBundle>>`
+// instead of duplicating weights per device.
 unsafe impl Send for ModelBundle {}
+unsafe impl Sync for ModelBundle {}
 
 impl ModelBundle {
     /// A bundle with metadata only and no PJRT engine: forwards error

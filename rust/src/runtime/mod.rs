@@ -14,7 +14,7 @@ pub mod lit;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Mutex, PoisonError};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -27,11 +27,12 @@ pub struct Exec {
 }
 
 // SAFETY: the PJRT CPU client is thread-safe for compilation and
-// execution (PJRT API contract); the wrapper types are `!Send` only
-// because they hold raw pointers. The coordinator still funnels all
-// executions through a single device thread (see coordinator::device),
-// matching the "one accelerator, one queue" architecture.
+// execution (PJRT API contract); the wrapper types are `!Send`/`!Sync`
+// only because they hold raw pointers. `execute` takes `&self`, so the
+// device fleet (see coordinator::fleet) shares one compiled executable
+// across its worker threads instead of recompiling per device.
 unsafe impl Send for Exec {}
+unsafe impl Sync for Exec {}
 
 impl Exec {
     /// Execute and flatten the (always 1-level) output tuple.
@@ -68,8 +69,19 @@ impl Engine {
     }
 
     /// Load + compile an HLO text artifact (cached per path).
+    ///
+    /// Lock poisoning is recovered, not propagated: the cache holds
+    /// only fully-constructed `Arc<Exec>` entries (inserted after the
+    /// closure-free compile), so a worker that panicked while holding
+    /// the lock cannot have left a half-written value behind — and one
+    /// panicked fleet worker must not wedge every other device.
     pub fn load(&self, path: &Path) -> Result<std::sync::Arc<Exec>> {
-        if let Some(e) = self.cache.lock().unwrap().get(path) {
+        if let Some(e) = self
+            .cache
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .get(path)
+        {
             return Ok(e.clone());
         }
         let t0 = Instant::now();
@@ -91,7 +103,7 @@ impl Engine {
         });
         self.cache
             .lock()
-            .unwrap()
+            .unwrap_or_else(PoisonError::into_inner)
             .insert(path.to_path_buf(), exec.clone());
         Ok(exec)
     }

@@ -137,6 +137,7 @@ fn autotuner_degrades_under_overload_and_recovers() {
         seed: 0,
         control,
         simulate_device_time: true,
+        ..Default::default()
     };
     let coord =
         Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
@@ -230,6 +231,7 @@ fn admission_sheds_only_after_precision_floor() {
         seed: 0,
         control,
         simulate_device_time: true,
+        ..Default::default()
     };
     let coord =
         Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
@@ -278,6 +280,7 @@ fn admission_sheds_only_after_precision_floor() {
         seed: 0,
         control,
         simulate_device_time: true,
+        ..Default::default()
     };
     let coord =
         Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
@@ -332,6 +335,7 @@ fn governor_enforces_per_request_energy_budget() {
         seed: 0,
         control,
         simulate_device_time: true,
+        ..Default::default()
     };
     let coord =
         Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)

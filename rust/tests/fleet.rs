@@ -1,0 +1,243 @@
+//! Fleet integration tests — no artifacts required.
+//!
+//! These run the real coordinator stack (router -> batcher ->
+//! dispatcher -> device fleet -> telemetry) over synthetic model
+//! bundles. Forwards fail cleanly (no PJRT engine), but batching,
+//! dispatch, the per-device analog cost model and the simulated device
+//! time are all real.
+
+use std::time::{Duration, Instant};
+
+use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
+use dynaprec::coordinator::scheduler::ModelPrecision;
+use dynaprec::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, DeviceSpec,
+    DispatchPolicy, EnergyPolicy, FleetConfig, PrecisionScheduler,
+};
+use dynaprec::data::Features;
+use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+
+/// Two noise sites x 4 channels, 2000 MACs/sample; per-layer energy 16
+/// gives 32 cycles and 32000 energy units per sample (16 units/MAC).
+fn synthetic_bundle() -> ModelBundle {
+    ModelBundle::synthetic(ModelMeta::synthetic("synth", 8, 2, 4, 64, 250.0))
+}
+
+fn scheduler_with_policy() -> PrecisionScheduler {
+    let mut s = PrecisionScheduler::new();
+    s.set(
+        "synth",
+        ModelPrecision {
+            noise: "shot".into(),
+            policy: EnergyPolicy::PerLayer(vec![16.0, 16.0]),
+        },
+    );
+    s
+}
+
+fn hw(cycle_ns: f64) -> HardwareConfig {
+    HardwareConfig {
+        array_rows: 256,
+        array_cols: 256,
+        cycle_ns,
+        base_energy_aj: 1.0,
+        model: DeviceModel::Homodyne,
+    }
+}
+
+fn sample() -> Features {
+    Features::F32(vec![0.0; 4])
+}
+
+fn fleet_cfg(devices: Vec<DeviceSpec>, policy: DispatchPolicy) -> CoordinatorConfig {
+    CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: 8,
+            max_wait: Duration::from_millis(5),
+        },
+        averaging: AveragingMode::Time,
+        fleet: FleetConfig { devices, policy },
+        simulate_device_time: true,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn deadline_flush_pads_short_batch_and_charges_real_samples() {
+    // 3 requests against an artifact batch of 8: the deadline flush
+    // dispatches a short batch, the worker pads it to 8 lanes, and the
+    // ledger/telemetry charge exactly the 3 real samples.
+    let cfg = fleet_cfg(
+        vec![DeviceSpec::new("d0", hw(100.0), AveragingMode::Time)],
+        DispatchPolicy::RoundRobin,
+    );
+    let coord =
+        Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
+            .unwrap();
+    let receivers: Vec<_> =
+        (0..3).map(|_| coord.submit("synth", sample())).collect();
+    for rx in receivers {
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(!resp.shed);
+        assert_eq!(resp.batch_size, 3, "short batch, not the padded 8");
+        assert_eq!(resp.device, 0);
+        assert!((resp.energy - 32_000.0).abs() < 1e-6, "{}", resp.energy);
+    }
+    let fs = coord.fleet_stats();
+    assert_eq!(fs.devices.len(), 1);
+    assert_eq!(fs.devices[0].served, 3);
+    assert_eq!(fs.devices[0].batches, 1);
+    // Occupancy reflects the padding: 3 of 8 lanes were real.
+    assert!((fs.devices[0].window.mean_occupancy - 0.375).abs() < 1e-6);
+    let stats = coord.shutdown();
+    assert_eq!(stats.served, 3);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.batches, 1);
+    assert!((stats.ledger.avg_energy_per_mac() - 16.0).abs() < 1e-6);
+    assert!((stats.window.energy_per_req - 32_000.0).abs() < 1e-6);
+}
+
+#[test]
+fn conservation_holds_with_a_rejecting_device() {
+    // Device 0 has queue_cap 0 (rejects everything); device 1 holds at
+    // most one in-flight batch. A burst must split exactly into served
+    // + shed with one response per request: served + shed == submitted.
+    let devices = vec![
+        DeviceSpec::new("reject", hw(4000.0), AveragingMode::Time)
+            .with_queue_cap(0),
+        DeviceSpec::new("ok", hw(4000.0), AveragingMode::Time)
+            .with_queue_cap(1),
+    ];
+    let cfg = fleet_cfg(devices, DispatchPolicy::LeastQueueDepth);
+    let coord =
+        Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
+            .unwrap();
+    let n = 400u64;
+    let receivers: Vec<_> =
+        (0..n).map(|_| coord.submit("synth", sample())).collect();
+    let mut served = 0u64;
+    let mut shed = 0u64;
+    for rx in receivers {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        if resp.shed {
+            assert_eq!(resp.device, u32::MAX);
+            shed += 1;
+        } else {
+            assert_eq!(resp.device, 1, "device 0 must never serve");
+            served += 1;
+        }
+    }
+    assert_eq!(served + shed, n, "every request gets exactly one answer");
+    assert!(shed > 0, "cap-1 device under a 400-request burst must shed");
+    assert!(served > 0, "some batches must land on the open device");
+    let fs = coord.fleet_stats();
+    assert_eq!(fs.devices[0].served, 0);
+    assert_eq!(fs.devices[1].served, served);
+    assert_eq!(fs.dispatch_shed, shed);
+    let stats = coord.shutdown();
+    assert_eq!(stats.served, served);
+    assert_eq!(stats.shed, shed);
+    assert_eq!(stats.served + stats.shed, n);
+}
+
+#[test]
+fn round_robin_spreads_batches_and_stamps_device_telemetry() {
+    let devices = vec![
+        DeviceSpec::new("d0", hw(100.0), AveragingMode::Time),
+        DeviceSpec::new("d1", hw(100.0), AveragingMode::Time),
+    ];
+    let cfg = fleet_cfg(devices, DispatchPolicy::RoundRobin);
+    let coord =
+        Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
+            .unwrap();
+    // 64 requests = 8 full batches; round-robin alternates devices.
+    let receivers: Vec<_> =
+        (0..64).map(|_| coord.submit("synth", sample())).collect();
+    let mut devices_seen = std::collections::BTreeSet::new();
+    for rx in receivers {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(!resp.shed);
+        devices_seen.insert(resp.device);
+    }
+    assert_eq!(
+        devices_seen.into_iter().collect::<Vec<_>>(),
+        vec![0, 1],
+        "both devices must serve"
+    );
+    let fs = coord.fleet_stats();
+    assert_eq!(fs.devices.len(), 2);
+    let total: u64 = fs.devices.iter().map(|d| d.served).sum();
+    assert_eq!(total, 64);
+    for d in &fs.devices {
+        assert!(d.served > 0, "dev{} served nothing", d.id);
+        // Telemetry rings carry the device stamp: each device's window
+        // agrees with its own counters.
+        assert_eq!(d.window.served, d.served, "dev{} window", d.id);
+        assert_eq!(d.window.batches as u64, d.batches, "dev{} batches", d.id);
+        // Per-device ledgers charge the same policy on identical hw.
+        assert!((d.ledger.avg_energy_per_mac() - 16.0).abs() < 1e-6);
+    }
+    // Fleet-wide window aggregates every device.
+    assert_eq!(fs.fleet.served, 64);
+    coord.shutdown();
+}
+
+#[test]
+fn energy_aware_dispatch_balances_cumulative_energy() {
+    // Two identical devices, energy-aware dispatch: the projected-cost
+    // score reduces to cumulative-ledger balancing, so both devices end
+    // up with work (and neither hoards the whole backlog).
+    let devices = vec![
+        DeviceSpec::new("d0", hw(100.0), AveragingMode::Time),
+        DeviceSpec::new("d1", hw(100.0), AveragingMode::Time),
+    ];
+    let cfg = fleet_cfg(devices, DispatchPolicy::EnergyAware);
+    let coord =
+        Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
+            .unwrap();
+    let receivers: Vec<_> =
+        (0..64).map(|_| coord.submit("synth", sample())).collect();
+    for rx in receivers {
+        assert!(!rx.recv_timeout(Duration::from_secs(10)).unwrap().shed);
+    }
+    let fs = coord.fleet_stats();
+    let total: u64 = fs.devices.iter().map(|d| d.served).sum();
+    assert_eq!(total, 64);
+    assert!(
+        fs.devices.iter().all(|d| d.served > 0),
+        "energy balancing must not starve a device: {:?}",
+        fs.devices.iter().map(|d| d.served).collect::<Vec<_>>()
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_drains_every_queued_batch() {
+    // Submit a backlog onto a slow 2-device fleet and shut down
+    // immediately: every request must still be answered (the dispatcher
+    // flushes its batchers into the fleet and workers drain their
+    // queues before honoring shutdown).
+    let devices = vec![
+        DeviceSpec::new("d0", hw(2000.0), AveragingMode::Time),
+        DeviceSpec::new("d1", hw(2000.0), AveragingMode::Time),
+    ];
+    let cfg = fleet_cfg(devices, DispatchPolicy::LeastQueueDepth);
+    let coord =
+        Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
+            .unwrap();
+    let n = 96u64;
+    let receivers: Vec<_> =
+        (0..n).map(|_| coord.submit("synth", sample())).collect();
+    let stats = coord.shutdown();
+    assert_eq!(stats.served, n);
+    assert_eq!(stats.shed, 0);
+    let mut answered = 0u64;
+    let deadline = Instant::now() + Duration::from_secs(5);
+    for rx in receivers {
+        let wait = deadline.saturating_duration_since(Instant::now());
+        let resp = rx.recv_timeout(wait).unwrap();
+        assert!(!resp.shed);
+        answered += 1;
+    }
+    assert_eq!(answered, n);
+}
