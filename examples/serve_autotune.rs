@@ -2,11 +2,12 @@
 //! precision down under a synthetic load ramp and back up when it
 //! subsides, with admission control as the last line of defense.
 //!
-//! No artifacts are required: the coordinator serves a *synthetic*
-//! model bundle (forwards return empty logits), but batching, queueing,
-//! the analog cost model and the simulated device time (redundancy-plan
-//! cycles x cycle_ns) are all real — which is exactly what the control
-//! plane acts on. Watch the precision scale, the noise-bits proxy, the
+//! No artifacts are required: the coordinator serves a synthetic model
+//! on the *native* analog backend — real noisy-GEMM numerics with
+//! K-repetition averaging, the analog cost model, a measured output
+//! error, and the simulated device time (redundancy-plan cycles x
+//! cycle_ns) — which is exactly what the control plane acts on. Watch
+//! the precision scale, the noise-bits proxy, the measured error, the
 //! energy/MAC ledger and the p95 latency respond to load.
 //!
 //! Run: `cargo run --release --example serve_autotune`
@@ -16,6 +17,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
+use dynaprec::backend::BackendKind;
 use dynaprec::control::{
     bits_drop, AdmissionConfig, AutotunerConfig, ControlConfig,
     GovernorConfig,
@@ -57,10 +59,15 @@ fn phase(
     let d_macs = s.ledger.total_macs - macs_before;
     let d_energy = s.ledger.total_energy - energy_before;
     let e_per_mac = if d_macs > 0.0 { d_energy / d_macs } else { 0.0 };
+    let err = s
+        .window
+        .mean_out_err
+        .map(|e| format!("{e:.3}"))
+        .unwrap_or_else(|| "-".into());
     println!(
         "{name:<22} offered={rate_per_s:>6.0}/s  p95={:>7.1}ms  \
          scale={scale:>5.3} (-{:.2} bits)  energy/MAC={e_per_mac:>6.2}  \
-         served={}  shed={}  queue={:.0}",
+         out_err={err}  served={}  shed={}  queue={:.0}",
         s.window.p95_lat_us / 1e3,
         bits_drop(scale),
         s.served,
@@ -123,6 +130,7 @@ fn main() -> Result<()> {
                 headroom: 0.5,
                 cooldown_ticks: 1,
                 min_batches: 3,
+                ..Default::default()
             },
             governor: GovernorConfig::default(),
             admission: AdmissionConfig {
@@ -130,7 +138,7 @@ fn main() -> Result<()> {
                 queue_hard_limit: 50_000,
             },
         },
-        simulate_device_time: true,
+        backend: BackendKind::NativeAnalog { simulate_time: true },
         ..Default::default()
     };
     let coord = Coordinator::start(

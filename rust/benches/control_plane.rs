@@ -33,6 +33,7 @@ fn sample(i: u64) -> BatchSample {
         lat_max_us: 2100.0,
         energy: 2.56e5,
         device: 0,
+        out_err: 0.02,
     }
 }
 

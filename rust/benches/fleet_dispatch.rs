@@ -15,6 +15,7 @@
 use std::time::{Duration, Instant};
 
 use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
+use dynaprec::backend::BackendKind;
 use dynaprec::coordinator::scheduler::ModelPrecision;
 use dynaprec::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, DeviceSpec,
@@ -48,6 +49,9 @@ fn coordinator(n_devices: usize) -> Coordinator {
     let devices: Vec<DeviceSpec> = (0..n_devices)
         .map(|i| {
             DeviceSpec::new(format!("dev-{i}"), hw(), AveragingMode::Time)
+                .with_backend(BackendKind::NativeAnalog {
+                    simulate_time: true,
+                })
         })
         .collect();
     let cfg = CoordinatorConfig {
@@ -60,7 +64,6 @@ fn coordinator(n_devices: usize) -> Coordinator {
             devices,
             policy: DispatchPolicy::LeastQueueDepth,
         },
-        simulate_device_time: true,
         ..Default::default()
     };
     Coordinator::start(vec![ModelBundle::synthetic(meta)], sched, cfg)

@@ -1,0 +1,169 @@
+//! Native-backend throughput (acceptance: a 4-device native fleet
+//! sustains >= 2x single native-device throughput at equal precision,
+//! matching the `fleet_dispatch` pattern).
+//!
+//! Two measurements:
+//!
+//! 1. Raw kernel rate: single-thread noisy-GEMM samples/s with the
+//!   K-repetition noise folded in (informational — shows the numerics
+//!   are far cheaper than the modeled analog device time, so the
+//!   fleet's scaling is bounded by the modeled hardware, not the host).
+//! 2. Fleet bar: full coordinator stack over native devices with
+//!   simulated analog time (32 cycles/sample x 4us = 128us/sample at
+//!   full precision), single device vs 4 devices, >= 2x enforced.
+//!
+//! Run: `cargo bench --bench native_backend`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
+use dynaprec::backend::{
+    BackendKind, BatchJob, ExecutionBackend, NativeAnalogBackend,
+    NativeModelSet,
+};
+use dynaprec::coordinator::scheduler::ModelPrecision;
+use dynaprec::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, DeviceSpec,
+    DispatchPolicy, EnergyPolicy, FleetConfig, PrecisionScheduler,
+};
+use dynaprec::data::Features;
+use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+
+const MODEL: &str = "synth";
+const BATCH: usize = 8;
+
+fn meta() -> ModelMeta {
+    ModelMeta::synthetic(MODEL, BATCH, 2, 4, 64, 250.0)
+}
+
+fn hw() -> HardwareConfig {
+    HardwareConfig {
+        array_rows: 256,
+        array_cols: 256,
+        cycle_ns: 4000.0,
+        base_energy_aj: 1.0,
+        model: DeviceModel::Homodyne,
+    }
+}
+
+/// Single-thread native kernel rate: noisy batches/s through the
+/// backend alone, no serving stack.
+fn kernel_rate() -> (f64, f64) {
+    let m = meta();
+    let natives = Arc::new(NativeModelSet::build([&m]));
+    let bundle = ModelBundle::synthetic(meta());
+    let e = m.broadcast_per_layer(&[16.0, 16.0]).unwrap();
+    let mut backend =
+        NativeAnalogBackend::new(hw(), AveragingMode::Time, natives);
+    let x = Features::F32(vec![0.25; BATCH * 4]);
+    let iters = 2_000u32;
+    let t0 = Instant::now();
+    let mut err_sum = 0.0f64;
+    for i in 0..iters {
+        let out = backend.execute(&BatchJob {
+            bundle: &bundle,
+            x: &x,
+            n_real: BATCH,
+            seed: i,
+            e: Some(&e),
+            tag: "shot.fwd",
+        });
+        assert!(out.logits.is_ok());
+        err_sum += out.out_err as f64;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    (iters as f64 * BATCH as f64 / secs, err_sum / iters as f64)
+}
+
+fn coordinator(n_devices: usize) -> Coordinator {
+    let mut sched = PrecisionScheduler::new();
+    sched.set(
+        MODEL,
+        ModelPrecision {
+            noise: "shot".into(),
+            policy: EnergyPolicy::PerLayer(vec![16.0, 16.0]),
+        },
+    );
+    let devices: Vec<DeviceSpec> = (0..n_devices)
+        .map(|i| {
+            DeviceSpec::new(format!("native-{i}"), hw(), AveragingMode::Time)
+                .with_backend(BackendKind::NativeAnalog {
+                    simulate_time: true,
+                })
+        })
+        .collect();
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: BATCH,
+            max_wait: Duration::from_millis(3),
+        },
+        averaging: AveragingMode::Time,
+        fleet: FleetConfig {
+            devices,
+            policy: DispatchPolicy::LeastQueueDepth,
+        },
+        ..Default::default()
+    };
+    Coordinator::start(vec![ModelBundle::synthetic(meta())], sched, cfg)
+        .unwrap()
+}
+
+fn time_to_serve(coord: &Coordinator, target: u64) -> Instant {
+    loop {
+        if coord.stats().served >= target {
+            return Instant::now();
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Steady-state samples/s over the middle of a fixed backlog.
+fn throughput(n_devices: usize, backlog: u64) -> f64 {
+    let coord = coordinator(n_devices);
+    for _ in 0..backlog {
+        drop(coord.submit(MODEL, Features::F32(vec![0.25; 4])));
+    }
+    let lo = backlog / 6;
+    let hi = backlog * 5 / 6;
+    let t_lo = time_to_serve(&coord, lo);
+    let t_hi = time_to_serve(&coord, hi);
+    let stats = coord.shutdown();
+    assert_eq!(stats.shed, 0, "unbounded queues must not shed");
+    assert_eq!(stats.scales[MODEL], 1.0, "equal precision scale");
+    assert!(
+        stats.window.mean_out_err.is_some(),
+        "native fleet must measure output error"
+    );
+    (hi - lo) as f64 / (t_hi - t_lo).as_secs_f64()
+}
+
+fn main() {
+    let (kernel, mean_err) = kernel_rate();
+    println!(
+        "native kernel (1 thread): {kernel:.0} noisy samples/s \
+         (mean out_err {mean_err:.4})"
+    );
+    // 128us of modeled device time per sample at full precision: the
+    // kernel above must outrun that by a wide margin for the modeled
+    // hardware (not host compute) to bound fleet throughput.
+    let modeled_per_dev = 1e9 / (32.0 * 4000.0);
+    println!(
+        "modeled device ceiling: {modeled_per_dev:.0} samples/s per device"
+    );
+
+    let single = throughput(1, 12_000);
+    let quad = throughput(4, 24_000);
+    let speedup = quad / single;
+    println!(
+        "single native device: {single:.0} samples/s\n\
+         4-device native fleet (least-queue-depth): {quad:.0} samples/s\n\
+         speedup: {speedup:.2}x (acceptance >= 2x)"
+    );
+    if speedup >= 2.0 {
+        println!("PASS: native fleet scales past the 2x bar");
+    } else {
+        println!("FAIL: native fleet under the 2x bar");
+        std::process::exit(1);
+    }
+}

@@ -38,6 +38,51 @@ impl DeviceModel {
     }
 }
 
+/// The noise family that dominates an analog matrix multiplier — which
+/// physical mechanism the native execution backend samples from (and
+/// which artifact family the PJRT path selects). Replaces the old
+/// string-typed `"shot"`/`"thermal"`/`"weight"` convention.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NoiseKind {
+    /// Photon shot noise (homodyne optical multiplier): variance set by
+    /// the detected photon count, i.e. by optical energy/MAC in aJ.
+    Shot,
+    /// Thermal/detector noise (broadcast-and-weight photonics), signal-
+    /// independent additive noise on each output channel.
+    Thermal,
+    /// Weight read noise (resistive crossbar): per-weight conductance
+    /// error; crossbars carry thermal noise on top (paper Sec. II-C).
+    Weight,
+}
+
+impl NoiseKind {
+    /// Stable lowercase name, matching the artifact-tag convention
+    /// (`"{name}.fwd"`, `"{name}.grad"`) and the energy-table JSON.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            NoiseKind::Shot => "shot",
+            NoiseKind::Thermal => "thermal",
+            NoiseKind::Weight => "weight",
+        }
+    }
+
+    /// Parse the artifact/table convention back into the enum.
+    pub fn parse(s: &str) -> Option<NoiseKind> {
+        match s {
+            "shot" => Some(NoiseKind::Shot),
+            "thermal" => Some(NoiseKind::Thermal),
+            "weight" => Some(NoiseKind::Weight),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for NoiseKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 impl HardwareConfig {
     /// Defaults mirroring the paper's reference points.
     pub fn crossbar() -> Self {
@@ -70,12 +115,12 @@ impl HardwareConfig {
         }
     }
 
-    /// Natural noise family of this device.
-    pub fn default_noise(&self) -> &'static str {
+    /// Natural (dominant) noise family of this device.
+    pub fn default_noise(&self) -> NoiseKind {
         match self.model {
-            DeviceModel::Crossbar => "weight",
-            DeviceModel::Homodyne => "shot",
-            DeviceModel::BroadcastWeight => "thermal",
+            DeviceModel::Crossbar => NoiseKind::Weight,
+            DeviceModel::Homodyne => NoiseKind::Shot,
+            DeviceModel::BroadcastWeight => NoiseKind::Thermal,
         }
     }
 
@@ -100,12 +145,21 @@ mod tests {
 
     #[test]
     fn default_noise_per_device() {
-        assert_eq!(HardwareConfig::crossbar().default_noise(), "weight");
-        assert_eq!(HardwareConfig::homodyne().default_noise(), "shot");
+        assert_eq!(HardwareConfig::crossbar().default_noise(), NoiseKind::Weight);
+        assert_eq!(HardwareConfig::homodyne().default_noise(), NoiseKind::Shot);
         assert_eq!(
             HardwareConfig::broadcast_weight().default_noise(),
-            "thermal"
+            NoiseKind::Thermal
         );
+    }
+
+    #[test]
+    fn noise_kind_roundtrips_the_string_convention() {
+        for k in [NoiseKind::Shot, NoiseKind::Thermal, NoiseKind::Weight] {
+            assert_eq!(NoiseKind::parse(k.as_str()), Some(k));
+            assert_eq!(format!("{k}"), k.as_str());
+        }
+        assert_eq!(NoiseKind::parse("quantum"), None);
     }
 
     #[test]

@@ -20,6 +20,6 @@ pub mod device;
 pub mod ledger;
 pub mod redundancy;
 
-pub use device::{DeviceModel, HardwareConfig};
+pub use device::{DeviceModel, HardwareConfig, NoiseKind};
 pub use ledger::EnergyLedger;
 pub use redundancy::{plan_layer, plan_model, AveragingMode, LayerPlan};

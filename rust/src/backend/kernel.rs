@@ -1,0 +1,302 @@
+//! Vectorizable noisy-GEMM kernels for the native analog backend.
+//!
+//! The clean matmul is a cache-blocked `ikj` loop (row-major weights,
+//! contiguous channel-axis inner loop, so the compiler auto-vectorizes
+//! the accumulation); noise is applied on top per the paper's models:
+//!
+//! - every output channel `c` carries additive Gaussian noise whose
+//!   one-repetition variance follows Eq. 9 (thermal form, with the shot
+//!   sigma folded to `1/sqrt(photons_per_aj)` for homodyne devices);
+//! - crossbar devices add weight read noise: a per-entry Gaussian
+//!   perturbation `dW` applied through a second GEMM (Eq. 10);
+//! - K-repetition averaging (paper Fig. 3) divides every noise variance
+//!   by the channel's redundancy `K_c`. Averaging K i.i.d. Gaussian
+//!   executions is *in distribution* identical to a single execution
+//!   with every noise std scaled by `1/sqrt(K_c)`, so the kernel folds
+//!   the repetitions into one pass instead of paying K x the FLOPs —
+//!   the cycles/energy ledger still charges the full K repetitions.
+
+use crate::analog::{HardwareConfig, NoiseKind};
+use crate::quant::noise_bits::thermal_var;
+use crate::runtime::artifact::{ModelMeta, SiteMeta};
+use crate::util::rng::Rng;
+
+/// k-dimension block size for the clean GEMM: 64 f32 rows of a
+/// 256-channel layer keep the working set comfortably inside L1.
+const K_BLOCK: usize = 64;
+
+/// `out[b, j] += sum_k x[b, k] * w[k, j]` for row-major
+/// `x: [batch, n_dot]`, `w: [n_dot, n_channels]`,
+/// `out: [batch, n_channels]`. The caller zeroes (or pre-loads) `out`.
+pub fn gemm_blocked(
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    batch: usize,
+    n_dot: usize,
+    n_channels: usize,
+) {
+    debug_assert_eq!(x.len(), batch * n_dot);
+    debug_assert_eq!(w.len(), n_dot * n_channels);
+    debug_assert_eq!(out.len(), batch * n_channels);
+    for b in 0..batch {
+        let xrow = &x[b * n_dot..(b + 1) * n_dot];
+        let orow = &mut out[b * n_channels..(b + 1) * n_channels];
+        let mut kk = 0;
+        while kk < n_dot {
+            let kend = (kk + K_BLOCK).min(n_dot);
+            for k in kk..kend {
+                let xv = xrow[k];
+                let wrow = &w[k * n_channels..(k + 1) * n_channels];
+                for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                    *o += xv * wv;
+                }
+            }
+            kk = kend;
+        }
+    }
+}
+
+/// One-repetition (K = 1) noise parameters of a site on a device: the
+/// additive output-noise std per channel, and the per-entry weight
+/// read-noise std (crossbar only, 0 elsewhere). One repetition spends
+/// `hw.base_energy_aj` per MAC, so that energy sets the noise floor
+/// that K-averaging then divides down.
+#[derive(Clone, Copy, Debug)]
+pub struct SiteNoise {
+    pub additive_std: f64,
+    pub weight_std: f64,
+}
+
+/// Noise model selection per `DeviceModel` (paper Sec. II-C):
+/// homodyne = shot, broadcast-and-weight = thermal, crossbar =
+/// thermal + weight read noise.
+pub fn site_noise(
+    kind: NoiseKind,
+    site: &SiteMeta,
+    meta: &ModelMeta,
+    hw: &HardwareConfig,
+) -> SiteNoise {
+    let e1 = hw.base_energy_aj.max(f64::MIN_POSITIVE);
+    match kind {
+        NoiseKind::Shot => {
+            // Fold shot noise into the sigma/sqrt(E) form the artifacts
+            // use: detected photons per MAC = E * photons_per_aj, and
+            // SNR grows with sqrt(photons).
+            let sigma_shot = 1.0 / meta.photons_per_aj.max(1e-12).sqrt();
+            SiteNoise {
+                additive_std: thermal_var(site, sigma_shot, e1, true).sqrt(),
+                weight_std: 0.0,
+            }
+        }
+        NoiseKind::Thermal => SiteNoise {
+            additive_std: thermal_var(site, meta.sigma_thermal, e1, true)
+                .sqrt(),
+            weight_std: 0.0,
+        },
+        NoiseKind::Weight => SiteNoise {
+            // Crossbars carry thermal noise on top of the conductance
+            // read error; the per-weight std follows Eq. 10 (weight_var
+            // is that std squared through the dot product).
+            additive_std: thermal_var(site, meta.sigma_thermal, e1, true)
+                .sqrt(),
+            // Per-weight std per Eq. 10 (`noise_bits::weight_var` is
+            // this std squared pushed through the dot product).
+            weight_std: (site.w_hi_layer - site.w_lo_layer)
+                * meta.sigma_weight
+                / e1.sqrt(),
+        },
+    }
+}
+
+/// Add i.i.d. Gaussian noise of std `additive_std / sqrt(K_c)` to every
+/// output channel. `ks` is either one uniform K (time/spatial
+/// averaging) or one K per channel (per-row spatial averaging).
+pub fn apply_additive_noise(
+    out: &mut [f32],
+    n_channels: usize,
+    ks: &[f64],
+    additive_std: f64,
+    rng: &mut Rng,
+) {
+    if additive_std <= 0.0 {
+        return;
+    }
+    debug_assert!(ks.len() == 1 || ks.len() == n_channels);
+    for row in out.chunks_exact_mut(n_channels) {
+        for (j, o) in row.iter_mut().enumerate() {
+            let k = ks[if ks.len() == 1 { 0 } else { j }].max(1.0);
+            *o += (rng.gaussian() * additive_std / k.sqrt()) as f32;
+        }
+    }
+}
+
+/// Apply weight read noise: draw a per-entry perturbation `dW` with
+/// std `weight_std / sqrt(K_c)` (column c folds its own redundancy) and
+/// accumulate `x * dW` into `out` through the blocked GEMM. The draw is
+/// per dispatched batch — each repetition re-reads the array, and the
+/// K-fold average is folded into the std exactly as for additive noise.
+#[allow(clippy::too_many_arguments)]
+pub fn apply_weight_noise(
+    x: &[f32],
+    out: &mut [f32],
+    batch: usize,
+    n_dot: usize,
+    n_channels: usize,
+    ks: &[f64],
+    weight_std: f64,
+    rng: &mut Rng,
+) {
+    if weight_std <= 0.0 {
+        return;
+    }
+    debug_assert!(ks.len() == 1 || ks.len() == n_channels);
+    let mut dw = vec![0.0f32; n_dot * n_channels];
+    for (i, d) in dw.iter_mut().enumerate() {
+        let k = ks[if ks.len() == 1 { 0 } else { i % n_channels }].max(1.0);
+        *d = (rng.gaussian() * weight_std / k.sqrt()) as f32;
+    }
+    gemm_blocked(x, &dw, out, batch, n_dot, n_channels);
+}
+
+/// Cycle (and clip) an arbitrary-length feature row into a site's
+/// `n_dot`-element input vector. Token ids (I32 features) are first
+/// hashed to a deterministic embedding in [-1, 1].
+pub fn embed_row_f32(
+    src: &[f32],
+    dst: &mut [f32],
+    lo: f32,
+    hi: f32,
+) {
+    // Panic-free clamp: `f32::clamp` asserts lo <= hi, and clip bounds
+    // come from artifact metadata — `ModelMeta::parse` validates them,
+    // but a malformed range must shed a batch, never a fleet worker.
+    let (lo, hi) = if lo <= hi { (lo, hi) } else { (hi, lo) };
+    let n = src.len().max(1);
+    for (k, d) in dst.iter_mut().enumerate() {
+        let v = if src.is_empty() { 0.0 } else { src[k % n] };
+        *d = v.min(hi).max(lo);
+    }
+}
+
+/// Deterministic token embedding: hash the id through splitmix64 onto
+/// [-1, 1] so NLP-shaped (I32) requests exercise the same GEMM path.
+pub fn embed_token(id: i32) -> f32 {
+    let mut s = (id as i64 as u64) ^ 0x9E37_79B9_7F4A_7C15;
+    let h = crate::util::rng::splitmix64(&mut s);
+    ((h >> 11) as f64 * (1.0 / (1u64 << 53) as f64) * 2.0 - 1.0) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_matches_naive() {
+        let (batch, n_dot, n_channels) = (3, 70, 5); // crosses a K_BLOCK edge
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> =
+            (0..batch * n_dot).map(|_| rng.gaussian() as f32).collect();
+        let w: Vec<f32> = (0..n_dot * n_channels)
+            .map(|_| rng.gaussian() as f32)
+            .collect();
+        let mut out = vec![0.0f32; batch * n_channels];
+        gemm_blocked(&x, &w, &mut out, batch, n_dot, n_channels);
+        for b in 0..batch {
+            for j in 0..n_channels {
+                let want: f32 = (0..n_dot)
+                    .map(|k| x[b * n_dot + k] * w[k * n_channels + j])
+                    .sum();
+                let got = out[b * n_channels + j];
+                assert!(
+                    (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                    "[{b},{j}] {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn additive_noise_scales_inverse_sqrt_k() {
+        // Pure kernel-level check of the paper's averaging law: the
+        // measured std of the injected noise at K vs 4K must shrink 2x.
+        let n = 20_000;
+        let std_at = |k: f64, seed: u64| -> f64 {
+            let mut rng = Rng::new(seed);
+            let mut buf = vec![0.0f32; n];
+            apply_additive_noise(&mut buf, 1, &[k], 1.0, &mut rng);
+            (buf.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+                / n as f64)
+                .sqrt()
+        };
+        let s1 = std_at(1.0, 11);
+        let s4 = std_at(4.0, 12);
+        let s16 = std_at(16.0, 13);
+        assert!((s1 / s4 - 2.0).abs() < 0.1, "s1/s4 = {}", s1 / s4);
+        assert!((s4 / s16 - 2.0).abs() < 0.1, "s4/s16 = {}", s4 / s16);
+    }
+
+    #[test]
+    fn per_channel_k_applies_per_column() {
+        // Channel 0 at K=1, channel 1 at K=100: channel 1's noise must
+        // be ~10x smaller.
+        let rows = 8_000;
+        let mut rng = Rng::new(3);
+        let mut buf = vec![0.0f32; rows * 2];
+        apply_additive_noise(&mut buf, 2, &[1.0, 100.0], 1.0, &mut rng);
+        let mut v = [0.0f64; 2];
+        for row in buf.chunks_exact(2) {
+            v[0] += (row[0] as f64).powi(2);
+            v[1] += (row[1] as f64).powi(2);
+        }
+        let ratio = (v[0] / v[1]).sqrt();
+        assert!((ratio - 10.0).abs() < 1.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn weight_noise_correlates_through_the_dot_product() {
+        // With x = ones, each output is sum of n_dot i.i.d. dW entries:
+        // std = sqrt(n_dot) * weight_std / sqrt(K). dW is drawn once per
+        // dispatched batch (quasi-static read error), so independent
+        // draws come from separate calls, not separate batch lanes.
+        let (draws, n_dot) = (4_000u64, 16);
+        let x = vec![1.0f32; n_dot];
+        let mut sum2 = 0.0f64;
+        for d in 0..draws {
+            let mut rng = Rng::new(1000 + d);
+            let mut out = vec![0.0f32; 1];
+            apply_weight_noise(
+                &x, &mut out, 1, n_dot, 1, &[4.0], 0.5, &mut rng,
+            );
+            sum2 += (out[0] as f64).powi(2);
+        }
+        let std = (sum2 / draws as f64).sqrt();
+        let want = (n_dot as f64).sqrt() * 0.5 / 2.0;
+        assert!((std / want - 1.0).abs() < 0.1, "std {std} want {want}");
+    }
+
+    #[test]
+    fn weight_noise_is_quasi_static_within_a_batch() {
+        // Every lane of one dispatched batch sees the same dW draw.
+        let (batch, n_dot) = (4, 8);
+        let mut rng = Rng::new(5);
+        let x = vec![1.0f32; batch * n_dot];
+        let mut out = vec![0.0f32; batch];
+        apply_weight_noise(
+            &x, &mut out, batch, n_dot, 1, &[1.0], 0.5, &mut rng,
+        );
+        assert!(out.iter().all(|&v| v == out[0]));
+        assert_ne!(out[0], 0.0);
+    }
+
+    #[test]
+    fn embed_cycles_and_clips() {
+        let mut dst = vec![0.0f32; 5];
+        embed_row_f32(&[0.5, 9.0], &mut dst, -1.0, 1.0);
+        assert_eq!(dst, vec![0.5, 1.0, 0.5, 1.0, 0.5]);
+        let t = embed_token(42);
+        assert!((-1.0..=1.0).contains(&t));
+        assert_eq!(t, embed_token(42), "deterministic");
+        assert_ne!(embed_token(42), embed_token(43));
+    }
+}

@@ -1,0 +1,311 @@
+//! Pluggable batch-execution backends for the device fleet.
+//!
+//! Every fleet device worker owns one [`ExecutionBackend`] and pushes
+//! each dispatched batch through it; which engine a device runs is a
+//! per-[`DeviceSpec`](crate::coordinator::DeviceSpec) property, so a
+//! heterogeneous fleet can mix them:
+//!
+//! | backend              | numerics                      | energy model      | output error |
+//! |----------------------|-------------------------------|-------------------|--------------|
+//! | [`NativeAnalogBackend`] | pure-Rust noisy GEMM, K-rep averaging | quantized `plan_layer` | measured per batch |
+//! | [`DigitalReferenceBackend`] | exact f32 GEMM (golden)   | none (digital)    | 0 by definition |
+//! | [`PjrtBackend`]      | AOT PJRT artifacts            | continuous `plan_layer` | unmeasured |
+//!
+//! The native backend is what closes the paper's precision-energy loop
+//! end to end in Rust: the scheduled per-channel energies become a
+//! quantized repetition count K per channel (`redundancy::plan_layer`),
+//! the kernel injects the device's noise family at `std / sqrt(K)`
+//! (see [`kernel`]), the ledger charges exactly that K, and the batch's
+//! measured error against the digital reference flows back through
+//! telemetry into the autotuner.
+
+pub mod kernel;
+pub mod native;
+pub mod pjrt;
+
+pub use kernel::{
+    apply_additive_noise, apply_weight_noise, gemm_blocked, site_noise,
+    SiteNoise,
+};
+pub use native::{
+    DigitalReferenceBackend, NativeAnalogBackend, NativeModel,
+    NativeModelSet, SitePlan,
+};
+pub use pjrt::PjrtBackend;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::analog::{plan_layer, AveragingMode, HardwareConfig};
+use crate::data::Features;
+use crate::runtime::artifact::{ModelBundle, ModelMeta};
+
+/// Sentinel for "this backend cannot measure output error" (PJRT
+/// artifacts): any negative value; telemetry aggregation skips it.
+pub const ERR_UNMEASURED: f32 = -1.0;
+
+/// Which execution engine a fleet device runs. Carried by `DeviceSpec`
+/// so fleets mix backends freely.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT PJRT artifacts via `runtime::Engine` (requires compiled
+    /// `*.hlo.txt` artifacts; errors cleanly on synthetic bundles).
+    Pjrt,
+    /// Pure-Rust noisy GEMM per the device's noise family.
+    /// `simulate_time` additionally sleeps out the modeled analog
+    /// execution time (plan cycles x `cycle_ns` x batch), making the
+    /// precision <-> throughput coupling physically observable.
+    NativeAnalog { simulate_time: bool },
+    /// Exact f32 GEMM over the same native weights: golden outputs.
+    DigitalReference { simulate_time: bool },
+}
+
+impl BackendKind {
+    /// Stable label for fleet reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::NativeAnalog { .. } => "native",
+            BackendKind::DigitalReference { .. } => "reference",
+        }
+    }
+
+    /// Whether the device worker sleeps out the modeled device time.
+    pub fn simulates_time(&self) -> bool {
+        match self {
+            BackendKind::Pjrt => false,
+            BackendKind::NativeAnalog { simulate_time }
+            | BackendKind::DigitalReference { simulate_time } => {
+                *simulate_time
+            }
+        }
+    }
+
+    /// Whether this backend executes on the shared native weight set.
+    pub fn needs_native_models(&self) -> bool {
+        !matches!(self, BackendKind::Pjrt)
+    }
+}
+
+/// One padded batch handed to a backend by the device worker.
+pub struct BatchJob<'a> {
+    pub bundle: &'a ModelBundle,
+    /// Feature buffer padded to `bundle.meta.batch` lanes.
+    pub x: &'a Features,
+    /// Real (non-padding) samples at the front of the buffer.
+    pub n_real: usize,
+    /// Per-batch noise seed (deterministic across devices).
+    pub seed: u32,
+    /// Scheduled per-channel energies; `None` = clean fp forward.
+    pub e: Option<&'a [f32]>,
+    /// Artifact tag for the scheduled noise family ("shot.fwd", ...),
+    /// consumed by the PJRT backend only.
+    pub tag: &'a str,
+}
+
+/// What a backend produced for one batch. `logits` mirrors the old
+/// direct `ModelOps` call: an `Err` fails the batch's numerics (clients
+/// get empty logits) but the analog cost is still charged.
+pub struct BatchOutput {
+    pub logits: Result<Vec<f32>>,
+    /// Sample rows in `logits`. PJRT artifacts are lowered for the full
+    /// `meta.batch`, so they always return that many; native engines
+    /// compute only the served lanes of a padded batch, so this may be
+    /// smaller — always >= the batch's real sample count.
+    pub rows: usize,
+    /// Measured RMS output error vs the digital reference, normalized
+    /// by the final site's output range; negative = unmeasured.
+    pub out_err: f32,
+    pub energy_per_sample: f64,
+    pub cycles_per_sample: f64,
+}
+
+impl BatchOutput {
+    /// A batch whose numerics failed before execution (no cost).
+    pub fn failed(err: anyhow::Error) -> BatchOutput {
+        BatchOutput {
+            logits: Err(err),
+            rows: 0,
+            out_err: ERR_UNMEASURED,
+            energy_per_sample: 0.0,
+            cycles_per_sample: 0.0,
+        }
+    }
+}
+
+/// The front `n` rows of a padded `[total_rows, sample]` feature
+/// buffer — what a native engine executes instead of the padding.
+pub fn front_rows(x: &Features, total_rows: usize, n: usize) -> Features {
+    if n >= total_rows {
+        return x.clone();
+    }
+    let per_row = |len: usize| len / total_rows.max(1);
+    match x {
+        Features::F32(v) => {
+            Features::F32(v[..n * per_row(v.len())].to_vec())
+        }
+        Features::I32(v) => {
+            Features::I32(v[..n * per_row(v.len())].to_vec())
+        }
+    }
+}
+
+/// A batch-execution engine owned by one device worker thread.
+pub trait ExecutionBackend: Send {
+    /// Stable label for reports ("native", "reference", "pjrt").
+    fn label(&self) -> &'static str;
+    /// Execute one padded batch at the scheduled precision.
+    fn execute(&mut self, job: &BatchJob<'_>) -> BatchOutput;
+}
+
+/// Build the backend a device spec asks for. `natives` must be `Some`
+/// for the native/reference kinds (the fleet builds one shared set when
+/// any spec needs it).
+pub fn make_backend(
+    kind: BackendKind,
+    hw: HardwareConfig,
+    averaging: AveragingMode,
+    natives: Option<Arc<NativeModelSet>>,
+) -> Box<dyn ExecutionBackend> {
+    let models = || {
+        natives
+            .clone()
+            .unwrap_or_else(|| Arc::new(NativeModelSet::empty()))
+    };
+    match kind {
+        BackendKind::Pjrt => Box::new(PjrtBackend::new(hw, averaging)),
+        BackendKind::NativeAnalog { .. } => {
+            Box::new(NativeAnalogBackend::new(hw, averaging, models()))
+        }
+        BackendKind::DigitalReference { .. } => {
+            Box::new(DigitalReferenceBackend::new(models()))
+        }
+    }
+}
+
+fn analog_cost_with(
+    meta: &ModelMeta,
+    e: &[f32],
+    hw: &HardwareConfig,
+    averaging: AveragingMode,
+    quantized: bool,
+) -> (f64, f64) {
+    let mut energy = 0.0;
+    let mut cycles = 0.0;
+    for (_, site) in meta.noise_sites() {
+        let es: Vec<f64> = e[site.e_offset..site.e_offset + site.n_channels]
+            .iter()
+            .map(|&v| v as f64)
+            .collect();
+        let plan = plan_layer(
+            hw,
+            averaging,
+            &es,
+            site.n_dot,
+            site.macs_per_channel,
+            quantized,
+        );
+        energy += plan.energy;
+        cycles += plan.cycles;
+    }
+    (energy, cycles)
+}
+
+/// Energy per sample + modeled cycles for a materialized e-vector on
+/// one device's hardware at *continuous* K (what the PJRT path has
+/// always charged).
+pub fn continuous_analog_cost(
+    meta: &ModelMeta,
+    e: &[f32],
+    hw: &HardwareConfig,
+    averaging: AveragingMode,
+) -> (f64, f64) {
+    analog_cost_with(meta, e, hw, averaging, false)
+}
+
+/// The same cost at *quantized* (ceil-rounded, realizable) K — what
+/// the native backend charges its ledger.
+pub fn quantized_analog_cost(
+    meta: &ModelMeta,
+    e: &[f32],
+    hw: &HardwareConfig,
+    averaging: AveragingMode,
+) -> (f64, f64) {
+    analog_cost_with(meta, e, hw, averaging, true)
+}
+
+/// The per-sample cost `kind`'s engine will actually charge for this
+/// e-vector — what dispatch-time energy scoring should predict so the
+/// balance it maintains matches the ledgers it reads.
+pub fn charged_analog_cost(
+    kind: BackendKind,
+    meta: &ModelMeta,
+    e: &[f32],
+    hw: &HardwareConfig,
+    averaging: AveragingMode,
+) -> (f64, f64) {
+    match kind {
+        BackendKind::Pjrt => continuous_analog_cost(meta, e, hw, averaging),
+        BackendKind::NativeAnalog { .. } => {
+            quantized_analog_cost(meta, e, hw, averaging)
+        }
+        // The digital reference charges no analog energy at all.
+        BackendKind::DigitalReference { .. } => (0.0, 0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_labels_and_flags() {
+        assert_eq!(BackendKind::Pjrt.label(), "pjrt");
+        assert!(!BackendKind::Pjrt.simulates_time());
+        assert!(!BackendKind::Pjrt.needs_native_models());
+        let n = BackendKind::NativeAnalog { simulate_time: true };
+        assert_eq!(n.label(), "native");
+        assert!(n.simulates_time());
+        assert!(n.needs_native_models());
+        let r = BackendKind::DigitalReference { simulate_time: false };
+        assert_eq!(r.label(), "reference");
+        assert!(!r.simulates_time());
+        assert!(r.needs_native_models());
+    }
+
+    #[test]
+    fn factory_builds_each_kind() {
+        let hw = HardwareConfig::homodyne();
+        let meta = ModelMeta::synthetic("f", 4, 1, 2, 8, 10.0);
+        let natives = Arc::new(NativeModelSet::build([&meta]));
+        for (kind, label) in [
+            (BackendKind::Pjrt, "pjrt"),
+            (BackendKind::NativeAnalog { simulate_time: false }, "native"),
+            (
+                BackendKind::DigitalReference { simulate_time: false },
+                "reference",
+            ),
+        ] {
+            let b = make_backend(
+                kind,
+                hw.clone(),
+                AveragingMode::Time,
+                Some(natives.clone()),
+            );
+            assert_eq!(b.label(), label);
+        }
+    }
+
+    #[test]
+    fn continuous_cost_matches_plan_layer_sum() {
+        let meta = ModelMeta::synthetic("c", 8, 2, 4, 64, 250.0);
+        let hw = HardwareConfig::homodyne();
+        let e = vec![16.0f32; meta.e_len];
+        let (energy, cycles) =
+            continuous_analog_cost(&meta, &e, &hw, AveragingMode::Time);
+        // 2 sites x K=16 x 250 MACs x 4 channels = 32000; 16+16 cycles.
+        assert!((energy - 32_000.0).abs() < 1e-9, "{energy}");
+        assert!((cycles - 32.0).abs() < 1e-9, "{cycles}");
+    }
+}

@@ -1,0 +1,457 @@
+//! Native execution engines: a pure-Rust noisy-GEMM analog simulator
+//! and its exact digital reference.
+//!
+//! Both run the same deterministic weight set (a [`NativeModel`]
+//! derived from the `ModelMeta` profile), so a native device and a
+//! reference device in the same fleet agree bit-for-bit on the clean
+//! forward — which is what makes the native backend's per-batch
+//! *measured output error* meaningful: it is the RMS distance between
+//! the noisy logits actually served and the golden digital logits,
+//! normalized by the final site's output range.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::analog::{plan_layer, AveragingMode, HardwareConfig, NoiseKind};
+use crate::backend::kernel::{
+    apply_additive_noise, apply_weight_noise, embed_row_f32, embed_token,
+    gemm_blocked, site_noise, SiteNoise,
+};
+use crate::backend::{front_rows, BatchJob, BatchOutput, ExecutionBackend};
+use crate::data::Features;
+use crate::runtime::artifact::{ModelMeta, SiteMeta};
+use crate::util::rng::Rng;
+
+/// One GEMM site of a native model: the noise-site metadata plus the
+/// deterministic row-major `[n_dot, n_channels]` weight matrix.
+pub struct NativeSite {
+    pub site: SiteMeta,
+    pub w: Vec<f32>,
+}
+
+/// A chain of GEMM sites executable without any PJRT artifact. Weights
+/// are derived deterministically from the model name and each site's
+/// `[w_lo_layer, w_hi_layer]` range, so every process (and every fleet
+/// device) materializes the identical network.
+pub struct NativeModel {
+    pub name: String,
+    /// Noise sites only (residual "add" sites carry no GEMM), in order.
+    pub sites: Vec<NativeSite>,
+    /// Output width of the final site.
+    pub classes: usize,
+}
+
+/// FNV-1a, the stable name -> weight-stream seed.
+fn name_seed(name: &str) -> u64 {
+    name.bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100000001b3)
+        })
+}
+
+/// Per-site noise configuration for one noisy forward (redundancy K per
+/// channel + the one-repetition noise stds).
+pub struct SitePlan {
+    pub ks: Vec<f64>,
+    pub noise: SiteNoise,
+}
+
+impl NativeModel {
+    pub fn from_meta(meta: &ModelMeta) -> NativeModel {
+        let base = name_seed(&meta.name);
+        let mut sites = Vec::new();
+        for (i, s) in meta.noise_sites() {
+            let mut rng =
+                Rng::new(base ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            let w: Vec<f32> = (0..s.n_dot * s.n_channels)
+                .map(|_| rng.uniform_in(s.w_lo_layer, s.w_hi_layer) as f32)
+                .collect();
+            sites.push(NativeSite { site: s.clone(), w });
+        }
+        let classes = sites.last().map(|s| s.site.n_channels).unwrap_or(0);
+        NativeModel { name: meta.name.clone(), sites, classes }
+    }
+
+    /// Run the chain over a padded `[batch, sample]` feature buffer.
+    /// Each site's input is the previous site's output (the request
+    /// features for site 0) cycled into `n_dot` lanes and clipped to
+    /// the site's calibrated input range; `plans` injects the analog
+    /// noise (None = exact digital forward, `rng` untouched).
+    pub fn run(
+        &self,
+        x: &Features,
+        batch: usize,
+        plans: Option<&[SitePlan]>,
+        rng: &mut Rng,
+    ) -> Vec<f32> {
+        if self.sites.is_empty() || batch == 0 {
+            return Vec::new();
+        }
+        // Token ids enter the same f32 GEMM path via a fixed embedding.
+        let feats: Vec<f32> = match x {
+            Features::F32(v) => v.clone(),
+            Features::I32(v) => v.iter().map(|&t| embed_token(t)).collect(),
+        };
+        let sample = feats.len() / batch;
+        let mut cur = feats;
+        let mut width = sample;
+        for (si, ns) in self.sites.iter().enumerate() {
+            let s = &ns.site;
+            let mut xin = vec![0.0f32; batch * s.n_dot];
+            for b in 0..batch {
+                embed_row_f32(
+                    &cur[b * width..(b + 1) * width],
+                    &mut xin[b * s.n_dot..(b + 1) * s.n_dot],
+                    s.in_lo_clip as f32,
+                    s.in_hi_clip as f32,
+                );
+            }
+            let mut out = vec![0.0f32; batch * s.n_channels];
+            gemm_blocked(&xin, &ns.w, &mut out, batch, s.n_dot, s.n_channels);
+            if let Some(plans) = plans {
+                let p = &plans[si];
+                apply_weight_noise(
+                    &xin,
+                    &mut out,
+                    batch,
+                    s.n_dot,
+                    s.n_channels,
+                    &p.ks,
+                    p.noise.weight_std,
+                    rng,
+                );
+                apply_additive_noise(
+                    &mut out,
+                    s.n_channels,
+                    &p.ks,
+                    p.noise.additive_std,
+                    rng,
+                );
+            }
+            width = s.n_channels;
+            cur = out;
+        }
+        cur
+    }
+
+    /// Output range of the final site (clip bounds), the normalizer for
+    /// the measured output error.
+    pub fn out_range(&self) -> f64 {
+        self.sites
+            .last()
+            .map(|s| (s.site.out_hi_clip - s.site.out_lo_clip).abs())
+            .unwrap_or(1.0)
+            .max(1e-12)
+    }
+}
+
+/// All models' native weights, built once at fleet start and shared by
+/// every native/reference device worker.
+pub struct NativeModelSet {
+    models: BTreeMap<String, Arc<NativeModel>>,
+}
+
+impl NativeModelSet {
+    /// No models: every native/reference execution errors cleanly.
+    pub fn empty() -> NativeModelSet {
+        NativeModelSet { models: BTreeMap::new() }
+    }
+
+    pub fn build<'a, I: IntoIterator<Item = &'a ModelMeta>>(
+        metas: I,
+    ) -> NativeModelSet {
+        NativeModelSet {
+            models: metas
+                .into_iter()
+                .map(|m| {
+                    (m.name.clone(), Arc::new(NativeModel::from_meta(m)))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Arc<NativeModel>> {
+        self.models.get(name)
+    }
+}
+
+/// RMS distance between two logit buffers over the first `n` elements,
+/// normalized by `range`.
+fn rms_error(a: &[f32], b: &[f32], n: usize, range: f64) -> f64 {
+    let n = n.min(a.len()).min(b.len());
+    if n == 0 {
+        return 0.0;
+    }
+    let sum2: f64 = a[..n]
+        .iter()
+        .zip(&b[..n])
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum();
+    (sum2 / n as f64).sqrt() / range
+}
+
+/// Pure-Rust noisy GEMM engine: executes the paper's noise model for
+/// this device's hardware with K-repetition averaging from the
+/// scheduled energy vector, charges the *quantized* (realizable)
+/// redundancy plan, and measures the served batch's output error
+/// against the digital reference.
+///
+/// The noise family is the *device's* physics (`hw.default_noise()`),
+/// not the policy's `noise` string: that string selects which trained
+/// artifact the PJRT backend runs, while a native homodyne device is
+/// shot-noise limited no matter what was scheduled. A policy whose
+/// family differs from the device's is served anyway (the e-vector is
+/// still the precision request) but logged once per worker, so a
+/// mixed fleet quietly running two noise physics for one model is
+/// visible.
+pub struct NativeAnalogBackend {
+    hw: HardwareConfig,
+    averaging: AveragingMode,
+    kind: NoiseKind,
+    models: Arc<NativeModelSet>,
+    warned_mismatch: bool,
+}
+
+impl NativeAnalogBackend {
+    pub fn new(
+        hw: HardwareConfig,
+        averaging: AveragingMode,
+        models: Arc<NativeModelSet>,
+    ) -> NativeAnalogBackend {
+        let kind = hw.default_noise();
+        NativeAnalogBackend {
+            hw,
+            averaging,
+            kind,
+            models,
+            warned_mismatch: false,
+        }
+    }
+
+    fn model(&self, name: &str) -> Result<&Arc<NativeModel>> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("no native model built for {name}"))
+    }
+
+    /// Warn (once) when the scheduled artifact tag names a different
+    /// noise family than this device physically has.
+    fn check_family(&mut self, tag: &str, model: &str) {
+        if self.warned_mismatch {
+            return;
+        }
+        let family = tag
+            .split('.')
+            .next()
+            .and_then(|t| t.split('_').next())
+            .and_then(NoiseKind::parse);
+        if let Some(scheduled) = family {
+            if scheduled != self.kind {
+                self.warned_mismatch = true;
+                eprintln!(
+                    "dynaprec: model {model} scheduled {scheduled} noise \
+                     but this native device is {}-limited; serving with \
+                     the device's physics",
+                    self.kind
+                );
+            }
+        }
+    }
+}
+
+impl ExecutionBackend for NativeAnalogBackend {
+    fn label(&self) -> &'static str {
+        "native"
+    }
+
+    fn execute(&mut self, job: &BatchJob<'_>) -> BatchOutput {
+        let meta = &job.bundle.meta;
+        let model = match self.model(&meta.name) {
+            Ok(m) => m.clone(),
+            Err(e) => return BatchOutput::failed(e),
+        };
+        // Unlike an AOT artifact, the native engine is not lowered for
+        // a fixed batch: execute only the served lanes, not the padding.
+        let rows = job.n_real.max(1).min(meta.batch.max(1));
+        let x = front_rows(job.x, meta.batch, rows);
+        let mut rng = Rng::new(job.seed as u64 ^ name_seed(&meta.name));
+        let Some(e) = job.e else {
+            // No precision scheduled: exact digital forward, no analog
+            // cost (one pass per site).
+            let logits = model.run(&x, rows, None, &mut rng);
+            return BatchOutput {
+                logits: Ok(logits),
+                rows,
+                out_err: 0.0,
+                energy_per_sample: 0.0,
+                cycles_per_sample: model.sites.len() as f64,
+            };
+        };
+        if e.len() != meta.e_len {
+            return BatchOutput::failed(anyhow!(
+                "E length {} != {} for model {}",
+                e.len(),
+                meta.e_len,
+                meta.name
+            ));
+        }
+        self.check_family(job.tag, &meta.name);
+        // Redundancy plan + noise parameters per site: cost and noise
+        // derive from the same quantized K, closing the loop between
+        // what the ledger charges and what the numerics suffer.
+        let mut plans = Vec::with_capacity(model.sites.len());
+        let mut energy = 0.0f64;
+        let mut cycles = 0.0f64;
+        for ns in &model.sites {
+            let s = &ns.site;
+            let es: Vec<f64> = e[s.e_offset..s.e_offset + s.n_channels]
+                .iter()
+                .map(|&v| v as f64)
+                .collect();
+            let plan = plan_layer(
+                &self.hw,
+                self.averaging,
+                &es,
+                s.n_dot,
+                s.macs_per_channel,
+                true,
+            );
+            energy += plan.energy;
+            cycles += plan.cycles;
+            plans.push(SitePlan {
+                ks: plan.k_per_channel,
+                noise: site_noise(self.kind, s, meta, &self.hw),
+            });
+        }
+        // Per-batch golden pass: measuring the served error costs one
+        // extra digital forward per batch — a deliberate tradeoff
+        // (the control plane steers on a fresh signal every batch; the
+        // modeled analog device time, not host GEMM time, bounds
+        // simulated-fleet throughput). Sample batches here if a
+        // host-bound native deployment ever needs the compute back.
+        let clean = model.run(&x, rows, None, &mut rng);
+        let noisy = model.run(&x, rows, Some(&plans), &mut rng);
+        let classes = model.classes;
+        let out_err = rms_error(
+            &noisy,
+            &clean,
+            job.n_real * classes,
+            model.out_range(),
+        );
+        BatchOutput {
+            logits: Ok(noisy),
+            rows,
+            out_err: out_err as f32,
+            energy_per_sample: energy,
+            cycles_per_sample: cycles,
+        }
+    }
+}
+
+/// Exact f32 GEMM over the same native weights: golden outputs, zero
+/// noise, zero analog energy. `cycles_per_sample` is one pass per site
+/// (the K = 1 schedule) so a time-simulating reference device behaves
+/// like an ideal single-repetition accelerator rather than an
+/// infinitely fast one.
+pub struct DigitalReferenceBackend {
+    models: Arc<NativeModelSet>,
+}
+
+impl DigitalReferenceBackend {
+    pub fn new(models: Arc<NativeModelSet>) -> DigitalReferenceBackend {
+        DigitalReferenceBackend { models }
+    }
+}
+
+impl ExecutionBackend for DigitalReferenceBackend {
+    fn label(&self) -> &'static str {
+        "reference"
+    }
+
+    fn execute(&mut self, job: &BatchJob<'_>) -> BatchOutput {
+        let meta = &job.bundle.meta;
+        let Some(model) = self.models.get(&meta.name) else {
+            return BatchOutput::failed(anyhow!(
+                "no native model built for {}",
+                meta.name
+            ));
+        };
+        let rows = job.n_real.max(1).min(meta.batch.max(1));
+        let x = front_rows(job.x, meta.batch, rows);
+        let mut rng = Rng::new(job.seed as u64);
+        let logits = model.run(&x, rows, None, &mut rng);
+        BatchOutput {
+            logits: Ok(logits),
+            rows,
+            out_err: 0.0,
+            energy_per_sample: 0.0,
+            cycles_per_sample: model.sites.len() as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta::synthetic("nat", 8, 2, 4, 64, 250.0)
+    }
+
+    #[test]
+    fn weights_are_deterministic_and_in_range() {
+        let m = meta();
+        let a = NativeModel::from_meta(&m);
+        let b = NativeModel::from_meta(&m);
+        assert_eq!(a.sites.len(), 2);
+        assert_eq!(a.classes, 4);
+        for (sa, sb) in a.sites.iter().zip(&b.sites) {
+            assert_eq!(sa.w, sb.w, "same meta -> same weights");
+            assert_eq!(sa.w.len(), 64 * 4);
+            for &w in &sa.w {
+                assert!((-0.5..=0.5).contains(&w), "weight {w} out of range");
+            }
+        }
+        // A different model name draws different weights.
+        let mut m2 = meta();
+        m2.name = "other".into();
+        let c = NativeModel::from_meta(&m2);
+        assert_ne!(a.sites[0].w, c.sites[0].w);
+    }
+
+    #[test]
+    fn clean_forward_is_deterministic_and_shaped() {
+        let m = meta();
+        let model = NativeModel::from_meta(&m);
+        let x = Features::F32(vec![0.25; 8 * 4]);
+        let mut rng = Rng::new(0);
+        let a = model.run(&x, 8, None, &mut rng);
+        let b = model.run(&x, 8, None, &mut rng);
+        assert_eq!(a.len(), 8 * 4);
+        assert_eq!(a, b, "clean forward must not consume randomness");
+        assert!(a.iter().any(|&v| v != 0.0));
+        // All batch lanes identical for identical inputs.
+        assert_eq!(&a[0..4], &a[28..32]);
+    }
+
+    #[test]
+    fn i32_features_take_the_embedding_path() {
+        let m = meta();
+        let model = NativeModel::from_meta(&m);
+        let mut rng = Rng::new(0);
+        let a = model.run(&Features::I32(vec![7; 8 * 4]), 8, None, &mut rng);
+        let b = model.run(&Features::I32(vec![9; 8 * 4]), 8, None, &mut rng);
+        assert_eq!(a.len(), 8 * 4);
+        assert_ne!(a, b, "different tokens -> different logits");
+    }
+
+    #[test]
+    fn rms_error_normalizes() {
+        let a = [1.0f32, 1.0, 1.0, 1.0];
+        let b = [0.0f32, 0.0, 0.0, 0.0];
+        assert!((rms_error(&a, &b, 4, 2.0) - 0.5).abs() < 1e-9);
+        assert_eq!(rms_error(&a, &b, 0, 2.0), 0.0);
+    }
+}

@@ -1,0 +1,65 @@
+//! PJRT execution backend: the pre-existing artifact path behind the
+//! [`ExecutionBackend`] trait.
+//!
+//! Numerics come from the AOT-compiled noisy-forward artifacts (the
+//! noise is folded into the HLO itself), so this backend cannot measure
+//! a per-batch output error — it reports [`ERR_UNMEASURED`] and the
+//! control plane falls back to latency/energy-only steering, exactly
+//! the pre-backend behavior. Energy/cycles are charged from the
+//! continuous-K redundancy plan, matching what the ledger always
+//! charged for artifact execution.
+
+use crate::analog::{AveragingMode, HardwareConfig};
+use crate::backend::{
+    continuous_analog_cost, BatchJob, BatchOutput, ExecutionBackend,
+    ERR_UNMEASURED,
+};
+use crate::ops::ModelOps;
+
+pub struct PjrtBackend {
+    hw: HardwareConfig,
+    averaging: AveragingMode,
+}
+
+impl PjrtBackend {
+    pub fn new(hw: HardwareConfig, averaging: AveragingMode) -> PjrtBackend {
+        PjrtBackend { hw, averaging }
+    }
+}
+
+impl ExecutionBackend for PjrtBackend {
+    fn label(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute(&mut self, job: &BatchJob<'_>) -> BatchOutput {
+        let ops = ModelOps::new(job.bundle);
+        // The AOT artifact is lowered for the full batch: all
+        // `meta.batch` lanes execute and return.
+        let rows = job.bundle.meta.batch;
+        match job.e {
+            None => BatchOutput {
+                logits: ops.fwd_simple("fwd_fp", job.x),
+                rows,
+                out_err: ERR_UNMEASURED,
+                energy_per_sample: 0.0,
+                cycles_per_sample: 0.0,
+            },
+            Some(e) => {
+                let (energy, cycles) = continuous_analog_cost(
+                    &job.bundle.meta,
+                    e,
+                    &self.hw,
+                    self.averaging,
+                );
+                BatchOutput {
+                    logits: ops.fwd_noisy(job.tag, job.x, job.seed, e),
+                    rows,
+                    out_err: ERR_UNMEASURED,
+                    energy_per_sample: energy,
+                    cycles_per_sample: cycles,
+                }
+            }
+        }
+    }
+}

@@ -28,6 +28,23 @@ pub struct AutotunerConfig {
     pub cooldown_ticks: u32,
     /// Minimum batches in the window before acting.
     pub min_batches: usize,
+    /// Target *measured* output error (RMS vs the digital reference,
+    /// normalized by the output range — what native backends publish in
+    /// `BatchSample::out_err`). When the window's measured error
+    /// exceeds this, the tuner raises the scale (more repetitions K,
+    /// more energy) even without latency headroom, trading energy for
+    /// observed accuracy instead of only latency. `None` disables the
+    /// error path (and PJRT-only fleets never measure one).
+    ///
+    /// Like the latency SLO, this governs the *fleet-wide,
+    /// request-weighted* window: in a mixed fleet, traffic served
+    /// exactly by a digital-reference device counts at error 0 (those
+    /// requests really were exact), so the bound is on the mean error
+    /// of served traffic, not on the worst device shard.
+    pub slo_out_err: Option<f64>,
+    /// Scale the tuner starts from (clamped to `[floor_scale, 1]`):
+    /// warm-start for energy-frugal deployments that climb on demand.
+    pub initial_scale: f64,
 }
 
 impl Default for AutotunerConfig {
@@ -40,6 +57,8 @@ impl Default for AutotunerConfig {
             headroom: 0.5,
             cooldown_ticks: 2,
             min_batches: 4,
+            slo_out_err: None,
+            initial_scale: 1.0,
         }
     }
 }
@@ -64,7 +83,8 @@ pub struct Autotuner {
 
 impl Autotuner {
     pub fn new(cfg: AutotunerConfig) -> Self {
-        Autotuner { cfg, scale: 1.0, cooldown: 0 }
+        let scale = cfg.initial_scale.clamp(cfg.floor_scale, 1.0);
+        Autotuner { cfg, scale, cooldown: 0 }
     }
 
     pub fn cfg(&self) -> &AutotunerConfig {
@@ -86,6 +106,11 @@ impl Autotuner {
     }
 
     /// One control tick: returns the (possibly updated) scale.
+    ///
+    /// Priority: a blown latency SLO steps *down* first (overload
+    /// safety — the degrade-then-shed path must stay live); otherwise a
+    /// blown output-error SLO steps *up* (buy precision with energy);
+    /// otherwise latency headroom climbs back toward the full policy.
     pub fn step(&mut self, w: &WindowStats) -> f64 {
         if self.cooldown > 0 {
             self.cooldown -= 1;
@@ -94,6 +119,10 @@ impl Autotuner {
         if w.batches < self.cfg.min_batches {
             return self.scale;
         }
+        let err_over_slo = match (self.cfg.slo_out_err, w.mean_out_err) {
+            (Some(slo), Some(err)) => err > slo,
+            _ => false,
+        };
         if w.p95_lat_us > self.cfg.slo_p95_us {
             let next =
                 (self.scale * self.cfg.step_down).max(self.cfg.floor_scale);
@@ -101,6 +130,9 @@ impl Autotuner {
                 self.scale = next;
                 self.cooldown = self.cfg.cooldown_ticks;
             }
+        } else if err_over_slo && self.scale < 1.0 {
+            self.scale = (self.scale * self.cfg.step_up).min(1.0);
+            self.cooldown = self.cfg.cooldown_ticks;
         } else if w.p95_lat_us < self.cfg.headroom * self.cfg.slo_p95_us
             && self.scale < 1.0
         {
@@ -128,6 +160,7 @@ mod tests {
             headroom: 0.5,
             cooldown_ticks: 0,
             min_batches: 2,
+            ..Default::default()
         })
     }
 
@@ -171,6 +204,7 @@ mod tests {
             step_down: 0.5,
             step_up: 2.0,
             headroom: 0.5,
+            ..Default::default()
         });
         assert_eq!(t.step(&window(20_000.0, 4)), 0.5); // acts, arms cooldown
         assert_eq!(t.step(&window(20_000.0, 4)), 0.5); // cooling
@@ -191,5 +225,80 @@ mod tests {
         assert_eq!(t.scale(), 0.25);
         t.set_scale(3.0);
         assert_eq!(t.scale(), 1.0);
+    }
+
+    fn err_tuner(slo_out_err: Option<f64>) -> Autotuner {
+        Autotuner::new(AutotunerConfig {
+            slo_p95_us: 10_000.0,
+            floor_scale: 0.1,
+            step_down: 0.5,
+            step_up: 2.0,
+            headroom: 0.0, // latency never climbs: only the error path
+            cooldown_ticks: 0,
+            min_batches: 2,
+            slo_out_err,
+            initial_scale: 0.25,
+        })
+    }
+
+    fn err_window(p95: f64, err: f64, batches: usize) -> WindowStats {
+        WindowStats {
+            batches,
+            p95_lat_us: p95,
+            mean_out_err: Some(err),
+            err_batches: batches,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn initial_scale_warm_starts_clamped() {
+        assert_eq!(err_tuner(None).scale(), 0.25);
+        let t = Autotuner::new(AutotunerConfig {
+            floor_scale: 0.5,
+            initial_scale: 0.1,
+            ..Default::default()
+        });
+        assert_eq!(t.scale(), 0.5);
+    }
+
+    #[test]
+    fn measured_error_over_slo_raises_scale() {
+        // Error 0.2 against an SLO of 0.05: the tuner buys precision
+        // (raises K/energy) tick by tick until the full policy.
+        let mut t = err_tuner(Some(0.05));
+        assert_eq!(t.step(&err_window(1_000.0, 0.2, 8)), 0.5);
+        assert_eq!(t.step(&err_window(1_000.0, 0.2, 8)), 1.0);
+        // At the full policy there is nothing left to raise.
+        assert_eq!(t.step(&err_window(1_000.0, 0.2, 8)), 1.0);
+    }
+
+    #[test]
+    fn error_within_slo_holds_without_headroom() {
+        let mut t = err_tuner(Some(0.05));
+        assert_eq!(t.step(&err_window(1_000.0, 0.01, 8)), 0.25);
+        // And with the error path disabled the scale also holds.
+        let mut t = err_tuner(None);
+        assert_eq!(t.step(&err_window(1_000.0, 0.2, 8)), 0.25);
+    }
+
+    #[test]
+    fn latency_overload_beats_error_pressure() {
+        // Both SLOs blown: overload safety wins — precision steps down
+        // so the degrade-then-shed path stays live.
+        let mut t = err_tuner(Some(0.05));
+        assert_eq!(t.step(&err_window(50_000.0, 0.2, 8)), 0.125);
+    }
+
+    #[test]
+    fn unmeasured_window_never_triggers_error_path() {
+        let mut t = err_tuner(Some(0.05));
+        let w = WindowStats {
+            batches: 8,
+            p95_lat_us: 1_000.0,
+            mean_out_err: None,
+            ..Default::default()
+        };
+        assert_eq!(t.step(&w), 0.25);
     }
 }

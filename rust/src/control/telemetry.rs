@@ -34,6 +34,11 @@ pub struct BatchSample {
     pub energy: f64,
     /// Fleet device id that executed the batch (0 for a single device).
     pub device: u32,
+    /// Measured output error of the batch (RMS vs the digital
+    /// reference, normalized by the output range); negative means the
+    /// executing backend cannot measure it (see
+    /// `backend::ERR_UNMEASURED`).
+    pub out_err: f32,
 }
 
 const WORDS: usize = 6;
@@ -46,7 +51,7 @@ fn pack(s: &BatchSample) -> [u64; WORDS] {
         ((s.lat_mean_us.to_bits() as u64) << 32)
             | s.lat_max_us.to_bits() as u64,
         s.energy.to_bits(),
-        s.device as u64,
+        ((s.out_err.to_bits() as u64) << 32) | s.device as u64,
     ]
 }
 
@@ -61,6 +66,7 @@ fn unpack(w: &[u64; WORDS]) -> BatchSample {
         lat_max_us: f32::from_bits(w[3] as u32),
         energy: f64::from_bits(w[4]),
         device: w[5] as u32,
+        out_err: f32::from_bits((w[5] >> 32) as u32),
     }
 }
 
@@ -216,6 +222,12 @@ pub struct WindowStats {
     pub energy_rate: f64,
     /// Served requests per second over the window (0 if span too short).
     pub req_rate: f64,
+    /// Request-weighted mean measured output error over the batches
+    /// that measured one (native/reference backends); `None` when no
+    /// batch in the window carried a measurement.
+    pub mean_out_err: Option<f64>,
+    /// Batches in the window that measured their output error.
+    pub err_batches: usize,
 }
 
 pub fn window_stats(samples: &[BatchSample]) -> WindowStats {
@@ -225,6 +237,8 @@ pub fn window_stats(samples: &[BatchSample]) -> WindowStats {
     }
     let mut means: Vec<(f64, u64)> = Vec::with_capacity(samples.len());
     let mut maxes: Vec<(f64, u64)> = Vec::with_capacity(samples.len());
+    let mut err_sum = 0.0f64;
+    let mut err_weight = 0u64;
     for s in samples {
         w.served += s.served as u64;
         w.energy += s.energy;
@@ -233,6 +247,16 @@ pub fn window_stats(samples: &[BatchSample]) -> WindowStats {
         w.mean_queue_depth += s.queue_depth as f64;
         means.push((s.lat_mean_us as f64, s.served as u64));
         maxes.push((s.lat_max_us as f64, s.served as u64));
+        if s.out_err >= 0.0 {
+            w.err_batches += 1;
+            err_sum += s.out_err as f64 * s.served as f64;
+            err_weight += s.served as u64;
+        }
+    }
+    // No request weight -> no measurement (never fabricate a
+    // confident 0.0 from a window that served nothing).
+    if err_weight > 0 {
+        w.mean_out_err = Some(err_sum / err_weight as f64);
     }
     let n = samples.len() as f64;
     w.mean_exec_us /= n;
@@ -285,6 +309,7 @@ mod tests {
             lat_max_us: lat * 2.0,
             energy,
             device: 0,
+            out_err: 0.0,
         }
     }
 
@@ -292,6 +317,10 @@ mod tests {
     fn pack_unpack_roundtrip() {
         let mut s = sample(123456, 17, 250.5, 1.5e9);
         s.device = 3;
+        s.out_err = 0.125;
+        assert_eq!(unpack(&pack(&s)), s);
+        // The unmeasured sentinel survives the roundtrip too.
+        s.out_err = -1.0;
         assert_eq!(unpack(&pack(&s)), s);
     }
 
@@ -364,6 +393,29 @@ mod tests {
         let w = window_stats(&[]);
         assert_eq!(w.batches, 0);
         assert_eq!(w.req_rate, 0.0);
+        assert_eq!(w.mean_out_err, None);
+        assert_eq!(w.err_batches, 0);
+    }
+
+    #[test]
+    fn out_err_aggregates_only_measured_batches() {
+        // Batch A: 10 requests at err 0.2; batch B: unmeasured (pjrt);
+        // batch C: 30 requests at err 0.1. Weighted mean over A and C:
+        // (10*0.2 + 30*0.1) / 40 = 0.125.
+        let mut a = sample(0, 10, 100.0, 0.0);
+        a.out_err = 0.2;
+        let mut b = sample(1000, 99, 100.0, 0.0);
+        b.out_err = -1.0;
+        let mut c = sample(2000, 30, 100.0, 0.0);
+        c.out_err = 0.1;
+        let w = window_stats(&[a, b, c]);
+        assert_eq!(w.err_batches, 2);
+        let err = w.mean_out_err.expect("two measured batches");
+        assert!((err - 0.125).abs() < 1e-9, "{err}");
+        // A window of only unmeasured batches reports None.
+        let w = window_stats(&[b]);
+        assert_eq!(w.mean_out_err, None);
+        assert_eq!(w.err_batches, 0);
     }
 
     #[test]
@@ -407,6 +459,7 @@ mod tests {
                         assert_eq!(s.served as u64, s.t_us % 1000);
                         assert_eq!(s.energy, s.t_us as f64 * 3.0);
                         assert_eq!(s.device as u64, s.t_us % 7);
+                        assert_eq!(s.out_err as u64, s.t_us % 5);
                         checked += 1;
                     }
                 }
@@ -424,6 +477,7 @@ mod tests {
                 lat_max_us: 0.0,
                 energy: i as f64 * 3.0,
                 device: (i % 7) as u32,
+                out_err: (i % 5) as f32,
             });
         }
         stop.store(true, Ordering::Relaxed);

@@ -1,11 +1,12 @@
 //! Sharded multi-device serving fleet.
 //!
 //! `DeviceFleet` owns N worker threads, each wrapping one simulated
-//! analog device (its own [`HardwareConfig`] + averaging mode — fleets
-//! may be heterogeneous, e.g. two fast homodyne multipliers next to two
-//! slow-but-cheap crossbars). The coordinator's dispatcher routes every
-//! batch flushed by the per-model `DynamicBatcher` to one device via a
-//! pluggable [`DispatchPolicy`]:
+//! analog device (its own [`HardwareConfig`] + averaging mode + an
+//! execution [`BackendKind`] — fleets may be heterogeneous, e.g. two
+//! fast homodyne multipliers next to two slow-but-cheap crossbars, or
+//! native noisy-GEMM devices next to a digital-reference device). The
+//! coordinator's dispatcher routes every batch flushed by the per-model
+//! `DynamicBatcher` to one device via a pluggable [`DispatchPolicy`]:
 //!
 //! - `RoundRobin` — rotate over devices with queue capacity left.
 //! - `LeastQueueDepth` — the device with the fewest in-flight batches.
@@ -66,8 +67,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::analog::{
-    plan_layer, AveragingMode, EnergyLedger, HardwareConfig,
+use crate::analog::{AveragingMode, EnergyLedger, HardwareConfig};
+use crate::backend::{
+    charged_analog_cost, make_backend, BackendKind, BatchJob,
+    ExecutionBackend, NativeModelSet,
 };
 use crate::control::{
     AdmissionGate, BatchSample, ControlShared, ModelControl, WindowStats,
@@ -75,16 +78,20 @@ use crate::control::{
 use crate::coordinator::request::{InferRequest, InferResponse};
 use crate::coordinator::scheduler::PrecisionScheduler;
 use crate::data::Features;
-use crate::ops::ModelOps;
 use crate::runtime::artifact::{ModelBundle, ModelMeta};
 
 /// One device slot in the fleet: a name for reports, the simulated
-/// hardware it runs, and its dispatch-queue bound.
+/// hardware it runs, the execution backend, and its dispatch-queue
+/// bound.
 #[derive(Clone, Debug)]
 pub struct DeviceSpec {
     pub name: String,
     pub hw: HardwareConfig,
     pub averaging: AveragingMode,
+    /// Which execution engine this device runs (see `crate::backend`).
+    /// Fleets may mix backends — e.g. native analog devices next to a
+    /// digital-reference device producing golden outputs.
+    pub backend: BackendKind,
     /// Batches this device will hold queued (dispatched, not yet
     /// completed) before the dispatcher routes elsewhere. When every
     /// device is at its cap the batch is shed. `usize::MAX` = unbounded.
@@ -101,6 +108,7 @@ impl DeviceSpec {
             name: name.into(),
             hw,
             averaging,
+            backend: BackendKind::Pjrt,
             queue_cap: usize::MAX,
         }
     }
@@ -108,6 +116,12 @@ impl DeviceSpec {
     /// Bound this device's dispatch queue (in batches).
     pub fn with_queue_cap(mut self, cap: usize) -> DeviceSpec {
         self.queue_cap = cap;
+        self
+    }
+
+    /// Select this device's execution backend (default: PJRT).
+    pub fn with_backend(mut self, backend: BackendKind) -> DeviceSpec {
+        self.backend = backend;
         self
     }
 }
@@ -149,6 +163,8 @@ pub struct DeviceStats {
     pub name: String,
     /// Device-kind label ("homodyne", "crossbar", "broadcast").
     pub kind: &'static str,
+    /// Execution-backend label ("native", "reference", "pjrt").
+    pub backend: &'static str,
     /// Batches dispatched to this device and not yet completed.
     pub pending_batches: usize,
     pub served: u64,
@@ -175,12 +191,17 @@ impl FleetStats {
     pub fn report(&self) -> String {
         let mut s = String::new();
         for d in &self.devices {
+            let err = match d.window.mean_out_err {
+                Some(e) => format!("{e:.3}"),
+                None => "-".to_string(),
+            };
             s.push_str(&format!(
-                "  dev{} {:<12} [{}] served={} batches={} pending={} \
-                 p95={:.0}us energy={:.3e} ({:.1e}/req)\n",
+                "  dev{} {:<12} [{}/{}] served={} batches={} pending={} \
+                 p95={:.0}us energy={:.3e} ({:.1e}/req) err={err}\n",
                 d.id,
                 d.name,
                 d.kind,
+                d.backend,
                 d.served,
                 d.batches,
                 d.pending_batches,
@@ -252,14 +273,16 @@ pub struct DeviceFleet {
 impl DeviceFleet {
     /// Spawn one worker thread per device spec. `bundles` are shared by
     /// every worker (PJRT compilation/execution is thread-safe; see
-    /// `runtime::Exec`); each worker keeps its own counters and ledger.
+    /// `runtime::Exec`); each worker keeps its own counters, ledger and
+    /// execution backend. When any spec selects a native or reference
+    /// backend, one [`NativeModelSet`] (deterministic weights per
+    /// model) is built and shared across those workers.
     pub fn start(
         specs: &[DeviceSpec],
         policy: DispatchPolicy,
         bundles: Vec<ModelBundle>,
         scheduler: Arc<RwLock<PrecisionScheduler>>,
         shared: Arc<ControlShared>,
-        simulate_device_time: bool,
     ) -> Result<DeviceFleet> {
         let bundles: Arc<BTreeMap<String, ModelBundle>> = Arc::new(
             bundles
@@ -271,6 +294,10 @@ impl DeviceFleet {
             .iter()
             .map(|(k, b)| (k.clone(), b.meta.clone()))
             .collect();
+        let natives: Option<Arc<NativeModelSet>> = specs
+            .iter()
+            .any(|s| s.backend.needs_native_models())
+            .then(|| Arc::new(NativeModelSet::build(metas.values())));
         let mut workers = Vec::with_capacity(specs.len());
         for (i, spec) in specs.iter().enumerate() {
             let (tx, rx) = channel::<WorkerMsg>();
@@ -283,6 +310,7 @@ impl DeviceFleet {
                 let shared = shared.clone();
                 let pending = pending.clone();
                 let counters = counters.clone();
+                let natives = natives.clone();
                 std::thread::Builder::new()
                     .name(format!("dynaprec-dev{i}"))
                     .spawn(move || {
@@ -295,7 +323,7 @@ impl DeviceFleet {
                             rx,
                             pending,
                             counters,
-                            simulate_device_time,
+                            natives,
                         )
                     })?
             };
@@ -458,10 +486,19 @@ impl DeviceFleet {
                     .ledger
                     .total_energy;
                 let queued = w.pending.load(Ordering::Acquire) as f64 + 1.0;
+                // Predict with the cost model this device's backend
+                // will actually charge, so the balance matches the
+                // ledgers being balanced.
                 let predicted = match (&e, self.metas.get(model)) {
                     (Some(e), Some(meta)) => {
-                        analog_cost(meta, e, &w.spec.hw, w.spec.averaging).0
-                            * n as f64
+                        charged_analog_cost(
+                            w.spec.backend,
+                            meta,
+                            e,
+                            &w.spec.hw,
+                            w.spec.averaging,
+                        )
+                        .0 * n as f64
                     }
                     _ => 0.0,
                 };
@@ -485,6 +522,7 @@ impl DeviceFleet {
                     id: i as u32,
                     name: w.spec.name.clone(),
                     kind: w.spec.hw.model.label(),
+                    backend: w.spec.backend.label(),
                     pending_batches: w.pending.load(Ordering::Acquire),
                     served: c.served,
                     batches: c.batches,
@@ -595,8 +633,16 @@ fn worker_loop(
     rx: Receiver<WorkerMsg>,
     pending: Arc<AtomicUsize>,
     counters: Arc<Mutex<DeviceCounters>>,
-    simulate_device_time: bool,
+    natives: Option<Arc<NativeModelSet>>,
 ) {
+    // Each worker owns its execution engine; native/reference engines
+    // share the deterministic weight set built at fleet start.
+    let mut backend = make_backend(
+        spec.backend,
+        spec.hw.clone(),
+        spec.averaging,
+        natives,
+    );
     while let Ok(msg) = rx.recv() {
         match msg {
             WorkerMsg::Batch(b) => {
@@ -611,7 +657,7 @@ fn worker_loop(
                         b.seed,
                         &counters,
                         shared.get(&b.model),
-                        simulate_device_time,
+                        backend.as_mut(),
                     );
                 } else {
                     // The dispatcher only routes models it has bundles
@@ -659,7 +705,7 @@ fn execute_batch(
     seed: u32,
     counters: &Arc<Mutex<DeviceCounters>>,
     mc: Option<&Arc<ModelControl>>,
-    simulate_device_time: bool,
+    backend: &mut dyn ExecutionBackend,
 ) {
     let meta = &bundle.meta;
     let bsz = meta.batch;
@@ -701,7 +747,11 @@ fn execute_batch(
         }
     };
 
-    // Assemble (and pad) the feature buffer.
+    // Assemble (and pad) the feature buffer. The lane width comes from
+    // the first request; a client request with a different feature
+    // length is truncated/zero-padded into its lane (never a panic —
+    // one odd request must not kill the device worker serving the
+    // whole batch).
     let sample = match &batch[0].x {
         Features::F32(v) => v.len(),
         Features::I32(v) => v.len(),
@@ -711,7 +761,9 @@ fn execute_batch(
             let mut buf = vec![0.0f32; bsz * sample];
             for (i, r) in batch.iter().enumerate() {
                 if let Features::F32(v) = &r.x {
-                    buf[i * sample..(i + 1) * sample].copy_from_slice(v);
+                    let m = v.len().min(sample);
+                    buf[i * sample..i * sample + m]
+                        .copy_from_slice(&v[..m]);
                 }
             }
             Features::F32(buf)
@@ -720,29 +772,36 @@ fn execute_batch(
             let mut buf = vec![0i32; bsz * sample];
             for (i, r) in batch.iter().enumerate() {
                 if let Features::I32(v) = &r.x {
-                    buf[i * sample..(i + 1) * sample].copy_from_slice(v);
+                    let m = v.len().min(sample);
+                    buf[i * sample..i * sample + m]
+                        .copy_from_slice(&v[..m]);
                 }
             }
             Features::I32(buf)
         }
     };
 
-    let ops = ModelOps::new(bundle);
+    // Dispatch through the device's execution backend: numerics,
+    // analog cost (continuous K for PJRT, the quantized realizable
+    // plan for native) and — on native backends — the batch's measured
+    // output error all come back from one call.
     let t_exec = Instant::now();
-    let logits = match &plan {
-        BatchPlan::Fp => ops.fwd_simple("fwd_fp", &x),
-        BatchPlan::Noisy { tag, e } => ops.fwd_noisy(tag, &x, seed, e),
+    let (e_opt, tag): (Option<&[f32]>, &str) = match &plan {
+        BatchPlan::Fp => (None, ""),
+        BatchPlan::Noisy { tag, e } => (Some(e.as_slice()), tag.as_str()),
     };
-
-    // Simulated analog cost on *this* device: energy from the scheduled
-    // e-vector, cycles from the redundant-coding plan over all sites.
-    let (energy_per_sample, cycles) = match &plan {
-        BatchPlan::Fp => (0.0, 0.0),
-        BatchPlan::Noisy { e, .. } => {
-            analog_cost(meta, e, &spec.hw, spec.averaging)
-        }
-    };
-    if simulate_device_time {
+    let out = backend.execute(&BatchJob {
+        bundle,
+        x: &x,
+        n_real: n,
+        seed,
+        e: e_opt,
+        tag,
+    });
+    let logits = out.logits;
+    let energy_per_sample = out.energy_per_sample;
+    let cycles = out.cycles_per_sample;
+    if spec.backend.simulates_time() {
         let ns = cycles * spec.hw.cycle_ns * n as f64;
         if ns >= 1.0 {
             std::thread::sleep(Duration::from_nanos(ns as u64));
@@ -750,9 +809,12 @@ fn execute_batch(
     }
     let exec_us = t_exec.elapsed().as_micros() as f64;
 
+    // Backends may return fewer logit rows than the padded batch
+    // (native engines skip the padding lanes); `out.rows` says how
+    // many, and is always >= the real sample count `n`.
     let classes = match &logits {
-        Ok(l) => l.len() / bsz,
-        Err(_) => 0,
+        Ok(l) if out.rows > 0 => l.len() / out.rows,
+        _ => 0,
     };
     let done = Instant::now();
     let occupancy = n as f64 / bsz as f64;
@@ -773,8 +835,14 @@ fn execute_batch(
             lat_sum += latency as f64;
             lat_max = lat_max.max(latency as f64);
             c.served += 1;
+            // Bounds-checked: a backend that reports more rows than it
+            // returned logits for yields empty rows, never a panicked
+            // worker (ExecutionBackend is a public extension point).
             let row = match &logits {
-                Ok(l) => l[i * classes..(i + 1) * classes].to_vec(),
+                Ok(l) => l
+                    .get(i * classes..(i + 1) * classes)
+                    .map(|r| r.to_vec())
+                    .unwrap_or_default(),
                 Err(_) => vec![],
             };
             let _ = r.resp.send(InferResponse::from_logits(
@@ -801,37 +869,9 @@ fn execute_batch(
             lat_max_us: lat_max as f32,
             energy: energy_per_sample * n as f64,
             device,
+            out_err: out.out_err,
         });
     }
-}
-
-/// Energy per sample + simulated cycles for a materialized e-vector on
-/// one device's hardware (continuous K, matching the ledger's charge).
-pub(crate) fn analog_cost(
-    meta: &ModelMeta,
-    e: &[f32],
-    hw: &HardwareConfig,
-    averaging: AveragingMode,
-) -> (f64, f64) {
-    let mut energy = 0.0;
-    let mut cycles = 0.0;
-    for (_, site) in meta.noise_sites() {
-        let es: Vec<f64> = e[site.e_offset..site.e_offset + site.n_channels]
-            .iter()
-            .map(|&v| v as f64)
-            .collect();
-        let plan = plan_layer(
-            hw,
-            averaging,
-            &es,
-            site.n_dot,
-            site.macs_per_channel,
-            false,
-        );
-        energy += plan.energy;
-        cycles += plan.cycles;
-    }
-    (energy, cycles)
 }
 
 #[cfg(test)]
@@ -893,6 +933,19 @@ mod tests {
             AveragingMode::Time,
         );
         assert_eq!(s.queue_cap, usize::MAX);
+        assert_eq!(s.backend, BackendKind::Pjrt, "pjrt is the default");
         assert_eq!(s.with_queue_cap(4).queue_cap, 4);
+    }
+
+    #[test]
+    fn spec_builder_selects_backend() {
+        let s = DeviceSpec::new(
+            "d0",
+            HardwareConfig::homodyne(),
+            AveragingMode::Time,
+        )
+        .with_backend(BackendKind::NativeAnalog { simulate_time: true });
+        assert_eq!(s.backend.label(), "native");
+        assert!(s.backend.simulates_time());
     }
 }

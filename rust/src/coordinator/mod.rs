@@ -14,8 +14,9 @@
 //!              |  |               |                 /   |   \
 //!              |  |               |            device workers 0..N
 //!              |  |               |            (own HardwareConfig,
-//!              |  |               |             EnergyLedger; PJRT
-//!              |  |               |             execute noisy fwd)
+//!              |  |               |             EnergyLedger, and an
+//!              |  |               |             ExecutionBackend:
+//!              |  |               |             pjrt | native | ref)
 //!              |  |               |                     |
 //!              |  |               |     TelemetryRing (device-stamped)
 //!              |  +---- control thread (crate::control) <--+

@@ -8,6 +8,8 @@
 //! cloneable `Sender`; the dispatcher drains the channel, batches per
 //! model, and routes every flushed batch to a device by the configured
 //! [`DispatchPolicy`]; the worker executes the scheduled noisy forward
+//! through its per-device execution backend (`crate::backend`: PJRT
+//! artifacts, the native noisy-GEMM engine, or the digital reference)
 //! and replies on each request's response channel.
 //!
 //! With `CoordinatorConfig::control.enabled` a control thread also runs:
@@ -28,6 +30,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::analog::{AveragingMode, EnergyLedger, HardwareConfig};
+use crate::backend::BackendKind;
 use crate::control::{
     control_loop, window_stats, window_stats_per_device, BatchSample,
     ControlConfig, ControlShared, ControllerCtx, Verdict, WindowStats,
@@ -53,13 +56,14 @@ pub struct CoordinatorConfig {
     /// Precision control plane (disabled by default).
     pub control: ControlConfig,
     /// Device fleet topology + dispatch policy. Empty `devices` means
-    /// one device built from `hw`/`averaging` above.
+    /// one device built from `hw`/`averaging`/`backend` above.
     pub fleet: FleetConfig,
-    /// Sleep out the simulated analog execution time (plan cycles x
-    /// `hw.cycle_ns` x batch) in each device worker. This makes the
-    /// precision <-> throughput coupling physically observable without
-    /// hardware; leave off when serving real artifacts.
-    pub simulate_device_time: bool,
+    /// Execution backend of the default single device (used when
+    /// `fleet.devices` is empty; explicit `DeviceSpec`s carry their
+    /// own). `NativeAnalog { simulate_time: true }` reproduces the old
+    /// `simulate_device_time` serving mode, now with real noisy
+    /// numerics and a measured output error.
+    pub backend: BackendKind,
 }
 
 impl Default for CoordinatorConfig {
@@ -71,21 +75,22 @@ impl Default for CoordinatorConfig {
             seed: 0,
             control: ControlConfig::default(),
             fleet: FleetConfig::default(),
-            simulate_device_time: false,
+            backend: BackendKind::Pjrt,
         }
     }
 }
 
 impl CoordinatorConfig {
     /// The effective device list: the configured fleet, or one device
-    /// synthesized from the top-level `hw`/`averaging`.
+    /// synthesized from the top-level `hw`/`averaging`/`backend`.
     pub fn device_specs(&self) -> Vec<DeviceSpec> {
         if self.fleet.devices.is_empty() {
             vec![DeviceSpec::new(
                 "device-0",
                 self.hw.clone(),
                 self.averaging,
-            )]
+            )
+            .with_backend(self.backend)]
         } else {
             self.fleet.devices.clone()
         }
@@ -128,10 +133,14 @@ impl ServerStats {
             .iter()
             .map(|(m, s)| format!("{m}={s:.3}"))
             .collect();
+        let err = match self.window.mean_out_err {
+            Some(e) => format!("{e:.4}"),
+            None => "unmeasured".to_string(),
+        };
         format!(
             "served={} shed={} batches={} | window[{} batches]: \
              lat_p50={:.0}us lat_p95={:.0}us exec_mean={:.0}us \
-             occupancy={:.2} queue={:.1}\n\
+             occupancy={:.2} queue={:.1} out_err={err}\n\
              energy/request: {:.4e} units; precision scales: {}\n{}",
             self.served,
             self.shed,
@@ -213,7 +222,6 @@ impl Coordinator {
             bundles,
             scheduler.clone(),
             shared.clone(),
-            cfg.simulate_device_time,
         )?);
 
         let dispatcher = {

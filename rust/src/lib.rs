@@ -10,6 +10,7 @@
 //! maps the request lifecycle and the paper's math onto these modules.
 
 pub mod analog;
+pub mod backend;
 pub mod control;
 pub mod coordinator;
 pub mod data;

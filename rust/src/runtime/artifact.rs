@@ -120,44 +120,110 @@ impl ModelMeta {
         }
     }
 
+    /// Parse `<model>.meta.json`. Every failure path returns a
+    /// `Result` with enough context (model name, site index, field) to
+    /// pinpoint the malformed artifact — a bad meta file sheds the one
+    /// load/request that touched it instead of panicking a fleet
+    /// worker (`unwrap`-free by audit; see also `parse_site`).
     pub fn parse(text: &str) -> Result<ModelMeta> {
-        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let j = Json::parse(text)
+            .map_err(|e| anyhow!("{e}"))
+            .context("model meta is not valid JSON")?;
+        // Parse the name first so every later error can carry it.
+        let name = j
+            .str_field("name")
+            .map_err(|e| anyhow!("{e}"))?
+            .to_string();
+        let in_meta = format!("in meta for model {name}");
         let sites = j
             .field("sites")
-            .map_err(|e| anyhow!("{e}"))?
+            .map_err(|e| anyhow!("{e}"))
+            .with_context(|| in_meta.clone())?
             .as_arr()
-            .ok_or_else(|| anyhow!("sites not an array"))?
+            .ok_or_else(|| anyhow!("sites not an array"))
+            .with_context(|| in_meta.clone())?
             .iter()
-            .map(parse_site)
+            .enumerate()
+            .map(|(i, s)| {
+                parse_site(s)
+                    .with_context(|| format!("parsing sites[{i}]"))
+                    .with_context(|| in_meta.clone())
+            })
             .collect::<Result<Vec<_>>>()?;
-        let baselines = j.field("baselines").map_err(|e| anyhow!("{e}"))?;
+        let baselines = j
+            .field("baselines")
+            .map_err(|e| anyhow!("{e}"))
+            .with_context(|| in_meta.clone())?;
         let artifacts = j
             .field("artifacts")
-            .map_err(|e| anyhow!("{e}"))?
+            .map_err(|e| anyhow!("{e}"))
+            .with_context(|| in_meta.clone())?
             .as_obj()
-            .ok_or_else(|| anyhow!("artifacts not an object"))?
+            .ok_or_else(|| anyhow!("artifacts not an object"))
+            .with_context(|| in_meta.clone())?
             .iter()
-            .map(|(k, v)| (k.clone(), v.as_str().unwrap_or_default().to_string()))
-            .collect();
+            .map(|(k, v)| {
+                // A non-string artifact filename used to degrade to ""
+                // silently and fail much later at exec time; reject it
+                // here, where the artifact name is known.
+                let file = v
+                    .as_str()
+                    .ok_or_else(|| {
+                        anyhow!("artifact '{k}' filename is not a string")
+                    })
+                    .with_context(|| in_meta.clone())?;
+                Ok((k.clone(), file.to_string()))
+            })
+            .collect::<Result<std::collections::BTreeMap<_, _>>>()?;
         let f = |k: &str| -> Result<f64> {
-            j.f64_field(k).map_err(|e| anyhow!("{e}"))
+            j.f64_field(k).map_err(|e| anyhow!("{e}")).with_context(|| in_meta.clone())
         };
+        let count = |k: &str| -> Result<usize> { nonneg_int(f(k)?, k) };
+        let batch = count("batch")?;
+        if batch == 0 {
+            bail!("model {name} has batch 0");
+        }
+        // Cross-field check: every site's energy slice must fit the
+        // model's e-vector — this is what the serving path (and the
+        // dispatcher's energy scoring) slices without re-checking, so
+        // an inconsistent meta must die here, not in a worker thread.
+        let e_len = count("e_len")?;
+        for (i, s) in sites.iter().enumerate() {
+            if s.n_channels == 0 {
+                bail!("sites[{i}] of model {name} has 0 output channels");
+            }
+            if s.e_offset + s.n_channels > e_len {
+                bail!(
+                    "sites[{i}] of model {name} spans e[{}..{}] beyond \
+                     e_len {e_len}",
+                    s.e_offset,
+                    s.e_offset + s.n_channels
+                );
+            }
+        }
         Ok(ModelMeta {
-            name: j.str_field("name").map_err(|e| anyhow!("{e}"))?.to_string(),
-            kind: j.str_field("kind").map_err(|e| anyhow!("{e}"))?.to_string(),
-            batch: f("batch")? as usize,
-            params_len: f("params_len")? as usize,
-            e_len: f("e_len")? as usize,
-            n_sites: f("n_sites")? as usize,
+            kind: j
+                .str_field("kind")
+                .map_err(|e| anyhow!("{e}"))
+                .with_context(|| in_meta.clone())?
+                .to_string(),
+            batch,
+            params_len: count("params_len")?,
+            e_len,
+            n_sites: count("n_sites")?,
             total_macs: f("total_macs_per_sample")?,
             sigma_thermal: f("sigma_thermal")?,
             sigma_weight: f("sigma_weight")?,
             photons_per_aj: f("photons_per_aj")?,
-            act_bits: f("act_bits")? as u32,
-            fp_acc: baselines.f64_field("fp_acc").map_err(|e| anyhow!("{e}"))?,
+            act_bits: count("act_bits")? as u32,
+            fp_acc: baselines
+                .f64_field("fp_acc")
+                .map_err(|e| anyhow!("{e}"))
+                .with_context(|| in_meta.clone())?,
             quant_acc: baselines.get("quant_acc").and_then(|v| v.as_f64()),
             artifacts,
             sites,
+            name,
         })
     }
 
@@ -237,26 +303,59 @@ impl ModelMeta {
 
 fn parse_site(j: &Json) -> Result<SiteMeta> {
     let f = |k: &str| -> Result<f64> { j.f64_field(k).map_err(|e| anyhow!("{e}")) };
+    let count = |k: &str| -> Result<usize> { nonneg_int(f(k)?, k) };
+    // Range pairs feed clamps and noise variances downstream; a
+    // reversed (or NaN) pair must fail the parse, not a fleet worker.
+    let range = |klo: &str, khi: &str| -> Result<(f64, f64)> {
+        let (lo, hi) = (f(klo)?, f(khi)?);
+        if lo > hi || lo.is_nan() || hi.is_nan() {
+            bail!("site range {klo}..{khi} = {lo}..{hi} is not ordered");
+        }
+        Ok((lo, hi))
+    };
+    let (in_lo, in_hi) = range("in_lo", "in_hi")?;
+    let (in_lo_clip, in_hi_clip) = range("in_lo_clip", "in_hi_clip")?;
+    let (out_lo, out_hi) = range("out_lo", "out_hi")?;
+    let (out_lo_clip, out_hi_clip) = range("out_lo_clip", "out_hi_clip")?;
+    let (w_lo_layer, w_hi_layer) = range("w_lo_layer", "w_hi_layer")?;
+    // A non-numeric bound array used to degrade silently to an empty
+    // per-channel range; surface it as a parse error instead.
+    let f32s = |k: &str| -> Result<Vec<f32>> {
+        j.field(k)
+            .map_err(|e| anyhow!("{e}"))?
+            .f32_vec()
+            .ok_or_else(|| anyhow!("site field {k} is not a number array"))
+    };
     Ok(SiteMeta {
         name: j.str_field("name").map_err(|e| anyhow!("{e}"))?.to_string(),
         kind: j.str_field("kind").map_err(|e| anyhow!("{e}"))?.to_string(),
-        n_dot: f("n_dot")? as usize,
-        n_channels: f("n_channels")? as usize,
+        n_dot: count("n_dot")?,
+        n_channels: count("n_channels")?,
         macs_per_channel: f("macs_per_channel")?,
-        e_offset: f("e_offset")? as usize,
-        in_lo: f("in_lo")?,
-        in_hi: f("in_hi")?,
-        in_lo_clip: f("in_lo_clip")?,
-        in_hi_clip: f("in_hi_clip")?,
-        out_lo: f("out_lo")?,
-        out_hi: f("out_hi")?,
-        out_lo_clip: f("out_lo_clip")?,
-        out_hi_clip: f("out_hi_clip")?,
-        w_lo_layer: f("w_lo_layer")?,
-        w_hi_layer: f("w_hi_layer")?,
-        w_lo: j.field("w_lo").map_err(|e| anyhow!("{e}"))?.f32_vec().unwrap_or_default(),
-        w_hi: j.field("w_hi").map_err(|e| anyhow!("{e}"))?.f32_vec().unwrap_or_default(),
+        e_offset: count("e_offset")?,
+        in_lo,
+        in_hi,
+        in_lo_clip,
+        in_hi_clip,
+        out_lo,
+        out_hi,
+        out_lo_clip,
+        out_hi_clip,
+        w_lo_layer,
+        w_hi_layer,
+        w_lo: f32s("w_lo")?,
+        w_hi: f32s("w_hi")?,
     })
+}
+
+/// Shared field validation for `ModelMeta::parse` / `parse_site`: a
+/// JSON number that must be a non-negative integer (counts, offsets,
+/// bit widths).
+fn nonneg_int(v: f64, k: &str) -> Result<usize> {
+    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 {
+        bail!("field {k} = {v} is not a non-negative integer");
+    }
+    Ok(v as usize)
 }
 
 /// A loaded model: meta + params literal + lazily compiled entries.
@@ -282,6 +381,8 @@ impl ModelBundle {
     /// work. Used by the control-plane tests and `serve_autotune`, which
     /// exercise the serving stack without compiled artifacts.
     pub fn synthetic(meta: ModelMeta) -> Self {
+        // Infallible: a zero-element literal never mismatches its
+        // shape (the only failure mode of f32_tensor).
         let params =
             lit::f32_tensor(&[0], &[]).expect("empty literal");
         ModelBundle { meta, dir: PathBuf::new(), params, engine: None }
@@ -412,6 +513,62 @@ mod tests {
         let e = m.broadcast_per_layer(&[2.0, 8.0]).unwrap();
         assert_eq!(e.len(), 8);
         assert!((m.avg_energy_per_mac(&e) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn malformed_meta_errors_with_context() {
+        // Non-string artifact filename: rejected at parse time with the
+        // artifact key and model name in the chain.
+        let bad_artifact = META.replace(
+            r#""fwd_fp": "m.fwd_fp.hlo.txt""#,
+            r#""fwd_fp": 7"#,
+        );
+        let err = ModelMeta::parse(&bad_artifact).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fwd_fp"), "{msg}");
+        assert!(msg.contains("model m"), "{msg}");
+
+        // A broken site reports its index.
+        let bad_site = META.replace(r#""n_dot": 27"#, r#""n_dot": 2.5"#);
+        let err = ModelMeta::parse(&bad_site).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("sites[0]"), "{msg}");
+        assert!(msg.contains("n_dot"), "{msg}");
+
+        // Non-array weight bounds no longer degrade silently.
+        let bad_wlo = META.replace(
+            r#""w_lo": [-0.5, -0.4, -0.3, -0.2]"#,
+            r#""w_lo": "oops""#,
+        );
+        assert!(ModelMeta::parse(&bad_wlo).is_err());
+
+        // Degenerate batch is rejected up front.
+        let bad_batch = META.replace(r#""batch": 32"#, r#""batch": 0"#);
+        let err = ModelMeta::parse(&bad_batch).unwrap_err();
+        assert!(format!("{err:#}").contains("batch 0"));
+
+        // Reversed clip bounds would otherwise reach f32::clamp in the
+        // native kernels; reject them at parse time.
+        let bad_range = META.replace(
+            r#""in_lo_clip": -0.9, "in_hi_clip": 0.9"#,
+            r#""in_lo_clip": 0.9, "in_hi_clip": -0.9"#,
+        );
+        let err = ModelMeta::parse(&bad_range).unwrap_err();
+        assert!(format!("{err:#}").contains("not ordered"));
+
+        // A site whose energy slice overruns e_len would panic the
+        // e-vector slicing in the serving path; reject at parse time.
+        let bad_offset =
+            META.replace(r#""e_offset": 5"#, r#""e_offset": 50"#);
+        let err = ModelMeta::parse(&bad_offset).unwrap_err();
+        assert!(format!("{err:#}").contains("beyond"), "{err:#}");
+        let bad_channels =
+            META.replace(r#""n_dot": 8, "n_channels": 1"#, r#""n_dot": 8, "n_channels": 0"#);
+        let err = ModelMeta::parse(&bad_channels).unwrap_err();
+        assert!(format!("{err:#}").contains("0 output channels"), "{err:#}");
+
+        // Invalid JSON reports the parse context, not a panic.
+        assert!(ModelMeta::parse("{nope").is_err());
     }
 
     #[test]

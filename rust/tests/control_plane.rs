@@ -2,11 +2,11 @@
 //!
 //! These run the *real* coordinator stack (router -> admission gate ->
 //! batcher -> device loop -> telemetry -> control thread) over a
-//! synthetic model bundle. Forwards fail cleanly (no PJRT engine), but
-//! everything the control plane acts on — batching, queueing, the
-//! analog cost model, and the simulated device time (plan cycles x
-//! cycle_ns) — is real, so precision stepping measurably changes
-//! throughput, latency and the energy ledger.
+//! synthetic model bundle on the native execution backend: noisy
+//! numerics, the analog cost model, and the simulated device time
+//! (plan cycles x cycle_ns) are all real, so precision stepping
+//! measurably changes throughput, latency, the energy ledger — and the
+//! measured output error.
 //!
 //! Controller-convergence tests poll with generous deadlines instead of
 //! asserting after fixed sleeps, so a loaded CI runner slows them down
@@ -15,6 +15,7 @@
 use std::time::{Duration, Instant};
 
 use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
+use dynaprec::backend::BackendKind;
 use dynaprec::control::{
     AdmissionConfig, AutotunerConfig, ControlConfig, GovernorConfig,
 };
@@ -69,7 +70,7 @@ fn stats_ledger_and_telemetry_without_control() {
         },
         hw: hw(100.0),
         averaging: AveragingMode::Time,
-        simulate_device_time: true,
+        backend: BackendKind::NativeAnalog { simulate_time: true },
         ..Default::default()
     };
     assert!(!cfg.control.enabled);
@@ -80,8 +81,8 @@ fn stats_ledger_and_telemetry_without_control() {
     for rx in receivers {
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(!resp.shed);
-        // No PJRT engine: logits are empty, but the analog cost model ran.
-        assert!(resp.logits.is_empty());
+        // Native backend: real noisy logits plus the analog cost model.
+        assert_eq!(resp.logits.len(), 4);
         assert!((resp.energy - 32_000.0).abs() < 1e-6, "{}", resp.energy);
     }
     let stats = coord.shutdown();
@@ -96,6 +97,10 @@ fn stats_ledger_and_telemetry_without_control() {
     // Energy-per-request reporting (derived from ledger totals).
     assert!((stats.energy_per_request() - 32_000.0).abs() < 1e-6);
     assert!(stats.report().contains("energy/request"));
+    // The native backend measured every batch's output error.
+    let err = stats.window.mean_out_err.expect("native measures error");
+    assert!(err > 0.0, "shot noise at K=16 must leave an error: {err}");
+    assert!(stats.report().contains("out_err"));
 }
 
 #[test]
@@ -120,6 +125,7 @@ fn autotuner_degrades_under_overload_and_recovers() {
             headroom: 0.5,
             cooldown_ticks: 1,
             min_batches: 3,
+            ..Default::default()
         },
         governor: GovernorConfig::default(),
         admission: AdmissionConfig {
@@ -136,7 +142,7 @@ fn autotuner_degrades_under_overload_and_recovers() {
         averaging: AveragingMode::Time,
         seed: 0,
         control,
-        simulate_device_time: true,
+        backend: BackendKind::NativeAnalog { simulate_time: true },
         ..Default::default()
     };
     let coord =
@@ -230,7 +236,7 @@ fn admission_sheds_only_after_precision_floor() {
         averaging: AveragingMode::Time,
         seed: 0,
         control,
-        simulate_device_time: true,
+        backend: BackendKind::NativeAnalog { simulate_time: true },
         ..Default::default()
     };
     let coord =
@@ -279,7 +285,7 @@ fn admission_sheds_only_after_precision_floor() {
         averaging: AveragingMode::Time,
         seed: 0,
         control,
-        simulate_device_time: true,
+        backend: BackendKind::NativeAnalog { simulate_time: true },
         ..Default::default()
     };
     let coord =
@@ -334,7 +340,7 @@ fn governor_enforces_per_request_energy_budget() {
         averaging: AveragingMode::Time,
         seed: 0,
         control,
-        simulate_device_time: true,
+        backend: BackendKind::NativeAnalog { simulate_time: true },
         ..Default::default()
     };
     let coord =

@@ -2,13 +2,15 @@
 //!
 //! These run the real coordinator stack (router -> batcher ->
 //! dispatcher -> device fleet -> telemetry) over synthetic model
-//! bundles. Forwards fail cleanly (no PJRT engine), but batching,
-//! dispatch, the per-device analog cost model and the simulated device
-//! time are all real.
+//! bundles on the *native* execution backend: every batch runs the
+//! pure-Rust noisy GEMM, so logits, the per-device analog cost model,
+//! the measured output error and the simulated device time are all
+//! real.
 
 use std::time::{Duration, Instant};
 
 use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
+use dynaprec::backend::BackendKind;
 use dynaprec::coordinator::scheduler::ModelPrecision;
 use dynaprec::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, DeviceSpec,
@@ -45,8 +47,14 @@ fn hw(cycle_ns: f64) -> HardwareConfig {
     }
 }
 
+/// A native-backend device with simulated analog time.
+fn dev(name: &str, cycle_ns: f64) -> DeviceSpec {
+    DeviceSpec::new(name, hw(cycle_ns), AveragingMode::Time)
+        .with_backend(BackendKind::NativeAnalog { simulate_time: true })
+}
+
 fn sample() -> Features {
-    Features::F32(vec![0.0; 4])
+    Features::F32(vec![0.25; 4])
 }
 
 fn fleet_cfg(devices: Vec<DeviceSpec>, policy: DispatchPolicy) -> CoordinatorConfig {
@@ -57,7 +65,6 @@ fn fleet_cfg(devices: Vec<DeviceSpec>, policy: DispatchPolicy) -> CoordinatorCon
         },
         averaging: AveragingMode::Time,
         fleet: FleetConfig { devices, policy },
-        simulate_device_time: true,
         ..Default::default()
     }
 }
@@ -67,10 +74,7 @@ fn deadline_flush_pads_short_batch_and_charges_real_samples() {
     // 3 requests against an artifact batch of 8: the deadline flush
     // dispatches a short batch, the worker pads it to 8 lanes, and the
     // ledger/telemetry charge exactly the 3 real samples.
-    let cfg = fleet_cfg(
-        vec![DeviceSpec::new("d0", hw(100.0), AveragingMode::Time)],
-        DispatchPolicy::RoundRobin,
-    );
+    let cfg = fleet_cfg(vec![dev("d0", 100.0)], DispatchPolicy::RoundRobin);
     let coord =
         Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
             .unwrap();
@@ -82,6 +86,9 @@ fn deadline_flush_pads_short_batch_and_charges_real_samples() {
         assert_eq!(resp.batch_size, 3, "short batch, not the padded 8");
         assert_eq!(resp.device, 0);
         assert!((resp.energy - 32_000.0).abs() < 1e-6, "{}", resp.energy);
+        // Native backend: real logits (4 classes), not a PJRT error.
+        assert_eq!(resp.logits.len(), 4);
+        assert!(resp.pred >= 0);
     }
     let fs = coord.fleet_stats();
     assert_eq!(fs.devices.len(), 1);
@@ -103,10 +110,8 @@ fn conservation_holds_with_a_rejecting_device() {
     // most one in-flight batch. A burst must split exactly into served
     // + shed with one response per request: served + shed == submitted.
     let devices = vec![
-        DeviceSpec::new("reject", hw(4000.0), AveragingMode::Time)
-            .with_queue_cap(0),
-        DeviceSpec::new("ok", hw(4000.0), AveragingMode::Time)
-            .with_queue_cap(1),
+        dev("reject", 4000.0).with_queue_cap(0),
+        dev("ok", 4000.0).with_queue_cap(1),
     ];
     let cfg = fleet_cfg(devices, DispatchPolicy::LeastQueueDepth);
     let coord =
@@ -142,10 +147,7 @@ fn conservation_holds_with_a_rejecting_device() {
 
 #[test]
 fn round_robin_spreads_batches_and_stamps_device_telemetry() {
-    let devices = vec![
-        DeviceSpec::new("d0", hw(100.0), AveragingMode::Time),
-        DeviceSpec::new("d1", hw(100.0), AveragingMode::Time),
-    ];
+    let devices = vec![dev("d0", 100.0), dev("d1", 100.0)];
     let cfg = fleet_cfg(devices, DispatchPolicy::RoundRobin);
     let coord =
         Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
@@ -176,6 +178,10 @@ fn round_robin_spreads_batches_and_stamps_device_telemetry() {
         assert_eq!(d.window.batches as u64, d.batches, "dev{} batches", d.id);
         // Per-device ledgers charge the same policy on identical hw.
         assert!((d.ledger.avg_energy_per_mac() - 16.0).abs() < 1e-6);
+        // Native backends measure a real (positive) output error.
+        let err = d.window.mean_out_err.expect("native backend measures");
+        assert!(err > 0.0, "dev{} err {err}", d.id);
+        assert_eq!(d.backend, "native");
     }
     // Fleet-wide window aggregates every device.
     assert_eq!(fs.fleet.served, 64);
@@ -187,10 +193,7 @@ fn energy_aware_dispatch_balances_cumulative_energy() {
     // Two identical devices, energy-aware dispatch: the projected-cost
     // score reduces to cumulative-ledger balancing, so both devices end
     // up with work (and neither hoards the whole backlog).
-    let devices = vec![
-        DeviceSpec::new("d0", hw(100.0), AveragingMode::Time),
-        DeviceSpec::new("d1", hw(100.0), AveragingMode::Time),
-    ];
+    let devices = vec![dev("d0", 100.0), dev("d1", 100.0)];
     let cfg = fleet_cfg(devices, DispatchPolicy::EnergyAware);
     let coord =
         Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
@@ -217,10 +220,7 @@ fn shutdown_drains_every_queued_batch() {
     // immediately: every request must still be answered (the dispatcher
     // flushes its batchers into the fleet and workers drain their
     // queues before honoring shutdown).
-    let devices = vec![
-        DeviceSpec::new("d0", hw(2000.0), AveragingMode::Time),
-        DeviceSpec::new("d1", hw(2000.0), AveragingMode::Time),
-    ];
+    let devices = vec![dev("d0", 2000.0), dev("d1", 2000.0)];
     let cfg = fleet_cfg(devices, DispatchPolicy::LeastQueueDepth);
     let coord =
         Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)

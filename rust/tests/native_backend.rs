@@ -1,0 +1,375 @@
+//! Native execution backend tests — the paper's precision loop, closed.
+//!
+//! Three layers of coverage, none needing artifacts:
+//!
+//! 1. Properties of the noisy-GEMM engine: K-repetition averaging
+//!    shrinks the measured output error like 1/sqrt(K), and at K ->
+//!    large the native backend converges to the digital reference.
+//! 2. The serving stack on a mixed native/reference fleet: golden and
+//!    noisy devices coexist, each reporting its own measured error.
+//! 3. The autotuner *reacting to the measured error*: when the window
+//!    error exceeds the SLO, the controller raises the precision scale
+//!    (more repetitions K, more energy) — trading energy for observed
+//!    accuracy, not just latency.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dynaprec::analog::{AveragingMode, HardwareConfig};
+use dynaprec::backend::{
+    BackendKind, BatchJob, DigitalReferenceBackend, ExecutionBackend,
+    NativeAnalogBackend, NativeModelSet,
+};
+use dynaprec::control::{AutotunerConfig, ControlConfig};
+use dynaprec::coordinator::scheduler::ModelPrecision;
+use dynaprec::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, DeviceSpec,
+    DispatchPolicy, EnergyPolicy, FleetConfig, PrecisionScheduler,
+};
+use dynaprec::data::Features;
+use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+
+const MODEL: &str = "nb";
+const BATCH: usize = 16;
+
+/// 2 noise sites x 4 channels, n_dot 64, 2000 MACs/sample — the shared
+/// synthetic profile (sigma_thermal 0.01: one-repetition output noise
+/// std 0.16 on a broadcast-and-weight device, ~8% of the output range).
+fn meta() -> ModelMeta {
+    ModelMeta::synthetic(MODEL, BATCH, 2, 4, 64, 250.0)
+}
+
+fn x() -> Features {
+    Features::F32(vec![0.25; BATCH * 4])
+}
+
+/// Run one native noisy batch at uniform per-layer energy `e` on a
+/// thermal (broadcast-and-weight) device; returns (out_err,
+/// energy_per_sample, noisy logits, reference logits).
+fn native_run(e_layer: f64, seed: u32) -> (f64, f64, Vec<f32>, Vec<f32>) {
+    let m = meta();
+    let natives = Arc::new(NativeModelSet::build([&m]));
+    let bundle = ModelBundle::synthetic(meta());
+    let e = m
+        .broadcast_per_layer(&[e_layer, e_layer])
+        .expect("2 noise sites");
+    let hw = HardwareConfig::broadcast_weight();
+    let mut native = NativeAnalogBackend::new(
+        hw,
+        AveragingMode::Time,
+        natives.clone(),
+    );
+    let feats = x();
+    let out = native.execute(&BatchJob {
+        bundle: &bundle,
+        x: &feats,
+        n_real: BATCH,
+        seed,
+        e: Some(&e),
+        tag: "thermal.fwd",
+    });
+    let mut reference = DigitalReferenceBackend::new(natives);
+    let golden = reference.execute(&BatchJob {
+        bundle: &bundle,
+        x: &feats,
+        n_real: BATCH,
+        seed,
+        e: None,
+        tag: "",
+    });
+    (
+        out.out_err as f64,
+        out.energy_per_sample,
+        out.logits.expect("native numerics"),
+        golden.logits.expect("reference numerics"),
+    )
+}
+
+/// Mean measured output error over `reps` independent noise draws.
+fn mean_err(e_layer: f64, reps: u32) -> f64 {
+    (0..reps).map(|s| native_run(e_layer, 1000 + s).0).sum::<f64>()
+        / reps as f64
+}
+
+#[test]
+fn repetition_averaging_shrinks_error_like_inv_sqrt_k() {
+    // K = 1 vs K = 16: the measured output error must shrink ~4x
+    // (sqrt(16)). Mild clipping nonlinearity at K = 1 pushes the ratio
+    // slightly above 4; the band is calibrated for the deterministic
+    // seeds used here.
+    let e1 = mean_err(1.0, 20);
+    let e16 = mean_err(16.0, 20);
+    assert!(e1 > 0.02, "K=1 error should be visible: {e1}");
+    let ratio = e1 / e16;
+    assert!(
+        (3.2..=5.0).contains(&ratio),
+        "err(K=1)/err(K=16) = {ratio} (want ~4): {e1} vs {e16}"
+    );
+    // And energy scales linearly with K while error shrinks: the
+    // programmable precision <-> energy tradeoff in one assertion.
+    let (_, energy1, _, _) = native_run(1.0, 1);
+    let (_, energy16, _, _) = native_run(16.0, 1);
+    assert!((energy1 - 2_000.0).abs() < 1e-9, "{energy1}");
+    assert!((energy16 - 32_000.0).abs() < 1e-9, "{energy16}");
+}
+
+#[test]
+fn native_converges_to_digital_reference_at_large_k() {
+    // K = 1e6 divides the one-repetition noise std by 1000: the noisy
+    // logits must match the golden digital logits almost exactly.
+    let (err, _, noisy, golden) = native_run(1e6, 7);
+    assert_eq!(noisy.len(), golden.len());
+    assert!(err < 2e-3, "residual error {err} at K=1e6");
+    for (i, (&a, &b)) in noisy.iter().zip(&golden).enumerate() {
+        assert!(
+            (a - b).abs() < 0.02,
+            "logit {i}: native {a} vs reference {b}"
+        );
+    }
+    // The error measurement itself agrees with a direct comparison.
+    let (err1, _, noisy1, golden1) = native_run(1.0, 7);
+    let rms: f64 = noisy1
+        .iter()
+        .zip(&golden1)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / noisy1.len() as f64;
+    let direct = rms.sqrt() / 2.0; // final site output range is 2
+    assert!(
+        (err1 - direct).abs() < 1e-6,
+        "reported {err1} vs direct {direct}"
+    );
+}
+
+#[test]
+fn more_energy_never_hurts_for_random_policies() {
+    // Property over random per-layer energies: 64x the energy (8x less
+    // noise std) must strictly shrink the measured error.
+    for case in 0u32..8 {
+        let e = 1.0 + (case as f64) * 2.3;
+        let low = mean_err(e, 6);
+        let high = mean_err(e * 64.0, 6);
+        assert!(
+            high < low,
+            "case {case}: err at {e} = {low} vs at {} = {high}",
+            e * 64.0
+        );
+    }
+}
+
+#[test]
+fn mixed_native_reference_fleet_serves_and_reports_error() {
+    // A native device next to a digital-reference device: both serve,
+    // the native one reports a positive measured error, the reference
+    // exactly zero, and the fleet report carries both backends.
+    let mut sched = PrecisionScheduler::new();
+    sched.set(
+        MODEL,
+        ModelPrecision {
+            noise: "thermal".into(),
+            policy: EnergyPolicy::PerLayer(vec![4.0, 4.0]),
+        },
+    );
+    let hw = HardwareConfig::broadcast_weight();
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: BATCH,
+            max_wait: Duration::from_millis(2),
+        },
+        averaging: AveragingMode::Time,
+        fleet: FleetConfig {
+            devices: vec![
+                DeviceSpec::new("native-0", hw.clone(), AveragingMode::Time)
+                    .with_backend(BackendKind::NativeAnalog {
+                        simulate_time: false,
+                    }),
+                DeviceSpec::new("golden-0", hw, AveragingMode::Time)
+                    .with_backend(BackendKind::DigitalReference {
+                        simulate_time: false,
+                    }),
+            ],
+            policy: DispatchPolicy::RoundRobin,
+        },
+        ..Default::default()
+    };
+    let coord = Coordinator::start(
+        vec![ModelBundle::synthetic(meta())],
+        sched,
+        cfg,
+    )
+    .unwrap();
+    let receivers: Vec<_> =
+        (0..BATCH * 8).map(|_| coord.submit(MODEL, x())).collect();
+    for rx in receivers {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(!resp.shed);
+        assert_eq!(resp.logits.len(), 4);
+    }
+    let fs = coord.fleet_stats();
+    assert_eq!(fs.devices.len(), 2);
+    assert_eq!(fs.devices[0].backend, "native");
+    assert_eq!(fs.devices[1].backend, "reference");
+    for d in &fs.devices {
+        assert!(d.served > 0, "dev{} starved", d.id);
+    }
+    let native_err =
+        fs.devices[0].window.mean_out_err.expect("native measures");
+    assert!(native_err > 0.0, "native err {native_err}");
+    let golden_err =
+        fs.devices[1].window.mean_out_err.expect("reference measures");
+    assert_eq!(golden_err, 0.0, "reference is exact");
+    // The digital reference charges no analog energy; the native does.
+    assert_eq!(fs.devices[1].ledger.total_energy, 0.0);
+    assert!(fs.devices[0].ledger.total_energy > 0.0);
+    let report = fs.report();
+    assert!(report.contains("native"), "{report}");
+    assert!(report.contains("reference"), "{report}");
+    coord.shutdown();
+}
+
+fn error_slo_config(slo_out_err: Option<f64>) -> CoordinatorConfig {
+    CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: BATCH,
+            max_wait: Duration::from_millis(2),
+        },
+        hw: HardwareConfig::broadcast_weight(),
+        averaging: AveragingMode::Time,
+        control: ControlConfig {
+            enabled: true,
+            tick: Duration::from_millis(5),
+            window: 16,
+            max_sample_age: Duration::from_millis(500),
+            autotuner: AutotunerConfig {
+                // Latency never constrains (huge SLO) and never climbs
+                // (zero headroom): only the measured-error path can
+                // raise the scale from its 0.25 warm start.
+                slo_p95_us: 1e9,
+                floor_scale: 0.1,
+                step_down: 0.5,
+                step_up: 1.4,
+                headroom: 0.0,
+                cooldown_ticks: 1,
+                min_batches: 2,
+                slo_out_err,
+                initial_scale: 0.25,
+            },
+            ..Default::default()
+        },
+        backend: BackendKind::NativeAnalog { simulate_time: false },
+        ..Default::default()
+    }
+}
+
+fn start_error_slo_coord(slo: Option<f64>) -> Coordinator {
+    let mut sched = PrecisionScheduler::new();
+    sched.set(
+        MODEL,
+        ModelPrecision {
+            noise: "thermal".into(),
+            policy: EnergyPolicy::PerLayer(vec![16.0, 16.0]),
+        },
+    );
+    Coordinator::start(
+        vec![ModelBundle::synthetic(meta())],
+        sched,
+        error_slo_config(slo),
+    )
+    .unwrap()
+}
+
+#[test]
+fn autotuner_raises_energy_when_measured_error_exceeds_slo() {
+    // At the 0.25 warm start the scheduled energy is 4/layer (K = 4):
+    // measured error ~0.08, far above the 0.001 SLO — the controller
+    // must climb back to the full policy (scale 1.0), i.e. raise
+    // K/energy in response to the *observed* accuracy signal.
+    let coord = start_error_slo_coord(Some(0.001));
+    // Phase 1: the controller must commit the 0.25 warm start (the
+    // gate publishes 1.0 until its first tick) — otherwise a read of
+    // the initial 1.0 would fake the climb below.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut warm_started = false;
+    while Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+        if coord.stats().scales[MODEL] <= 0.26 {
+            warm_started = true;
+            break;
+        }
+    }
+    assert!(warm_started, "warm-start scale was never committed");
+    // Phase 2: under load, the measured error (>> 0.001) forces the
+    // scale back up to the full policy.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut scale = 0.0;
+    let mut climbed = false;
+    while Instant::now() < deadline {
+        for _ in 0..BATCH * 2 {
+            drop(coord.submit(MODEL, x()));
+        }
+        std::thread::sleep(Duration::from_millis(10));
+        scale = coord.stats().scales[MODEL];
+        if scale >= 0.99 {
+            climbed = true;
+            break;
+        }
+    }
+    assert!(
+        climbed,
+        "error above SLO never raised the scale (stuck at {scale})"
+    );
+    // The energy ledger confirms K went up: keep serving at the raised
+    // scale until the telemetry window is full of batches charging the
+    // full 16 units/MAC policy (32000/request), not the 8000/request
+    // warm start.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut energy_per_req = 0.0;
+    while Instant::now() < deadline {
+        for _ in 0..BATCH * 2 {
+            drop(coord.submit(MODEL, x()));
+        }
+        std::thread::sleep(Duration::from_millis(10));
+        energy_per_req = coord.stats().window.energy_per_req;
+        if energy_per_req > 25_000.0 {
+            break;
+        }
+    }
+    assert!(
+        energy_per_req > 25_000.0,
+        "window energy/request {energy_per_req} should reflect the raised K"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn error_within_slo_holds_the_warm_start_scale() {
+    // Same stack, no error SLO: nothing can raise the scale (zero
+    // latency headroom), so it commits the 0.25 warm start and stays.
+    let coord = start_error_slo_coord(None);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut committed = false;
+    while Instant::now() < deadline {
+        for _ in 0..BATCH * 2 {
+            drop(coord.submit(MODEL, x()));
+        }
+        std::thread::sleep(Duration::from_millis(10));
+        if (coord.stats().scales[MODEL] - 0.25).abs() < 1e-9 {
+            committed = true;
+            break;
+        }
+    }
+    assert!(committed, "warm-start scale was never committed");
+    // Keep serving: the scale must not move without an error SLO.
+    for _ in 0..20 {
+        for _ in 0..BATCH {
+            drop(coord.submit(MODEL, x()));
+        }
+        std::thread::sleep(Duration::from_millis(10));
+        let s = coord.stats().scales[MODEL];
+        assert!(
+            (s - 0.25).abs() < 1e-9,
+            "scale moved to {s} with no error SLO"
+        );
+    }
+    coord.shutdown();
+}
