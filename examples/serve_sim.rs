@@ -1,0 +1,180 @@
+//! serve_sim — deterministic chaos-fleet scenario replay.
+//!
+//! Replays a 10-virtual-minute heavy-tail burst trace against a
+//! 4-device native analog fleet with the precision control plane on,
+//! kills one device mid-run and drifts another out of calibration —
+//! then replays the *identical* scenario a second time and verifies
+//! the runs are bit-identical (same response digest, same shed count,
+//! same final autotuner scales, same energy ledger) while all
+//! invariant checkers pass. Ten minutes of virtual serving complete in
+//! well under five seconds of wall time.
+//!
+//!   cargo run --release --example serve_sim
+//!
+//! Exits non-zero on any invariant violation or replay divergence
+//! (wired into CI as the `sim_soak` smoke).
+
+use std::time::Duration;
+
+use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
+use dynaprec::backend::BackendKind;
+use dynaprec::control::{AdmissionConfig, AutotunerConfig, ControlConfig};
+use dynaprec::coordinator::scheduler::ModelPrecision;
+use dynaprec::coordinator::{
+    BatcherConfig, CoordinatorConfig, DeviceSpec, DispatchPolicy,
+    EnergyPolicy, Fault, FleetConfig, PrecisionScheduler,
+};
+use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+use dynaprec::sim::{
+    heavy_tail, merge, run_scenario, Scenario, SimEvent, SimReport,
+    TrafficSpec,
+};
+
+const MODEL: &str = "tiny";
+
+fn scenario_report() -> SimReport {
+    // 4 native devices, 4us/cycle: ~7.8k samples/s each at the full
+    // policy (K = 16 over 2 sites), ~31k/s fleet-wide.
+    let hw = HardwareConfig {
+        array_rows: 256,
+        array_cols: 256,
+        cycle_ns: 4000.0,
+        base_energy_aj: 1.0,
+        model: DeviceModel::Homodyne,
+    };
+    let devices: Vec<DeviceSpec> = (0..4)
+        .map(|i| {
+            DeviceSpec::new(format!("analog-{i}"), hw.clone(), AveragingMode::Time)
+                .with_backend(BackendKind::NativeAnalog {
+                    simulate_time: true,
+                })
+        })
+        .collect();
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: 16,
+            max_wait: Duration::from_millis(5),
+        },
+        averaging: AveragingMode::Time,
+        fleet: FleetConfig {
+            devices,
+            policy: DispatchPolicy::LeastQueueDepth,
+        },
+        control: ControlConfig {
+            enabled: true,
+            tick: Duration::from_millis(50),
+            window: 32,
+            max_sample_age: Duration::from_millis(900),
+            autotuner: AutotunerConfig {
+                slo_p95_us: 50_000.0,
+                floor_scale: 0.25,
+                cooldown_ticks: 1,
+                min_batches: 3,
+                ..Default::default()
+            },
+            admission: AdmissionConfig {
+                queue_soft_limit: 50_000,
+                queue_hard_limit: 100_000,
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut sched = PrecisionScheduler::new();
+    sched.set(
+        MODEL,
+        ModelPrecision {
+            noise: "shot".into(),
+            policy: EnergyPolicy::PerLayer(vec![16.0, 16.0]),
+        },
+    );
+    let bundle = ModelBundle::synthetic(ModelMeta::synthetic(
+        MODEL, 16, 2, 4, 64, 250.0,
+    ));
+
+    // 10 minutes of heavy-tail bursts: ~60/s background punctuated by
+    // ~3k/s episodes with Pareto-distributed durations.
+    let spec = TrafficSpec::new(MODEL, Duration::from_secs(600))
+        .with_bucket(Duration::from_millis(100))
+        .with_seed(7_777);
+    let trace =
+        heavy_tail(&spec, 60.0, 3_000.0, Duration::from_secs(40), 1.5);
+    let events = merge(vec![
+        trace,
+        vec![
+            // Minute 4: device 2 dies mid-run; its queue re-routes.
+            SimEvent::fault_at(Duration::from_secs(240), 2, Fault::Die),
+            // Minute 7: device 1 drifts out of calibration (2x noise).
+            SimEvent::fault_at(
+                Duration::from_secs(420),
+                1,
+                Fault::NoiseDrift(2.0),
+            ),
+        ],
+    ]);
+    let scenario = Scenario::new(events).with_tail(Duration::from_secs(5));
+    run_scenario(vec![bundle], sched, cfg, &scenario)
+        .expect("scenario must start")
+}
+
+fn main() {
+    println!("== serve_sim: 10 virtual minutes, chaos fleet, 2 runs ==\n");
+    let a = scenario_report();
+    println!("run A: {}", a.summary());
+    let b = scenario_report();
+    println!("run B: {}", b.summary());
+    println!("\nfleet after run A:\n{}", a.fleet.report());
+    println!("{}", a.stats.report());
+
+    let mut failed = false;
+    for v in a.violations.iter().chain(&b.violations) {
+        eprintln!("INVARIANT VIOLATION: {v}");
+        failed = true;
+    }
+    if a.digest != b.digest
+        || a.served != b.served
+        || a.shed != b.shed
+        || a.final_scales != b.final_scales
+    {
+        eprintln!(
+            "REPLAY DIVERGED: A(digest {:#x}, served {}, shed {}) vs \
+             B(digest {:#x}, served {}, shed {})",
+            a.digest, a.served, a.shed, b.digest, b.served, b.shed
+        );
+        failed = true;
+    }
+    if a.answered != a.submitted {
+        eprintln!(
+            "LOST RESPONSES: answered {} of {}",
+            a.answered, a.submitted
+        );
+        failed = true;
+    }
+    if !a.fleet.devices.iter().any(|d| !d.alive) {
+        eprintln!("CHAOS MISFIRE: no device died");
+        failed = true;
+    }
+    // The acceptance bar: a 10-virtual-minute scenario replays in
+    // under 5 seconds of wall time (release build; a debug build gets
+    // slack so plain `cargo run --example serve_sim` stays usable).
+    let bar_ms = if cfg!(debug_assertions) { 60_000.0 } else { 5_000.0 };
+    if a.wall_ms >= bar_ms {
+        eprintln!(
+            "TOO SLOW: {:.0}ms of wall time for 10 virtual minutes \
+             (bar {bar_ms:.0}ms)",
+            a.wall_ms
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!(
+        "\nOK: bit-identical replay ({} requests, {} shed, {:.0}x \
+         faster than real time), all invariants held over {} checks.",
+        a.submitted,
+        a.shed,
+        a.virtual_ms / a.wall_ms.max(1e-9),
+        a.checks
+    );
+}

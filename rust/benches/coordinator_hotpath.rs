@@ -1,7 +1,7 @@
 //! L3 hot-path microbenchmarks: batcher, scheduler materialization,
 //! redundancy planner, RNG, JSON parse — the coordinator overhead that
 //! must stay well under artifact execute time (see EXPERIMENTS.md §Perf).
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use dynaprec::analog::{plan_layer, AveragingMode, HardwareConfig};
 use dynaprec::coordinator::{BatcherConfig, DynamicBatcher, EnergyPolicy};
@@ -27,18 +27,18 @@ fn main() {
             batch_size: 32,
             max_wait: Duration::from_millis(10),
         });
-        let now = Instant::now();
+        let now_ns = 0u64;
         for i in 0..32 {
             let (tx, _rx) = std::sync::mpsc::channel();
             b.push(InferRequest {
                 id: i,
                 model: "m".into(),
                 x: Features::F32(vec![0.0; 4]),
-                enqueued: now,
+                enqueued: now_ns,
                 resp: tx,
             });
         }
-        assert!(b.try_batch(now).is_some());
+        assert!(b.try_batch(now_ns).is_some());
     });
     r.report();
 

@@ -157,6 +157,12 @@ pub trait ExecutionBackend: Send {
     fn label(&self) -> &'static str;
     /// Execute one padded batch at the scheduled precision.
     fn execute(&mut self, job: &BatchJob<'_>) -> BatchOutput;
+    /// Fault-injection hook: multiply the engine's one-repetition noise
+    /// stds by `factor` (1.0 = nominal physics). Engines without a
+    /// noise model (reference, PJRT) ignore it; the native engine uses
+    /// it to simulate a device drifting out of calibration, which the
+    /// measured `out_err` then surfaces to the control plane.
+    fn set_noise_drift(&mut self, _factor: f64) {}
 }
 
 /// Build the backend a device spec asks for. `natives` must be `Some`

@@ -45,10 +45,7 @@ pub struct NativeModel {
 
 /// FNV-1a, the stable name -> weight-stream seed.
 fn name_seed(name: &str) -> u64 {
-    name.bytes()
-        .fold(0xcbf29ce484222325u64, |h, b| {
-            (h ^ b as u64).wrapping_mul(0x100000001b3)
-        })
+    crate::util::rng::fnv1a(name.as_bytes())
 }
 
 /// Per-site noise configuration for one noisy forward (redundancy K per
@@ -212,6 +209,9 @@ pub struct NativeAnalogBackend {
     kind: NoiseKind,
     models: Arc<NativeModelSet>,
     warned_mismatch: bool,
+    /// Fault-injection multiplier on the one-repetition noise stds
+    /// (1.0 = nominal). See `ExecutionBackend::set_noise_drift`.
+    drift: f64,
 }
 
 impl NativeAnalogBackend {
@@ -227,6 +227,7 @@ impl NativeAnalogBackend {
             kind,
             models,
             warned_mismatch: false,
+            drift: 1.0,
         }
     }
 
@@ -320,10 +321,13 @@ impl ExecutionBackend for NativeAnalogBackend {
             );
             energy += plan.energy;
             cycles += plan.cycles;
-            plans.push(SitePlan {
-                ks: plan.k_per_channel,
-                noise: site_noise(self.kind, s, meta, &self.hw),
-            });
+            // A drifted device still *charges* the scheduled plan — it
+            // believes its calibration — but suffers scaled noise; the
+            // gap shows up in the measured error, which is the point.
+            let mut noise = site_noise(self.kind, s, meta, &self.hw);
+            noise.additive_std *= self.drift;
+            noise.weight_std *= self.drift;
+            plans.push(SitePlan { ks: plan.k_per_channel, noise });
         }
         // Per-batch golden pass: measuring the served error costs one
         // extra digital forward per batch — a deliberate tradeoff
@@ -347,6 +351,10 @@ impl ExecutionBackend for NativeAnalogBackend {
             energy_per_sample: energy,
             cycles_per_sample: cycles,
         }
+    }
+
+    fn set_noise_drift(&mut self, factor: f64) {
+        self.drift = factor.max(0.0);
     }
 }
 

@@ -40,11 +40,12 @@ pub use telemetry::{
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, RwLock};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::coordinator::fleet::DeviceSpec;
 use crate::coordinator::scheduler::{ModelPrecision, PrecisionScheduler};
 use crate::runtime::artifact::ModelMeta;
+use crate::sim::clock::{ClockRef, SlotId, WaitOutcome};
 
 #[derive(Clone, Debug)]
 pub struct ControlConfig {
@@ -105,17 +106,17 @@ impl ControlShared {
     pub fn new<'a, I: IntoIterator<Item = &'a String>>(
         model_names: I,
         cfg: &ControlConfig,
+        clock: ClockRef,
     ) -> Arc<ControlShared> {
-        let epoch = Instant::now();
         let models = model_names
             .into_iter()
             .map(|name| {
                 (
                     name.clone(),
                     Arc::new(ModelControl {
-                        ring: Arc::new(TelemetryRing::with_epoch(
+                        ring: Arc::new(TelemetryRing::with_clock(
                             cfg.telemetry_capacity,
-                            epoch,
+                            clock.clone(),
                         )),
                         gate: Arc::new(AdmissionGate::new(
                             cfg.admission.clone(),
@@ -145,6 +146,29 @@ pub struct ControllerCtx {
     pub devices: Vec<DeviceSpec>,
 }
 
+/// Wait out one control tick on the clock. `wait_timer` wakes only on
+/// the tick deadline (deterministic decision instants under a virtual
+/// clock, no wakeup per message under the wall clock) or on shutdown —
+/// which, together with the stop flag, interrupts a pending tick
+/// immediately instead of sleeping it out (the old
+/// `thread::sleep(tick)` could not be interrupted).
+fn wait_tick(
+    clock: &ClockRef,
+    slot: SlotId,
+    tick: Duration,
+    stop: &AtomicBool,
+) -> bool {
+    if stop.load(Ordering::Relaxed) {
+        return false;
+    }
+    match clock.wait_timer(slot, tick) {
+        WaitOutcome::Shutdown => false,
+        WaitOutcome::Notified | WaitOutcome::TimedOut => {
+            !stop.load(Ordering::Relaxed)
+        }
+    }
+}
+
 /// The control thread body: consume telemetry, decide a scale per model
 /// (autotuner for the SLO, governor for the energy budget, the tighter
 /// one wins), predict cost, and hot-swap scaled policies through the
@@ -155,6 +179,8 @@ pub fn control_loop(
     shared: Arc<ControlShared>,
     scheduler: Arc<RwLock<PrecisionScheduler>>,
     stop: Arc<AtomicBool>,
+    clock: ClockRef,
+    slot: SlotId,
 ) {
     let verbose = std::env::var("DYNAPREC_CONTROL_LOG")
         .map(|v| v == "1")
@@ -168,8 +194,7 @@ pub fn control_loop(
         .collect();
     let max_age_us = cfg.max_sample_age.as_micros() as u64;
 
-    while !stop.load(Ordering::Relaxed) {
-        std::thread::sleep(cfg.tick);
+    while wait_tick(&clock, slot, cfg.tick, &stop) {
         for (model, mc) in &shared.models {
             let (Some(base), Some(meta)) =
                 (ctx.base.get(model), ctx.metas.get(model))
@@ -241,16 +266,22 @@ pub fn control_loop(
             }
         }
     }
+    clock.unregister(slot);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::clock::WallClock;
 
     #[test]
     fn shared_state_per_model() {
         let names = vec!["a".to_string(), "b".to_string()];
-        let shared = ControlShared::new(&names, &ControlConfig::default());
+        let shared = ControlShared::new(
+            &names,
+            &ControlConfig::default(),
+            Arc::new(WallClock::new()),
+        );
         assert_eq!(shared.models.len(), 2);
         assert!(shared.get("a").is_some());
         assert!(shared.get("c").is_none());

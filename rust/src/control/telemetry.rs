@@ -11,7 +11,9 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Instant;
+use std::sync::Arc;
+
+use crate::sim::clock::{ClockRef, WallClock};
 
 /// One dispatched batch, as observed by the device worker that ran it.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -78,7 +80,10 @@ struct Slot {
 
 /// Single-writer, multi-reader telemetry ring.
 pub struct TelemetryRing {
-    epoch: Instant,
+    /// Time source for `t_us` stamps: rings share the coordinator's
+    /// clock (wall or virtual), so timestamps are comparable across
+    /// models and exact under simulation.
+    clock: ClockRef,
     cap: usize,
     /// Total pushes ever (head % cap is the next slot).
     head: AtomicU64,
@@ -87,11 +92,12 @@ pub struct TelemetryRing {
 
 impl TelemetryRing {
     pub fn new(cap: usize) -> TelemetryRing {
-        Self::with_epoch(cap, Instant::now())
+        Self::with_clock(cap, Arc::new(WallClock::new()))
     }
 
-    /// Share `epoch` across rings so `t_us` is comparable between models.
-    pub fn with_epoch(cap: usize, epoch: Instant) -> TelemetryRing {
+    /// Share `clock` across rings so `t_us` is comparable between
+    /// models (and driven by virtual time in scenarios).
+    pub fn with_clock(cap: usize, clock: ClockRef) -> TelemetryRing {
         let cap = cap.max(8);
         let slots: Vec<Slot> = (0..cap)
             .map(|_| Slot {
@@ -100,7 +106,7 @@ impl TelemetryRing {
             })
             .collect();
         TelemetryRing {
-            epoch,
+            clock,
             cap,
             head: AtomicU64::new(0),
             slots: slots.into_boxed_slice(),
@@ -111,9 +117,9 @@ impl TelemetryRing {
         self.cap
     }
 
-    /// Microseconds since the ring epoch (for stamping `t_us`).
+    /// Microseconds since the clock epoch (for stamping `t_us`).
     pub fn now_us(&self) -> u64 {
-        self.epoch.elapsed().as_micros() as u64
+        self.clock.now_ns() / 1_000
     }
 
     /// Total batches ever pushed.

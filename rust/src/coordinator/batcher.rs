@@ -8,9 +8,13 @@
 //! ledger only charges real samples). The batcher itself never pads:
 //! the fleet dispatcher routes the short batch as-is so the worker can
 //! report true occupancy.
+//!
+//! All deadline math runs on clock nanoseconds (`Clock::now_ns`), not
+//! `Instant`, so the same batcher is exact under a `VirtualClock` in
+//! deterministic scenarios.
 
 use std::collections::VecDeque;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::coordinator::request::InferRequest;
 
@@ -49,16 +53,21 @@ impl DynamicBatcher {
         self.queue.is_empty()
     }
 
-    /// Time until the flush deadline of the oldest request (None if empty).
-    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+    fn max_wait_ns(&self) -> u64 {
+        self.cfg.max_wait.as_nanos().min(u64::MAX as u128) as u64
+    }
+
+    /// Nanoseconds until the flush deadline of the oldest request
+    /// (None if empty; 0 when already due).
+    pub fn time_to_deadline(&self, now_ns: u64) -> Option<u64> {
         self.queue.front().map(|r| {
-            let age = now.duration_since(r.enqueued);
-            self.cfg.max_wait.saturating_sub(age)
+            let age = now_ns.saturating_sub(r.enqueued);
+            self.max_wait_ns().saturating_sub(age)
         })
     }
 
     /// Pop a batch if the dispatch policy fires.
-    pub fn try_batch(&mut self, now: Instant) -> Option<Vec<InferRequest>> {
+    pub fn try_batch(&mut self, now_ns: u64) -> Option<Vec<InferRequest>> {
         if self.queue.is_empty() {
             return None;
         }
@@ -66,7 +75,7 @@ impl DynamicBatcher {
         let expired = self
             .queue
             .front()
-            .map(|r| now.duration_since(r.enqueued) >= self.cfg.max_wait)
+            .map(|r| now_ns.saturating_sub(r.enqueued) >= self.max_wait_ns())
             .unwrap_or(false);
         if !(full || expired) {
             return None;
@@ -90,13 +99,15 @@ mod tests {
     use crate::data::Features;
     use std::sync::mpsc::channel;
 
-    fn req(id: u64, at: Instant) -> InferRequest {
+    const MS: u64 = 1_000_000;
+
+    fn req(id: u64, at_ns: u64) -> InferRequest {
         let (tx, _rx) = channel();
         InferRequest {
             id,
             model: "m".into(),
             x: Features::F32(vec![0.0; 4]),
-            enqueued: at,
+            enqueued: at_ns,
             resp: tx,
         }
     }
@@ -107,11 +118,10 @@ mod tests {
             batch_size: 4,
             max_wait: Duration::from_secs(10),
         });
-        let now = Instant::now();
         for i in 0..4 {
-            b.push(req(i, now));
+            b.push(req(i, 0));
         }
-        let batch = b.try_batch(now).expect("full batch");
+        let batch = b.try_batch(0).expect("full batch");
         assert_eq!(batch.len(), 4);
         assert!(b.is_empty());
     }
@@ -122,12 +132,10 @@ mod tests {
             batch_size: 4,
             max_wait: Duration::from_millis(5),
         });
-        let t0 = Instant::now();
-        b.push(req(0, t0));
-        b.push(req(1, t0));
-        assert!(b.try_batch(t0).is_none());
-        let later = t0 + Duration::from_millis(6);
-        let batch = b.try_batch(later).expect("deadline flush");
+        b.push(req(0, 0));
+        b.push(req(1, 0));
+        assert!(b.try_batch(0).is_none());
+        let batch = b.try_batch(6 * MS).expect("deadline flush");
         assert_eq!(batch.len(), 2);
     }
 
@@ -137,11 +145,10 @@ mod tests {
             batch_size: 2,
             max_wait: Duration::from_secs(1),
         });
-        let now = Instant::now();
         for i in 0..5 {
-            b.push(req(i, now));
+            b.push(req(i, 0));
         }
-        assert_eq!(b.try_batch(now).unwrap().len(), 2);
+        assert_eq!(b.try_batch(0).unwrap().len(), 2);
         assert_eq!(b.len(), 3);
     }
 
@@ -154,9 +161,8 @@ mod tests {
             batch_size: 4,
             max_wait: Duration::from_secs(1),
         });
-        let now = Instant::now();
         for i in 0..10 {
-            b.push(req(i, now));
+            b.push(req(i, 0));
         }
         assert_eq!(b.drain_batch().len(), 4);
         assert_eq!(b.drain_batch().len(), 4);
@@ -174,11 +180,10 @@ mod tests {
             batch_size: 8,
             max_wait: Duration::from_millis(5),
         });
-        let t0 = Instant::now();
         for i in 0..3 {
-            b.push(req(i, t0));
+            b.push(req(i, 0));
         }
-        let later = t0 + Duration::from_millis(6);
+        let later = 6 * MS;
         let batch = b.try_batch(later).expect("deadline flush");
         assert_eq!(batch.len(), 3, "short batch, padded by the worker");
         assert!(b.is_empty());
@@ -186,10 +191,7 @@ mod tests {
         // A fresh request starts a fresh deadline, not the expired one.
         b.push(req(3, later));
         assert!(b.try_batch(later).is_none());
-        assert_eq!(
-            b.time_to_deadline(later).unwrap(),
-            Duration::from_millis(5)
-        );
+        assert_eq!(b.time_to_deadline(later).unwrap(), 5 * MS);
     }
 
     #[test]
@@ -199,9 +201,9 @@ mod tests {
             max_wait: Duration::from_millis(10),
         };
         let mut b = DynamicBatcher::new(cfg);
-        let t0 = Instant::now();
-        b.push(req(0, t0));
-        let ttd = b.time_to_deadline(t0 + Duration::from_millis(4)).unwrap();
-        assert!(ttd <= Duration::from_millis(6));
+        b.push(req(0, 0));
+        assert_eq!(b.time_to_deadline(4 * MS).unwrap(), 6 * MS);
+        // Past the deadline: 0, never an underflow.
+        assert_eq!(b.time_to_deadline(40 * MS).unwrap(), 0);
     }
 }

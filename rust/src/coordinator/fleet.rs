@@ -59,11 +59,11 @@
 //! ```
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex, PoisonError, RwLock};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -79,6 +79,7 @@ use crate::coordinator::request::{InferRequest, InferResponse};
 use crate::coordinator::scheduler::PrecisionScheduler;
 use crate::data::Features;
 use crate::runtime::artifact::{ModelBundle, ModelMeta};
+use crate::sim::clock::{ClockRef, SlotId, WaitOutcome};
 
 /// One device slot in the fleet: a name for reports, the simulated
 /// hardware it runs, the execution backend, and its dispatch-queue
@@ -126,6 +127,76 @@ impl DeviceSpec {
     }
 }
 
+/// An injectable device fault (see [`DeviceFleet::inject`] /
+/// `Coordinator::inject_fault`). Faults take effect at the device's
+/// next message boundary, so they compose with in-flight work instead
+/// of corrupting it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// Pause the device for this long before its next batch executes.
+    /// Queued batches wait behind the stall — a latency spike, no loss.
+    Stall(Duration),
+    /// Kill the device worker. Its queued batches (including one taken
+    /// but not yet executed — death mid-batch) are recovered by the
+    /// dispatcher and re-routed through the dispatch policy; they shed
+    /// only when no live device has queue capacity left.
+    Die,
+    /// Multiply the device's one-repetition noise stds (native
+    /// backends): a device drifting out of calibration. The measured
+    /// `out_err` rises; an error-SLO autotuner answers with more
+    /// redundancy K.
+    NoiseDrift(f64),
+}
+
+/// Per-device fault state, shared between the fleet handle (injection
+/// side) and the device worker (consumption at batch boundaries).
+#[derive(Debug)]
+struct FaultCell {
+    stall_ns: AtomicU64,
+    /// f64 bits of the drift factor (stored as bits so injection stays
+    /// a relaxed atomic store). Initialized to 1.0 — `NoiseDrift(0.0)`
+    /// is a legal injection meaning "noiseless device".
+    drift_bits: AtomicU64,
+    dead: AtomicBool,
+}
+
+impl Default for FaultCell {
+    fn default() -> Self {
+        FaultCell {
+            stall_ns: AtomicU64::new(0),
+            drift_bits: AtomicU64::new(1.0f64.to_bits()),
+            dead: AtomicBool::new(false),
+        }
+    }
+}
+
+impl FaultCell {
+    fn inject(&self, fault: Fault) {
+        match fault {
+            Fault::Stall(d) => {
+                let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+                self.stall_ns.fetch_add(ns, Ordering::Relaxed);
+            }
+            Fault::Die => self.dead.store(true, Ordering::Release),
+            Fault::NoiseDrift(f) => {
+                self.drift_bits.store(f.to_bits(), Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn take_stall(&self) -> Duration {
+        Duration::from_nanos(self.stall_ns.swap(0, Ordering::Relaxed))
+    }
+
+    fn drift(&self) -> f64 {
+        f64::from_bits(self.drift_bits.load(Ordering::Relaxed))
+    }
+
+    fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Acquire)
+    }
+}
+
 /// How the dispatcher picks a device for each flushed batch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DispatchPolicy {
@@ -165,6 +236,10 @@ pub struct DeviceStats {
     pub kind: &'static str,
     /// Execution-backend label ("native", "reference", "pjrt").
     pub backend: &'static str,
+    /// False once the worker died (injected fault or panic); a dead
+    /// device is excluded from every dispatch policy and its queued
+    /// batches are re-routed.
+    pub alive: bool,
     /// Batches dispatched to this device and not yet completed.
     pub pending_batches: usize,
     pub served: u64,
@@ -196,12 +271,13 @@ impl FleetStats {
                 None => "-".to_string(),
             };
             s.push_str(&format!(
-                "  dev{} {:<12} [{}/{}] served={} batches={} pending={} \
+                "  dev{} {:<12} [{}/{}]{} served={} batches={} pending={} \
                  p95={:.0}us energy={:.3e} ({:.1e}/req) err={err}\n",
                 d.id,
                 d.name,
                 d.kind,
                 d.backend,
+                if d.alive { "" } else { " DEAD" },
                 d.served,
                 d.batches,
                 d.pending_batches,
@@ -239,6 +315,12 @@ struct DeviceBatch {
     seed: u32,
 }
 
+/// Every worker's receiver lives here for the fleet's whole lifetime —
+/// the worker polls it through the mutex, and after the worker exits
+/// (shutdown, injected death, or panic) the dispatcher drains what's
+/// left: a batch can land in the channel but never vanish with it.
+type ParkedReceiver = Arc<Mutex<Option<Receiver<WorkerMsg>>>>;
+
 enum WorkerMsg {
     Batch(DeviceBatch),
     Shutdown,
@@ -253,6 +335,17 @@ struct Worker {
     /// Batches dispatched to this worker and not yet completed.
     pending: Arc<AtomicUsize>,
     counters: Arc<Mutex<DeviceCounters>>,
+    /// Injected fault state (consumed at the worker's batch boundaries).
+    fault: Arc<FaultCell>,
+    /// Cleared on any worker exit (shutdown, injected death, panic —
+    /// see `WorkerExit`): the dispatcher stops routing here and starts
+    /// draining the receiver below.
+    alive: Arc<AtomicBool>,
+    /// The worker's receiver, owned here for the fleet's lifetime (the
+    /// worker polls through the mutex). Because it never drops with
+    /// the thread, batches queued on a dead or panicked worker stay
+    /// recoverable (`reroute_strays`) instead of vanishing.
+    rx_parked: ParkedReceiver,
 }
 
 /// N device worker threads plus the dispatch state that routes flushed
@@ -268,6 +361,11 @@ pub struct DeviceFleet {
     rejected: AtomicU64,
     metas: BTreeMap<String, ModelMeta>,
     scheduler: Arc<RwLock<PrecisionScheduler>>,
+    shared: Arc<ControlShared>,
+    clock: ClockRef,
+    /// Batches recovered from dead workers, awaiting re-route (shared
+    /// with the workers, who deposit their in-hand batch on death).
+    orphans: Arc<Mutex<Vec<DeviceBatch>>>,
 }
 
 impl DeviceFleet {
@@ -276,13 +374,16 @@ impl DeviceFleet {
     /// `runtime::Exec`); each worker keeps its own counters, ledger and
     /// execution backend. When any spec selects a native or reference
     /// backend, one [`NativeModelSet`] (deterministic weights per
-    /// model) is built and shared across those workers.
+    /// model) is built and shared across those workers. Worker clock
+    /// slots are registered here, in spec order, before any thread
+    /// spawns — the deterministic tie-break order for virtual time.
     pub fn start(
         specs: &[DeviceSpec],
         policy: DispatchPolicy,
         bundles: Vec<ModelBundle>,
         scheduler: Arc<RwLock<PrecisionScheduler>>,
         shared: Arc<ControlShared>,
+        clock: ClockRef,
     ) -> Result<DeviceFleet> {
         let bundles: Arc<BTreeMap<String, ModelBundle>> = Arc::new(
             bundles
@@ -298,41 +399,44 @@ impl DeviceFleet {
             .iter()
             .any(|s| s.backend.needs_native_models())
             .then(|| Arc::new(NativeModelSet::build(metas.values())));
+        let orphans = Arc::new(Mutex::new(Vec::new()));
         let mut workers = Vec::with_capacity(specs.len());
         for (i, spec) in specs.iter().enumerate() {
             let (tx, rx) = channel::<WorkerMsg>();
             let pending = Arc::new(AtomicUsize::new(0));
             let counters = Arc::new(Mutex::new(DeviceCounters::default()));
-            let handle = {
-                let spec = spec.clone();
-                let bundles = bundles.clone();
-                let scheduler = scheduler.clone();
-                let shared = shared.clone();
-                let pending = pending.clone();
-                let counters = counters.clone();
-                let natives = natives.clone();
-                std::thread::Builder::new()
-                    .name(format!("dynaprec-dev{i}"))
-                    .spawn(move || {
-                        worker_loop(
-                            i as u32,
-                            spec,
-                            bundles,
-                            scheduler,
-                            shared,
-                            rx,
-                            pending,
-                            counters,
-                            natives,
-                        )
-                    })?
+            let fault = Arc::new(FaultCell::default());
+            let alive = Arc::new(AtomicBool::new(true));
+            let rx_parked = Arc::new(Mutex::new(Some(rx)));
+            let slot = clock.register(&format!("dev{i}"));
+            let ctx = WorkerCtx {
+                device: i as u32,
+                spec: spec.clone(),
+                bundles: bundles.clone(),
+                scheduler: scheduler.clone(),
+                shared: shared.clone(),
+                pending: pending.clone(),
+                counters: counters.clone(),
+                natives: natives.clone(),
+                clock: clock.clone(),
+                slot,
+                fault: fault.clone(),
+                alive: alive.clone(),
+                orphans: orphans.clone(),
+                rx_parked: rx_parked.clone(),
             };
+            let handle = std::thread::Builder::new()
+                .name(format!("dynaprec-dev{i}"))
+                .spawn(move || worker_loop(ctx))?;
             workers.push(Worker {
                 spec: spec.clone(),
                 tx: Mutex::new(tx),
                 handle: Mutex::new(Some(handle)),
                 pending,
                 counters,
+                fault,
+                alive,
+                rx_parked,
             });
         }
         Ok(DeviceFleet {
@@ -342,6 +446,9 @@ impl DeviceFleet {
             rejected: AtomicU64::new(0),
             metas,
             scheduler,
+            shared,
+            clock,
+            orphans,
         })
     }
 
@@ -394,8 +501,20 @@ impl DeviceFleet {
             .iter()
             .map(|w| w.pending.load(Ordering::Acquire))
             .collect();
-        let mut caps: Vec<usize> =
-            self.workers.iter().map(|w| w.spec.queue_cap).collect();
+        // A dead device has zero capacity: no dispatch policy — not
+        // even energy-aware, whose cold ledger would look attractive —
+        // can pick it.
+        let mut caps: Vec<usize> = self
+            .workers
+            .iter()
+            .map(|w| {
+                if w.alive.load(Ordering::Acquire) {
+                    w.spec.queue_cap
+                } else {
+                    0
+                }
+            })
+            .collect();
         let energy = if self.policy == DispatchPolicy::EnergyAware {
             self.energy_scores(model, n)
         } else {
@@ -420,17 +539,83 @@ impl DeviceFleet {
                     seed,
                 }));
             match sent {
-                Ok(()) => return,
+                Ok(()) => {
+                    // Wake the (possibly parked) worker.
+                    self.clock.notify();
+                    return;
+                }
                 Err(e) => {
-                    // Worker gone (panicked): recover the batch, exclude
-                    // the dead device and re-route instead of shedding
-                    // while healthy devices have capacity.
+                    // Defense in depth: receivers live in `rx_parked`
+                    // for the fleet's lifetime, so this send cannot
+                    // fail today (worker death is detected via the
+                    // `alive` flag + `reroute_strays`, not channel
+                    // disconnect). If an invariant ever breaks, recover
+                    // the batch and re-route rather than lose it.
                     w.pending.fetch_sub(1, Ordering::AcqRel);
                     caps[i] = 0;
                     let WorkerMsg::Batch(b) = e.0 else { return };
                     batch = b.batch;
                 }
             }
+        }
+    }
+
+    /// Inject a fault into one device (see [`Fault`]). Returns false
+    /// for an out-of-range device id. Takes effect at the device's next
+    /// message boundary; an idle device is woken so a `Die` lands
+    /// without needing traffic.
+    pub fn inject(&self, device: usize, fault: Fault) -> bool {
+        let Some(w) = self.workers.get(device) else {
+            return false;
+        };
+        w.fault.inject(fault);
+        self.clock.notify();
+        true
+    }
+
+    /// True while the device worker is running (not killed/panicked).
+    pub fn device_alive(&self, device: usize) -> bool {
+        self.workers
+            .get(device)
+            .map(|w| w.alive.load(Ordering::Acquire))
+            .unwrap_or(false)
+    }
+
+    /// Batches stranded on dead devices: the orphanage (a dying
+    /// worker's in-hand batch) plus anything still sitting in a dead
+    /// worker's receiver (a racing dispatch, or the queue of a worker
+    /// that panicked). Draining decrements the device's pending count
+    /// so its accounting closes at zero.
+    fn collect_strays(&self) -> Vec<DeviceBatch> {
+        let mut strays: Vec<DeviceBatch> = std::mem::take(
+            &mut self.orphans.lock().unwrap_or_else(PoisonError::into_inner),
+        );
+        for w in &self.workers {
+            if w.alive.load(Ordering::Acquire) {
+                continue;
+            }
+            let parked =
+                w.rx_parked.lock().unwrap_or_else(PoisonError::into_inner);
+            if let Some(rx) = parked.as_ref() {
+                while let Ok(msg) = rx.try_recv() {
+                    if let WorkerMsg::Batch(b) = msg {
+                        w.pending.fetch_sub(1, Ordering::AcqRel);
+                        strays.push(b);
+                    }
+                }
+            }
+        }
+        strays
+    }
+
+    /// Recover stranded batches and push each back through the
+    /// dispatch policy: re-routes while live capacity remains, sheds
+    /// with full accounting otherwise. Called by the dispatcher every
+    /// loop iteration and by `shutdown`.
+    pub fn reroute_strays(&self) {
+        for b in self.collect_strays() {
+            let mc = self.shared.get(&b.model).cloned();
+            self.dispatch(&b.model, b.batch, b.seed, mc.as_ref());
         }
     }
 
@@ -523,6 +708,7 @@ impl DeviceFleet {
                     name: w.spec.name.clone(),
                     kind: w.spec.hw.model.label(),
                     backend: w.spec.backend.label(),
+                    alive: w.alive.load(Ordering::Acquire),
                     pending_batches: w.pending.load(Ordering::Acquire),
                     served: c.served,
                     batches: c.batches,
@@ -553,6 +739,10 @@ impl DeviceFleet {
 
     /// Flush outstanding batches and join every worker. Idempotent.
     pub fn shutdown(&self) {
+        // Give batches stranded on dead devices to the live workers
+        // while they still drain their queues (re-routed batches land
+        // ahead of the Shutdown message below).
+        self.reroute_strays();
         for w in &self.workers {
             let _ = w
                 .tx
@@ -560,6 +750,7 @@ impl DeviceFleet {
                 .unwrap_or_else(PoisonError::into_inner)
                 .send(WorkerMsg::Shutdown);
         }
+        self.clock.notify();
         for w in &self.workers {
             let handle = w
                 .handle
@@ -569,6 +760,20 @@ impl DeviceFleet {
             if let Some(h) = handle {
                 let _ = h.join();
             }
+        }
+        // Anything that raced a dying worker after the sweep: every
+        // device is stopped now, so shed with full accounting — a
+        // request is answered exactly once, never dropped.
+        self.shed_strays();
+    }
+
+    /// Shed every recoverable stranded batch (post-join: every worker
+    /// has exited — and therefore reads as dead — so no device remains
+    /// to take the work).
+    fn shed_strays(&self) {
+        for b in self.collect_strays() {
+            let mc = self.shared.get(&b.model).cloned();
+            self.reject(b.batch, mc.as_ref());
         }
     }
 }
@@ -623,40 +828,128 @@ impl Drop for PendingGuard<'_> {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
+/// Everything one device worker thread owns or shares; bundled so the
+/// loop, the death path and `execute_batch` stay readable.
+struct WorkerCtx {
     device: u32,
     spec: DeviceSpec,
     bundles: Arc<BTreeMap<String, ModelBundle>>,
     scheduler: Arc<RwLock<PrecisionScheduler>>,
     shared: Arc<ControlShared>,
-    rx: Receiver<WorkerMsg>,
     pending: Arc<AtomicUsize>,
     counters: Arc<Mutex<DeviceCounters>>,
     natives: Option<Arc<NativeModelSet>>,
-) {
+    clock: ClockRef,
+    slot: SlotId,
+    fault: Arc<FaultCell>,
+    alive: Arc<AtomicBool>,
+    orphans: Arc<Mutex<Vec<DeviceBatch>>>,
+    rx_parked: ParkedReceiver,
+}
+
+/// Runs on *every* worker exit — clean shutdown, injected death, or a
+/// panic unwinding out of batch execution: mark the device dead (the
+/// dispatcher stops routing here and starts draining the parked
+/// receiver), wake the dispatcher, and release the clock slot so a
+/// panicked worker can never hang the virtual clock's quiescence
+/// barrier. The receiver itself lives in `rx_parked` for the fleet's
+/// lifetime, so queued batches survive the exit and are re-routed or
+/// shed — never silently dropped.
+struct WorkerExit<'a>(&'a WorkerCtx);
+
+impl Drop for WorkerExit<'_> {
+    fn drop(&mut self) {
+        self.0.alive.store(false, Ordering::Release);
+        self.0.clock.notify();
+        self.0.clock.unregister(self.0.slot);
+    }
+}
+
+/// One receive attempt against the worker's parked receiver.
+enum Polled {
+    Msg(WorkerMsg),
+    /// Nothing queued; park with this pre-recheck notification epoch.
+    Empty(u64),
+    /// Channel gone (fleet dropped).
+    Gone,
+}
+
+fn poll(ctx: &WorkerCtx) -> Polled {
+    let parked =
+        ctx.rx_parked.lock().unwrap_or_else(PoisonError::into_inner);
+    let Some(rx) = parked.as_ref() else {
+        return Polled::Gone;
+    };
+    match rx.try_recv() {
+        Ok(m) => Polled::Msg(m),
+        Err(TryRecvError::Disconnected) => Polled::Gone,
+        Err(TryRecvError::Empty) => {
+            // Read the epoch *then* re-check, and park with that
+            // pre-check epoch: a send+notify landing anywhere after
+            // the read wakes the park instantly instead of being lost.
+            let seen = ctx.clock.epoch();
+            match rx.try_recv() {
+                Ok(m) => Polled::Msg(m),
+                Err(TryRecvError::Disconnected) => Polled::Gone,
+                Err(TryRecvError::Empty) => Polled::Empty(seen),
+            }
+        }
+    }
+}
+
+fn worker_loop(ctx: WorkerCtx) {
+    let exit = WorkerExit(&ctx);
     // Each worker owns its execution engine; native/reference engines
     // share the deterministic weight set built at fleet start.
     let mut backend = make_backend(
-        spec.backend,
-        spec.hw.clone(),
-        spec.averaging,
-        natives,
+        ctx.spec.backend,
+        ctx.spec.hw.clone(),
+        ctx.spec.averaging,
+        ctx.natives.clone(),
     );
-    while let Ok(msg) = rx.recv() {
+    loop {
+        if ctx.fault.is_dead() {
+            break; // `exit` marks the device dead + wakes the dispatcher
+        }
+        let msg = match poll(&ctx) {
+            Polled::Msg(m) => m,
+            Polled::Gone => break,
+            Polled::Empty(seen) => {
+                if ctx.clock.park(ctx.slot, seen, None)
+                    == WaitOutcome::Shutdown
+                {
+                    // Clock is draining: poll for the final messages at
+                    // a bounded real-time cadence instead of spinning a
+                    // core while slower workers finish their queues.
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+                continue;
+            }
+        };
         match msg {
             WorkerMsg::Batch(b) => {
-                let _guard = PendingGuard(&pending);
-                if let Some(bundle) = bundles.get(&b.model) {
+                let guard = PendingGuard(&ctx.pending);
+                if ctx.fault.is_dead() {
+                    // Death mid-batch: this batch was dispatched here
+                    // but never executed — hand it back for re-route.
+                    drop(guard);
+                    ctx.orphans
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .push(b);
+                    break;
+                }
+                let stall = ctx.fault.take_stall();
+                if !stall.is_zero() {
+                    ctx.clock.sleep(ctx.slot, stall);
+                }
+                backend.set_noise_drift(ctx.fault.drift());
+                if let Some(bundle) = ctx.bundles.get(&b.model) {
                     execute_batch(
-                        device,
-                        &spec,
+                        &ctx,
                         bundle,
-                        &scheduler,
                         b.batch,
                         b.seed,
-                        &counters,
-                        shared.get(&b.model),
                         backend.as_mut(),
                     );
                 } else {
@@ -670,6 +963,7 @@ fn worker_loop(
             WorkerMsg::Shutdown => break,
         }
     }
+    drop(exit);
 }
 
 /// How this batch will execute: which artifact, at which energies.
@@ -695,18 +989,18 @@ impl Drop for GateGuard {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn execute_batch(
-    device: u32,
-    spec: &DeviceSpec,
+    ctx: &WorkerCtx,
     bundle: &ModelBundle,
-    scheduler: &Arc<RwLock<PrecisionScheduler>>,
     batch: Vec<InferRequest>,
     seed: u32,
-    counters: &Arc<Mutex<DeviceCounters>>,
-    mc: Option<&Arc<ModelControl>>,
     backend: &mut dyn ExecutionBackend,
 ) {
+    let device = ctx.device;
+    let spec = &ctx.spec;
+    let scheduler = &ctx.scheduler;
+    let counters = &ctx.counters;
+    let mc = ctx.shared.get(&bundle.meta.name);
     let meta = &bundle.meta;
     let bsz = meta.batch;
     let n = batch.len();
@@ -785,7 +1079,7 @@ fn execute_batch(
     // analog cost (continuous K for PJRT, the quantized realizable
     // plan for native) and — on native backends — the batch's measured
     // output error all come back from one call.
-    let t_exec = Instant::now();
+    let t_exec_ns = ctx.clock.now_ns();
     let (e_opt, tag): (Option<&[f32]>, &str) = match &plan {
         BatchPlan::Fp => (None, ""),
         BatchPlan::Noisy { tag, e } => (Some(e.as_slice()), tag.as_str()),
@@ -804,10 +1098,13 @@ fn execute_batch(
     if spec.backend.simulates_time() {
         let ns = cycles * spec.hw.cycle_ns * n as f64;
         if ns >= 1.0 {
-            std::thread::sleep(Duration::from_nanos(ns as u64));
+            // Clock wait, not thread::sleep: under a virtual clock the
+            // modeled device time passes instantly (and exactly).
+            ctx.clock.sleep(ctx.slot, Duration::from_nanos(ns as u64));
         }
     }
-    let exec_us = t_exec.elapsed().as_micros() as f64;
+    let exec_us =
+        ctx.clock.now_ns().saturating_sub(t_exec_ns) as f64 / 1_000.0;
 
     // Backends may return fewer logit rows than the padded batch
     // (native engines skip the padding lanes); `out.rows` says how
@@ -816,7 +1113,7 @@ fn execute_batch(
         Ok(l) if out.rows > 0 => l.len() / out.rows,
         _ => 0,
     };
-    let done = Instant::now();
+    let done_ns = ctx.clock.now_ns();
     let occupancy = n as f64 / bsz as f64;
     let mut lat_sum = 0.0f64;
     let mut lat_max = 0.0f64;
@@ -831,7 +1128,7 @@ fn execute_batch(
             cycles,
         );
         for (i, r) in batch.into_iter().enumerate() {
-            let latency = done.duration_since(r.enqueued).as_micros() as u64;
+            let latency = done_ns.saturating_sub(r.enqueued) / 1_000;
             lat_sum += latency as f64;
             lat_max = lat_max.max(latency as f64);
             c.served += 1;

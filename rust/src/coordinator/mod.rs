@@ -39,8 +39,8 @@ pub mod server;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use fleet::{
-    DeviceFleet, DeviceSpec, DeviceStats, DispatchPolicy, FleetConfig,
-    FleetStats,
+    DeviceFleet, DeviceSpec, DeviceStats, DispatchPolicy, Fault,
+    FleetConfig, FleetStats,
 };
 pub use request::{InferRequest, InferResponse};
 pub use scheduler::{EnergyPolicy, PrecisionScheduler};

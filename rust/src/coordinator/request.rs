@@ -1,7 +1,6 @@
 //! Request/response types for the serving path.
 
 use std::sync::mpsc::Sender;
-use std::time::Instant;
 
 use crate::data::Features;
 
@@ -10,7 +9,10 @@ pub struct InferRequest {
     pub id: u64,
     pub model: String,
     pub x: Features,
-    pub enqueued: Instant,
+    /// Submission timestamp in clock nanoseconds (`Clock::now_ns` of
+    /// the coordinator's clock — wall or virtual), so batch deadlines
+    /// and latency math run on simulated time in scenarios.
+    pub enqueued: u64,
     /// Response channel back to the client.
     pub resp: Sender<InferResponse>,
 }

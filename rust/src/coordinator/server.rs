@@ -22,10 +22,10 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -37,14 +37,15 @@ use crate::control::{
 };
 use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher};
 use crate::coordinator::fleet::{
-    DeviceFleet, DeviceSpec, FleetConfig, FleetStats,
+    DeviceFleet, DeviceSpec, Fault, FleetConfig, FleetStats,
 };
 use crate::coordinator::request::{InferRequest, InferResponse};
 use crate::coordinator::scheduler::PrecisionScheduler;
 use crate::data::Features;
 use crate::runtime::artifact::{ModelBundle, ModelMeta};
+use crate::sim::clock::{ClockRef, SlotId, WaitOutcome, WallClock};
 
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct CoordinatorConfig {
     pub batcher: BatcherConfig,
     /// Hardware of the default single device (used when `fleet.devices`
@@ -64,6 +65,12 @@ pub struct CoordinatorConfig {
     /// `simulate_device_time` serving mode, now with real noisy
     /// numerics and a measured output error.
     pub backend: BackendKind,
+    /// Time source for every timing-sensitive component (batch
+    /// deadlines, device-time simulation, telemetry stamps, the control
+    /// tick). The default wall clock serves in real time; install a
+    /// `sim::VirtualClock` to replay scenarios deterministically. One
+    /// clock serves one coordinator (shutdown is sticky).
+    pub clock: ClockRef,
 }
 
 impl Default for CoordinatorConfig {
@@ -76,7 +83,23 @@ impl Default for CoordinatorConfig {
             control: ControlConfig::default(),
             fleet: FleetConfig::default(),
             backend: BackendKind::Pjrt,
+            clock: Arc::new(WallClock::new()),
         }
+    }
+}
+
+impl std::fmt::Debug for CoordinatorConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CoordinatorConfig")
+            .field("batcher", &self.batcher)
+            .field("hw", &self.hw)
+            .field("averaging", &self.averaging)
+            .field("seed", &self.seed)
+            .field("control", &self.control)
+            .field("fleet", &self.fleet)
+            .field("backend", &self.backend)
+            .field("clock", &self.clock.label())
+            .finish()
     }
 }
 
@@ -172,6 +195,7 @@ pub struct Coordinator {
     fleet: Arc<DeviceFleet>,
     shared: Arc<ControlShared>,
     scheduler: Arc<RwLock<PrecisionScheduler>>,
+    clock: ClockRef,
     control_enabled: bool,
     window: usize,
     next_id: AtomicU64,
@@ -211,17 +235,24 @@ impl Coordinator {
             .map(|b| (b.meta.name.clone(), b.meta.clone()))
             .collect();
         let specs = cfg.device_specs();
-        let shared = ControlShared::new(metas.keys(), &cfg.control);
+        let clock = cfg.clock.clone();
+        let shared =
+            ControlShared::new(metas.keys(), &cfg.control, clock.clone());
         let scheduler = Arc::new(RwLock::new(scheduler));
         let (tx, rx) = channel::<Msg>();
         let stop = Arc::new(AtomicBool::new(false));
 
+        // Clock slots are registered in a fixed order — fleet workers
+        // (inside DeviceFleet::start), then dispatcher, then control —
+        // so a virtual clock breaks same-deadline ties identically on
+        // every run.
         let fleet = Arc::new(DeviceFleet::start(
             &specs,
             cfg.fleet.policy,
             bundles,
             scheduler.clone(),
             shared.clone(),
+            clock.clone(),
         )?);
 
         let dispatcher = {
@@ -229,9 +260,12 @@ impl Coordinator {
             let shared = shared.clone();
             let metas = metas.clone();
             let cfg = cfg.clone();
+            let slot = clock.register("dispatcher");
             std::thread::Builder::new()
                 .name("dynaprec-dispatch".into())
-                .spawn(move || dispatcher_loop(metas, fleet, cfg, rx, shared))?
+                .spawn(move || {
+                    dispatcher_loop(metas, fleet, cfg, rx, shared, slot)
+                })?
         };
 
         let controller = if cfg.control.enabled {
@@ -251,11 +285,21 @@ impl Coordinator {
             let shared = shared.clone();
             let scheduler = scheduler.clone();
             let stop = stop.clone();
+            let control_clock = clock.clone();
+            let slot = clock.register("control");
             Some(
                 std::thread::Builder::new()
                     .name("dynaprec-control".into())
                     .spawn(move || {
-                        control_loop(control_cfg, ctx, shared, scheduler, stop)
+                        control_loop(
+                            control_cfg,
+                            ctx,
+                            shared,
+                            scheduler,
+                            stop,
+                            control_clock,
+                            slot,
+                        )
                     })?,
             )
         } else {
@@ -270,6 +314,7 @@ impl Coordinator {
             fleet,
             shared,
             scheduler,
+            clock,
             control_enabled: cfg.control.enabled,
             window: cfg.control.window,
             next_id: AtomicU64::new(0),
@@ -296,10 +341,13 @@ impl Coordinator {
             id,
             model: model.to_string(),
             x,
-            enqueued: Instant::now(),
+            enqueued: self.clock.now_ns(),
             resp: rtx,
         };
         let _ = self.tx.send(Msg::Req(req));
+        // Wake the dispatcher (wall clock) / record the pending message
+        // for the next advance (virtual clock).
+        self.clock.notify();
         rrx
     }
 
@@ -307,6 +355,30 @@ impl Coordinator {
     /// loading a new energy table while serving).
     pub fn scheduler(&self) -> Arc<RwLock<PrecisionScheduler>> {
         self.scheduler.clone()
+    }
+
+    /// The coordinator's time source (the `cfg.clock` it was started
+    /// with).
+    pub fn clock(&self) -> ClockRef {
+        self.clock.clone()
+    }
+
+    /// Inject a device fault (chaos testing / scenario engine); returns
+    /// false for an out-of-range device id. See [`Fault`].
+    pub fn inject_fault(&self, device: usize, fault: Fault) -> bool {
+        self.fleet.inject(device, fault)
+    }
+
+    /// True while the device worker is running (not killed/panicked).
+    pub fn device_alive(&self, device: usize) -> bool {
+        self.fleet.device_alive(device)
+    }
+
+    /// Admitted requests not yet answered (fleet-wide, all models):
+    /// the third term of the conservation invariant
+    /// `served + shed + inflight == submitted`.
+    pub fn inflight(&self) -> usize {
+        self.shared.models.values().map(|mc| mc.gate.depth()).sum()
     }
 
     /// Recent-window telemetry for one model (across all devices).
@@ -368,14 +440,22 @@ impl Coordinator {
     }
 
     fn stop_threads(&mut self) {
+        // Stop flag before the clock shutdown: the control thread's
+        // interrupted tick then exits instead of deciding once more
+        // mid-drain.
+        self.stop.store(true, Ordering::Relaxed);
         let _ = self.tx.send(Msg::Shutdown);
+        // Sticky: every clock wait returns immediately from here on —
+        // a pending control tick is interrupted at once, and on a
+        // virtual clock the drain below needs no driver (simulated
+        // device time passes in zero wall time).
+        self.clock.shutdown();
         if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
         // The dispatcher has flushed every batcher into the fleet;
         // workers drain their queues before honoring shutdown.
         self.fleet.shutdown();
-        self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.controller.take() {
             let _ = h.join();
         }
@@ -388,13 +468,20 @@ impl Drop for Coordinator {
     }
 }
 
+/// FNV-1a over a model name: the per-model component of batch seeds.
+fn model_seed(name: &str) -> u64 {
+    crate::util::rng::fnv1a(name.as_bytes())
+}
+
 fn dispatcher_loop(
     metas: BTreeMap<String, ModelMeta>,
     fleet: Arc<DeviceFleet>,
     cfg: CoordinatorConfig,
     rx: Receiver<Msg>,
     shared: Arc<ControlShared>,
+    slot: SlotId,
 ) {
+    let clock = cfg.clock.clone();
     // Per-model batchers, batch size clamped to the artifact's lowered
     // batch so an oversized global config can't overrun the pad buffer.
     let mut batchers: BTreeMap<String, DynamicBatcher> = metas
@@ -405,17 +492,21 @@ fn dispatcher_loop(
             (k.clone(), DynamicBatcher::new(bc))
         })
         .collect();
-    let mut seed = cfg.seed as u32;
+    // Per-model noise-seed counters: a model's batch seeds depend only
+    // on its *own* flush sequence (which is FIFO-determined), never on
+    // how its flushes interleave with another model's — one of the
+    // invariants behind bit-identical scenario replay.
+    let mut seeds: BTreeMap<String, u32> = metas
+        .keys()
+        .map(|k| (k.clone(), (cfg.seed ^ model_seed(k)) as u32))
+        .collect();
     let mut shutdown = false;
 
     while !shutdown {
-        // Wait bounded by the nearest batch deadline.
-        let now = Instant::now();
-        let wait = batchers
-            .values()
-            .filter_map(|b| b.time_to_deadline(now))
-            .min()
-            .unwrap_or(Duration::from_millis(50));
+        // Wait bounded by the nearest batch deadline — but first drain
+        // everything already in the channel: while the fleet was busy
+        // executing, requests piled up, and admitting them one per
+        // iteration would flush degenerate 1-sample batches under load.
         let mut enqueue = |r: InferRequest,
                            batchers: &mut BTreeMap<String, DynamicBatcher>| {
             if let Some(b) = batchers.get_mut(&r.model) {
@@ -426,26 +517,64 @@ fn dispatcher_loop(
                 fleet.reject_request(r);
             }
         };
-        match rx.recv_timeout(wait) {
-            Ok(Msg::Req(r)) => enqueue(r, &mut batchers),
-            Ok(Msg::Shutdown) => shutdown = true,
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => shutdown = true,
-        }
-        // Drain the backlog non-blockingly: while the fleet was busy
-        // executing, requests piled up in the channel — without this,
-        // each loop iteration admits one request and the age-based flush
-        // dispatches degenerate 1-sample batches under load.
-        while let Ok(msg) = rx.try_recv() {
-            match msg {
-                Msg::Req(r) => enqueue(r, &mut batchers),
-                Msg::Shutdown => shutdown = true,
+        let mut drained_any = false;
+        let mut drain =
+            |batchers: &mut BTreeMap<String, DynamicBatcher>,
+             shutdown: &mut bool,
+             drained_any: &mut bool| {
+                loop {
+                    match rx.try_recv() {
+                        Ok(Msg::Req(r)) => {
+                            *drained_any = true;
+                            enqueue(r, batchers);
+                        }
+                        Ok(Msg::Shutdown) => {
+                            *drained_any = true;
+                            *shutdown = true;
+                        }
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            *shutdown = true;
+                            break;
+                        }
+                    }
+                }
+            };
+        drain(&mut batchers, &mut shutdown, &mut drained_any);
+        if !drained_any && !shutdown {
+            let now = clock.now_ns();
+            let wait = batchers
+                .values()
+                .filter_map(|b| b.time_to_deadline(now))
+                .min()
+                .unwrap_or(50_000_000); // idle poll: 50ms
+            let seen = clock.epoch();
+            // Re-check after reading the epoch so a submit landing in
+            // between wakes the park immediately instead of being lost.
+            drain(&mut batchers, &mut shutdown, &mut drained_any);
+            if !drained_any && !shutdown {
+                let out = clock.park(
+                    slot,
+                    seen,
+                    Some(Duration::from_nanos(wait)),
+                );
+                drain(&mut batchers, &mut shutdown, &mut drained_any);
+                if out == WaitOutcome::Shutdown && !drained_any {
+                    // Clock shut down with nothing left to read: the
+                    // coordinator is closing (the Shutdown message is
+                    // sent before the clock shutdown, so a normal close
+                    // lands in the drains above).
+                    shutdown = true;
+                }
             }
         }
+        // Recover batches stranded on dead devices and re-route them
+        // while live capacity remains.
+        fleet.reroute_strays();
         // Route every ready batch (on shutdown, flush everything in
         // batch-size chunks — an oversized flush would overrun the
         // worker's fixed pad buffer).
-        let now = Instant::now();
+        let now = clock.now_ns();
         for (model, b) in batchers.iter_mut() {
             loop {
                 let batch = if shutdown {
@@ -459,9 +588,14 @@ fn dispatcher_loop(
                     b.try_batch(now)
                 };
                 let Some(batch) = batch else { break };
-                seed = seed.wrapping_add(1);
-                fleet.dispatch(model, batch, seed, shared.get(model));
+                let seed = seeds.get_mut(model).expect("seed per model");
+                *seed = seed.wrapping_add(1);
+                fleet.dispatch(model, batch, *seed, shared.get(model));
             }
         }
     }
+    // One final sweep: a device that died between the last reroute and
+    // the flush above leaves its strays to fleet.shutdown(), which
+    // re-routes or sheds them with full accounting.
+    clock.unregister(slot);
 }

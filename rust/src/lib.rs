@@ -19,6 +19,7 @@ pub mod ops;
 pub mod optim;
 pub mod quant;
 pub mod runtime;
+pub mod sim;
 pub mod util;
 
 pub fn version() -> &'static str {

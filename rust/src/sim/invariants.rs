@@ -1,0 +1,116 @@
+//! Invariant checkers for simulated scenarios.
+//!
+//! The scenario engine calls [`InvariantChecker::step`] at every
+//! quiescent point (after each event is applied and played out); a
+//! violation is recorded with its virtual timestamp rather than
+//! panicking, so a chaos run reports *all* broken invariants at once.
+//!
+//! Checked every step:
+//!
+//! 1. **Conservation** — `served + shed + inflight == submitted`: no
+//!    request is ever dropped or double-answered, even across device
+//!    deaths and re-routes.
+//! 2. **Ledger monotonicity** — simulated analog energy only
+//!    accumulates; a decrease means a device lost its ledger.
+//! 3. **Scale bounds** — every model's committed autotuner scale stays
+//!    in `[floor_scale, 1]`.
+//!
+//! Tracked for the report: the first virtual time the fleet-wide
+//! measured output error came within the configured SLO (error-SLO
+//! convergence — scenarios assert "converged within T virtual
+//! seconds").
+
+use crate::coordinator::Coordinator;
+
+/// What to check (derived by the scenario engine from the coordinator
+/// config it was handed).
+#[derive(Clone, Debug, Default)]
+pub struct InvariantConfig {
+    /// Lower bound for committed scales (`AutotunerConfig::floor_scale`).
+    pub floor_scale: f64,
+    /// Check scale bounds at all (control plane enabled).
+    pub check_scales: bool,
+    /// Track convergence of the measured output error to this SLO.
+    pub err_slo: Option<f64>,
+}
+
+pub struct InvariantChecker {
+    cfg: InvariantConfig,
+    last_energy: f64,
+    steps: u64,
+    pub violations: Vec<String>,
+    /// First virtual time (ns) the windowed measured error was within
+    /// `err_slo`.
+    pub err_converged_at_ns: Option<u64>,
+}
+
+impl InvariantChecker {
+    pub fn new(cfg: InvariantConfig) -> InvariantChecker {
+        InvariantChecker {
+            cfg,
+            last_energy: 0.0,
+            steps: 0,
+            violations: Vec::new(),
+            err_converged_at_ns: None,
+        }
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Run every check against the coordinator's current counters.
+    /// Call only at quiescent points (right after a clock advance): the
+    /// conservation sum is exact there, racy mid-batch.
+    pub fn step(&mut self, coord: &Coordinator, submitted: u64, now_ns: u64) {
+        self.steps += 1;
+        let s = coord.stats();
+        let inflight = coord.inflight() as u64;
+        let answered = s.served + s.shed;
+        if answered + inflight != submitted {
+            self.violations.push(format!(
+                "t={}ms conservation: served {} + shed {} + inflight {} \
+                 != submitted {}",
+                now_ns / 1_000_000,
+                s.served,
+                s.shed,
+                inflight,
+                submitted
+            ));
+        }
+        if s.ledger.total_energy + 1e-9 < self.last_energy {
+            self.violations.push(format!(
+                "t={}ms energy ledger shrank: {} -> {}",
+                now_ns / 1_000_000,
+                self.last_energy,
+                s.ledger.total_energy
+            ));
+        }
+        self.last_energy = self.last_energy.max(s.ledger.total_energy);
+        if self.cfg.check_scales {
+            for (m, sc) in &s.scales {
+                if !(self.cfg.floor_scale - 1e-9..=1.0 + 1e-9).contains(sc) {
+                    self.violations.push(format!(
+                        "t={}ms scale[{m}] = {sc} outside \
+                         [{}, 1]",
+                        now_ns / 1_000_000,
+                        self.cfg.floor_scale
+                    ));
+                }
+            }
+        }
+        if let (Some(slo), None) =
+            (self.cfg.err_slo, self.err_converged_at_ns)
+        {
+            if let Some(err) = s.window.mean_out_err {
+                if s.window.err_batches >= 2 && err <= slo {
+                    self.err_converged_at_ns = Some(now_ns);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Deterministic scenario simulation: virtual time, scripted traffic,
+//! chaos fault injection, and invariant checking over the real serving
+//! stack.
+//!
+//! The coordinator's timing-sensitive components (batch deadlines,
+//! device-time simulation, telemetry stamps, the control tick) all run
+//! on a [`Clock`]. Production uses [`WallClock`]; scenarios install a
+//! [`VirtualClock`] and replay minutes of bursty traffic — with device
+//! deaths, stalls, queue saturation and noise drift injected mid-run —
+//! in milliseconds of wall time, *bit-identically* across runs: same
+//! responses, same shed count, same final autotuner scale.
+//!
+//! Layers:
+//!
+//! - [`clock`] — the `Clock` trait and both implementations (the
+//!   determinism contract lives there).
+//! - [`traffic`] — scripted generators: steady, diurnal ramp,
+//!   heavy-tail bursts, multi-model mixes. All seeded and deterministic.
+//! - [`scenario`] — the engine: merge traffic + fault events on a
+//!   virtual timeline, drive a real `Coordinator`, collect every
+//!   response into a replay digest.
+//! - [`invariants`] — checkers run at every step: request conservation
+//!   (`served + shed + inflight == submitted`), energy-ledger
+//!   monotonicity, autotuner scale bounds, error-SLO convergence.
+//!
+//! See `examples/serve_sim.rs` for the end-to-end flow and
+//! `docs/ARCHITECTURE.md` ("Deterministic simulation") for how this
+//! fits the rest of the stack.
+
+pub mod clock;
+pub mod invariants;
+pub mod scenario;
+pub mod traffic;
+
+pub use clock::{
+    Clock, ClockRef, SlotId, VirtualClock, WaitOutcome, WallClock,
+};
+pub use invariants::{InvariantChecker, InvariantConfig};
+pub use scenario::{run_scenario, Scenario, SimEvent, SimReport};
+pub use traffic::{
+    diurnal, heavy_tail, merge, multi_model, steady, TrafficSpec,
+};

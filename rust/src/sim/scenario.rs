@@ -1,0 +1,325 @@
+//! The scenario engine: replay scripted traffic + faults against the
+//! real coordinator stack on a virtual clock, collect every response,
+//! and fold them into a replay digest.
+//!
+//! A [`Scenario`] is a time-ordered list of [`SimEvent`]s (traffic
+//! bursts from [`crate::sim::traffic`], faults from
+//! [`crate::coordinator::Fault`]) plus a drain tail. [`run_scenario`]
+//! installs a fresh [`VirtualClock`], drives the events, steps the
+//! [`InvariantChecker`] at every quiescent point, and returns a
+//! [`SimReport`] whose `digest` covers every response bit (ids, logits,
+//! latencies, devices, shed flags): two runs of the same scenario must
+//! produce equal digests — that is the determinism acceptance test.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::request::InferResponse;
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, Fault, FleetStats, PrecisionScheduler,
+    ServerStats,
+};
+use crate::data::Features;
+use crate::runtime::artifact::ModelBundle;
+use crate::sim::clock::VirtualClock;
+use crate::sim::invariants::{InvariantChecker, InvariantConfig};
+use crate::util::rng::{fnv1a_word, Rng, FNV_OFFSET};
+
+/// One scripted event on the virtual timeline.
+#[derive(Clone, Debug)]
+pub enum SimEvent {
+    /// Submit `n` single-sample requests for `model`.
+    Submit { t_ns: u64, model: String, n: u32 },
+    /// Inject a device fault (death, stall, noise drift).
+    Fault { t_ns: u64, device: usize, fault: Fault },
+}
+
+impl SimEvent {
+    pub fn t_ns(&self) -> u64 {
+        match self {
+            SimEvent::Submit { t_ns, .. } | SimEvent::Fault { t_ns, .. } => {
+                *t_ns
+            }
+        }
+    }
+
+    /// Convenience constructor for fault events.
+    pub fn fault_at(t: Duration, device: usize, fault: Fault) -> SimEvent {
+        SimEvent::Fault { t_ns: t.as_nanos() as u64, device, fault }
+    }
+}
+
+/// A scripted run: events plus how it ends and what the requests look
+/// like.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub events: Vec<SimEvent>,
+    /// Virtual time to keep running after the last event so in-flight
+    /// work drains before the final snapshot.
+    pub tail: Duration,
+    /// Feature-vector length of every submitted request.
+    pub feature_dim: usize,
+    /// Seed for the deterministic per-request feature streams.
+    pub feature_seed: u64,
+}
+
+impl Scenario {
+    pub fn new(events: Vec<SimEvent>) -> Scenario {
+        Scenario {
+            events,
+            tail: Duration::from_secs(2),
+            feature_dim: 4,
+            feature_seed: 7,
+        }
+    }
+
+    pub fn with_tail(mut self, tail: Duration) -> Scenario {
+        self.tail = tail;
+        self
+    }
+
+    pub fn with_features(mut self, dim: usize, seed: u64) -> Scenario {
+        self.feature_dim = dim;
+        self.feature_seed = seed;
+        self
+    }
+
+    /// Total requests this scenario will submit.
+    pub fn submitted_total(&self) -> u64 {
+        self.events
+            .iter()
+            .map(|e| match e {
+                SimEvent::Submit { n, .. } => *n as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// Everything a finished scenario run reports.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub submitted: u64,
+    pub served: u64,
+    pub shed: u64,
+    /// Responses actually received by the driver (must equal
+    /// `submitted`; a shortfall is recorded as a violation).
+    pub answered: u64,
+    /// FNV fold over every response in submission order — ids, shed
+    /// flags, devices, predictions, logits bits, latencies, energy.
+    /// Equal digests mean bit-identical replay.
+    pub digest: u64,
+    pub final_scales: BTreeMap<String, f64>,
+    pub stats: ServerStats,
+    pub fleet: FleetStats,
+    pub violations: Vec<String>,
+    /// First virtual time the measured-error window came within the
+    /// configured SLO (None: no SLO set, or never converged).
+    pub err_converged_at_ns: Option<u64>,
+    /// Invariant-checker steps executed.
+    pub checks: u64,
+    pub virtual_ms: f64,
+    pub wall_ms: f64,
+}
+
+impl SimReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} served={} shed={} digest={:#018x} \
+             virtual={:.0}ms wall={:.0}ms speedup={:.0}x \
+             invariant checks={} violations={}",
+            self.submitted,
+            self.served,
+            self.shed,
+            self.digest,
+            self.virtual_ms,
+            self.wall_ms,
+            if self.wall_ms > 0.0 {
+                self.virtual_ms / self.wall_ms
+            } else {
+                0.0
+            },
+            self.checks,
+            self.violations.len(),
+        )
+    }
+}
+
+fn fold(h: &mut u64, x: u64) {
+    *h = fnv1a_word(*h, x);
+}
+
+fn fold_response(h: &mut u64, r: &InferResponse) {
+    fold(h, r.id);
+    fold(h, r.shed as u64);
+    fold(h, r.device as u64);
+    fold(h, r.pred as i64 as u64);
+    fold(h, r.latency_us);
+    fold(h, r.batch_size as u64);
+    fold(h, r.energy.to_bits());
+    for l in &r.logits {
+        fold(h, l.to_bits() as u64);
+    }
+}
+
+/// Deterministic per-request features: same scenario, same payloads.
+fn features(dim: usize, seed: u64, idx: u64) -> Features {
+    let mut rng = Rng::new(seed ^ idx.wrapping_mul(0x9E3779B97F4A7C15));
+    Features::F32((0..dim).map(|_| rng.uniform_in(-0.5, 0.5) as f32).collect())
+}
+
+/// Replay `scenario` against a freshly started coordinator (the
+/// `cfg.clock` is replaced with a new [`VirtualClock`]). Fails fast on
+/// configurations that cannot replay deterministically; invariant
+/// violations during the run are *collected* into the report instead.
+pub fn run_scenario(
+    bundles: Vec<ModelBundle>,
+    scheduler: PrecisionScheduler,
+    mut cfg: CoordinatorConfig,
+    scenario: &Scenario,
+) -> Result<SimReport> {
+    // Determinism preconditions: simulated device time orders all
+    // cross-thread effects on the virtual timeline (and PJRT needs
+    // real artifacts — scenarios run on native/reference backends).
+    let specs = cfg.device_specs();
+    for s in &specs {
+        if !s.backend.needs_native_models() {
+            bail!(
+                "device {} runs the PJRT backend; scenarios need native \
+                 or reference backends",
+                s.name
+            );
+        }
+        if specs.len() > 1 && !s.backend.simulates_time() {
+            bail!(
+                "device {} must simulate time: multi-device scenarios \
+                 replay deterministically only when modeled device time \
+                 orders completions",
+                s.name
+            );
+        }
+    }
+    let mut events = scenario.events.clone();
+    events.sort_by_key(|e| e.t_ns()); // stable: ties keep script order
+
+    let clock = Arc::new(VirtualClock::new());
+    cfg.clock = clock.clone();
+    let inv = InvariantConfig {
+        floor_scale: cfg.control.autotuner.floor_scale,
+        check_scales: cfg.control.enabled,
+        err_slo: cfg.control.autotuner.slo_out_err,
+    };
+    let wall0 = std::time::Instant::now();
+    let coord = Coordinator::start(bundles, scheduler, cfg)?;
+    let mut checker = InvariantChecker::new(inv);
+    let mut pending: Vec<Receiver<InferResponse>> =
+        Vec::with_capacity(scenario.submitted_total() as usize);
+    let mut submitted = 0u64;
+
+    for ev in &events {
+        clock.advance_to(ev.t_ns());
+        match ev {
+            SimEvent::Submit { model, n, .. } => {
+                for _ in 0..*n {
+                    let x = features(
+                        scenario.feature_dim,
+                        scenario.feature_seed,
+                        submitted,
+                    );
+                    pending.push(coord.submit(model, x));
+                    submitted += 1;
+                }
+            }
+            SimEvent::Fault { device, fault, .. } => {
+                coord.inject_fault(*device, *fault);
+            }
+        }
+        // Play the event out (zero-width advance = deliver messages,
+        // reach quiescence), then check invariants at the settled state.
+        clock.advance(Duration::ZERO);
+        checker.step(&coord, submitted, clock.now_ns());
+    }
+    clock.advance(scenario.tail);
+    // Drain any backlog the tail did not cover: the digest is only
+    // deterministic for work completed under the virtual clock (the
+    // post-shutdown drain runs at real-thread speed with no ordering
+    // guarantees), so keep advancing — bounded — until nothing is in
+    // flight, and record a violation if it never empties.
+    let mut extra_rounds = 0u32;
+    while coord.inflight() > 0 && extra_rounds < 10_000 {
+        clock.advance(Duration::from_millis(100));
+        extra_rounds += 1;
+    }
+    if coord.inflight() > 0 {
+        checker.violations.push(format!(
+            "backlog never drained: {} requests still in flight after \
+             the tail + {}s of extra virtual time",
+            coord.inflight(),
+            extra_rounds / 10
+        ));
+    }
+    checker.step(&coord, submitted, clock.now_ns());
+
+    let fleet = coord.fleet_stats();
+    let virtual_ms = clock.now_ns() as f64 / 1e6;
+    let stats = coord.shutdown();
+    let mut violations = std::mem::take(&mut checker.violations);
+    if stats.served + stats.shed != submitted {
+        violations.push(format!(
+            "final conservation: served {} + shed {} != submitted {}",
+            stats.served, stats.shed, submitted
+        ));
+    }
+
+    // Every receiver must hold exactly one response after shutdown.
+    let mut digest = FNV_OFFSET;
+    let mut answered = 0u64;
+    let (mut served, mut shed) = (0u64, 0u64);
+    for (i, rx) in pending.iter().enumerate() {
+        match rx.try_recv() {
+            Ok(r) => {
+                answered += 1;
+                if r.shed {
+                    shed += 1;
+                } else {
+                    served += 1;
+                }
+                fold_response(&mut digest, &r);
+            }
+            Err(_) => {
+                violations.push(format!("request #{i} got no response"));
+            }
+        }
+    }
+    if served != stats.served || shed != stats.shed {
+        violations.push(format!(
+            "response counts (served {served}, shed {shed}) disagree with \
+             coordinator stats (served {}, shed {})",
+            stats.served, stats.shed
+        ));
+    }
+
+    Ok(SimReport {
+        submitted,
+        served,
+        shed,
+        answered,
+        digest,
+        final_scales: stats.scales.clone(),
+        stats,
+        fleet,
+        violations,
+        err_converged_at_ns: checker.err_converged_at_ns,
+        checks: checker.steps(),
+        virtual_ms,
+        wall_ms: wall0.elapsed().as_secs_f64() * 1e3,
+    })
+}

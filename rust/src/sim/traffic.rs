@@ -1,0 +1,294 @@
+//! Scripted traffic generators for deterministic scenarios.
+//!
+//! Each generator emits [`SimEvent::Submit`] bursts on a virtual
+//! timeline, bucketed so that all arrivals within one `bucket` land at
+//! the same timestamp (the scenario engine advances the clock once per
+//! event — coarser buckets replay faster, finer buckets stress the
+//! batcher harder). Everything is seeded: the same spec produces the
+//! same trace, which is half of bit-identical replay.
+
+use std::time::Duration;
+
+use crate::sim::scenario::SimEvent;
+use crate::util::rng::Rng;
+
+/// Common shape of a generated stream.
+#[derive(Clone, Debug)]
+pub struct TrafficSpec {
+    /// Model every request targets.
+    pub model: String,
+    /// Virtual start offset of the stream.
+    pub start: Duration,
+    /// Stream length.
+    pub duration: Duration,
+    /// Arrival bucket: all arrivals inside one bucket submit together.
+    pub bucket: Duration,
+    /// Seed for the stream's randomness (arrival counts, burst shapes).
+    pub seed: u64,
+}
+
+impl TrafficSpec {
+    pub fn new(model: &str, duration: Duration) -> TrafficSpec {
+        TrafficSpec {
+            model: model.to_string(),
+            start: Duration::ZERO,
+            duration,
+            bucket: Duration::from_millis(50),
+            seed: 1,
+        }
+    }
+
+    pub fn with_start(mut self, start: Duration) -> TrafficSpec {
+        self.start = start;
+        self
+    }
+
+    pub fn with_bucket(mut self, bucket: Duration) -> TrafficSpec {
+        self.bucket = bucket.max(Duration::from_micros(1));
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> TrafficSpec {
+        self.seed = seed;
+        self
+    }
+
+    fn buckets(&self) -> u64 {
+        let b = self.bucket.as_nanos().max(1) as u64;
+        (self.duration.as_nanos() as u64).div_ceil(b)
+    }
+
+    fn bucket_t_ns(&self, i: u64) -> u64 {
+        self.start.as_nanos() as u64 + i * self.bucket.as_nanos() as u64
+    }
+
+    fn bucket_s(&self) -> f64 {
+        self.bucket.as_secs_f64()
+    }
+}
+
+/// Poisson sample (Knuth for small lambda, normal approximation past
+/// 30 — plenty for arrival counts).
+fn poisson(rng: &mut Rng, lambda: f64) -> u32 {
+    if lambda <= 0.0 {
+        return 0;
+    }
+    if lambda > 30.0 {
+        let n = lambda + lambda.sqrt() * rng.gaussian();
+        return n.round().max(0.0) as u32;
+    }
+    let limit = (-lambda).exp();
+    let mut n = 0u32;
+    let mut p = 1.0;
+    loop {
+        p *= rng.uniform();
+        if p <= limit {
+            return n;
+        }
+        n += 1;
+    }
+}
+
+fn push(events: &mut Vec<SimEvent>, spec: &TrafficSpec, i: u64, n: u32) {
+    if n > 0 {
+        events.push(SimEvent::Submit {
+            t_ns: spec.bucket_t_ns(i),
+            model: spec.model.clone(),
+            n,
+        });
+    }
+}
+
+/// Constant-rate stream with exact long-run accounting (fractional
+/// arrivals carry across buckets; no randomness at all).
+pub fn steady(spec: &TrafficSpec, rate_per_s: f64) -> Vec<SimEvent> {
+    let mut events = Vec::new();
+    let mut carry = 0.0f64;
+    for i in 0..spec.buckets() {
+        carry += rate_per_s * spec.bucket_s();
+        let n = carry.floor() as u32;
+        carry -= n as f64;
+        push(&mut events, spec, i, n);
+    }
+    events
+}
+
+/// Diurnal ramp: Poisson arrivals whose rate swings sinusoidally from
+/// `base_rate` up to `peak_rate` and back over `period` (a day,
+/// compressed to whatever the scenario wants).
+pub fn diurnal(
+    spec: &TrafficSpec,
+    base_rate: f64,
+    peak_rate: f64,
+    period: Duration,
+) -> Vec<SimEvent> {
+    let mut rng = Rng::new(spec.seed ^ 0xD1u64);
+    let mut events = Vec::new();
+    let period_s = period.as_secs_f64().max(1e-9);
+    for i in 0..spec.buckets() {
+        let t = i as f64 * spec.bucket_s();
+        let phase = (2.0 * std::f64::consts::PI * t / period_s).cos();
+        let rate = base_rate + (peak_rate - base_rate) * 0.5 * (1.0 - phase);
+        push(&mut events, spec, i, poisson(&mut rng, rate * spec.bucket_s()));
+    }
+    events
+}
+
+/// Heavy-tail bursts: Poisson background at `base_rate`, plus burst
+/// episodes arriving every `mean_gap` on average whose *durations* are
+/// Pareto(`alpha`)-distributed (a few long episodes dominate — the
+/// regime that breaks latency SLOs). During an episode the rate rises
+/// to `burst_rate`.
+pub fn heavy_tail(
+    spec: &TrafficSpec,
+    base_rate: f64,
+    burst_rate: f64,
+    mean_gap: Duration,
+    alpha: f64,
+) -> Vec<SimEvent> {
+    let mut rng = Rng::new(spec.seed ^ 0x417u64);
+    let mut events = Vec::new();
+    let gap_s = mean_gap.as_secs_f64().max(1e-9);
+    let alpha = alpha.max(1.01);
+    // Pareto minimum: one bucket; cap episodes at 1/4 of the stream.
+    let min_s = spec.bucket_s();
+    let cap_s = spec.duration.as_secs_f64() / 4.0;
+    let mut burst_left_s = 0.0f64;
+    for i in 0..spec.buckets() {
+        if burst_left_s <= 0.0 {
+            let p_start = (spec.bucket_s() / gap_s).min(1.0);
+            if rng.uniform() < p_start {
+                let u = rng.uniform().max(1e-12);
+                burst_left_s =
+                    (min_s * u.powf(-1.0 / alpha)).min(cap_s.max(min_s));
+            }
+        }
+        let rate = if burst_left_s > 0.0 {
+            burst_left_s -= spec.bucket_s();
+            burst_rate
+        } else {
+            base_rate
+        };
+        push(&mut events, spec, i, poisson(&mut rng, rate * spec.bucket_s()));
+    }
+    events
+}
+
+/// Several models served side by side, each at its own steady rate
+/// (per-model Poisson so the interleave is irregular but seeded).
+pub fn multi_model(specs: &[(TrafficSpec, f64)]) -> Vec<SimEvent> {
+    let streams = specs
+        .iter()
+        .map(|(spec, rate)| {
+            let mut rng = Rng::new(spec.seed ^ 0x33u64);
+            let mut events = Vec::new();
+            for i in 0..spec.buckets() {
+                let n = poisson(&mut rng, rate * spec.bucket_s());
+                push(&mut events, spec, i, n);
+            }
+            events
+        })
+        .collect();
+    merge(streams)
+}
+
+/// Merge event streams onto one timeline (stable: ties keep the input
+/// stream order, so merges are deterministic too).
+pub fn merge(streams: Vec<Vec<SimEvent>>) -> Vec<SimEvent> {
+    let mut all: Vec<SimEvent> = streams.into_iter().flatten().collect();
+    all.sort_by_key(|e| e.t_ns());
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn total(events: &[SimEvent]) -> u64 {
+        events
+            .iter()
+            .map(|e| match e {
+                SimEvent::Submit { n, .. } => *n as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    #[test]
+    fn steady_hits_the_exact_rate() {
+        let spec = TrafficSpec::new("m", Duration::from_secs(10))
+            .with_bucket(Duration::from_millis(30));
+        let events = steady(&spec, 123.0);
+        // Carry accumulation: exact to within one bucket's fraction.
+        assert!((total(&events) as i64 - 1230).abs() <= 1);
+        // Deterministic and ordered.
+        let again = steady(&spec, 123.0);
+        assert_eq!(events.len(), again.len());
+        let ts: Vec<u64> = events.iter().map(|e| e.t_ns()).collect();
+        let mut sorted = ts.clone();
+        sorted.sort();
+        assert_eq!(ts, sorted);
+    }
+
+    #[test]
+    fn diurnal_peaks_mid_period() {
+        let spec = TrafficSpec::new("m", Duration::from_secs(20))
+            .with_bucket(Duration::from_millis(100));
+        let events = diurnal(&spec, 10.0, 400.0, Duration::from_secs(20));
+        // Second half of the first half (around t = period/2) must be
+        // much denser than the edges.
+        let mid: u64 = events
+            .iter()
+            .filter(|e| (8..12).contains(&(e.t_ns() / 1_000_000_000)))
+            .map(|e| match e {
+                SimEvent::Submit { n, .. } => *n as u64,
+                _ => 0,
+            })
+            .sum();
+        let edge: u64 = events
+            .iter()
+            .filter(|e| e.t_ns() < 2_000_000_000)
+            .map(|e| match e {
+                SimEvent::Submit { n, .. } => *n as u64,
+                _ => 0,
+            })
+            .sum();
+        assert!(mid > edge * 3, "mid {mid} vs edge {edge}");
+    }
+
+    #[test]
+    fn heavy_tail_is_bursty_and_deterministic() {
+        let spec = TrafficSpec::new("m", Duration::from_secs(60))
+            .with_bucket(Duration::from_millis(50))
+            .with_seed(42);
+        let a = heavy_tail(&spec, 20.0, 600.0, Duration::from_secs(10), 1.5);
+        let b = heavy_tail(&spec, 20.0, 600.0, Duration::from_secs(10), 1.5);
+        assert_eq!(total(&a), total(&b), "seeded generator must replay");
+        // Burstiness: the busiest bucket far exceeds the mean bucket.
+        let counts: Vec<u64> = a
+            .iter()
+            .map(|e| match e {
+                SimEvent::Submit { n, .. } => *n as u64,
+                _ => 0,
+            })
+            .collect();
+        let max = *counts.iter().max().unwrap();
+        let mean = total(&a) / counts.len() as u64;
+        assert!(max >= mean * 4, "max {max} vs mean {mean}");
+    }
+
+    #[test]
+    fn multi_model_merges_in_time_order() {
+        let a = TrafficSpec::new("a", Duration::from_secs(5)).with_seed(1);
+        let b = TrafficSpec::new("b", Duration::from_secs(5)).with_seed(2);
+        let events = multi_model(&[(a, 50.0), (b, 80.0)]);
+        assert!(events.iter().any(|e| matches!(
+            e, SimEvent::Submit { model, .. } if model == "a")));
+        assert!(events.iter().any(|e| matches!(
+            e, SimEvent::Submit { model, .. } if model == "b")));
+        let ts: Vec<u64> = events.iter().map(|e| e.t_ns()).collect();
+        let mut sorted = ts.clone();
+        sorted.sort();
+        assert_eq!(ts, sorted, "merged stream must be time-ordered");
+    }
+}

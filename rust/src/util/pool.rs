@@ -129,15 +129,26 @@ mod tests {
 
     #[test]
     fn jobs_run_concurrently() {
+        // Two rendezvous jobs must be inside the pool at the same time
+        // for either to finish — deterministic proof of concurrency
+        // with no timing sleeps (the old 20ms-sleep version both wasted
+        // wall time and could flake on a loaded runner).
         let pool = ThreadPool::new(4);
         let peak = Arc::new(AtomicU64::new(0));
         let live = Arc::new(AtomicU64::new(0));
-        for _ in 0..16 {
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        for i in 0..16 {
             let (p, l) = (peak.clone(), live.clone());
+            let b = barrier.clone();
             pool.execute(move || {
                 let now = l.fetch_add(1, Ordering::SeqCst) + 1;
                 p.fetch_max(now, Ordering::SeqCst);
-                std::thread::sleep(std::time::Duration::from_millis(20));
+                if i < 2 {
+                    // First two jobs: FIFO dispatch puts them on two of
+                    // the four workers; neither proceeds until both
+                    // have incremented `live`.
+                    b.wait();
+                }
                 l.fetch_sub(1, Ordering::SeqCst);
             });
         }
@@ -148,7 +159,13 @@ mod tests {
     #[test]
     fn drop_joins_cleanly() {
         let pool = ThreadPool::new(2);
-        pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        let ran = Arc::new(AtomicU64::new(0));
+        let r = ran.clone();
+        pool.execute(move || {
+            r.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
         drop(pool); // must not hang
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
     }
 }

@@ -5,6 +5,25 @@
 //! the generators match the published reference implementations
 //! (Blackman & Vigna, 2019) and are covered by known-answer tests below.
 
+/// FNV-1a offset basis (also the initial value for digest folds).
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// FNV-1a over a byte slice: the stable string -> seed hash (native
+/// weight streams, per-model batch-seed bases).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    bytes
+        .iter()
+        .fold(FNV_OFFSET, |h, &b| (h ^ b as u64).wrapping_mul(FNV_PRIME))
+}
+
+/// One FNV-1a step folding a whole u64 word (replay-digest
+/// accumulation).
+pub fn fnv1a_word(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(FNV_PRIME)
+}
+
 /// splitmix64 step — used for seeding and as a cheap standalone generator.
 #[inline]
 pub fn splitmix64(state: &mut u64) -> u64 {

@@ -8,11 +8,14 @@
 //! measurably changes throughput, latency, the energy ledger — and the
 //! measured output error.
 //!
-//! Controller-convergence tests poll with generous deadlines instead of
-//! asserting after fixed sleeps, so a loaded CI runner slows them down
-//! rather than flaking them.
+//! Controller-convergence tests run on a `VirtualClock`: traffic ramps
+//! and control ticks play out on a deterministic virtual timeline, so
+//! the same convergence happens on every run, takes milliseconds of
+//! wall time, and a loaded CI runner cannot flake them (the old
+//! versions polled real time around real sleeps).
 
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
 use dynaprec::backend::BackendKind;
@@ -26,6 +29,7 @@ use dynaprec::coordinator::{
 };
 use dynaprec::data::Features;
 use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+use dynaprec::sim::VirtualClock;
 
 /// Two noise sites x 4 channels, 2000 MACs/sample. With the Time
 /// averaging mode and a per-layer energy of 16, a sample costs
@@ -108,9 +112,10 @@ fn autotuner_degrades_under_overload_and_recovers() {
     // At 4us/cycle a sample costs 32 cycles = 128us of device time at
     // full precision (scale 1), so one 8-sample batch takes ~1ms and
     // capacity is ~7.8k samples/s (~31k/s at the 0.25 floor). The ramp
-    // offers ~40k/s — beyond even floor capacity — so the SLO blows,
-    // the autotuner pins to the floor, and admission never fires
-    // (limits are huge).
+    // offers ~40k/s of *virtual* traffic — beyond even floor capacity —
+    // so the SLO blows, the autotuner pins to the floor, and admission
+    // never fires (limits are huge). Everything runs on a virtual
+    // clock: convergence is deterministic and takes ~no wall time.
     let control = ControlConfig {
         enabled: true,
         tick: Duration::from_millis(10),
@@ -133,6 +138,7 @@ fn autotuner_degrades_under_overload_and_recovers() {
             queue_hard_limit: 1_000_000,
         },
     };
+    let clock = Arc::new(VirtualClock::new());
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig {
             batch_size: 8,
@@ -143,6 +149,7 @@ fn autotuner_degrades_under_overload_and_recovers() {
         seed: 0,
         control,
         backend: BackendKind::NativeAnalog { simulate_time: true },
+        clock: clock.clone(),
         ..Default::default()
     };
     let coord =
@@ -151,16 +158,15 @@ fn autotuner_degrades_under_overload_and_recovers() {
 
     // Overload ramp (~40k/s) until the tuner has measurably degraded
     // precision AND the recent window shows the reduced energy/MAC
-    // (ledger-verified); generous deadline instead of a fixed sleep.
-    let deadline = Instant::now() + Duration::from_secs(10);
+    // (ledger-verified). 2 virtual seconds bounds the ramp.
     let mut mid_scale = 1.0f64;
     let mut mid_e_per_mac = f64::INFINITY;
     let mut converged = false;
-    while Instant::now() < deadline {
+    for _round in 0..250 {
         for _ in 0..320 {
             drop(coord.submit("synth", sample()));
         }
-        std::thread::sleep(Duration::from_millis(8));
+        clock.advance(Duration::from_millis(8));
         let s = coord.stats();
         mid_scale = s.scales["synth"];
         mid_e_per_mac = s.window.energy_per_req / 2000.0;
@@ -181,17 +187,16 @@ fn autotuner_degrades_under_overload_and_recovers() {
     );
 
     // Let the backlog drain at the degraded precision.
-    std::thread::sleep(Duration::from_millis(800));
+    clock.advance(Duration::from_millis(800));
 
     // Load subsides: ~250/s. p95 falls under the SLO headroom and the
-    // tuner climbs back up, again with a generous deadline.
-    let deadline = Instant::now() + Duration::from_secs(10);
+    // tuner climbs back up (10 virtual seconds bound the climb).
     let mut recovered = false;
     let mut last = (0.0, 0.0);
-    while Instant::now() < deadline {
+    for _round in 0..310 {
         for _ in 0..8 {
             drop(coord.submit("synth", sample()));
-            std::thread::sleep(Duration::from_millis(4));
+            clock.advance(Duration::from_millis(4));
         }
         let s = coord.stats();
         last = (s.scales["synth"], s.window.p95_lat_us);
@@ -212,7 +217,9 @@ fn autotuner_degrades_under_overload_and_recovers() {
 #[test]
 fn admission_sheds_only_after_precision_floor() {
     // Floor pinned at 1.0: precision has nothing to trade, so the soft
-    // queue limit sheds immediately under a burst.
+    // queue limit sheds immediately under a burst. On the virtual
+    // clock the whole burst is submitted before any time passes, so
+    // the split is *exact*: the first 16 admitted, the rest shed.
     let control = ControlConfig {
         enabled: true,
         tick: Duration::from_millis(10),
@@ -227,6 +234,7 @@ fn admission_sheds_only_after_precision_floor() {
         },
         ..Default::default()
     };
+    let clock = Arc::new(VirtualClock::new());
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig {
             batch_size: 8,
@@ -237,6 +245,7 @@ fn admission_sheds_only_after_precision_floor() {
         seed: 0,
         control,
         backend: BackendKind::NativeAnalog { simulate_time: true },
+        clock: clock.clone(),
         ..Default::default()
     };
     let coord =
@@ -244,18 +253,20 @@ fn admission_sheds_only_after_precision_floor() {
             .unwrap();
     let receivers: Vec<_> =
         (0..200).map(|_| coord.submit("synth", sample())).collect();
+    // Play the admitted backlog out (16 samples x 128us << 1s).
+    clock.advance(Duration::from_secs(1));
     let mut shed = 0u64;
     let mut ok = 0u64;
     for rx in receivers {
-        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let resp = rx.try_recv().expect("answered after drain");
         if resp.shed {
             shed += 1;
         } else {
             ok += 1;
         }
     }
-    assert!(shed > 0, "burst past the soft limit at the floor must shed");
-    assert!(ok >= 16, "requests under the limit must be served, got {ok}");
+    assert_eq!(ok, 16, "exactly the soft limit is admitted at the floor");
+    assert_eq!(shed, 184, "everything past the soft limit sheds");
     let stats = coord.shutdown();
     assert_eq!(stats.shed, shed);
     assert_eq!(stats.served, ok);
@@ -276,6 +287,7 @@ fn admission_sheds_only_after_precision_floor() {
         },
         ..Default::default()
     };
+    let clock = Arc::new(VirtualClock::new());
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig {
             batch_size: 8,
@@ -286,6 +298,7 @@ fn admission_sheds_only_after_precision_floor() {
         seed: 0,
         control,
         backend: BackendKind::NativeAnalog { simulate_time: true },
+        clock: clock.clone(),
         ..Default::default()
     };
     let coord =
@@ -293,9 +306,9 @@ fn admission_sheds_only_after_precision_floor() {
             .unwrap();
     let receivers: Vec<_> =
         (0..200).map(|_| coord.submit("synth", sample())).collect();
+    clock.advance(Duration::from_secs(1));
     for rx in receivers {
-        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
-        assert!(!resp.shed);
+        assert!(!rx.try_recv().expect("answered after drain").shed);
     }
     let stats = coord.shutdown();
     assert_eq!(stats.shed, 0);
@@ -331,6 +344,7 @@ fn governor_enforces_per_request_energy_budget() {
         },
         ..Default::default()
     };
+    let clock = Arc::new(VirtualClock::new());
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig {
             batch_size: 8,
@@ -341,19 +355,20 @@ fn governor_enforces_per_request_energy_budget() {
         seed: 0,
         control,
         backend: BackendKind::NativeAnalog { simulate_time: true },
+        clock: clock.clone(),
         ..Default::default()
     };
     let coord =
         Coordinator::start(vec![synthetic_bundle()], scheduler_with_policy(), cfg)
             .unwrap();
-    // Light open-loop load (~500/s) while polling for convergence.
-    let deadline = Instant::now() + Duration::from_secs(10);
+    // Light open-loop load (~500/s of virtual traffic) until the
+    // governor settles (10 virtual seconds bound the search).
     let mut converged = false;
     let mut last = (0.0, 0.0);
-    while Instant::now() < deadline {
+    for _round in 0..200 {
         for _ in 0..25 {
             drop(coord.submit("synth", sample()));
-            std::thread::sleep(Duration::from_millis(2));
+            clock.advance(Duration::from_millis(2));
         }
         let s = coord.stats();
         last = (s.scales["synth"], s.window.energy_per_req);

@@ -13,7 +13,7 @@
 //!    accuracy, not just latency.
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use dynaprec::analog::{AveragingMode, HardwareConfig};
 use dynaprec::backend::{
@@ -28,6 +28,7 @@ use dynaprec::coordinator::{
 };
 use dynaprec::data::Features;
 use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+use dynaprec::sim::VirtualClock;
 
 const MODEL: &str = "nb";
 const BATCH: usize = 16;
@@ -227,7 +228,10 @@ fn mixed_native_reference_fleet_serves_and_reports_error() {
     coord.shutdown();
 }
 
-fn error_slo_config(slo_out_err: Option<f64>) -> CoordinatorConfig {
+fn error_slo_config(
+    slo_out_err: Option<f64>,
+    clock: Arc<VirtualClock>,
+) -> CoordinatorConfig {
     CoordinatorConfig {
         batcher: BatcherConfig {
             batch_size: BATCH,
@@ -257,11 +261,17 @@ fn error_slo_config(slo_out_err: Option<f64>) -> CoordinatorConfig {
             ..Default::default()
         },
         backend: BackendKind::NativeAnalog { simulate_time: false },
+        clock,
         ..Default::default()
     }
 }
 
-fn start_error_slo_coord(slo: Option<f64>) -> Coordinator {
+/// The A/B reaction stack on a virtual clock: deterministic tick
+/// cadence, no real sleeps — what used to be the flakiest pair of
+/// tests in the suite now replays identically on every run.
+fn start_error_slo_coord(
+    slo: Option<f64>,
+) -> (Coordinator, Arc<VirtualClock>) {
     let mut sched = PrecisionScheduler::new();
     sched.set(
         MODEL,
@@ -270,12 +280,14 @@ fn start_error_slo_coord(slo: Option<f64>) -> Coordinator {
             policy: EnergyPolicy::PerLayer(vec![16.0, 16.0]),
         },
     );
-    Coordinator::start(
+    let clock = Arc::new(VirtualClock::new());
+    let coord = Coordinator::start(
         vec![ModelBundle::synthetic(meta())],
         sched,
-        error_slo_config(slo),
+        error_slo_config(slo, clock.clone()),
     )
-    .unwrap()
+    .unwrap();
+    (coord, clock)
 }
 
 #[test]
@@ -284,14 +296,13 @@ fn autotuner_raises_energy_when_measured_error_exceeds_slo() {
     // measured error ~0.08, far above the 0.001 SLO — the controller
     // must climb back to the full policy (scale 1.0), i.e. raise
     // K/energy in response to the *observed* accuracy signal.
-    let coord = start_error_slo_coord(Some(0.001));
+    let (coord, clock) = start_error_slo_coord(Some(0.001));
     // Phase 1: the controller must commit the 0.25 warm start (the
     // gate publishes 1.0 until its first tick) — otherwise a read of
     // the initial 1.0 would fake the climb below.
-    let deadline = Instant::now() + Duration::from_secs(10);
     let mut warm_started = false;
-    while Instant::now() < deadline {
-        std::thread::sleep(Duration::from_millis(5));
+    for _ in 0..100 {
+        clock.advance(Duration::from_millis(5));
         if coord.stats().scales[MODEL] <= 0.26 {
             warm_started = true;
             break;
@@ -299,15 +310,14 @@ fn autotuner_raises_energy_when_measured_error_exceeds_slo() {
     }
     assert!(warm_started, "warm-start scale was never committed");
     // Phase 2: under load, the measured error (>> 0.001) forces the
-    // scale back up to the full policy.
-    let deadline = Instant::now() + Duration::from_secs(10);
+    // scale back up to the full policy (2 virtual seconds bound it).
     let mut scale = 0.0;
     let mut climbed = false;
-    while Instant::now() < deadline {
+    for _ in 0..200 {
         for _ in 0..BATCH * 2 {
             drop(coord.submit(MODEL, x()));
         }
-        std::thread::sleep(Duration::from_millis(10));
+        clock.advance(Duration::from_millis(10));
         scale = coord.stats().scales[MODEL];
         if scale >= 0.99 {
             climbed = true;
@@ -322,13 +332,12 @@ fn autotuner_raises_energy_when_measured_error_exceeds_slo() {
     // scale until the telemetry window is full of batches charging the
     // full 16 units/MAC policy (32000/request), not the 8000/request
     // warm start.
-    let deadline = Instant::now() + Duration::from_secs(5);
     let mut energy_per_req = 0.0;
-    while Instant::now() < deadline {
+    for _ in 0..100 {
         for _ in 0..BATCH * 2 {
             drop(coord.submit(MODEL, x()));
         }
-        std::thread::sleep(Duration::from_millis(10));
+        clock.advance(Duration::from_millis(10));
         energy_per_req = coord.stats().window.energy_per_req;
         if energy_per_req > 25_000.0 {
             break;
@@ -345,14 +354,13 @@ fn autotuner_raises_energy_when_measured_error_exceeds_slo() {
 fn error_within_slo_holds_the_warm_start_scale() {
     // Same stack, no error SLO: nothing can raise the scale (zero
     // latency headroom), so it commits the 0.25 warm start and stays.
-    let coord = start_error_slo_coord(None);
-    let deadline = Instant::now() + Duration::from_secs(10);
+    let (coord, clock) = start_error_slo_coord(None);
     let mut committed = false;
-    while Instant::now() < deadline {
+    for _ in 0..100 {
         for _ in 0..BATCH * 2 {
             drop(coord.submit(MODEL, x()));
         }
-        std::thread::sleep(Duration::from_millis(10));
+        clock.advance(Duration::from_millis(10));
         if (coord.stats().scales[MODEL] - 0.25).abs() < 1e-9 {
             committed = true;
             break;
@@ -364,7 +372,7 @@ fn error_within_slo_holds_the_warm_start_scale() {
         for _ in 0..BATCH {
             drop(coord.submit(MODEL, x()));
         }
-        std::thread::sleep(Duration::from_millis(10));
+        clock.advance(Duration::from_millis(10));
         let s = coord.stats().scales[MODEL];
         assert!(
             (s - 0.25).abs() < 1e-9,

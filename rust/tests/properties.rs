@@ -325,3 +325,144 @@ fn prop_levels_for_bits_consistent_with_log2() {
         },
     );
 }
+
+/// Random telemetry trace: strictly increasing timestamps with gaps of
+/// at least `min_gap_us`, mixed measured/unmeasured error batches.
+fn random_trace(
+    r: &mut Rng,
+    n: usize,
+    min_gap_us: u64,
+) -> Vec<dynaprec::control::BatchSample> {
+    let mut t = r.below(1_000);
+    (0..n)
+        .map(|_| {
+            t += min_gap_us + r.below(9 * min_gap_us + 1);
+            let served = 1 + r.below(32) as u32;
+            let lat = r.uniform_in(50.0, 50_000.0) as f32;
+            dynaprec::control::BatchSample {
+                t_us: t,
+                served,
+                queue_depth: r.below(100) as u32,
+                occupancy: served as f32 / 32.0,
+                exec_us: r.uniform_in(10.0, 5_000.0) as f32,
+                lat_mean_us: lat,
+                lat_max_us: lat * r.uniform_in(1.0, 3.0) as f32,
+                energy: r.uniform_in(0.0, 1e6),
+                device: r.below(4) as u32,
+                out_err: if r.uniform() < 0.3 {
+                    -1.0 // unmeasured (pjrt)
+                } else {
+                    r.uniform_in(0.0, 0.5) as f32
+                },
+            }
+        })
+        .collect()
+}
+
+/// The non-rate fields of a window, for exact comparison.
+fn window_key(w: &dynaprec::control::WindowStats) -> String {
+    format!(
+        "{} {} {} {} {} {} {} {} {} {:?} {}",
+        w.batches,
+        w.served,
+        w.p50_lat_us,
+        w.p95_lat_us,
+        w.mean_exec_us,
+        w.mean_occupancy,
+        w.mean_queue_depth,
+        w.energy,
+        w.energy_per_req,
+        w.mean_out_err,
+        w.err_batches
+    )
+}
+
+#[test]
+fn prop_window_stats_are_clock_resolution_independent() {
+    // Telemetry aggregation must not depend on the clock that stamped
+    // the trace: (a) replaying the same trace in different time units
+    // (t_us scaled by k) changes only span and rates — and those by
+    // exactly k; (b) replaying through a coarser clock (t quantized to
+    // multiples of R) leaves every non-rate statistic bit-identical and
+    // perturbs rates by at most the quantization slack. This is what
+    // makes virtual-clock scenarios trustworthy stand-ins for
+    // wall-clock serving.
+    use dynaprec::control::window_stats;
+    check(
+        "WindowStats invariant under time rescaling + quantization",
+        default_cases(100),
+        |r: &mut Rng| {
+            let n = 2 + r.below(59) as usize;
+            (random_trace(r, n, 1_000), 1 + r.below(7))
+        },
+        |(trace, k)| {
+            let w = window_stats(trace);
+            // (a) time-unit change: t -> k * t.
+            let scaled: Vec<_> = trace
+                .iter()
+                .map(|s| {
+                    let mut s = *s;
+                    s.t_us *= k;
+                    s
+                })
+                .collect();
+            let ws = window_stats(&scaled);
+            if window_key(&w) != window_key(&ws) {
+                return Err(format!(
+                    "t-independent stats changed under x{k} rescale:\n\
+                     {}\nvs\n{}",
+                    window_key(&w),
+                    window_key(&ws)
+                ));
+            }
+            if ws.span_us != w.span_us * k {
+                return Err(format!(
+                    "span {} != {} * {k}",
+                    ws.span_us, w.span_us
+                ));
+            }
+            for (a, b, name) in [
+                (w.req_rate, ws.req_rate * *k as f64, "req_rate"),
+                (w.energy_rate, ws.energy_rate * *k as f64, "energy_rate"),
+            ] {
+                if (a - b).abs() > 1e-9 * a.abs().max(1.0) {
+                    return Err(format!("{name}: {a} vs {b} (k={k})"));
+                }
+            }
+            // (b) coarser resolution: floor t to multiples of R, with R
+            // at most the minimum inter-batch gap (so ordering holds).
+            let r_us = 1_000u64;
+            let coarse: Vec<_> = trace
+                .iter()
+                .map(|s| {
+                    let mut s = *s;
+                    s.t_us = (s.t_us / r_us) * r_us;
+                    s
+                })
+                .collect();
+            let wc = window_stats(&coarse);
+            if window_key(&w) != window_key(&wc) {
+                return Err(format!(
+                    "t-independent stats changed under {r_us}us \
+                     quantization:\n{}\nvs\n{}",
+                    window_key(&w),
+                    window_key(&wc)
+                ));
+            }
+            // Rates agree within the quantization slack R/span.
+            let slack = 2.0 * r_us as f64 / w.span_us.max(1) as f64;
+            for (a, b, name) in [
+                (w.req_rate, wc.req_rate, "req_rate"),
+                (w.energy_rate, wc.energy_rate, "energy_rate"),
+            ] {
+                let rel = (a - b).abs() / a.abs().max(1e-12);
+                if rel > slack {
+                    return Err(format!(
+                        "{name} off by {rel} > slack {slack}: {a} vs {b}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

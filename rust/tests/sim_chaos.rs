@@ -1,0 +1,415 @@
+//! Chaos-fleet scenario tests on the deterministic simulation harness.
+//!
+//! Every test here replays scripted traffic + injected faults against
+//! the *real* coordinator stack (router -> admission -> batcher ->
+//! dispatcher -> native device fleet -> telemetry -> control thread) on
+//! a `VirtualClock`: minutes of virtual serving complete in well under
+//! a second of wall time, bit-identically across runs, with the
+//! invariant checkers (request conservation, ledger monotonicity,
+//! scale bounds) on at every step.
+
+use std::time::Duration;
+
+use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
+use dynaprec::backend::BackendKind;
+use dynaprec::control::{AdmissionConfig, AutotunerConfig, ControlConfig};
+use dynaprec::coordinator::scheduler::ModelPrecision;
+use dynaprec::coordinator::{
+    BatcherConfig, CoordinatorConfig, DeviceSpec, DispatchPolicy,
+    EnergyPolicy, Fault, FleetConfig, PrecisionScheduler,
+};
+use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+use dynaprec::sim::{
+    heavy_tail, merge, run_scenario, steady, Scenario, SimEvent,
+    TrafficSpec,
+};
+
+const MODEL: &str = "m";
+
+/// 2 noise sites x 4 channels, 2000 MACs/sample; per-layer energy 16
+/// costs 32 device cycles and 32000 energy units per sample.
+fn bundle(batch: usize) -> ModelBundle {
+    ModelBundle::synthetic(ModelMeta::synthetic(MODEL, batch, 2, 4, 64, 250.0))
+}
+
+fn sched() -> PrecisionScheduler {
+    let mut s = PrecisionScheduler::new();
+    s.set(
+        MODEL,
+        ModelPrecision {
+            noise: "shot".into(),
+            policy: EnergyPolicy::PerLayer(vec![16.0, 16.0]),
+        },
+    );
+    s
+}
+
+fn hw(cycle_ns: f64) -> HardwareConfig {
+    HardwareConfig {
+        array_rows: 256,
+        array_cols: 256,
+        cycle_ns,
+        base_energy_aj: 1.0,
+        model: DeviceModel::Homodyne,
+    }
+}
+
+/// A native device simulating its analog execution time.
+fn dev(name: &str, cycle_ns: f64) -> DeviceSpec {
+    DeviceSpec::new(name, hw(cycle_ns), AveragingMode::Time)
+        .with_backend(BackendKind::NativeAnalog { simulate_time: true })
+}
+
+fn fleet_cfg(
+    devices: Vec<DeviceSpec>,
+    policy: DispatchPolicy,
+    batch: usize,
+) -> CoordinatorConfig {
+    CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: batch,
+            max_wait: Duration::from_millis(5),
+        },
+        averaging: AveragingMode::Time,
+        fleet: FleetConfig { devices, policy },
+        ..Default::default()
+    }
+}
+
+/// The acceptance scenario: a 10-virtual-minute heavy-tail burst trace
+/// over a 4-device fleet with the control plane on and one device death
+/// mid-run. Replayed twice: same responses (digest), same shed count,
+/// same final autotuner scale — and invariants hold throughout.
+#[test]
+fn ten_minute_burst_with_device_death_replays_bit_identically() {
+    let run = || {
+        let spec = TrafficSpec::new(MODEL, Duration::from_secs(600))
+            .with_bucket(Duration::from_millis(100))
+            .with_seed(2024);
+        let trace =
+            heavy_tail(&spec, 50.0, 2500.0, Duration::from_secs(45), 1.5);
+        let events = merge(vec![
+            trace,
+            vec![SimEvent::fault_at(
+                Duration::from_secs(240),
+                2,
+                Fault::Die,
+            )],
+        ]);
+        let mut cfg = fleet_cfg(
+            (0..4).map(|i| dev(&format!("d{i}"), 4000.0)).collect(),
+            DispatchPolicy::LeastQueueDepth,
+            16,
+        );
+        cfg.control = ControlConfig {
+            enabled: true,
+            tick: Duration::from_millis(50),
+            window: 32,
+            max_sample_age: Duration::from_millis(900),
+            autotuner: AutotunerConfig {
+                slo_p95_us: 50_000.0,
+                floor_scale: 0.25,
+                cooldown_ticks: 1,
+                min_batches: 3,
+                ..Default::default()
+            },
+            admission: AdmissionConfig {
+                queue_soft_limit: 50_000,
+                queue_hard_limit: 100_000,
+            },
+            ..Default::default()
+        };
+        let scenario = Scenario::new(events).with_tail(Duration::from_secs(5));
+        run_scenario(vec![bundle(16)], sched(), cfg, &scenario).unwrap()
+    };
+
+    let a = run();
+    let b = run();
+    assert!(a.ok(), "invariants violated:\n{}", a.violations.join("\n"));
+    assert!(a.submitted > 20_000, "trace too thin: {}", a.submitted);
+    assert!(a.checks > 1_000, "checker barely ran: {}", a.checks);
+    assert_eq!(a.answered, a.submitted, "every request answered");
+    // The dead device stopped serving; the other three carried on.
+    assert!(!a.fleet.devices[2].alive, "device 2 must be dead");
+    assert!(
+        a.fleet.devices.iter().filter(|d| d.alive).count() == 3,
+        "exactly one death"
+    );
+    // Bit-identical replay: responses, shed count, autotuner scale.
+    assert_eq!(a.digest, b.digest, "replay must be bit-identical");
+    assert_eq!(a.served, b.served);
+    assert_eq!(a.shed, b.shed);
+    assert_eq!(a.final_scales, b.final_scales);
+    assert_eq!(
+        a.stats.ledger.total_energy.to_bits(),
+        b.stats.ledger.total_energy.to_bits(),
+        "even the energy ledger replays exactly"
+    );
+    // 600 virtual seconds in real seconds (the <5s wall-time acceptance
+    // bar is enforced in release; debug builds get slack).
+    let bar_ms = if cfg!(debug_assertions) { 60_000.0 } else { 5_000.0 };
+    assert!(
+        a.wall_ms < bar_ms,
+        "10 virtual minutes took {:.0}ms of wall time",
+        a.wall_ms
+    );
+}
+
+/// Death mid-batch re-routes queued work to the surviving device
+/// instead of shedding while capacity remains — with exact accounting.
+#[test]
+fn device_death_reroutes_instead_of_shedding() {
+    // Slow devices (2ms/cycle -> ~64ms per 4-sample batch) so the
+    // burst is still queued when the death lands.
+    let cfg = fleet_cfg(
+        vec![dev("d0", 2_000_000.0), dev("d1", 2_000_000.0)],
+        DispatchPolicy::RoundRobin,
+        4,
+    );
+    let events = vec![
+        SimEvent::Submit { t_ns: 0, model: MODEL.into(), n: 32 },
+        // Device 1 dies 1ms in: it is mid-executing its first batch,
+        // with more queued behind it.
+        SimEvent::fault_at(Duration::from_millis(1), 1, Fault::Die),
+    ];
+    let scenario =
+        Scenario::new(events).with_tail(Duration::from_secs(10));
+    let r = run_scenario(vec![bundle(4)], sched(), cfg, &scenario).unwrap();
+    assert!(r.ok(), "invariants violated:\n{}", r.violations.join("\n"));
+    assert_eq!(r.submitted, 32);
+    assert_eq!(r.shed, 0, "capacity remained: nothing may shed");
+    assert_eq!(r.served, 32, "every queued batch re-routed and served");
+    assert!(!r.fleet.devices[1].alive);
+    // Device 1 served at most its single in-flight batch; the survivor
+    // took everything else.
+    assert!(
+        r.fleet.devices[1].served <= 4,
+        "dead device served {}",
+        r.fleet.devices[1].served
+    );
+    assert_eq!(
+        r.fleet.devices[0].served + r.fleet.devices[1].served,
+        32
+    );
+}
+
+/// With every device dead, new traffic sheds — and the accounting
+/// still balances exactly (served + shed == submitted).
+#[test]
+fn all_dead_fleet_sheds_with_exact_accounting() {
+    let cfg = fleet_cfg(
+        vec![dev("d0", 1000.0), dev("d1", 1000.0)],
+        DispatchPolicy::LeastQueueDepth,
+        8,
+    );
+    let events = vec![
+        SimEvent::Submit { t_ns: 0, model: MODEL.into(), n: 24 },
+        SimEvent::fault_at(Duration::from_secs(1), 0, Fault::Die),
+        SimEvent::fault_at(Duration::from_secs(1), 1, Fault::Die),
+        SimEvent::Submit {
+            t_ns: 2_000_000_000,
+            model: MODEL.into(),
+            n: 40,
+        },
+    ];
+    let scenario = Scenario::new(events).with_tail(Duration::from_secs(5));
+    let r = run_scenario(vec![bundle(8)], sched(), cfg, &scenario).unwrap();
+    assert!(r.ok(), "invariants violated:\n{}", r.violations.join("\n"));
+    assert_eq!(r.submitted, 64);
+    assert_eq!(r.served, 24, "pre-death traffic was served");
+    assert_eq!(r.shed, 40, "post-death traffic sheds, none dropped");
+    assert!(r.fleet.devices.iter().all(|d| !d.alive));
+}
+
+/// The energy-aware policy must never pick a dead device, even though
+/// its frozen ledger makes it look like the cheapest choice forever.
+#[test]
+fn energy_aware_never_picks_a_dead_device() {
+    let cfg = fleet_cfg(
+        vec![dev("d0", 1000.0), dev("d1", 1000.0)],
+        DispatchPolicy::EnergyAware,
+        8,
+    );
+    let events = vec![
+        // Kill device 0 before any traffic: its ledger stays at 0.0 —
+        // the energy-aware argmin would love it.
+        SimEvent::fault_at(Duration::from_millis(1), 0, Fault::Die),
+        SimEvent::Submit {
+            t_ns: 100_000_000,
+            model: MODEL.into(),
+            n: 64,
+        },
+    ];
+    let scenario = Scenario::new(events).with_tail(Duration::from_secs(5));
+    let r = run_scenario(vec![bundle(8)], sched(), cfg, &scenario).unwrap();
+    assert!(r.ok(), "invariants violated:\n{}", r.violations.join("\n"));
+    assert_eq!(r.served, 64);
+    assert_eq!(r.shed, 0);
+    assert_eq!(
+        r.fleet.devices[0].served, 0,
+        "dead device must serve nothing"
+    );
+    assert_eq!(r.fleet.devices[1].served, 64);
+    assert_eq!(r.fleet.devices[0].ledger.total_energy, 0.0);
+}
+
+/// Bounded queues saturate under a burst: the overflow sheds, nothing
+/// hangs, and conservation holds at every step.
+#[test]
+fn queue_saturation_sheds_with_conservation() {
+    // cap-1 queues on very slow devices: a 200-request burst mostly
+    // sheds at dispatch.
+    let cfg = fleet_cfg(
+        vec![
+            dev("d0", 2_000_000.0).with_queue_cap(1),
+            dev("d1", 2_000_000.0).with_queue_cap(1),
+        ],
+        DispatchPolicy::LeastQueueDepth,
+        8,
+    );
+    let events = vec![SimEvent::Submit {
+        t_ns: 0,
+        model: MODEL.into(),
+        n: 200,
+    }];
+    let scenario =
+        Scenario::new(events).with_tail(Duration::from_secs(20));
+    let r = run_scenario(vec![bundle(8)], sched(), cfg, &scenario).unwrap();
+    assert!(r.ok(), "invariants violated:\n{}", r.violations.join("\n"));
+    assert_eq!(r.served + r.shed, 200);
+    assert!(r.shed > 0, "cap-1 queues under a burst must shed");
+    assert!(r.served >= 16, "the queued batches must still be served");
+}
+
+/// A stalled device holds its queue (latency spike) but loses nothing;
+/// traffic keeps flowing and every request is answered.
+#[test]
+fn device_stall_spikes_latency_without_loss() {
+    let cfg = fleet_cfg(vec![dev("d0", 4000.0)], DispatchPolicy::RoundRobin, 8);
+    let spec = TrafficSpec::new(MODEL, Duration::from_secs(10))
+        .with_bucket(Duration::from_millis(50))
+        .with_seed(5);
+    // Stall near the end of the trace so the backlog that piled up
+    // behind it drains into the *final* telemetry window.
+    let events = merge(vec![
+        steady(&spec, 100.0),
+        vec![SimEvent::fault_at(
+            Duration::from_secs(7),
+            0,
+            Fault::Stall(Duration::from_secs(3)),
+        )],
+    ]);
+    let scenario = Scenario::new(events).with_tail(Duration::from_secs(10));
+    let r = run_scenario(vec![bundle(8)], sched(), cfg, &scenario).unwrap();
+    assert!(r.ok(), "invariants violated:\n{}", r.violations.join("\n"));
+    assert_eq!(r.served, r.submitted, "a stall must not lose requests");
+    assert_eq!(r.shed, 0);
+    // Requests caught behind the 3s stall carry second-scale latencies.
+    assert!(
+        r.stats.window.p95_lat_us > 100_000.0,
+        "stall never surfaced in latency: p95 {}us",
+        r.stats.window.p95_lat_us
+    );
+}
+
+/// Noise drift on a native device raises the measured error; the
+/// error-SLO autotuner answers with more redundancy K (energy) until
+/// the observed error is back inside the SLO — within virtual seconds.
+#[test]
+fn noise_drift_triggers_error_slo_recovery() {
+    let mut sched = PrecisionScheduler::new();
+    sched.set(
+        MODEL,
+        ModelPrecision {
+            noise: "thermal".into(),
+            policy: EnergyPolicy::PerLayer(vec![16.0, 16.0]),
+        },
+    );
+    let hw = HardwareConfig::broadcast_weight();
+    let device = DeviceSpec::new("bw0", hw, AveragingMode::Time)
+        .with_backend(BackendKind::NativeAnalog { simulate_time: true });
+    let mut cfg =
+        fleet_cfg(vec![device], DispatchPolicy::RoundRobin, 16);
+    cfg.control = ControlConfig {
+        enabled: true,
+        tick: Duration::from_millis(20),
+        window: 16,
+        max_sample_age: Duration::from_millis(900),
+        autotuner: AutotunerConfig {
+            slo_p95_us: 1e9,
+            floor_scale: 0.1,
+            step_up: 1.4,
+            headroom: 0.0,
+            cooldown_ticks: 1,
+            min_batches: 2,
+            slo_out_err: Some(0.10),
+            initial_scale: 0.25,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let spec = TrafficSpec::new(MODEL, Duration::from_secs(30))
+        .with_bucket(Duration::from_millis(50))
+        .with_seed(9);
+    let events = merge(vec![
+        steady(&spec, 300.0),
+        // 4x noise drift at t=10s: the warm-start K is no longer
+        // enough; only the full policy keeps the error inside the SLO.
+        vec![SimEvent::fault_at(
+            Duration::from_secs(10),
+            0,
+            Fault::NoiseDrift(4.0),
+        )],
+    ]);
+    let scenario = Scenario::new(events).with_tail(Duration::from_secs(3));
+    let r = run_scenario(vec![bundle(16)], sched, cfg, &scenario).unwrap();
+    assert!(r.ok(), "invariants violated:\n{}", r.violations.join("\n"));
+    // Converged: the controller climbed well past the 0.25 warm start
+    // (drift 4x needs roughly K >= 11 of the policy's K = 16 to sit
+    // inside the SLO) and the final measured-error window is back
+    // within it despite the drifted physics.
+    let final_scale = r.final_scales[MODEL];
+    assert!(
+        final_scale > 0.45,
+        "drift should raise K/energy well past the warm start, got \
+         scale {final_scale}"
+    );
+    let err = r
+        .stats
+        .window
+        .mean_out_err
+        .expect("native fleet measures error");
+    assert!(
+        err <= 0.12,
+        "error-SLO did not reconverge within 20 virtual seconds: {err}"
+    );
+}
+
+/// Same scenario, two seeds: different traces (sanity check that the
+/// digest actually discriminates — determinism tests would pass
+/// vacuously if the digest ignored the responses).
+#[test]
+fn different_seeds_produce_different_digests() {
+    let mk = |seed: u64| {
+        let spec = TrafficSpec::new(MODEL, Duration::from_secs(20))
+            .with_bucket(Duration::from_millis(50))
+            .with_seed(seed);
+        let events =
+            heavy_tail(&spec, 80.0, 800.0, Duration::from_secs(5), 1.5);
+        let cfg = fleet_cfg(
+            vec![dev("d0", 4000.0), dev("d1", 4000.0)],
+            DispatchPolicy::LeastQueueDepth,
+            16,
+        );
+        let scenario =
+            Scenario::new(events).with_tail(Duration::from_secs(3));
+        run_scenario(vec![bundle(16)], sched(), cfg, &scenario).unwrap()
+    };
+    let a = mk(1);
+    let b = mk(2);
+    assert!(a.ok() && b.ok());
+    assert_ne!(
+        a.digest, b.digest,
+        "different traces must not collide in the digest"
+    );
+}
