@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 use dynaprec::data::Dataset;
-use dynaprec::ops::ModelOps;
+use dynaprec::ops::{ArtifactOps, ModelOps};
 use dynaprec::optim::{train_energy, Granularity, TrainCfg};
 use dynaprec::runtime::artifact::ModelBundle;
 use dynaprec::runtime::Engine;
@@ -20,7 +20,7 @@ fn main() -> Result<()> {
     let meta = bundle.meta.clone();
     let train = Dataset::load(&dir, "vision", "trainsub")?;
     let eval = Dataset::load(&dir, "vision", "eval")?;
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
 
     let steps = if dynaprec::full_mode() { 120 } else { 25 };
     let target = 2.0; // aJ/MAC budget

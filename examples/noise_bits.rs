@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 use dynaprec::data::Dataset;
-use dynaprec::ops::ModelOps;
+use dynaprec::ops::{ArtifactOps, ModelOps};
 use dynaprec::quant::noise_bits;
 use dynaprec::runtime::artifact::ModelBundle;
 use dynaprec::runtime::Engine;
@@ -19,7 +19,7 @@ fn main() -> Result<()> {
     let bundle = ModelBundle::load(engine, &dir, "tiny_resnet")?;
     let meta = bundle.meta.clone();
     let data = Dataset::load(&dir, "vision", "eval")?;
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
 
     let e = 20.0;
     let n = meta.noise_sites().count();

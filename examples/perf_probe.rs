@@ -1,11 +1,11 @@
 use std::sync::Arc; use std::time::Instant;
-use dynaprec::{data::Dataset, ops::ModelOps, runtime::{Engine, artifact::ModelBundle}};
+use dynaprec::{data::Dataset, ops::{ArtifactOps, ModelOps}, runtime::{Engine, artifact::ModelBundle}};
 fn main() {
     let dir = dynaprec::artifacts_dir();
     let engine = Arc::new(Engine::cpu().unwrap());
     let b = ModelBundle::load(engine, &dir, "tiny_resnet").unwrap();
     let d = Dataset::load(&dir, "vision", "eval").unwrap();
-    let ops = ModelOps::new(&b);
+    let ops = ArtifactOps::new(&b);
     let e = vec![5.0f32; b.meta.e_len];
     ops.eval_noisy("shot.fwd", &d, &e, &[0], 1).unwrap(); // warm compile
     let t = Instant::now();

@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 use dynaprec::data::Dataset;
-use dynaprec::ops::ModelOps;
+use dynaprec::ops::{ArtifactOps, ModelOps};
 use dynaprec::runtime::artifact::ModelBundle;
 use dynaprec::runtime::Engine;
 
@@ -28,7 +28,7 @@ fn main() -> Result<()> {
     );
 
     let data = Dataset::load(&dir, "vision", "eval")?;
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
 
     // Clean 8-bit baseline.
     let acc = ops.eval_simple("fwd_quant", &data, 4)?;

@@ -25,7 +25,7 @@ use dynaprec::coordinator::{
     DispatchPolicy, EnergyPolicy, FleetConfig, PrecisionScheduler,
 };
 use dynaprec::data::{Dataset, Features};
-use dynaprec::ops::ModelOps;
+use dynaprec::ops::ArtifactOps;
 use dynaprec::optim::{train_energy, Granularity, TrainCfg};
 use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
 use dynaprec::runtime::Engine;
@@ -187,7 +187,7 @@ fn main() -> Result<()> {
     };
     let data = Dataset::load(&dir, "vision", "eval")?;
     let train = Dataset::load(&dir, "vision", "trainsub")?;
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let steps = if dynaprec::full_mode() { 80 } else { 15 };
     let tr = train_energy(&ops, &train, &TrainCfg {
         noise_tag: "shot".into(),

@@ -15,6 +15,11 @@ pub struct EnergyLedger {
     pub samples: u64,
     /// Per-model breakdown.
     pub per_model: BTreeMap<String, (f64, f64, u64)>, // (macs, energy, samples)
+    /// Per-model, per-noise-site energy breakdown (site order): where a
+    /// per-layer precision policy actually spends. Filled by backends
+    /// that plan layer by layer (`plan_layer` per site); empty for
+    /// backends that only report a model-level total.
+    pub per_layer: BTreeMap<String, Vec<f64>>,
 }
 
 impl EnergyLedger {
@@ -42,6 +47,25 @@ impl EnergyLedger {
         e.2 += samples;
     }
 
+    /// Record one batch's per-noise-site energy split (per-sample
+    /// values, site order) on top of the model-level totals already
+    /// charged by [`EnergyLedger::record`] — the layer-resolved view a
+    /// learned per-layer policy is audited against.
+    pub fn record_layers(
+        &mut self,
+        model: &str,
+        energy_per_layer: &[f64],
+        samples: u64,
+    ) {
+        let acc = self.per_layer.entry(model.to_string()).or_default();
+        if acc.len() < energy_per_layer.len() {
+            acc.resize(energy_per_layer.len(), 0.0);
+        }
+        for (a, &e) in acc.iter_mut().zip(energy_per_layer) {
+            *a += e * samples as f64;
+        }
+    }
+
     /// Fold another ledger into this one (fleet aggregation: the
     /// coordinator merges each device worker's private ledger into the
     /// fleet-wide view without any shared-lock traffic on the hot path).
@@ -55,6 +79,15 @@ impl EnergyLedger {
             e.0 += macs;
             e.1 += energy;
             e.2 += samples;
+        }
+        for (m, layers) in &other.per_layer {
+            let acc = self.per_layer.entry(m.clone()).or_default();
+            if acc.len() < layers.len() {
+                acc.resize(layers.len(), 0.0);
+            }
+            for (a, &e) in acc.iter_mut().zip(layers) {
+                *a += e;
+            }
         }
     }
 
@@ -80,6 +113,23 @@ impl EnergyLedger {
                 macs,
                 if *macs > 0.0 { en / macs } else { 0.0 }
             ));
+            if let Some(layers) = self.per_layer.get(m) {
+                let total: f64 = layers.iter().sum();
+                let shares: Vec<String> = layers
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &e)| {
+                        format!(
+                            "L{i}={:.1}%",
+                            if total > 0.0 { 100.0 * e / total } else { 0.0 }
+                        )
+                    })
+                    .collect();
+                s.push_str(&format!(
+                    "    per-layer energy: {}\n",
+                    shares.join(" ")
+                ));
+            }
         }
         s
     }
@@ -106,6 +156,22 @@ mod tests {
     #[test]
     fn empty_ledger_is_zero() {
         assert_eq!(EnergyLedger::new().avg_energy_per_mac(), 0.0);
+    }
+
+    #[test]
+    fn per_layer_entries_accumulate_and_merge() {
+        let mut l = EnergyLedger::new();
+        l.record("m1", 10, 100.0, 250.0, 5.0);
+        l.record_layers("m1", &[20.0, 5.0], 10);
+        l.record_layers("m1", &[20.0, 5.0], 2);
+        // 20 * (10 + 2) and 5 * (10 + 2): per-sample splits scale by
+        // the batch's sample count, exactly like `record`.
+        assert_eq!(l.per_layer["m1"], vec![240.0, 60.0]);
+        let mut other = EnergyLedger::new();
+        other.record_layers("m1", &[1.0, 1.0, 1.0], 1);
+        l.merge(&other);
+        assert_eq!(l.per_layer["m1"], vec![241.0, 61.0, 1.0]);
+        assert!(l.report().contains("per-layer energy"));
     }
 
     #[test]

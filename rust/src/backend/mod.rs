@@ -119,6 +119,10 @@ pub struct BatchOutput {
     pub out_err: f32,
     pub energy_per_sample: f64,
     pub cycles_per_sample: f64,
+    /// `energy_per_sample` split per noise site (site order) for the
+    /// ledger's per-layer audit trail; empty when the backend charges
+    /// no analog energy (clean forwards, digital reference, failures).
+    pub energy_per_layer: Vec<f64>,
 }
 
 impl BatchOutput {
@@ -130,6 +134,7 @@ impl BatchOutput {
             out_err: ERR_UNMEASURED,
             energy_per_sample: 0.0,
             cycles_per_sample: 0.0,
+            energy_per_layer: Vec::new(),
         }
     }
 }
@@ -190,6 +195,36 @@ pub fn make_backend(
     }
 }
 
+/// Per-noise-site `(energy, cycles)` of an e-vector on one device —
+/// the layer-resolved view `analog_cost_with` sums and the native
+/// backend reports into the ledger's per-layer entries.
+pub fn per_layer_analog_cost(
+    meta: &ModelMeta,
+    e: &[f32],
+    hw: &HardwareConfig,
+    averaging: AveragingMode,
+    quantized: bool,
+) -> Vec<(f64, f64)> {
+    meta.noise_sites()
+        .map(|(_, site)| {
+            let es: Vec<f64> = e
+                [site.e_offset..site.e_offset + site.n_channels]
+                .iter()
+                .map(|&v| v as f64)
+                .collect();
+            let plan = plan_layer(
+                hw,
+                averaging,
+                &es,
+                site.n_dot,
+                site.macs_per_channel,
+                quantized,
+            );
+            (plan.energy, plan.cycles)
+        })
+        .collect()
+}
+
 fn analog_cost_with(
     meta: &ModelMeta,
     e: &[f32],
@@ -197,25 +232,9 @@ fn analog_cost_with(
     averaging: AveragingMode,
     quantized: bool,
 ) -> (f64, f64) {
-    let mut energy = 0.0;
-    let mut cycles = 0.0;
-    for (_, site) in meta.noise_sites() {
-        let es: Vec<f64> = e[site.e_offset..site.e_offset + site.n_channels]
-            .iter()
-            .map(|&v| v as f64)
-            .collect();
-        let plan = plan_layer(
-            hw,
-            averaging,
-            &es,
-            site.n_dot,
-            site.macs_per_channel,
-            quantized,
-        );
-        energy += plan.energy;
-        cycles += plan.cycles;
-    }
-    (energy, cycles)
+    per_layer_analog_cost(meta, e, hw, averaging, quantized)
+        .iter()
+        .fold((0.0, 0.0), |(en, cy), &(e, c)| (en + e, cy + c))
 }
 
 /// Energy per sample + modeled cycles for a materialized e-vector on

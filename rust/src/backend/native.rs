@@ -288,6 +288,7 @@ impl ExecutionBackend for NativeAnalogBackend {
                 out_err: 0.0,
                 energy_per_sample: 0.0,
                 cycles_per_sample: model.sites.len() as f64,
+                energy_per_layer: Vec::new(),
             };
         };
         if e.len() != meta.e_len {
@@ -305,6 +306,7 @@ impl ExecutionBackend for NativeAnalogBackend {
         let mut plans = Vec::with_capacity(model.sites.len());
         let mut energy = 0.0f64;
         let mut cycles = 0.0f64;
+        let mut energy_per_layer = Vec::with_capacity(model.sites.len());
         for ns in &model.sites {
             let s = &ns.site;
             let es: Vec<f64> = e[s.e_offset..s.e_offset + s.n_channels]
@@ -321,6 +323,7 @@ impl ExecutionBackend for NativeAnalogBackend {
             );
             energy += plan.energy;
             cycles += plan.cycles;
+            energy_per_layer.push(plan.energy);
             // A drifted device still *charges* the scheduled plan — it
             // believes its calibration — but suffers scaled noise; the
             // gap shows up in the measured error, which is the point.
@@ -350,6 +353,7 @@ impl ExecutionBackend for NativeAnalogBackend {
             out_err: out_err as f32,
             energy_per_sample: energy,
             cycles_per_sample: cycles,
+            energy_per_layer,
         }
     }
 
@@ -396,6 +400,7 @@ impl ExecutionBackend for DigitalReferenceBackend {
             out_err: 0.0,
             energy_per_sample: 0.0,
             cycles_per_sample: model.sites.len() as f64,
+            energy_per_layer: Vec::new(),
         }
     }
 }

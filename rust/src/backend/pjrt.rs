@@ -11,10 +11,10 @@
 
 use crate::analog::{AveragingMode, HardwareConfig};
 use crate::backend::{
-    continuous_analog_cost, BatchJob, BatchOutput, ExecutionBackend,
+    per_layer_analog_cost, BatchJob, BatchOutput, ExecutionBackend,
     ERR_UNMEASURED,
 };
-use crate::ops::ModelOps;
+use crate::ops::{ArtifactOps, ModelOps};
 
 pub struct PjrtBackend {
     hw: HardwareConfig,
@@ -33,7 +33,7 @@ impl ExecutionBackend for PjrtBackend {
     }
 
     fn execute(&mut self, job: &BatchJob<'_>) -> BatchOutput {
-        let ops = ModelOps::new(job.bundle);
+        let ops = ArtifactOps::new(job.bundle);
         // The AOT artifact is lowered for the full batch: all
         // `meta.batch` lanes execute and return.
         let rows = job.bundle.meta.batch;
@@ -44,20 +44,31 @@ impl ExecutionBackend for PjrtBackend {
                 out_err: ERR_UNMEASURED,
                 energy_per_sample: 0.0,
                 cycles_per_sample: 0.0,
+                energy_per_layer: Vec::new(),
             },
             Some(e) => {
-                let (energy, cycles) = continuous_analog_cost(
+                let per_layer = per_layer_analog_cost(
                     &job.bundle.meta,
                     e,
                     &self.hw,
                     self.averaging,
+                    false, // continuous K: the artifact path's contract
                 );
+                let mut energy = 0.0f64;
+                let mut cycles = 0.0f64;
+                let mut energy_per_layer = Vec::with_capacity(per_layer.len());
+                for &(le, lc) in &per_layer {
+                    energy += le;
+                    cycles += lc;
+                    energy_per_layer.push(le);
+                }
                 BatchOutput {
                     logits: ops.fwd_noisy(job.tag, job.x, job.seed, e),
                     rows,
                     out_err: ERR_UNMEASURED,
                     energy_per_sample: energy,
                     cycles_per_sample: cycles,
+                    energy_per_layer,
                 }
             }
         }

@@ -1127,6 +1127,14 @@ fn execute_batch(
             energy_per_sample,
             cycles,
         );
+        if !out.energy_per_layer.is_empty() {
+            // Layer-resolved spend for per-layer policy auditing.
+            c.ledger.record_layers(
+                &meta.name,
+                &out.energy_per_layer,
+                n as u64,
+            );
+        }
         for (i, r) in batch.into_iter().enumerate() {
             let latency = done_ns.saturating_sub(r.enqueued) / 1_000;
             lat_sum += latency as f64;

@@ -40,7 +40,7 @@ use crate::coordinator::fleet::{
     DeviceFleet, DeviceSpec, Fault, FleetConfig, FleetStats,
 };
 use crate::coordinator::request::{InferRequest, InferResponse};
-use crate::coordinator::scheduler::PrecisionScheduler;
+use crate::coordinator::scheduler::{ModelPrecision, PrecisionScheduler};
 use crate::data::Features;
 use crate::runtime::artifact::{ModelBundle, ModelMeta};
 use crate::sim::clock::{ClockRef, SlotId, WaitOutcome, WallClock};
@@ -355,6 +355,20 @@ impl Coordinator {
     /// loading a new energy table while serving).
     pub fn scheduler(&self) -> Arc<RwLock<PrecisionScheduler>> {
         self.scheduler.clone()
+    }
+
+    /// Hot-swap one model's precision policy while serving: device
+    /// workers read the scheduler at each batch boundary, so the next
+    /// dispatched batch executes under the new per-layer energies (a
+    /// learned `EnergyPolicy::PerLayer` table goes live with no
+    /// restart). With the control plane enabled, the controller keeps
+    /// scaling the *start-time* base policy — disable control or
+    /// restart to re-base it on a swapped table.
+    pub fn set_policy(&self, model: &str, p: ModelPrecision) {
+        self.scheduler
+            .write()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .set(model, p);
     }
 
     /// The coordinator's time source (the `cfg.clock` it was started

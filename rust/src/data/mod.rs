@@ -1,10 +1,12 @@
-//! Frozen dataset loading (exported by `make artifacts`).
+//! Dataset loading: frozen splits (exported by `make artifacts`) and
+//! seeded synthetic sets for the artifact-free native path.
 
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::util::dpt;
+use crate::util::rng::Rng;
 
 /// Input features: images (f32) or token ids (i32).
 #[derive(Clone, Debug)]
@@ -49,6 +51,47 @@ impl Dataset {
             .ok_or_else(|| anyhow!("labels not i32"))?
             .to_vec();
         Ok(Dataset { n, sample_size, sample_dims, x, y })
+    }
+
+    /// Seeded synthetic feature set: `n` samples of `sample_size`
+    /// values drawn uniformly from `[lo, hi]`. Labels start at zero —
+    /// pair with [`Dataset::with_labels`] (e.g.
+    /// `NativeOps::synthetic_dataset` labels with the clean native
+    /// model's own predictions, so the fp baseline is exact by
+    /// construction). Same seed, same dataset, on every platform.
+    pub fn synthetic_features(
+        n: usize,
+        sample_size: usize,
+        lo: f32,
+        hi: f32,
+        seed: u64,
+    ) -> Result<Dataset> {
+        if n == 0 || sample_size == 0 {
+            bail!("synthetic dataset needs n > 0 and sample_size > 0");
+        }
+        if lo > hi || !lo.is_finite() || !hi.is_finite() {
+            bail!("synthetic feature range {lo}..{hi} is not ordered");
+        }
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..n * sample_size)
+            .map(|_| rng.uniform_in(lo as f64, hi as f64) as f32)
+            .collect();
+        Ok(Dataset {
+            n,
+            sample_size,
+            sample_dims: vec![sample_size],
+            x: Features::F32(x),
+            y: vec![0; n],
+        })
+    }
+
+    /// Replace the labels (length-checked: one label per sample).
+    pub fn with_labels(mut self, y: Vec<i32>) -> Result<Dataset> {
+        if y.len() != self.n {
+            bail!("{} labels for {} samples", y.len(), self.n);
+        }
+        self.y = y;
+        Ok(self)
     }
 
     /// Number of complete batches of size `b`.
@@ -112,5 +155,37 @@ mod tests {
             _ => panic!("wrong dtype"),
         }
         assert_eq!(d.batch_y(1, 4), &[4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn synthetic_features_are_seeded_and_bounded() {
+        let a = Dataset::synthetic_features(16, 5, -1.0, 1.0, 42).unwrap();
+        let b = Dataset::synthetic_features(16, 5, -1.0, 1.0, 42).unwrap();
+        assert_eq!(a.n, 16);
+        assert_eq!(a.sample_size, 5);
+        match (&a.x, &b.x) {
+            (Features::F32(u), Features::F32(v)) => {
+                assert_eq!(u, v, "same seed, same features");
+                assert!(u.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+            }
+            _ => panic!("synthetic features are f32"),
+        }
+        let c = Dataset::synthetic_features(16, 5, -1.0, 1.0, 43).unwrap();
+        match (&a.x, &c.x) {
+            (Features::F32(u), Features::F32(v)) => assert_ne!(u, v),
+            _ => unreachable!(),
+        }
+        // Degenerate shapes and reversed ranges error cleanly.
+        assert!(Dataset::synthetic_features(0, 5, 0.0, 1.0, 0).is_err());
+        assert!(Dataset::synthetic_features(4, 0, 0.0, 1.0, 0).is_err());
+        assert!(Dataset::synthetic_features(4, 5, 1.0, -1.0, 0).is_err());
+    }
+
+    #[test]
+    fn with_labels_checks_length() {
+        let d = Dataset::synthetic_features(4, 2, 0.0, 1.0, 1).unwrap();
+        assert!(d.clone().with_labels(vec![1; 3]).is_err());
+        let d = d.with_labels(vec![3, 2, 1, 0]).unwrap();
+        assert_eq!(d.y, vec![3, 2, 1, 0]);
     }
 }

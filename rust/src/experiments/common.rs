@@ -85,7 +85,7 @@ impl ExpCtx {
     /// Train energy allocations with the run's budget.
     pub fn train(
         &self,
-        ops: &ModelOps,
+        ops: &dyn ModelOps,
         data: &Dataset,
         noise_tag: &str,
         granularity: Granularity,

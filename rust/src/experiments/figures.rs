@@ -4,7 +4,7 @@
 use anyhow::Result;
 
 use crate::experiments::common::ExpCtx;
-use crate::ops::ModelOps;
+use crate::ops::{ArtifactOps, ModelOps};
 use crate::optim::Granularity;
 use crate::quant::noise_bits;
 
@@ -32,7 +32,7 @@ pub fn fig4(ctx: &ExpCtx) -> Result<Vec<(f64, f64, f64, f64)>> {
     let bundle = ctx.bundle("tiny_resnet")?;
     let data = ctx.eval_data("vision")?;
     let train = ctx.train_data("vision")?;
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let meta = &bundle.meta;
     let grid: &[f64] = if crate::full_mode() {
         &[0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0]
@@ -68,7 +68,7 @@ pub fn fig4(ctx: &ExpCtx) -> Result<Vec<(f64, f64, f64, f64)>> {
 pub fn fig5(ctx: &ExpCtx, avg_e: f64) -> Result<Vec<(String, f64)>> {
     let bundle = ctx.bundle("tiny_resnet")?;
     let train = ctx.train_data("vision")?;
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let meta = &bundle.meta;
     let tr = ctx.train(&ops, &train, "thermal", Granularity::PerLayer,
                        avg_e, avg_e * 2.0)?;
@@ -90,7 +90,7 @@ pub fn fig5(ctx: &ExpCtx, avg_e: f64) -> Result<Vec<(String, f64)>> {
 pub fn fig_alloc(ctx: &ExpCtx, model: &str) -> Result<Vec<(String, f64)>> {
     let bundle = ctx.bundle(model)?;
     let train = ctx.train_data("vision")?;
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let meta = &bundle.meta;
     let tr = ctx.train(&ops, &train, "shot", Granularity::PerLayer, 2.0, 8.0)?;
     println!("Fig — learned energy/MAC per layer ({model}, shot)");
@@ -110,7 +110,7 @@ pub fn fig7(ctx: &ExpCtx) -> Result<Vec<(f64, f64, f64, f64, f64)>> {
     let bundle = ctx.bundle("tiny_resnet")?;
     let data = ctx.eval_data("vision")?;
     let train = ctx.train_data("vision")?;
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let meta = &bundle.meta;
     let grid: &[f64] = if crate::full_mode() {
         &[3.0, 10.0, 30.0, 100.0, 300.0]
@@ -153,7 +153,7 @@ pub fn fig7(ctx: &ExpCtx) -> Result<Vec<(f64, f64, f64, f64, f64)>> {
 pub fn fig8(ctx: &ExpCtx) -> Result<Vec<(String, f64)>> {
     let bundle = ctx.bundle("mini_bert")?;
     let train = ctx.train_data("nlp")?;
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let meta = &bundle.meta;
     let tr = ctx.train(&ops, &train, "shot", Granularity::PerLayer, 1.0, 4.0)?;
     println!("Fig 8 — BERT energy/MAC per matmul (mini_bert, shot)");

@@ -3,7 +3,7 @@
 use anyhow::Result;
 
 use crate::experiments::common::{fmt_row, ExpCtx};
-use crate::ops::ModelOps;
+use crate::ops::{ArtifactOps, ModelOps};
 use crate::optim::{binary_search_emax, search::eval_scaled, Granularity};
 use crate::quant::noise_bits;
 
@@ -13,7 +13,7 @@ use crate::quant::noise_bits;
 pub fn table1(ctx: &ExpCtx) -> Result<Vec<(f64, f64, f64, f64)>> {
     let bundle = ctx.bundle("tiny_resnet")?;
     let data = ctx.eval_data("vision")?;
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let meta = &bundle.meta;
     let n_layers = meta.noise_sites().count();
     let grid: &[f64] = if crate::full_mode() {
@@ -58,7 +58,7 @@ pub fn table2_cell(
     let bundle = ctx.bundle(model)?;
     let data = ctx.eval_data("vision")?;
     let train = ctx.train_data("vision")?;
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let meta = &bundle.meta;
     let cfg = ctx.search_cfg();
     let tag = format!("{noise}.fwd");
@@ -121,7 +121,7 @@ pub fn table3(ctx: &ExpCtx) -> Result<Vec<(f64, f64, f64, f64)>> {
     let bundle = ctx.bundle("tiny_resnet")?;
     let data = ctx.eval_data("vision")?;
     let train = ctx.train_data("vision")?;
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let meta = &bundle.meta;
     let grid: &[f64] = if crate::full_mode() {
         &[2.0, 5.0, 10.0, 20.0, 50.0, 99.0]
@@ -166,7 +166,7 @@ pub fn table4(ctx: &ExpCtx) -> Result<(f64, f64)> {
     let bundle = ctx.bundle("mini_bert")?;
     let data = ctx.eval_data("nlp")?;
     let train = ctx.train_data("nlp")?;
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let meta = &bundle.meta;
     let cfg = ctx.search_cfg();
     // Subset-matched baseline (see table2_cell).

@@ -19,7 +19,7 @@ use dynaprec::coordinator::{
 };
 use dynaprec::coordinator::scheduler::ModelPrecision;
 use dynaprec::data::Dataset;
-use dynaprec::ops::ModelOps;
+use dynaprec::ops::{ArtifactOps, ModelOps};
 use dynaprec::optim::{
     binary_search_emax, train_energy, Granularity, SearchCfg, TrainCfg,
 };
@@ -104,7 +104,7 @@ fn cmd_info(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let (_eng, bundle, data) = load_bundle(args)?;
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let noise = args.str_or("noise", "shot");
     let e_avg = args.f64_or("e", 10.0);
     let batches = args.usize_or("batches", 16);
@@ -144,7 +144,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let (_eng, bundle, _eval) = load_bundle(args)?;
     let dir = dynaprec::artifacts_dir();
     let train = Dataset::load(&dir, &bundle.meta.kind, "trainsub")?;
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let noise = args.str_or("noise", "shot");
     let gran = match args.str_or("granularity", "per_layer").as_str() {
         "per_channel" => Granularity::PerChannel,
@@ -193,7 +193,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_search(args: &Args) -> Result<()> {
     let (_eng, bundle, data) = load_bundle(args)?;
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let noise = args.str_or("noise", "shot");
     let cfg = SearchCfg {
         eval_batches: args.usize_or("batches", 8),

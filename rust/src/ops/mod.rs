@@ -1,16 +1,33 @@
-//! High-level model operations over the PJRT artifacts.
+//! High-level model operations: the [`ModelOps`] trait and its two
+//! engines.
 //!
-//! Everything the coordinator, optimizer and experiment drivers need:
-//! noisy/clean/low-bit forwards, accuracy evaluation over a dataset, and
-//! the Eq.-14 value-and-grad step.
+//! Everything the optimizer (`crate::optim`) and the experiment drivers
+//! need from a model — a noisy forward at a scheduled per-channel
+//! energy vector, accuracy evaluation over a dataset, and the Eq.-14
+//! Monte-Carlo value-and-grad step — is behind one trait with two
+//! implementations:
+//!
+//! | impl | numerics | grad estimator | needs artifacts |
+//! |------|----------|----------------|-----------------|
+//! | [`ArtifactOps`] | AOT PJRT executables | AD inside the grad artifact | yes |
+//! | [`NativeOps`] | pure-Rust noisy GEMM ([`crate::backend::kernel`]) | pathwise finite difference, common random numbers | no |
+//!
+//! `train_energy` and `binary_search_emax` take `&dyn ModelOps`, so the
+//! paper's headline loop (learn per-layer E, binary-search the minimum
+//! energy at bounded degradation) runs identically over compiled
+//! artifacts and over the artifact-free native model stack.
+
+pub mod native;
+
+pub use native::NativeOps;
 
 use anyhow::{bail, Result};
 
 use crate::data::{Dataset, Features};
-use crate::runtime::artifact::ModelBundle;
+use crate::runtime::artifact::{ModelBundle, ModelMeta};
 use crate::runtime::lit;
 
-/// Output of one grad-artifact invocation.
+/// Output of one Eq.-14 value-and-grad invocation.
 #[derive(Clone, Debug)]
 pub struct GradOut {
     pub loss: f32,
@@ -19,13 +36,80 @@ pub struct GradOut {
     pub grad_loge: Vec<f32>,
 }
 
-pub struct ModelOps<'a> {
+/// One model's operations at a scheduled precision: the contract the
+/// energy-allocation optimizer trains and searches against.
+pub trait ModelOps {
+    /// The model's metadata (site layout, e-vector length, batch size).
+    fn meta(&self) -> &ModelMeta;
+
+    /// Noisy forward at per-channel energies `e`. `tag` names the noise
+    /// family in the artifact convention ("thermal.fwd", "shot.fwd",
+    /// ...); the native engine runs its own device physics and uses the
+    /// tag only for interface compatibility.
+    fn fwd_noisy(
+        &self,
+        tag: &str,
+        x: &Features,
+        seed: u32,
+        e: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    /// Eq.-14 Monte-Carlo value-and-grad step: loss, NLL, batch
+    /// accuracy and the gradient w.r.t. the full per-channel log-E
+    /// vector. `tag` names the grad entry ("thermal.grad", ...).
+    #[allow(clippy::too_many_arguments)]
+    fn grad_step(
+        &self,
+        tag: &str,
+        x: &Features,
+        y: &[i32],
+        seed: u32,
+        loge: &[f32],
+        lam: f32,
+        log_emax: f32,
+    ) -> Result<GradOut>;
+
+    /// Accuracy of the noisy forward over (a prefix of) the dataset,
+    /// averaged over `seeds` noise draws. Pure w.r.t. wall time — no
+    /// clock, no global state — so evaluations replay bit-identically.
+    fn eval_noisy(
+        &self,
+        tag: &str,
+        data: &Dataset,
+        e: &[f32],
+        seeds: &[u32],
+        max_batches: usize,
+    ) -> Result<f64> {
+        let b = self.meta().batch;
+        let nb = data.n_batches(b).min(max_batches);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for &seed in seeds {
+            for i in 0..nb {
+                let logits = self.fwd_noisy(
+                    tag,
+                    &data.batch_x(i, b),
+                    seed + i as u32,
+                    e,
+                )?;
+                correct += count_correct(&logits, data.batch_y(i, b));
+                total += b;
+            }
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+}
+
+/// The artifact engine: [`ModelOps`] over a compiled PJRT bundle (plus
+/// the artifact-only entry points — clean/low-bit forwards — that have
+/// no native counterpart).
+pub struct ArtifactOps<'a> {
     pub bundle: &'a ModelBundle,
 }
 
-impl<'a> ModelOps<'a> {
+impl<'a> ArtifactOps<'a> {
     pub fn new(bundle: &'a ModelBundle) -> Self {
-        ModelOps { bundle }
+        ArtifactOps { bundle }
     }
 
     fn x_literal(&self, x: &Features, batch: usize) -> Result<xla::Literal> {
@@ -41,27 +125,6 @@ impl<'a> ModelOps<'a> {
                 lit::i32_tensor(&dims, v)
             }
         }
-    }
-
-    /// Noisy forward: tag is "thermal.fwd", "weight.fwd", "shot.fwd",
-    /// "thermal_noclip.fwd" or "shot_photonq.fwd".
-    pub fn fwd_noisy(
-        &self,
-        tag: &str,
-        x: &Features,
-        seed: u32,
-        e: &[f32],
-    ) -> Result<Vec<f32>> {
-        let meta = &self.bundle.meta;
-        if e.len() != meta.e_len {
-            bail!("E length {} != {}", e.len(), meta.e_len);
-        }
-        let exec = self.bundle.exec(tag)?;
-        let xl = self.x_literal(x, meta.batch)?;
-        let seed_l = lit::u32_scalar(seed)?;
-        let el = lit::f32_tensor(&[e.len()], e)?;
-        let out = exec.run(&[&self.bundle.params, &xl, &seed_l, &el])?;
-        lit::to_f32_vec(&out[0])
     }
 
     /// Clean forward: tag "fwd_fp" or "fwd_quant".
@@ -83,68 +146,6 @@ impl<'a> ModelOps<'a> {
         let bl = lit::f32_tensor(&[bits.len()], bits)?;
         let out = exec.run(&[&self.bundle.params, &xl, &bl])?;
         lit::to_f32_vec(&out[0])
-    }
-
-    /// Eq.-14 value-and-grad step: tag "thermal.grad" etc.
-    pub fn grad_step(
-        &self,
-        tag: &str,
-        x: &Features,
-        y: &[i32],
-        seed: u32,
-        loge: &[f32],
-        lam: f32,
-        log_emax: f32,
-    ) -> Result<GradOut> {
-        let meta = &self.bundle.meta;
-        let exec = self.bundle.exec(tag)?;
-        let xl = self.x_literal(x, meta.batch)?;
-        let yl = lit::i32_tensor(&[y.len()], y)?;
-        let seed_l = lit::u32_scalar(seed)?;
-        let el = lit::f32_tensor(&[loge.len()], loge)?;
-        let laml = lit::f32_scalar(lam)?;
-        let emaxl = lit::f32_scalar(log_emax)?;
-        let out = exec.run(&[
-            &self.bundle.params,
-            &xl,
-            &yl,
-            &seed_l,
-            &el,
-            &laml,
-            &emaxl,
-        ])?;
-        Ok(GradOut {
-            loss: lit::to_f32(&out[0])?,
-            nll: lit::to_f32(&out[1])?,
-            acc: lit::to_f32(&out[2])?,
-            grad_loge: lit::to_f32_vec(&out[3])?,
-        })
-    }
-
-    // ------------------------------------------------------- evaluation
-    /// Accuracy of a noisy forward over (a prefix of) the dataset,
-    /// averaged over `seeds` noise draws.
-    pub fn eval_noisy(
-        &self,
-        tag: &str,
-        data: &Dataset,
-        e: &[f32],
-        seeds: &[u32],
-        max_batches: usize,
-    ) -> Result<f64> {
-        let b = self.bundle.meta.batch;
-        let nb = data.n_batches(b).min(max_batches);
-        let mut correct = 0usize;
-        let mut total = 0usize;
-        for &seed in seeds {
-            for i in 0..nb {
-                let logits =
-                    self.fwd_noisy(tag, &data.batch_x(i, b), seed + i as u32, e)?;
-                correct += count_correct(&logits, data.batch_y(i, b));
-                total += b;
-            }
-        }
-        Ok(correct as f64 / total.max(1) as f64)
     }
 
     /// Accuracy of a clean forward.
@@ -179,6 +180,71 @@ impl<'a> ModelOps<'a> {
             correct += count_correct(&logits, data.batch_y(i, b));
         }
         Ok(correct as f64 / (nb * b).max(1) as f64)
+    }
+}
+
+impl ModelOps for ArtifactOps<'_> {
+    fn meta(&self) -> &ModelMeta {
+        &self.bundle.meta
+    }
+
+    /// Noisy forward: tag is "thermal.fwd", "weight.fwd", "shot.fwd",
+    /// "thermal_noclip.fwd" or "shot_photonq.fwd".
+    fn fwd_noisy(
+        &self,
+        tag: &str,
+        x: &Features,
+        seed: u32,
+        e: &[f32],
+    ) -> Result<Vec<f32>> {
+        let meta = &self.bundle.meta;
+        if e.len() != meta.e_len {
+            bail!("E length {} != {}", e.len(), meta.e_len);
+        }
+        let exec = self.bundle.exec(tag)?;
+        let xl = self.x_literal(x, meta.batch)?;
+        let seed_l = lit::u32_scalar(seed)?;
+        let el = lit::f32_tensor(&[e.len()], e)?;
+        let out = exec.run(&[&self.bundle.params, &xl, &seed_l, &el])?;
+        lit::to_f32_vec(&out[0])
+    }
+
+    /// Eq.-14 value-and-grad step: tag "thermal.grad" etc. The grad
+    /// artifact differentiates the whole loss (NLL + budget barrier)
+    /// with AD inside the compiled HLO.
+    fn grad_step(
+        &self,
+        tag: &str,
+        x: &Features,
+        y: &[i32],
+        seed: u32,
+        loge: &[f32],
+        lam: f32,
+        log_emax: f32,
+    ) -> Result<GradOut> {
+        let meta = &self.bundle.meta;
+        let exec = self.bundle.exec(tag)?;
+        let xl = self.x_literal(x, meta.batch)?;
+        let yl = lit::i32_tensor(&[y.len()], y)?;
+        let seed_l = lit::u32_scalar(seed)?;
+        let el = lit::f32_tensor(&[loge.len()], loge)?;
+        let laml = lit::f32_scalar(lam)?;
+        let emaxl = lit::f32_scalar(log_emax)?;
+        let out = exec.run(&[
+            &self.bundle.params,
+            &xl,
+            &yl,
+            &seed_l,
+            &el,
+            &laml,
+            &emaxl,
+        ])?;
+        Ok(GradOut {
+            loss: lit::to_f32(&out[0])?,
+            nll: lit::to_f32(&out[1])?,
+            acc: lit::to_f32(&out[2])?,
+            grad_loge: lit::to_f32_vec(&out[3])?,
+        })
     }
 }
 

@@ -2,7 +2,7 @@
 //! (paper Sec. VI-A: "<2% degradation, within 0.1%, by binary search on
 //! the target energy/MAC").
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::data::Dataset;
 use crate::ops::ModelOps;
@@ -45,8 +45,12 @@ pub struct SearchResult {
 /// Bisect the average energy/MAC. `eval_at(avg_e)` must return accuracy
 /// at that (scaled) energy; `baseline` is the clean reference accuracy.
 ///
-/// Precondition handling: grows `hi` geometrically until feasible (up to
-/// 2^8 x), shrinks `lo` until infeasible (so the bracket is valid).
+/// Precondition handling: grows `hi` geometrically until feasible (4x
+/// per step, up to 8 steps); if even the grown upper bound misses the
+/// accuracy target the search returns a contextful `Err` (target,
+/// bound reached, best probe) rather than silently capping at an
+/// energy that violates `max_degradation`. A feasible `lo` is returned
+/// directly (it is already the answer).
 pub fn binary_search_emax<F>(
     mut eval_at: F,
     baseline: f64,
@@ -73,9 +77,23 @@ where
         hi *= 4.0;
     }
     let Some(mut best) = feasible else {
-        // Even the highest energy fails: report it.
-        let (e, a) = *probes.last().unwrap();
-        return Ok(SearchResult { min_avg_e: e, acc: a, probes });
+        // Even the grown upper bound fails: no energy in (or above) the
+        // bracket meets the bound — surface that instead of returning
+        // an energy that silently violates `max_degradation`.
+        let (best_e, best_acc) = probes
+            .iter()
+            .copied()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        bail!(
+            "accuracy target {target:.4} (baseline {baseline:.4} - \
+             {:.4} allowed degradation) is unreachable: best probe \
+             reached acc {best_acc:.4} at energy {best_e:.4} after \
+             growing the upper bound to {:.4} over {} probes",
+            cfg.max_degradation,
+            probes.last().unwrap().0,
+            probes.len()
+        );
     };
 
     // Ensure lo is infeasible (otherwise lo itself is the answer).
@@ -105,14 +123,14 @@ where
 /// Evaluate a model's noisy accuracy with a globally scaled energy
 /// vector: e_scaled = shape * (avg_e / avg(shape)).
 pub fn eval_scaled(
-    ops: &ModelOps,
+    ops: &dyn ModelOps,
     data: &Dataset,
     fwd_tag: &str,
     shape: &[f32],
     avg_e: f64,
     cfg: &SearchCfg,
 ) -> Result<f64> {
-    let meta = &ops.bundle.meta;
+    let meta = ops.meta();
     let cur = meta.avg_energy_per_mac(shape);
     let scale = (avg_e / cur) as f32;
     let e: Vec<f32> = shape.iter().map(|&v| v * scale).collect();
@@ -164,9 +182,33 @@ mod tests {
     }
 
     #[test]
-    fn impossible_target_reports_highest_probe() {
-        let r = binary_search_emax(|_| Ok(0.1), 0.9, 1.0, 2.0, &cfg()).unwrap();
-        assert!(r.acc < 0.88);
-        assert!(r.min_avg_e >= 2.0);
+    fn impossible_target_errors_with_context() {
+        // A flat 0.1 accuracy can never reach the 0.88 target: the
+        // search must refuse (never return an energy violating the
+        // degradation bound) and say why.
+        let err = binary_search_emax(|_| Ok(0.1), 0.9, 1.0, 2.0, &cfg())
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unreachable"), "{msg}");
+        assert!(msg.contains("0.8800"), "target missing: {msg}");
+        assert!(msg.contains("0.1000"), "best probe missing: {msg}");
+        // hi grew 4x per probe for 8 probes: 2 * 4^7 = 32768.
+        assert!(msg.contains("32768"), "grown bound missing: {msg}");
+    }
+
+    #[test]
+    fn barely_feasible_target_still_succeeds() {
+        // The other branch of the same check: feasibility appears only
+        // after the growth loop's last doubling — Ok, not Err.
+        let r = binary_search_emax(
+            |e| Ok(if e >= 30_000.0 { 0.9 } else { 0.1 }),
+            0.9,
+            1.0,
+            2.0,
+            &cfg(),
+        )
+        .unwrap();
+        assert!(r.acc >= 0.88);
+        assert!(r.min_avg_e >= 30_000.0);
     }
 }

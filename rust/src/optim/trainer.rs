@@ -1,20 +1,23 @@
 //! Eq.-14 energy-allocation training loop (paper Sec. V).
 //!
-//! Runs Adam over log-E, calling the AOT grad artifact for the
-//! Monte-Carlo value-and-grad of
+//! Runs Adam over log-E, calling [`ModelOps::grad_step`] — the AOT grad
+//! artifact or the native Monte-Carlo estimator — for the value-and-grad
+//! of
 //!
 //!   L(E) = NLL(y | x, xi; theta, E)
 //!        + lambda * max(log sum_l E_l n_mac_l - log E_max, 0)
 //!
-//! Network weights theta stay frozen (they live in params.bin); only E
-//! moves. Per-layer granularity ties channels within a site: the full
-//! per-channel gradient is summed per site (chain rule of the tie).
+//! Network weights theta stay frozen (params.bin / the name-seeded
+//! native weights); only E moves. Per-layer granularity ties channels
+//! within a site: the full per-channel gradient is summed per site
+//! (chain rule of the tie).
 
 use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::ops::ModelOps;
 use crate::optim::adam::Adam;
+use crate::runtime::artifact::ModelMeta;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Granularity {
@@ -63,11 +66,11 @@ pub struct TrainResult {
 }
 
 pub fn train_energy(
-    ops: &ModelOps,
+    ops: &dyn ModelOps,
     data: &Dataset,
     cfg: &TrainCfg,
 ) -> Result<TrainResult> {
-    let meta = &ops.bundle.meta;
+    let meta = ops.meta();
     let grad_tag = format!("{}.grad", cfg.noise_tag);
     let n_layers = meta.noise_sites().count();
     let b = meta.batch;
@@ -119,6 +122,43 @@ pub fn train_energy(
         loss_history: history,
         final_acc: acc,
     })
+}
+
+/// Eq.-14 budget barrier and its exact gradient w.r.t. log-E:
+///
+///   P(E)        = lambda * max(log sum_c E_c n_mac_c - log E_max, 0)
+///   dP/dlogE_c  = lambda * E_c n_mac_c / sum_j E_j n_mac_j   (if active)
+///
+/// The penalty activates iff the total energy exceeds the budget; its
+/// gradient is strictly positive on every channel that costs MACs, so
+/// a gradient-descent step on log-E (`param -= lr * grad`) pushes
+/// energies *down*. The grad artifacts differentiate this term with AD;
+/// [`crate::ops::NativeOps`] calls this closed form directly.
+pub fn eq14_penalty(
+    meta: &ModelMeta,
+    e: &[f32],
+    lam: f32,
+    log_emax: f32,
+) -> (f32, Vec<f32>) {
+    let mut total = 0.0f64; // sum_c E_c * macs_c
+    for s in &meta.sites {
+        for c in 0..s.n_channels {
+            total += e[s.e_offset + c] as f64 * s.macs_per_channel;
+        }
+    }
+    let mut grad = vec![0.0f32; e.len()];
+    let excess = total.max(f64::MIN_POSITIVE).ln() as f32 - log_emax;
+    if excess <= 0.0 {
+        return (0.0, grad);
+    }
+    for s in &meta.sites {
+        for c in 0..s.n_channels {
+            grad[s.e_offset + c] =
+                lam * (e[s.e_offset + c] as f64 * s.macs_per_channel
+                    / total) as f32;
+        }
+    }
+    (lam * excess, grad)
 }
 
 /// Expand the trainable vector into the artifact's per-channel layout.
@@ -206,6 +246,52 @@ mod tests {
         let v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
         assert_eq!(expand(&m, Granularity::PerChannel, &v), v);
         assert_eq!(compress(&m, Granularity::PerChannel, &v), v);
+    }
+
+    #[test]
+    fn penalty_activates_iff_budget_exceeded() {
+        let m = meta();
+        // Total energy at e = 1 everywhere: 4*10 + 8 = 48.
+        let e = vec![1.0f32; 5];
+        let lam = 8.0;
+        // Budget above the total: inactive, zero everywhere.
+        let (p, g) = eq14_penalty(&m, &e, lam, (48.0f64 * 2.0).ln() as f32);
+        assert_eq!(p, 0.0);
+        assert!(g.iter().all(|&v| v == 0.0));
+        // Budget exactly at the total: still inactive (max(0, 0)).
+        let (p, _) = eq14_penalty(&m, &e, lam, 48.0f64.ln() as f32);
+        assert!(p.abs() < 1e-6, "boundary penalty {p}");
+        // Budget below the total: active, value = lam * excess.
+        let log_emax = (48.0f64 / 4.0).ln() as f32;
+        let (p, g) = eq14_penalty(&m, &e, lam, log_emax);
+        assert!((p - lam * 4.0f32.ln()).abs() < 1e-5, "penalty {p}");
+        assert!(g.iter().all(|&v| v > 0.0), "active grad positive: {g:?}");
+    }
+
+    #[test]
+    fn penalty_gradient_pushes_log_e_down_and_sums_to_lambda() {
+        let m = meta();
+        let e = vec![2.0f32, 2.0, 2.0, 2.0, 8.0];
+        let lam = 2.0;
+        let (_, g) = eq14_penalty(&m, &e, lam, 0.0); // budget = 1 unit
+        // A positive gradient on log-E means `param -= lr * grad`
+        // shrinks every energy: the barrier only ever pushes down.
+        assert!(g.iter().all(|&v| v > 0.0));
+        // The per-channel shares are energy-weighted and total lambda.
+        let sum: f32 = g.iter().sum();
+        assert!((sum - lam).abs() < 1e-5, "grad sum {sum} != lam {lam}");
+        // Channel 4 (8 macs at e=8) outweighs channel 0 (10 macs, e=2).
+        assert!(g[4] > g[0]);
+        // And matches a numerical derivative of the penalty value.
+        let h = 1e-3f32;
+        let mut ep = e.clone();
+        ep[0] *= h.exp();
+        let (p0, _) = eq14_penalty(&m, &e, lam, 0.0);
+        let (p1, _) = eq14_penalty(&m, &ep, lam, 0.0);
+        let fd = (p1 - p0) / h;
+        // 5e-3 tolerance: the f32 rounding of the two penalty values is
+        // amplified by the 1/h division.
+        assert!((fd - g[0]).abs() < 5e-3, "fd {fd} vs analytic {}", g[0]);
     }
 
     #[test]

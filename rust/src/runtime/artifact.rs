@@ -79,36 +79,63 @@ impl ModelMeta {
         n_dot: usize,
         macs_per_channel: f64,
     ) -> ModelMeta {
-        let sites: Vec<SiteMeta> = (0..n_sites)
-            .map(|i| SiteMeta {
-                name: format!("site{i}"),
-                kind: "conv".to_string(),
-                n_dot,
-                n_channels,
-                macs_per_channel,
-                e_offset: i * n_channels,
-                in_lo: -1.0,
-                in_hi: 1.0,
-                in_lo_clip: -1.0,
-                in_hi_clip: 1.0,
-                out_lo: 0.0,
-                out_hi: 2.0,
-                out_lo_clip: 0.0,
-                out_hi_clip: 2.0,
-                w_lo_layer: -0.5,
-                w_hi_layer: 0.5,
-                w_lo: vec![],
-                w_hi: vec![],
+        ModelMeta::synthetic_layers(
+            name,
+            batch,
+            &vec![(n_dot, n_channels, macs_per_channel); n_sites],
+        )
+    }
+
+    /// Heterogeneous synthetic profile: one `(n_dot, n_channels,
+    /// macs_per_channel)` triple per noise site, in execution order.
+    /// Layers that differ in dot-product length (noise sensitivity
+    /// scales with `sqrt(n_dot)`, Eq. 9) and MAC count (energy cost)
+    /// are what make per-layer allocation beat uniform — the shape the
+    /// native energy-allocation loop trains against.
+    pub fn synthetic_layers(
+        name: &str,
+        batch: usize,
+        layers: &[(usize, usize, f64)],
+    ) -> ModelMeta {
+        let mut e_offset = 0;
+        let sites: Vec<SiteMeta> = layers
+            .iter()
+            .enumerate()
+            .map(|(i, &(n_dot, n_channels, macs_per_channel))| {
+                let s = SiteMeta {
+                    name: format!("site{i}"),
+                    kind: "conv".to_string(),
+                    n_dot,
+                    n_channels,
+                    macs_per_channel,
+                    e_offset,
+                    in_lo: -1.0,
+                    in_hi: 1.0,
+                    in_lo_clip: -1.0,
+                    in_hi_clip: 1.0,
+                    out_lo: 0.0,
+                    out_hi: 2.0,
+                    out_lo_clip: 0.0,
+                    out_hi_clip: 2.0,
+                    w_lo_layer: -0.5,
+                    w_hi_layer: 0.5,
+                    w_lo: vec![],
+                    w_hi: vec![],
+                };
+                e_offset += n_channels;
+                s
             })
             .collect();
+        let total_macs: f64 =
+            sites.iter().map(|s| s.macs_per_channel * s.n_channels as f64).sum();
         ModelMeta {
             name: name.to_string(),
             kind: "vision".to_string(),
             batch,
             params_len: 0,
-            e_len: n_sites * n_channels,
-            n_sites,
-            total_macs: macs_per_channel * (n_sites * n_channels) as f64,
+            e_len: e_offset,
+            n_sites: sites.len(),
+            total_macs,
             sigma_thermal: 0.01,
             sigma_weight: 0.1,
             photons_per_aj: 7.8125,
@@ -513,6 +540,27 @@ mod tests {
         let e = m.broadcast_per_layer(&[2.0, 8.0]).unwrap();
         assert_eq!(e.len(), 8);
         assert!((m.avg_energy_per_mac(&e) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn synthetic_layers_meta_is_heterogeneous_and_consistent() {
+        let m = ModelMeta::synthetic_layers(
+            "h",
+            8,
+            &[(256, 8, 8.0), (16, 4, 500.0)],
+        );
+        assert_eq!(m.e_len, 12);
+        assert_eq!(m.n_sites, 2);
+        assert_eq!(m.sites[0].e_offset, 0);
+        assert_eq!(m.sites[1].e_offset, 8);
+        assert_eq!(m.total_macs, 8.0 * 8.0 + 500.0 * 4.0);
+        // Policy machinery works over the uneven layout.
+        let e = m.broadcast_per_layer(&[2.0, 8.0]).unwrap();
+        assert_eq!(&e[0..8], &[2.0f32; 8]);
+        assert_eq!(&e[8..12], &[8.0f32; 4]);
+        let avg = m.avg_energy_per_mac(&e);
+        let want = (2.0 * 64.0 + 8.0 * 2000.0) / 2064.0;
+        assert!((avg - want).abs() < 1e-9, "avg {avg}");
     }
 
     #[test]

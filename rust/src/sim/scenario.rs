@@ -19,6 +19,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use crate::coordinator::request::InferResponse;
+use crate::coordinator::scheduler::ModelPrecision;
 use crate::coordinator::{
     Coordinator, CoordinatorConfig, Fault, FleetStats, PrecisionScheduler,
     ServerStats,
@@ -36,20 +37,39 @@ pub enum SimEvent {
     Submit { t_ns: u64, model: String, n: u32 },
     /// Inject a device fault (death, stall, noise drift).
     Fault { t_ns: u64, device: usize, fault: Fault },
+    /// Hot-swap `model`'s precision policy mid-run (e.g. a learned
+    /// per-layer energy table replacing a uniform one). Applied at a
+    /// quiescent point, so which batches run under which policy is
+    /// fully determined by the virtual timeline — the swap replays
+    /// bit-identically.
+    SetPolicy { t_ns: u64, model: String, precision: ModelPrecision },
 }
 
 impl SimEvent {
     pub fn t_ns(&self) -> u64 {
         match self {
-            SimEvent::Submit { t_ns, .. } | SimEvent::Fault { t_ns, .. } => {
-                *t_ns
-            }
+            SimEvent::Submit { t_ns, .. }
+            | SimEvent::Fault { t_ns, .. }
+            | SimEvent::SetPolicy { t_ns, .. } => *t_ns,
         }
     }
 
     /// Convenience constructor for fault events.
     pub fn fault_at(t: Duration, device: usize, fault: Fault) -> SimEvent {
         SimEvent::Fault { t_ns: t.as_nanos() as u64, device, fault }
+    }
+
+    /// Convenience constructor for policy hot-swap events.
+    pub fn set_policy_at(
+        t: Duration,
+        model: impl Into<String>,
+        precision: ModelPrecision,
+    ) -> SimEvent {
+        SimEvent::SetPolicy {
+            t_ns: t.as_nanos() as u64,
+            model: model.into(),
+            precision,
+        }
     }
 }
 
@@ -240,6 +260,9 @@ pub fn run_scenario(
             }
             SimEvent::Fault { device, fault, .. } => {
                 coord.inject_fault(*device, *fault);
+            }
+            SimEvent::SetPolicy { model, precision, .. } => {
+                coord.set_policy(model, precision.clone());
             }
         }
         // Play the event out (zero-width advance = deliver messages,

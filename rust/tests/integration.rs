@@ -13,7 +13,7 @@ use dynaprec::coordinator::{
     PrecisionScheduler,
 };
 use dynaprec::data::Dataset;
-use dynaprec::ops::ModelOps;
+use dynaprec::ops::{ArtifactOps, ModelOps};
 use dynaprec::optim::{train_energy, Granularity, TrainCfg};
 use dynaprec::runtime::artifact::ModelBundle;
 use dynaprec::runtime::Engine;
@@ -46,7 +46,7 @@ fn setup(model: &str) -> (Arc<Engine>, ModelBundle, Dataset) {
 fn clean_forward_matches_meta_baseline() {
     require_artifacts!();
     let (_e, bundle, data) = setup("tiny_shufflenet");
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let acc = ops.eval_simple("fwd_fp", &data, 8).unwrap();
     // Same weights + same eval split as the python export: match within
     // sampling tolerance of the 256-sample prefix.
@@ -61,7 +61,7 @@ fn clean_forward_matches_meta_baseline() {
 fn noisy_accuracy_increases_with_energy() {
     require_artifacts!();
     let (_e, bundle, data) = setup("tiny_shufflenet");
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let m = &bundle.meta;
     let acc_at = |e: f32| {
         ops.eval_noisy("shot.fwd", &data, &vec![e; m.e_len], &[0], 4)
@@ -77,7 +77,7 @@ fn noisy_accuracy_increases_with_energy() {
 fn weight_noise_artifact_runs_and_degrades() {
     require_artifacts!();
     let (_e, bundle, data) = setup("tiny_shufflenet");
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let m = &bundle.meta;
     let hi = ops
         .eval_noisy("weight.fwd", &data, &vec![500.0; m.e_len], &[0], 4)
@@ -94,7 +94,7 @@ fn grad_step_decreases_loss_and_moves_energy() {
     let dir = dynaprec::artifacts_dir();
     let (_e, bundle, _) = setup("tiny_shufflenet");
     let train = Dataset::load(&dir, "vision", "trainsub").unwrap();
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let cfg = TrainCfg {
         noise_tag: "shot".into(),
         granularity: Granularity::PerLayer,
@@ -116,7 +116,7 @@ fn grad_step_decreases_loss_and_moves_energy() {
 fn lowbit_artifact_tracks_bits() {
     require_artifacts!();
     let (_e, bundle, data) = setup("tiny_shufflenet");
-    let ops = ModelOps::new(&bundle);
+    let ops = ArtifactOps::new(&bundle);
     let n = bundle.meta.n_sites;
     let hi = ops.eval_lowbit(&data, &vec![8.0; n], 4).unwrap();
     let lo = ops.eval_lowbit(&data, &vec![1.5; n], 4).unwrap();

@@ -385,6 +385,67 @@ fn noise_drift_triggers_error_slo_recovery() {
     );
 }
 
+/// A mid-run per-layer policy hot-swap (uniform -> learned table, the
+/// `allocate_native` serving move) replays bit-identically, the
+/// invariant checkers stay green throughout, and the per-layer ledger
+/// shows the swap actually shifted where energy is spent.
+#[test]
+fn per_layer_policy_hot_swap_replays_bit_identically() {
+    let run = || {
+        let spec = TrafficSpec::new(MODEL, Duration::from_secs(20))
+            .with_bucket(Duration::from_millis(50))
+            .with_seed(77);
+        let swap = ModelPrecision {
+            noise: "shot".into(),
+            // Same total energy as the uniform [16, 16] start, shifted
+            // hard onto layer 0.
+            policy: EnergyPolicy::PerLayer(vec![30.0, 2.0]),
+        };
+        let events = merge(vec![
+            steady(&spec, 200.0),
+            vec![SimEvent::set_policy_at(
+                Duration::from_secs(10),
+                MODEL,
+                swap,
+            )],
+        ]);
+        let cfg = fleet_cfg(
+            vec![dev("d0", 4000.0), dev("d1", 4000.0)],
+            DispatchPolicy::LeastQueueDepth,
+            16,
+        );
+        let scenario =
+            Scenario::new(events).with_tail(Duration::from_secs(3));
+        run_scenario(vec![bundle(16)], sched(), cfg, &scenario).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert!(a.ok(), "invariants violated:\n{}", a.violations.join("\n"));
+    assert_eq!(a.served, a.submitted, "nothing sheds at this load");
+    // Bit-identical replay across the swap: responses, energy ledger.
+    assert_eq!(a.digest, b.digest, "hot-swap must replay bit-identically");
+    assert_eq!(
+        a.stats.ledger.total_energy.to_bits(),
+        b.stats.ledger.total_energy.to_bits()
+    );
+    // The per-layer ledger saw both phases: layer 0 spent more than the
+    // uniform split would (the swap shifted energy onto it), and the
+    // split sums to the model total exactly.
+    let layers = &a.stats.ledger.per_layer[MODEL];
+    assert_eq!(layers.len(), 2, "one entry per noise site");
+    assert!(
+        layers[0] > layers[1],
+        "post-swap spend should favor layer 0: {layers:?}"
+    );
+    let sum: f64 = layers.iter().sum();
+    assert!(
+        (sum - a.stats.ledger.total_energy).abs()
+            < 1e-6 * a.stats.ledger.total_energy,
+        "per-layer split {sum} != ledger total {}",
+        a.stats.ledger.total_energy
+    );
+}
+
 /// Same scenario, two seeds: different traces (sanity check that the
 /// digest actually discriminates — determinism tests would pass
 /// vacuously if the digest ignored the responses).
