@@ -1,0 +1,161 @@
+//! observe_fleet — the observability layer end to end.
+//!
+//! Starts a 2-device native analog fleet with the precision control
+//! plane on, pushes a request burst through it, then dumps one
+//! [`MetricsSnapshot`] in all three export forms:
+//!
+//!   1. human text (the same single rendering path behind
+//!      `ServerStats::report`),
+//!   2. Prometheus text format (`# TYPE dynaprec_* ...`),
+//!   3. machine-readable JSON.
+//!
+//! Exits non-zero if the snapshot is missing what the dashboards need:
+//! request-level latency tails (p50 <= p99, both > 0), a non-empty
+//! decision trace, and the Prometheus quantile series. Wired into CI
+//! as an observability smoke.
+//!
+//! Run: `cargo run --release --example observe_fleet`
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
+use dynaprec::backend::BackendKind;
+use dynaprec::control::{AdmissionConfig, AutotunerConfig, ControlConfig};
+use dynaprec::coordinator::scheduler::ModelPrecision;
+use dynaprec::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, DeviceSpec,
+    DispatchPolicy, EnergyPolicy, FleetConfig, PrecisionScheduler,
+};
+use dynaprec::data::Features;
+use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+
+const MODEL: &str = "synth";
+const BURST: u64 = 2_000;
+
+fn main() -> Result<()> {
+    let meta = ModelMeta::synthetic(MODEL, 8, 2, 4, 64, 250.0);
+    let mut sched = PrecisionScheduler::new();
+    sched.set(
+        MODEL,
+        ModelPrecision {
+            noise: "shot".into(),
+            policy: EnergyPolicy::PerLayer(vec![16.0, 16.0]),
+        },
+    );
+    let hw = HardwareConfig {
+        array_rows: 256,
+        array_cols: 256,
+        cycle_ns: 4000.0,
+        base_energy_aj: 1.0,
+        model: DeviceModel::Homodyne,
+    };
+    let devices: Vec<DeviceSpec> = (0..2)
+        .map(|i| {
+            DeviceSpec::new(format!("analog-{i}"), hw.clone(), AveragingMode::Time)
+                .with_backend(BackendKind::NativeAnalog {
+                    simulate_time: true,
+                })
+        })
+        .collect();
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: 8,
+            max_wait: Duration::from_millis(2),
+        },
+        averaging: AveragingMode::Time,
+        control: ControlConfig {
+            enabled: true,
+            tick: Duration::from_millis(10),
+            autotuner: AutotunerConfig {
+                slo_p95_us: 20_000.0,
+                floor_scale: 0.25,
+                cooldown_ticks: 1,
+                min_batches: 3,
+                ..Default::default()
+            },
+            admission: AdmissionConfig {
+                queue_soft_limit: 1_000,
+                queue_hard_limit: 50_000,
+            },
+            ..Default::default()
+        },
+        fleet: FleetConfig {
+            devices,
+            policy: DispatchPolicy::LeastQueueDepth,
+        },
+        ..Default::default()
+    };
+    let coord =
+        Coordinator::start(vec![ModelBundle::synthetic(meta)], sched, cfg)?;
+
+    // One burst, closed-loop: queue builds, the autotuner reacts, every
+    // request resolves (served or shed) before the snapshot.
+    for _ in 0..BURST {
+        drop(coord.submit(MODEL, Features::F32(vec![0.25; 4])));
+    }
+    let t0 = Instant::now();
+    loop {
+        let s = coord.stats();
+        if s.served + s.shed >= BURST {
+            break;
+        }
+        if t0.elapsed() > Duration::from_secs(20) {
+            eprintln!("FAIL: burst did not drain within 20s");
+            std::process::exit(1);
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // A policy hot-swap is a guaranteed decision-trace event, independent
+    // of what the autotuner chose to do with this burst.
+    coord.set_policy(
+        MODEL,
+        ModelPrecision {
+            noise: "shot".into(),
+            policy: EnergyPolicy::PerLayer(vec![16.0, 16.0]),
+        },
+    );
+
+    let m = coord.metrics_snapshot();
+    println!("=== human text ===\n{}", m.render_text());
+    println!("=== prometheus ===\n{}", m.to_prometheus());
+    println!("=== json ===\n{}", m.to_json());
+
+    let mut failed = false;
+    let lat = &m.stats.obs.latency_us;
+    let (p50, p99) = (lat.quantile(0.50), lat.quantile(0.99));
+    if lat.count() == 0 || p50 <= 0.0 || p99 < p50 {
+        eprintln!(
+            "FAIL: latency tails missing or inverted \
+             (count {}, p50 {p50:.0}us, p99 {p99:.0}us)",
+            lat.count()
+        );
+        failed = true;
+    }
+    if m.stats.obs.trace_events == 0 {
+        eprintln!("FAIL: decision trace is empty");
+        failed = true;
+    }
+    let prom = m.to_prometheus();
+    if !prom.contains("dynaprec_latency_us{quantile=\"0.99\"}")
+        || !prom.contains("dynaprec_served_total")
+    {
+        eprintln!("FAIL: prometheus export is missing series");
+        failed = true;
+    }
+    let js = m.to_json().to_string();
+    if !js.contains("\"trace\"") || !js.contains("\"p99_lat_us\"") {
+        eprintln!("FAIL: json export is missing fields");
+        failed = true;
+    }
+    coord.shutdown();
+    if failed {
+        std::process::exit(1);
+    }
+    println!(
+        "\nOK: tails present (p50 {p50:.0}us <= p99 {p99:.0}us), \
+         {} trace events, all three export forms render.",
+        m.stats.obs.trace_events
+    );
+    Ok(())
+}

@@ -14,7 +14,9 @@
 //! falls) instead of shedding.
 //!
 //! Run: `cargo run --release --example serve_fleet`
-//! (set DYNAPREC_CONTROL_LOG=1 to trace every controller decision)
+//! (set DYNAPREC_CONTROL_LOG=1 to trace every controller decision;
+//! pass `--json` to emit one machine-readable metrics snapshot instead
+//! of the human report)
 
 use std::time::{Duration, Instant};
 
@@ -31,6 +33,7 @@ use dynaprec::coordinator::{
 };
 use dynaprec::data::Features;
 use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+use dynaprec::util::cli::Args;
 
 const MODEL: &str = "synth_resnet";
 
@@ -84,7 +87,13 @@ fn fleet() -> Vec<DeviceSpec> {
     ]
 }
 
-fn phase(coord: &Coordinator, name: &str, rate_per_s: f64, dur: Duration) {
+fn phase(
+    coord: &Coordinator,
+    name: &str,
+    rate_per_s: f64,
+    dur: Duration,
+    quiet: bool,
+) {
     let gap = Duration::from_secs_f64(1.0 / rate_per_s);
     let t0 = Instant::now();
     let mut sent = 0u64;
@@ -99,6 +108,9 @@ fn phase(coord: &Coordinator, name: &str, rate_per_s: f64, dur: Duration) {
     }
     // Let in-flight work and the controller settle before reading.
     std::thread::sleep(Duration::from_millis(300));
+    if quiet {
+        return;
+    }
     let s = coord.stats();
     let f = coord.fleet_stats();
     let scale = s.scales[MODEL];
@@ -119,6 +131,8 @@ fn phase(coord: &Coordinator, name: &str, rate_per_s: f64, dur: Duration) {
 }
 
 fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let json = args.bool("json");
     // Synthetic profile: 2 noise sites x 4 channels, 2000 MACs/sample.
     // Learned per-layer energies [16, 16]: on a homodyne device a sample
     // needs K = 16 repeats/site = 32 cycles and 32k energy units; on a
@@ -177,16 +191,26 @@ fn main() -> Result<()> {
         cfg,
     )?;
 
-    println!(
-        "4-device mixed native/reference fleet (zero PJRT artifacts), \
-         least-queue-depth dispatch; SLO p95 < {:.0}ms, precision floor \
-         0.25 (-1.0 bits)",
-        slo_us / 1e3
-    );
-    phase(&coord, "warmup (light)", 1_500.0, Duration::from_millis(1500));
-    phase(&coord, "ramp (overload)", 40_000.0, Duration::from_millis(2500));
-    phase(&coord, "subsided (light)", 1_500.0, Duration::from_millis(2000));
+    if !json {
+        println!(
+            "4-device mixed native/reference fleet (zero PJRT artifacts), \
+             least-queue-depth dispatch; SLO p95 < {:.0}ms, precision floor \
+             0.25 (-1.0 bits)",
+            slo_us / 1e3
+        );
+    }
+    phase(&coord, "warmup (light)", 1_500.0, Duration::from_millis(1500), json);
+    phase(&coord, "ramp (overload)", 40_000.0, Duration::from_millis(2500), json);
+    phase(&coord, "subsided (light)", 1_500.0, Duration::from_millis(2000), json);
 
+    if json {
+        // One machine-readable document: the full metrics snapshot
+        // (histogram tails, per-device state, decision-trace summary),
+        // captured before shutdown.
+        println!("{}", coord.metrics_snapshot().to_json());
+        coord.shutdown();
+        return Ok(());
+    }
     let stats = coord.shutdown();
     println!("\nfinal state:\n{}", stats.report());
     println!(

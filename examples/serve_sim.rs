@@ -12,7 +12,9 @@
 //!   cargo run --release --example serve_sim
 //!
 //! Exits non-zero on any invariant violation or replay divergence
-//! (wired into CI as the `sim_soak` smoke).
+//! (wired into CI as the `sim_soak` smoke). Pass `--json` to emit one
+//! machine-readable report (digests, tail percentiles, trace summary)
+//! instead of the human text.
 
 use std::time::Duration;
 
@@ -29,6 +31,8 @@ use dynaprec::sim::{
     heavy_tail, merge, run_scenario, Scenario, SimEvent, SimReport,
     TrafficSpec,
 };
+use dynaprec::util::cli::Args;
+use dynaprec::util::json::Json;
 
 const MODEL: &str = "tiny";
 
@@ -117,14 +121,67 @@ fn scenario_report() -> SimReport {
         .expect("scenario must start")
 }
 
+/// Machine-readable form of one run for `--json` consumers: digests as
+/// hex strings (u64s do not survive a float JSON number), tails, and
+/// the decision-trace summary.
+fn report_json(r: &SimReport) -> Json {
+    use std::collections::BTreeMap;
+    let hex = |v: u64| Json::Str(format!("{v:#018x}"));
+    Json::Obj(BTreeMap::from([
+        ("submitted".to_string(), Json::Num(r.submitted as f64)),
+        ("served".to_string(), Json::Num(r.served as f64)),
+        ("shed".to_string(), Json::Num(r.shed as f64)),
+        ("digest".to_string(), hex(r.digest)),
+        ("trace_digest".to_string(), hex(r.trace_digest)),
+        ("metrics_digest".to_string(), hex(r.metrics_digest)),
+        ("trace_events".to_string(), Json::Num(r.trace.len() as f64)),
+        ("p99_lat_us".to_string(), Json::Num(r.p99_lat_us)),
+        (
+            "p95_out_err".to_string(),
+            r.p95_out_err.map(Json::Num).unwrap_or(Json::Null),
+        ),
+        ("virtual_ms".to_string(), Json::Num(r.virtual_ms)),
+        ("wall_ms".to_string(), Json::Num(r.wall_ms)),
+        ("checks".to_string(), Json::Num(r.checks as f64)),
+        (
+            "violations".to_string(),
+            Json::Arr(
+                r.violations.iter().cloned().map(Json::Str).collect(),
+            ),
+        ),
+    ]))
+}
+
 fn main() {
-    println!("== serve_sim: 10 virtual minutes, chaos fleet, 2 runs ==\n");
+    let args = Args::parse_env();
+    let json = args.bool("json");
+    if !json {
+        println!(
+            "== serve_sim: 10 virtual minutes, chaos fleet, 2 runs ==\n"
+        );
+    }
     let a = scenario_report();
-    println!("run A: {}", a.summary());
     let b = scenario_report();
-    println!("run B: {}", b.summary());
-    println!("\nfleet after run A:\n{}", a.fleet.report());
-    println!("{}", a.stats.report());
+    if json {
+        let doc = Json::Obj(std::collections::BTreeMap::from([
+            ("run_a".to_string(), report_json(&a)),
+            ("run_b".to_string(), report_json(&b)),
+            (
+                "replay_identical".to_string(),
+                Json::Bool(
+                    a.digest == b.digest
+                        && a.trace_digest == b.trace_digest
+                        && a.metrics_digest == b.metrics_digest,
+                ),
+            ),
+        ]));
+        println!("{doc}");
+    } else {
+        println!("run A: {}", a.summary());
+        println!("run B: {}", b.summary());
+        println!("\nfleet after run A:\n{}", a.fleet.report());
+        println!("{}", a.stats.report());
+    }
 
     let mut failed = false;
     for v in a.violations.iter().chain(&b.violations) {
@@ -135,6 +192,8 @@ fn main() {
         || a.served != b.served
         || a.shed != b.shed
         || a.final_scales != b.final_scales
+        || a.trace_digest != b.trace_digest
+        || a.metrics_digest != b.metrics_digest
     {
         eprintln!(
             "REPLAY DIVERGED: A(digest {:#x}, served {}, shed {}) vs \
@@ -169,12 +228,14 @@ fn main() {
     if failed {
         std::process::exit(1);
     }
-    println!(
-        "\nOK: bit-identical replay ({} requests, {} shed, {:.0}x \
-         faster than real time), all invariants held over {} checks.",
-        a.submitted,
-        a.shed,
-        a.virtual_ms / a.wall_ms.max(1e-9),
-        a.checks
-    );
+    if !json {
+        println!(
+            "\nOK: bit-identical replay ({} requests, {} shed, {:.0}x \
+             faster than real time), all invariants held over {} checks.",
+            a.submitted,
+            a.shed,
+            a.virtual_ms / a.wall_ms.max(1e-9),
+            a.checks
+        );
+    }
 }

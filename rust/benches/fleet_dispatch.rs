@@ -12,6 +12,7 @@
 //!
 //! Run: `cargo bench --bench fleet_dispatch`
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
@@ -23,6 +24,7 @@ use dynaprec::coordinator::{
 };
 use dynaprec::data::Features;
 use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+use dynaprec::util::stats::{write_bench_json, BenchResult};
 
 const MODEL: &str = "synth";
 
@@ -107,6 +109,42 @@ fn main() {
          4-device (least-queue-depth): {quad:.0} samples/s\n\
          speedup: {speedup:.2}x (acceptance >= 2x)"
     );
+    // Perf trajectory: the checked-in BENCH_fleet.json is regenerated
+    // by the CI bench job, so dispatch-rate changes show up in review.
+    // Throughput summaries carry the steady-state per-sample time in
+    // every percentile field (a rate has no per-iteration spread).
+    let per_sample = |name: &str, rate: f64, iters: usize| {
+        let d = Duration::from_secs_f64(1.0 / rate);
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: d,
+            p50: d,
+            p95: d,
+            min: d,
+        }
+    };
+    let results = [
+        per_sample("single_device_per_sample", single, 8_000),
+        per_sample("quad_fleet_per_sample", quad, 16_000),
+    ];
+    let path = Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../BENCH_fleet.json"
+    ));
+    write_bench_json(
+        path,
+        "fleet_dispatch",
+        &results,
+        &[
+            ("single_device_samples_per_s", single),
+            ("quad_fleet_samples_per_s", quad),
+            ("speedup", speedup),
+        ],
+    )
+    .expect("write BENCH_fleet.json");
+    println!("wrote {}", path.display());
+
     if speedup >= 2.0 {
         println!("PASS: fleet dispatch scales past the 2x bar");
     } else {

@@ -14,6 +14,7 @@
 //!
 //! Run: `cargo bench --bench native_backend`
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -29,6 +30,7 @@ use dynaprec::coordinator::{
 };
 use dynaprec::data::Features;
 use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+use dynaprec::util::stats::{write_bench_json, BenchResult};
 
 const MODEL: &str = "synth";
 const BATCH: usize = 8;
@@ -160,6 +162,47 @@ fn main() {
          4-device native fleet (least-queue-depth): {quad:.0} samples/s\n\
          speedup: {speedup:.2}x (acceptance >= 2x)"
     );
+
+    // Perf trajectory: the checked-in BENCH_kernel.json is regenerated
+    // by the CI bench job, so kernel-rate changes show up in review.
+    // Throughput summaries carry the steady-state per-sample time in
+    // every percentile field (a rate has no per-iteration spread).
+    let per_sample = |name: &str, rate: f64, iters: usize| {
+        let d = Duration::from_secs_f64(1.0 / rate);
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: d,
+            p50: d,
+            p95: d,
+            min: d,
+        }
+    };
+    let results = [
+        per_sample("native_kernel_per_sample", kernel, 2_000 * BATCH),
+        per_sample("single_device_per_sample", single, 8_000),
+        per_sample("quad_fleet_per_sample", quad, 16_000),
+    ];
+    let path = Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../BENCH_kernel.json"
+    ));
+    write_bench_json(
+        path,
+        "native_backend",
+        &results,
+        &[
+            ("kernel_samples_per_s", kernel),
+            ("kernel_mean_out_err", mean_err),
+            ("modeled_ceiling_samples_per_s", modeled_per_dev),
+            ("single_device_samples_per_s", single),
+            ("quad_fleet_samples_per_s", quad),
+            ("speedup", speedup),
+        ],
+    )
+    .expect("write BENCH_kernel.json");
+    println!("wrote {}", path.display());
+
     if speedup >= 2.0 {
         println!("PASS: native fleet scales past the 2x bar");
     } else {

@@ -7,7 +7,7 @@
 //! The gate lives on the router path, so it is all relaxed atomics —
 //! no locks, no allocation, nanoseconds per decision.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 #[derive(Clone, Debug)]
 pub struct AdmissionConfig {
@@ -41,6 +41,9 @@ pub struct AdmissionGate {
     /// Precision floor, stored as f64 bits.
     floor_bits: AtomicU64,
     shed: AtomicU64,
+    /// Whether the most recent verdict was a shed — edge detection for
+    /// the decision trace (record transitions, not every request).
+    shedding: AtomicBool,
 }
 
 impl AdmissionGate {
@@ -51,6 +54,7 @@ impl AdmissionGate {
             scale_bits: AtomicU64::new(1.0f64.to_bits()),
             floor_bits: AtomicU64::new(floor.to_bits()),
             shed: AtomicU64::new(0),
+            shedding: AtomicBool::new(false),
         }
     }
 
@@ -98,6 +102,17 @@ impl AdmissionGate {
     /// Device-side completion of `n` admitted requests.
     pub fn on_complete(&self, n: usize) {
         self.depth.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    /// Edge detection for the decision trace: returns `Some(v)` when
+    /// verdict `v` flips the gate between admitting and shedding (the
+    /// first shed of an overload episode, the first admit after it),
+    /// `None` while the state holds. A swap keeps concurrent submitters
+    /// from double-reporting one transition.
+    pub fn note_transition(&self, v: Verdict) -> Option<Verdict> {
+        let now = v == Verdict::Shed;
+        let was = self.shedding.swap(now, Ordering::Relaxed);
+        (was != now).then_some(v)
     }
 }
 
@@ -155,6 +170,20 @@ mod tests {
         g.on_complete(1);
         assert_eq!(g.depth(), 0);
         assert_eq!(g.on_submit(true), Verdict::Admit);
+    }
+
+    #[test]
+    fn note_transition_reports_edges_only() {
+        let g = gate(1, 2, 1.0);
+        // Steady admits: the very first call is not a transition.
+        assert_eq!(g.note_transition(Verdict::Admit), None);
+        assert_eq!(g.note_transition(Verdict::Admit), None);
+        // First shed of the episode fires once.
+        assert_eq!(g.note_transition(Verdict::Shed), Some(Verdict::Shed));
+        assert_eq!(g.note_transition(Verdict::Shed), None);
+        // Recovery fires once too.
+        assert_eq!(g.note_transition(Verdict::Admit), Some(Verdict::Admit));
+        assert_eq!(g.note_transition(Verdict::Admit), None);
     }
 
     #[test]

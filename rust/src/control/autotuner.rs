@@ -15,6 +15,12 @@ use super::telemetry::WindowStats;
 pub struct AutotunerConfig {
     /// Target p95 latency (microseconds) for enqueue->response.
     pub slo_p95_us: f64,
+    /// Optional target p99 latency (microseconds): a tail SLO on
+    /// `WindowStats::p99_lat_us`. Either trigger blown steps the scale
+    /// down, so a fleet whose p95 looks healthy but whose p99 is
+    /// melting (one slow shard, rare giant batches) still degrades
+    /// before it sheds.
+    pub slo_p99_us: Option<f64>,
     /// Lowest admissible scale (accuracy-proxy degradation bound).
     pub floor_scale: f64,
     /// Multiplicative step when over SLO, in (0, 1).
@@ -51,6 +57,7 @@ impl Default for AutotunerConfig {
     fn default() -> Self {
         AutotunerConfig {
             slo_p95_us: 50_000.0,
+            slo_p99_us: None,
             floor_scale: floor_for_bits_drop(1.5),
             step_down: 0.7,
             step_up: 1.15,
@@ -119,11 +126,16 @@ impl Autotuner {
         if w.batches < self.cfg.min_batches {
             return self.scale;
         }
-        let err_over_slo = match (self.cfg.slo_out_err, w.mean_out_err) {
+        // The error trigger watches the measured *tail* (p95 of batch
+        // errors) when the window has one, not the mean: a single bad
+        // device shard must not hide behind fleet-wide averaging.
+        let err_over_slo = match (self.cfg.slo_out_err, w.tail_out_err()) {
             (Some(slo), Some(err)) => err > slo,
             _ => false,
         };
-        if w.p95_lat_us > self.cfg.slo_p95_us {
+        let lat_over_slo = w.p95_lat_us > self.cfg.slo_p95_us
+            || matches!(self.cfg.slo_p99_us, Some(slo) if w.p99_lat_us > slo);
+        if lat_over_slo {
             let next =
                 (self.scale * self.cfg.step_down).max(self.cfg.floor_scale);
             if next < self.scale {
@@ -288,6 +300,51 @@ mod tests {
         // so the degrade-then-shed path stays live.
         let mut t = err_tuner(Some(0.05));
         assert_eq!(t.step(&err_window(50_000.0, 0.2, 8)), 0.125);
+    }
+
+    #[test]
+    fn p99_slo_triggers_step_down_when_p95_is_healthy() {
+        let mut t = Autotuner::new(AutotunerConfig {
+            slo_p95_us: 10_000.0,
+            slo_p99_us: Some(30_000.0),
+            floor_scale: 0.25,
+            step_down: 0.5,
+            step_up: 2.0,
+            headroom: 0.5,
+            cooldown_ticks: 0,
+            min_batches: 2,
+            ..Default::default()
+        });
+        // p95 well under its SLO, p99 tail blown: must still degrade.
+        let w = WindowStats {
+            batches: 8,
+            p95_lat_us: 5_000.0,
+            p99_lat_us: 90_000.0,
+            ..Default::default()
+        };
+        assert_eq!(t.step(&w), 0.5);
+        // Healthy tail with headroom climbs back.
+        let w = WindowStats {
+            batches: 8,
+            p95_lat_us: 2_000.0,
+            p99_lat_us: 4_000.0,
+            ..Default::default()
+        };
+        assert_eq!(t.step(&w), 1.0);
+    }
+
+    #[test]
+    fn error_path_acts_on_the_p95_tail_not_the_mean() {
+        // Mean within SLO, p95 tail over it: the tuner must climb —
+        // one degraded shard can't hide behind fleet-wide averaging.
+        let mut t = err_tuner(Some(0.05));
+        let mut w = err_window(1_000.0, 0.01, 8);
+        w.p95_out_err = Some(0.2);
+        assert_eq!(t.step(&w), 0.5);
+        // Tail within SLO holds even if it exceeds the mean.
+        let mut w = err_window(1_000.0, 0.01, 8);
+        w.p95_out_err = Some(0.04);
+        assert_eq!(t.step(&w), 0.5);
     }
 
     #[test]

@@ -44,6 +44,7 @@ use std::time::Duration;
 
 use crate::coordinator::fleet::DeviceSpec;
 use crate::coordinator::scheduler::{ModelPrecision, PrecisionScheduler};
+use crate::obs::{ObsHub, TraceKind};
 use crate::runtime::artifact::ModelMeta;
 use crate::sim::clock::{ClockRef, SlotId, WaitOutcome};
 
@@ -56,6 +57,8 @@ pub struct ControlConfig {
     pub tick: Duration,
     /// Per-model telemetry ring capacity (batches).
     pub telemetry_capacity: usize,
+    /// Decision-trace ring capacity (events, fleet-wide).
+    pub trace_capacity: usize,
     /// Batches considered per decision window.
     pub window: usize,
     /// Ignore samples older than this when deciding.
@@ -71,6 +74,7 @@ impl Default for ControlConfig {
             enabled: false,
             tick: Duration::from_millis(20),
             telemetry_capacity: 1024,
+            trace_capacity: 4096,
             window: 64,
             max_sample_age: Duration::from_secs(2),
             autotuner: AutotunerConfig::default(),
@@ -97,18 +101,24 @@ pub struct ModelControl {
     pub gate: Arc<AdmissionGate>,
 }
 
-/// All models' control state; built once at coordinator startup.
+/// All models' control state plus the fleet observability hub; built
+/// once at coordinator startup.
 pub struct ControlShared {
     pub models: BTreeMap<String, Arc<ModelControl>>,
+    /// Histograms + decision trace. Lives here because every thread
+    /// that records (router, dispatcher, device workers, control loop)
+    /// already holds the shared control state.
+    pub obs: Arc<ObsHub>,
 }
 
 impl ControlShared {
     pub fn new<'a, I: IntoIterator<Item = &'a String>>(
         model_names: I,
+        n_devices: usize,
         cfg: &ControlConfig,
         clock: ClockRef,
     ) -> Arc<ControlShared> {
-        let models = model_names
+        let models: BTreeMap<String, Arc<ModelControl>> = model_names
             .into_iter()
             .map(|name| {
                 (
@@ -126,7 +136,12 @@ impl ControlShared {
                 )
             })
             .collect();
-        Arc::new(ControlShared { models })
+        // Intern the (sorted) model names so trace events can carry a
+        // compact model id.
+        let names: Vec<String> = models.keys().cloned().collect();
+        let obs =
+            Arc::new(ObsHub::new(names, n_devices, cfg.trace_capacity, clock));
+        Arc::new(ControlShared { models, obs })
     }
 
     pub fn get(&self, model: &str) -> Option<&Arc<ModelControl>> {
@@ -219,6 +234,7 @@ pub fn control_loop(
 
             let committed = mc.gate.scale();
             let mut scale = tuner.step(&w);
+            let tuner_ask = scale;
             if governor.enabled() {
                 scale = scale.min(governor.propose(&w, committed).min(1.0));
                 // Fit the per-request budget on every device: predicted
@@ -251,6 +267,29 @@ pub fn control_loop(
                         },
                     );
                     mc.gate.set_scale(scale);
+                    let mid = shared.obs.model_id(model);
+                    if scale < tuner_ask - 1e-12 {
+                        // The energy budget, not the SLO, is what
+                        // tightened this decision — record the fit.
+                        shared.obs.trace.push(
+                            TraceKind::BudgetFit,
+                            mid,
+                            None,
+                            tuner_ask,
+                            scale,
+                            0.0,
+                            0.0,
+                        );
+                    }
+                    shared.obs.trace.push(
+                        TraceKind::ScaleStep,
+                        mid,
+                        None,
+                        committed,
+                        scale,
+                        w.p99_lat_us,
+                        w.tail_out_err().unwrap_or(-1.0),
+                    );
                     if verbose {
                         eprintln!(
                             "control[{model}]: scale {committed:.3} -> \
@@ -279,12 +318,17 @@ mod tests {
         let names = vec!["a".to_string(), "b".to_string()];
         let shared = ControlShared::new(
             &names,
+            2,
             &ControlConfig::default(),
             Arc::new(WallClock::new()),
         );
         assert_eq!(shared.models.len(), 2);
         assert!(shared.get("a").is_some());
         assert!(shared.get("c").is_none());
+        // The obs hub interned the same model set and device count.
+        assert_eq!(shared.obs.model_id("a"), Some(0));
+        assert_eq!(shared.obs.model_id("b"), Some(1));
+        assert_eq!(shared.obs.n_devices(), 2);
         // Rings share an epoch: timestamps are comparable across models.
         let ta = shared.get("a").unwrap().ring.now_us();
         let tb = shared.get("b").unwrap().ring.now_us();

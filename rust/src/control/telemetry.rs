@@ -87,6 +87,11 @@ pub struct TelemetryRing {
     cap: usize,
     /// Total pushes ever (head % cap is the next slot).
     head: AtomicU64,
+    /// Slots a reader gave up on after exhausting seqlock retries.
+    /// Those samples are silently absent from that snapshot; this
+    /// counter makes the loss visible in the metrics snapshot instead
+    /// of invisible.
+    skipped: AtomicU64,
     slots: Box<[Slot]>,
 }
 
@@ -109,6 +114,7 @@ impl TelemetryRing {
             clock,
             cap,
             head: AtomicU64::new(0),
+            skipped: AtomicU64::new(0),
             slots: slots.into_boxed_slice(),
         }
     }
@@ -125,6 +131,12 @@ impl TelemetryRing {
     /// Total batches ever pushed.
     pub fn pushed(&self) -> u64 {
         self.head.load(Ordering::Acquire)
+    }
+
+    /// Slots readers skipped after exhausting seqlock retries —
+    /// telemetry samples snapshots silently lost to write contention.
+    pub fn dropped_reads(&self) -> u64 {
+        self.skipped.load(Ordering::Relaxed)
     }
 
     /// Publish one sample. Intended for a single writer (the device
@@ -159,6 +171,7 @@ impl TelemetryRing {
                 return Some(unpack(&words));
             }
         }
+        self.skipped.fetch_add(1, Ordering::Relaxed);
         None
     }
 
@@ -218,6 +231,10 @@ pub struct WindowStats {
     pub span_us: u64,
     pub p50_lat_us: f64,
     pub p95_lat_us: f64,
+    /// Request-weighted p99 / p999 over batch max latencies — the tail
+    /// the autotuner's `slo_p99_us` trigger watches.
+    pub p99_lat_us: f64,
+    pub p999_lat_us: f64,
     pub mean_exec_us: f64,
     pub mean_occupancy: f64,
     pub mean_queue_depth: f64,
@@ -232,8 +249,21 @@ pub struct WindowStats {
     /// that measured one (native/reference backends); `None` when no
     /// batch in the window carried a measurement.
     pub mean_out_err: Option<f64>,
+    /// Request-weighted p95 over measured per-batch output errors;
+    /// `None` when no batch in the window carried a measurement.
+    pub p95_out_err: Option<f64>,
     /// Batches in the window that measured their output error.
     pub err_batches: usize,
+}
+
+impl WindowStats {
+    /// The tail error the SLO controller should act on: the p95 of
+    /// measured batch errors when available, falling back to the
+    /// request-weighted mean (old windows with a single measured batch
+    /// report both identically).
+    pub fn tail_out_err(&self) -> Option<f64> {
+        self.p95_out_err.or(self.mean_out_err)
+    }
 }
 
 pub fn window_stats(samples: &[BatchSample]) -> WindowStats {
@@ -243,6 +273,7 @@ pub fn window_stats(samples: &[BatchSample]) -> WindowStats {
     }
     let mut means: Vec<(f64, u64)> = Vec::with_capacity(samples.len());
     let mut maxes: Vec<(f64, u64)> = Vec::with_capacity(samples.len());
+    let mut errs: Vec<(f64, u64)> = Vec::new();
     let mut err_sum = 0.0f64;
     let mut err_weight = 0u64;
     for s in samples {
@@ -257,12 +288,14 @@ pub fn window_stats(samples: &[BatchSample]) -> WindowStats {
             w.err_batches += 1;
             err_sum += s.out_err as f64 * s.served as f64;
             err_weight += s.served as u64;
+            errs.push((s.out_err as f64, s.served as u64));
         }
     }
     // No request weight -> no measurement (never fabricate a
     // confident 0.0 from a window that served nothing).
     if err_weight > 0 {
         w.mean_out_err = Some(err_sum / err_weight as f64);
+        w.p95_out_err = Some(weighted_percentile(&mut errs, 95.0));
     }
     let n = samples.len() as f64;
     w.mean_exec_us /= n;
@@ -270,6 +303,8 @@ pub fn window_stats(samples: &[BatchSample]) -> WindowStats {
     w.mean_queue_depth /= n;
     w.p50_lat_us = weighted_percentile(&mut means, 50.0);
     w.p95_lat_us = weighted_percentile(&mut maxes, 95.0);
+    w.p99_lat_us = weighted_percentile(&mut maxes, 99.0);
+    w.p999_lat_us = weighted_percentile(&mut maxes, 99.9);
     if w.served > 0 {
         w.energy_per_req = w.energy / w.served as f64;
     }
@@ -392,6 +427,64 @@ mod tests {
             "p95 {} must reflect the slow batch max",
             w.p95_lat_us
         );
+    }
+
+    #[test]
+    fn tail_percentiles_track_the_slowest_requests() {
+        // 50 fast single-request batches and one slow one (~2% of the
+        // requests): p99/p999 must land on the slow batch max while
+        // p50/p95 stay fast.
+        let mut samples: Vec<BatchSample> = (0..50u64)
+            .map(|i| sample(i * 1000, 1, 1_000.0, 0.0))
+            .collect();
+        samples.push(sample(50_000, 1, 50_000.0, 0.0));
+        let w = window_stats(&samples);
+        assert!((w.p50_lat_us - 1_000.0).abs() < 1e-9);
+        assert!((w.p95_lat_us - 2_000.0).abs() < 1e-9, "{}", w.p95_lat_us);
+        assert!((w.p99_lat_us - 100_000.0).abs() < 1e-9, "{}", w.p99_lat_us);
+        assert!((w.p999_lat_us - 100_000.0).abs() < 1e-9);
+        // p99 is never below p95, p999 never below p99.
+        assert!(w.p95_lat_us <= w.p99_lat_us);
+        assert!(w.p99_lat_us <= w.p999_lat_us);
+    }
+
+    #[test]
+    fn p95_out_err_surfaces_the_bad_tail() {
+        // 18 good batches at err 0.01 and one bad batch holding 10% of
+        // the requests at 0.5: the mean dilutes the spike to ~0.06, the
+        // p95 must report it.
+        let mut samples: Vec<BatchSample> = (0..18u64)
+            .map(|i| {
+                let mut s = sample(i * 1000, 10, 100.0, 0.0);
+                s.out_err = 0.01;
+                s
+            })
+            .collect();
+        let mut bad = sample(18_000, 20, 100.0, 0.0);
+        bad.out_err = 0.5;
+        samples.push(bad);
+        let w = window_stats(&samples);
+        let mean = w.mean_out_err.unwrap();
+        let p95 = w.p95_out_err.unwrap();
+        assert!(mean < 0.1, "{mean}");
+        assert!((p95 - 0.5).abs() < 1e-9, "{p95}");
+        assert_eq!(w.tail_out_err(), Some(p95));
+        // An unmeasured window reports None for both and the helper.
+        let mut u = sample(0, 5, 100.0, 0.0);
+        u.out_err = -1.0;
+        let w = window_stats(&[u]);
+        assert_eq!(w.p95_out_err, None);
+        assert_eq!(w.tail_out_err(), None);
+    }
+
+    #[test]
+    fn uncontended_reads_drop_nothing() {
+        let ring = TelemetryRing::new(16);
+        for i in 0..40u64 {
+            ring.push(&sample(i, 1, 1.0, 0.0));
+        }
+        let _ = ring.snapshot(16);
+        assert_eq!(ring.dropped_reads(), 0);
     }
 
     #[test]

@@ -77,6 +77,7 @@ use crate::control::{
 };
 use crate::coordinator::request::{InferRequest, InferResponse};
 use crate::coordinator::scheduler::PrecisionScheduler;
+use crate::obs::{TraceKind, ERR_TICKS_PER_UNIT};
 use crate::data::Features;
 use crate::runtime::artifact::{ModelBundle, ModelMeta};
 use crate::sim::clock::{ClockRef, SlotId, WaitOutcome};
@@ -288,11 +289,12 @@ impl FleetStats {
         }
         s.push_str(&format!(
             "  fleet: {} devices, dispatch_shed={}, window served={} \
-             p95={:.0}us\n",
+             p95={:.0}us p99={:.0}us\n",
             self.devices.len(),
             self.dispatch_shed,
             self.fleet.served,
             self.fleet.p95_lat_us,
+            self.fleet.p99_lat_us,
         ));
         s
     }
@@ -496,6 +498,8 @@ impl DeviceFleet {
         if n == 0 {
             return;
         }
+        // Batcher effectiveness: real samples per flushed batch.
+        self.shared.obs.batch_fill.record(n as u64);
         let pending: Vec<usize> = self
             .workers
             .iter()
@@ -568,6 +572,23 @@ impl DeviceFleet {
         let Some(w) = self.workers.get(device) else {
             return false;
         };
+        // Record the injection before it lands so the trace always
+        // shows cause (FaultInjected) before effect (DeviceDeath,
+        // Reroute, latency spikes).
+        let (code, param) = match fault {
+            Fault::Stall(d) => (0.0, d.as_nanos() as f64),
+            Fault::Die => (1.0, 0.0),
+            Fault::NoiseDrift(f) => (2.0, f),
+        };
+        self.shared.obs.trace.push(
+            TraceKind::FaultInjected,
+            None,
+            Some(device as u32),
+            code,
+            param,
+            0.0,
+            0.0,
+        );
         w.fault.inject(fault);
         self.clock.notify();
         true
@@ -615,6 +636,15 @@ impl DeviceFleet {
     pub fn reroute_strays(&self) {
         for b in self.collect_strays() {
             let mc = self.shared.get(&b.model).cloned();
+            self.shared.obs.trace.push(
+                TraceKind::Reroute,
+                self.shared.obs.model_id(&b.model),
+                None,
+                b.batch.len() as f64,
+                0.0,
+                0.0,
+                0.0,
+            );
             self.dispatch(&b.model, b.batch, b.seed, mc.as_ref());
         }
     }
@@ -859,6 +889,20 @@ struct WorkerExit<'a>(&'a WorkerCtx);
 
 impl Drop for WorkerExit<'_> {
     fn drop(&mut self) {
+        // An *abnormal* exit (injected death or a panic unwinding out
+        // of batch execution) is a control-plane event worth tracing;
+        // clean shutdown is not.
+        if self.0.fault.is_dead() || std::thread::panicking() {
+            self.0.shared.obs.trace.push(
+                TraceKind::DeviceDeath,
+                None,
+                Some(self.0.device),
+                self.0.pending.load(Ordering::Acquire) as f64,
+                0.0,
+                0.0,
+                0.0,
+            );
+        }
         self.0.alive.store(false, Ordering::Release);
         self.0.clock.notify();
         self.0.clock.unregister(self.0.slot);
@@ -1117,6 +1161,7 @@ fn execute_batch(
     let occupancy = n as f64 / bsz as f64;
     let mut lat_sum = 0.0f64;
     let mut lat_max = 0.0f64;
+    let obs = ctx.shared.obs.device(device as usize);
     {
         let mut c = counters.lock().unwrap_or_else(PoisonError::into_inner);
         c.batches += 1;
@@ -1139,6 +1184,9 @@ fn execute_batch(
             let latency = done_ns.saturating_sub(r.enqueued) / 1_000;
             lat_sum += latency as f64;
             lat_max = lat_max.max(latency as f64);
+            // Exact request-level latency tail (the ring only keeps
+            // per-batch mean/max): three relaxed fetch_adds.
+            obs.latency_us.record(latency);
             c.served += 1;
             // Bounds-checked: a backend that reports more rows than it
             // returned logits for yields empty rows, never a panicked
@@ -1163,7 +1211,15 @@ fn execute_batch(
     // Release the gate before sampling so the telemetry queue depth
     // reflects this batch's completion.
     drop(gate_guard);
+    // Per-batch measurements, weighted by the requests they cover.
+    obs.energy_per_req.record(energy_per_sample.max(0.0).round() as u64);
+    if out.out_err >= 0.0 {
+        let ticks =
+            (out.out_err as f64 * ERR_TICKS_PER_UNIT).round() as u64;
+        obs.out_err_u.record_n(ticks, n as u64);
+    }
     if let Some(mc) = mc {
+        obs.queue_depth.record(mc.gate.depth() as u64);
         mc.ring.push(&BatchSample {
             t_us: mc.ring.now_us(),
             served: n as u32,

@@ -42,6 +42,7 @@ use crate::coordinator::fleet::{
 use crate::coordinator::request::{InferRequest, InferResponse};
 use crate::coordinator::scheduler::{ModelPrecision, PrecisionScheduler};
 use crate::data::Features;
+use crate::obs::{MetricsSnapshot, ObsSnapshot, TraceEvent, TraceKind};
 use crate::runtime::artifact::{ModelBundle, ModelMeta};
 use crate::sim::clock::{ClockRef, SlotId, WaitOutcome, WallClock};
 
@@ -137,6 +138,11 @@ pub struct ServerStats {
     /// Current control-plane precision scale per model (1.0 = the full
     /// learned policy).
     pub scales: BTreeMap<String, f64>,
+    /// Lifetime observability state: merged + per-device histograms
+    /// (request-level latency tails, measured error, energy/request,
+    /// queue depth), decision-trace summary, and reader-side drop
+    /// counters.
+    pub obs: ObsSnapshot,
 }
 
 impl ServerStats {
@@ -150,34 +156,11 @@ impl ServerStats {
         }
     }
 
+    /// Human text report. One rendering path: this delegates to
+    /// `obs::metrics::stats_text`, the same renderer behind
+    /// `MetricsSnapshot::render_text`.
     pub fn report(&self) -> String {
-        let scales: Vec<String> = self
-            .scales
-            .iter()
-            .map(|(m, s)| format!("{m}={s:.3}"))
-            .collect();
-        let err = match self.window.mean_out_err {
-            Some(e) => format!("{e:.4}"),
-            None => "unmeasured".to_string(),
-        };
-        format!(
-            "served={} shed={} batches={} | window[{} batches]: \
-             lat_p50={:.0}us lat_p95={:.0}us exec_mean={:.0}us \
-             occupancy={:.2} queue={:.1} out_err={err}\n\
-             energy/request: {:.4e} units; precision scales: {}\n{}",
-            self.served,
-            self.shed,
-            self.batches,
-            self.window.batches,
-            self.window.p50_lat_us,
-            self.window.p95_lat_us,
-            self.window.mean_exec_us,
-            self.window.mean_occupancy,
-            self.window.mean_queue_depth,
-            self.energy_per_request(),
-            if scales.is_empty() { "-".to_string() } else { scales.join(" ") },
-            self.ledger.report()
-        )
+        crate::obs::metrics::stats_text(self)
     }
 }
 
@@ -236,8 +219,12 @@ impl Coordinator {
             .collect();
         let specs = cfg.device_specs();
         let clock = cfg.clock.clone();
-        let shared =
-            ControlShared::new(metas.keys(), &cfg.control, clock.clone());
+        let shared = ControlShared::new(
+            metas.keys(),
+            specs.len(),
+            &cfg.control,
+            clock.clone(),
+        );
         let scheduler = Arc::new(RwLock::new(scheduler));
         let (tx, rx) = channel::<Msg>();
         let stop = Arc::new(AtomicBool::new(false));
@@ -332,7 +319,28 @@ impl Coordinator {
         let (rtx, rrx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         if let Some(mc) = self.shared.get(model) {
-            if mc.gate.on_submit(self.control_enabled) == Verdict::Shed {
+            let v = mc.gate.on_submit(self.control_enabled);
+            if self.control_enabled {
+                // Trace the *edges* of an overload episode (first shed,
+                // first admit after), not every request.
+                if let Some(t) = mc.gate.note_transition(v) {
+                    let kind = if t == Verdict::Shed {
+                        TraceKind::ShedStart
+                    } else {
+                        TraceKind::ShedStop
+                    };
+                    self.shared.obs.trace.push(
+                        kind,
+                        self.shared.obs.model_id(model),
+                        None,
+                        mc.gate.depth() as f64,
+                        mc.gate.scale(),
+                        0.0,
+                        0.0,
+                    );
+                }
+            }
+            if v == Verdict::Shed {
                 let _ = rtx.send(InferResponse::rejected(id));
                 return rrx;
             }
@@ -369,6 +377,15 @@ impl Coordinator {
             .write()
             .unwrap_or_else(std::sync::PoisonError::into_inner)
             .set(model, p);
+        self.shared.obs.trace.push(
+            TraceKind::PolicySwap,
+            self.shared.obs.model_id(model),
+            None,
+            0.0,
+            0.0,
+            0.0,
+            0.0,
+        );
     }
 
     /// The coordinator's time source (the `cfg.clock` it was started
@@ -408,12 +425,16 @@ impl Coordinator {
         let mut shed = policy_rejected + self.fleet.dispatch_shed();
         let mut scales = BTreeMap::new();
         let mut samples: Vec<BatchSample> = Vec::new();
+        let mut telemetry_dropped = 0u64;
         for (m, mc) in &self.shared.models {
             shed += mc.gate.shed_total();
             scales.insert(m.clone(), mc.gate.scale());
             samples.extend(mc.ring.snapshot(self.window));
+            telemetry_dropped += mc.ring.dropped_reads();
         }
         samples.sort_by_key(|s| s.t_us);
+        let mut obs = self.shared.obs.snapshot();
+        obs.telemetry_dropped_reads = telemetry_dropped;
         ServerStats {
             served,
             shed,
@@ -421,7 +442,30 @@ impl Coordinator {
             ledger,
             window: window_stats(&samples),
             scales,
+            obs,
         }
+    }
+
+    /// Full observability snapshot: serving stats (with histograms and
+    /// trace summary), the per-device fleet view, in-flight depth, and
+    /// the capture time. Render with `to_json` / `to_prometheus` /
+    /// `render_text`; `digest()` is replay-stable under a virtual
+    /// clock.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            stats: self.stats(),
+            fleet: self.fleet_stats(),
+            inflight: self.inflight() as u64,
+            t_us: self.clock.now_ns() / 1_000,
+        }
+    }
+
+    /// The decision trace: the last `trace_capacity` control-plane
+    /// events (scale steps, budget fits, shed transitions, policy
+    /// swaps, fault injections, device deaths, re-routes) in sequence
+    /// order.
+    pub fn trace(&self) -> Vec<TraceEvent> {
+        self.shared.obs.trace.snapshot()
     }
 
     /// Per-device shard view: counters + ledger per device, each

@@ -15,6 +15,7 @@ pub mod control;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod obs;
 pub mod ops;
 pub mod optim;
 pub mod quant;

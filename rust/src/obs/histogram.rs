@@ -1,0 +1,310 @@
+//! Lock-free log-linear histograms (HdrHistogram-style bucketing).
+//!
+//! Values are non-negative integer "ticks" (microseconds for latency,
+//! micro-units for output error, base energy units, queue slots). The
+//! bucket layout is linear below [`SUB`] (exact) and log-linear above:
+//! each power-of-two octave is split into [`SUB`] sub-buckets, so the
+//! bucket width at value `v` is at most `v / SUB` — every recorded
+//! value is reconstructed from its bucket midpoint with relative error
+//! bounded by `1 / (2 * SUB)` (see [`Histogram::REL_ERROR_BOUND`] for
+//! the conservative bound the property tests assert).
+//!
+//! Recording is a handful of relaxed `fetch_add`s on `AtomicU64`
+//! buckets: no locks, no allocation, multi-writer safe — device
+//! workers and the dispatcher record on the hot path while snapshots
+//! are taken concurrently. Snapshots are plain count vectors and merge
+//! across devices by bucket-wise addition, so fleet-wide quantiles are
+//! exact aggregations of per-device state (not averages of averages).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-bucket resolution: 2^SUB_BITS sub-buckets per octave.
+const SUB_BITS: u32 = 5;
+/// Sub-buckets per power-of-two octave (and the end of the exact
+/// linear region).
+pub const SUB: u64 = 1 << SUB_BITS;
+/// Total buckets covering the full u64 range: the linear region plus
+/// `64 - SUB_BITS - 1` octaves of `SUB` sub-buckets each (the top
+/// index saturates).
+const N_BUCKETS: usize = ((64 - SUB_BITS) as usize + 1) * SUB as usize;
+
+/// Bucket index for a value (total function over u64; huge values
+/// saturate into the top bucket).
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUB {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros(); // >= SUB_BITS
+    let group = (msb - SUB_BITS + 1) as usize;
+    let sub = ((v >> (msb - SUB_BITS)) - SUB) as usize;
+    (group * SUB as usize + sub).min(N_BUCKETS - 1)
+}
+
+/// Lowest value mapping into bucket `i`.
+#[inline]
+fn bucket_low(i: usize) -> u64 {
+    let g = i as u64 / SUB;
+    let sub = i as u64 % SUB;
+    if g == 0 {
+        return sub;
+    }
+    (SUB + sub) << (g - 1)
+}
+
+/// Width (number of distinct values) of bucket `i`.
+#[inline]
+fn bucket_width(i: usize) -> u64 {
+    let g = i as u64 / SUB;
+    if g == 0 {
+        1
+    } else {
+        1u64 << (g - 1)
+    }
+}
+
+/// Representative value reported for bucket `i`: its midpoint, which
+/// bounds the reconstruction error by half the bucket width.
+#[inline]
+fn bucket_mid(i: usize) -> f64 {
+    bucket_low(i) as f64 + (bucket_width(i) as f64 - 1.0) / 2.0
+}
+
+/// Lock-free log-linear histogram over u64 ticks.
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// Conservative relative-error bound on quantiles vs the exact
+    /// sort-based quantile over the same samples (the true bound is
+    /// half this; property tests assert against this one plus a small
+    /// absolute slack for integer rounding).
+    pub const REL_ERROR_BOUND: f64 = 1.0 / SUB as f64;
+
+    pub fn new() -> Histogram {
+        let buckets: Vec<AtomicU64> =
+            (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            buckets: buckets.into_boxed_slice(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation. Three relaxed `fetch_add`s — safe and
+    /// cheap from any number of concurrent writers.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.record_n(v, 1);
+    }
+
+    /// Record `n` observations of the same value (weighted record:
+    /// e.g. a per-batch measurement that covers `n` requests).
+    #[inline]
+    pub fn record_n(&self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.buckets[bucket_index(v)].fetch_add(n, Ordering::Relaxed);
+        self.count.fetch_add(n, Ordering::Relaxed);
+        self.sum.fetch_add(v.saturating_mul(n), Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of the counts (relaxed loads; a snapshot
+    /// racing a writer may miss its in-flight record, never tear).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        while buckets.last() == Some(&0) {
+            buckets.pop();
+        }
+        HistSnapshot {
+            buckets,
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Immutable histogram state: trimmed bucket counts plus totals.
+/// Merging across devices is bucket-wise addition.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistSnapshot {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u64,
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Fold another snapshot in: `merge(a, b)` holds exactly the
+    /// observations of `a` and `b` together (bucket layouts are fixed,
+    /// so quantiles of the merge equal quantiles of recording every
+    /// sample into one histogram — a property test asserts this).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        if other.buckets.len() > self.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    /// Quantile `q` in [0, 1]: the midpoint of the bucket holding the
+    /// `ceil(q * count)`-th smallest observation (matching the "smallest
+    /// value whose cumulative count reaches q" convention used by the
+    /// telemetry window percentiles). Returns 0 for an empty snapshot.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil()
+            as u64)
+            .clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_mid(i);
+            }
+        }
+        // Unreachable when counts are consistent; fall back to the top
+        // occupied bucket.
+        self.buckets
+            .iter()
+            .rposition(|&c| c > 0)
+            .map(bucket_mid)
+            .unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_contiguous_and_monotone() {
+        // Every value maps into a bucket whose [low, low+width) range
+        // contains it, and bucket lows are strictly increasing.
+        for i in 1..N_BUCKETS {
+            assert!(bucket_low(i) > bucket_low(i - 1), "bucket {i}");
+        }
+        for v in 0..4096u64 {
+            let i = bucket_index(v);
+            assert!(bucket_low(i) <= v, "v={v} i={i}");
+            assert!(v < bucket_low(i) + bucket_width(i), "v={v} i={i}");
+        }
+        for v in [u64::MAX, u64::MAX / 2, 1u64 << 62, 1u64 << 40] {
+            let i = bucket_index(v);
+            assert!(i < N_BUCKETS);
+            assert!(bucket_low(i) <= v);
+        }
+    }
+
+    #[test]
+    fn linear_region_is_exact() {
+        let h = Histogram::new();
+        for v in 0..SUB {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        for v in 0..SUB {
+            let q = (v + 1) as f64 / SUB as f64;
+            assert_eq!(s.quantile(q), v as f64);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let h = Histogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.quantile(0.5), 0.0);
+        assert_eq!(s.mean(), 0.0);
+        h.record(1000);
+        let s = h.snapshot();
+        assert_eq!(s.count(), 1);
+        let q = s.quantile(0.99);
+        assert!((q - 1000.0).abs() <= 1000.0 * Histogram::REL_ERROR_BOUND);
+    }
+
+    #[test]
+    fn weighted_record_counts_weight() {
+        let h = Histogram::new();
+        h.record_n(10, 99);
+        h.record_n(1_000_000, 1);
+        let s = h.snapshot();
+        assert_eq!(s.count(), 100);
+        assert_eq!(s.quantile(0.5), 10.0);
+        let p995 = s.quantile(0.995);
+        assert!(
+            (p995 - 1e6).abs() <= 1e6 * Histogram::REL_ERROR_BOUND,
+            "{p995}"
+        );
+    }
+
+    #[test]
+    fn merge_is_bucketwise_sum() {
+        let (a, b, all) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for v in [1u64, 50, 3000, 70_000] {
+            a.record(v);
+            all.record(v);
+        }
+        for v in [2u64, 600, 900_000] {
+            b.record(v);
+            all.record(v);
+        }
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m, all.snapshot());
+    }
+
+    #[test]
+    fn concurrent_records_are_all_counted() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(i * 7 + t);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+        assert_eq!(h.snapshot().count(), 40_000);
+    }
+}

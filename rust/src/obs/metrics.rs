@@ -1,0 +1,498 @@
+//! The export pillar: one snapshot type, three renderings.
+//!
+//! [`ObsSnapshot`] is the observability state captured from an
+//! [`super::ObsHub`] (merged + per-device histograms, decision-trace
+//! summary, reader-side drop counters). [`MetricsSnapshot`] wraps it
+//! together with the serving counters (`ServerStats`) and the fleet
+//! view (`FleetStats`) — built by `Coordinator::metrics_snapshot` —
+//! and renders as:
+//!
+//! - human text ([`MetricsSnapshot::render_text`] /
+//!   [`stats_text`] — the *single* rendering path behind
+//!   `ServerStats::report`),
+//! - Prometheus text exposition format
+//!   ([`MetricsSnapshot::to_prometheus`]),
+//! - machine-readable JSON ([`MetricsSnapshot::to_json`]), whose
+//!   canonical string feeds [`MetricsSnapshot::digest`] — under a
+//!   virtual clock two replays of one scenario digest identically.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::histogram::HistSnapshot;
+use super::ERR_TICKS_PER_UNIT;
+use crate::coordinator::{FleetStats, ServerStats};
+use crate::util::json::Json;
+use crate::util::rng::fnv1a;
+
+/// One device's histogram snapshots (fields mirror
+/// [`super::DeviceObs`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceObsSnapshot {
+    pub device: u32,
+    pub latency_us: HistSnapshot,
+    pub out_err_u: HistSnapshot,
+    pub energy_per_req: HistSnapshot,
+    pub queue_depth: HistSnapshot,
+}
+
+/// Point-in-time observability state: fleet-wide merged histograms,
+/// the per-device snapshots they were merged from, the decision-trace
+/// summary, and reader-side data-loss counters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ObsSnapshot {
+    /// Request-level latency (us), merged across devices.
+    pub latency_us: HistSnapshot,
+    /// Measured output error in micro-units, request-weighted.
+    pub out_err_u: HistSnapshot,
+    /// Analog energy per request, base units.
+    pub energy_per_req: HistSnapshot,
+    /// Admission-gate depth at batch completion.
+    pub queue_depth: HistSnapshot,
+    /// Real samples per dispatched batch.
+    pub batch_fill: HistSnapshot,
+    pub per_device: Vec<DeviceObsSnapshot>,
+    /// Decision events ever pushed (ring keeps the last `capacity`).
+    pub trace_events: u64,
+    /// FNV fold over the retained decision events, sequence order.
+    pub trace_digest: u64,
+    /// Trace slots a reader skipped after exhausting seqlock retries.
+    pub trace_dropped_reads: u64,
+    /// Telemetry-ring slots skipped the same way (summed over models;
+    /// the satellite fix for the ring's silent data loss).
+    pub telemetry_dropped_reads: u64,
+}
+
+impl ObsSnapshot {
+    /// Measured output error at quantile `q`, in error units (not
+    /// ticks); `None` when nothing in the fleet measured one.
+    pub fn out_err_quantile(&self, q: f64) -> Option<f64> {
+        (self.out_err_u.count() > 0)
+            .then(|| self.out_err_u.quantile(q) / ERR_TICKS_PER_UNIT)
+    }
+}
+
+/// Everything `Coordinator::metrics_snapshot` captures.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub stats: ServerStats,
+    pub fleet: FleetStats,
+    /// Admitted requests not yet answered at capture time.
+    pub inflight: u64,
+    /// Capture time, microseconds since the coordinator clock's epoch.
+    pub t_us: u64,
+}
+
+fn hist_json(h: &HistSnapshot, scale: f64) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("count".to_string(), Json::Num(h.count() as f64));
+    m.insert("mean".to_string(), Json::Num(h.mean() / scale));
+    for (k, q) in QUANTILES {
+        m.insert(k.to_string(), Json::Num(h.quantile(q) / scale));
+    }
+    Json::Obj(m)
+}
+
+const QUANTILES: [(&str, f64); 4] =
+    [("p50", 0.5), ("p95", 0.95), ("p99", 0.99), ("p999", 0.999)];
+
+fn prom_hist(
+    out: &mut String,
+    name: &str,
+    h: &HistSnapshot,
+    scale: f64,
+) {
+    let _ = writeln!(out, "# TYPE {name} summary");
+    for (_, q) in QUANTILES {
+        let _ = writeln!(
+            out,
+            "{name}{{quantile=\"{q}\"}} {}",
+            h.quantile(q) / scale
+        );
+    }
+    let _ = writeln!(out, "{name}_count {}", h.count());
+}
+
+impl MetricsSnapshot {
+    /// Machine-readable snapshot. Every field is derived from the
+    /// coordinator clock and deterministic execution state, so under a
+    /// `VirtualClock` the rendered string is replay-stable.
+    pub fn to_json(&self) -> Json {
+        let s = &self.stats;
+        let mut m = BTreeMap::new();
+        m.insert("t_us".to_string(), Json::Num(self.t_us as f64));
+        m.insert("served".to_string(), Json::Num(s.served as f64));
+        m.insert("shed".to_string(), Json::Num(s.shed as f64));
+        m.insert("batches".to_string(), Json::Num(s.batches as f64));
+        m.insert("inflight".to_string(), Json::Num(self.inflight as f64));
+        m.insert(
+            "energy_total".to_string(),
+            Json::Num(s.ledger.total_energy),
+        );
+        m.insert(
+            "energy_per_request".to_string(),
+            Json::Num(s.energy_per_request()),
+        );
+        m.insert(
+            "scales".to_string(),
+            Json::Obj(
+                s.scales
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                    .collect(),
+            ),
+        );
+        let w = &s.window;
+        let opt = |v: Option<f64>| match v {
+            Some(x) => Json::Num(x),
+            None => Json::Null,
+        };
+        m.insert(
+            "window".to_string(),
+            Json::Obj(BTreeMap::from([
+                ("batches".to_string(), Json::Num(w.batches as f64)),
+                ("served".to_string(), Json::Num(w.served as f64)),
+                ("p50_lat_us".to_string(), Json::Num(w.p50_lat_us)),
+                ("p95_lat_us".to_string(), Json::Num(w.p95_lat_us)),
+                ("p99_lat_us".to_string(), Json::Num(w.p99_lat_us)),
+                ("p999_lat_us".to_string(), Json::Num(w.p999_lat_us)),
+                ("mean_out_err".to_string(), opt(w.mean_out_err)),
+                ("p95_out_err".to_string(), opt(w.p95_out_err)),
+                ("req_rate".to_string(), Json::Num(w.req_rate)),
+                ("energy_rate".to_string(), Json::Num(w.energy_rate)),
+            ])),
+        );
+        m.insert(
+            "latency_us".to_string(),
+            hist_json(&s.obs.latency_us, 1.0),
+        );
+        m.insert(
+            "out_err".to_string(),
+            hist_json(&s.obs.out_err_u, ERR_TICKS_PER_UNIT),
+        );
+        m.insert(
+            "energy_per_req".to_string(),
+            hist_json(&s.obs.energy_per_req, 1.0),
+        );
+        m.insert(
+            "queue_depth".to_string(),
+            hist_json(&s.obs.queue_depth, 1.0),
+        );
+        m.insert(
+            "batch_fill".to_string(),
+            hist_json(&s.obs.batch_fill, 1.0),
+        );
+        m.insert(
+            "devices".to_string(),
+            Json::Arr(
+                self.fleet
+                    .devices
+                    .iter()
+                    .map(|d| {
+                        Json::Obj(BTreeMap::from([
+                            ("id".to_string(), Json::Num(d.id as f64)),
+                            (
+                                "name".to_string(),
+                                Json::Str(d.name.clone()),
+                            ),
+                            (
+                                "kind".to_string(),
+                                Json::Str(d.kind.to_string()),
+                            ),
+                            (
+                                "backend".to_string(),
+                                Json::Str(d.backend.to_string()),
+                            ),
+                            ("alive".to_string(), Json::Bool(d.alive)),
+                            (
+                                "pending_batches".to_string(),
+                                Json::Num(d.pending_batches as f64),
+                            ),
+                            (
+                                "served".to_string(),
+                                Json::Num(d.served as f64),
+                            ),
+                            (
+                                "batches".to_string(),
+                                Json::Num(d.batches as f64),
+                            ),
+                            (
+                                "energy".to_string(),
+                                Json::Num(d.ledger.total_energy),
+                            ),
+                            (
+                                "p95_lat_us".to_string(),
+                                Json::Num(d.window.p95_lat_us),
+                            ),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "dispatch_shed".to_string(),
+            Json::Num(self.fleet.dispatch_shed as f64),
+        );
+        m.insert(
+            "trace".to_string(),
+            Json::Obj(BTreeMap::from([
+                (
+                    "events".to_string(),
+                    Json::Num(s.obs.trace_events as f64),
+                ),
+                // u64 digests exceed f64's exact-integer range: render
+                // as hex strings so the JSON roundtrips bit-exactly.
+                (
+                    "digest".to_string(),
+                    Json::Str(format!("{:#018x}", s.obs.trace_digest)),
+                ),
+                (
+                    "dropped_reads".to_string(),
+                    Json::Num(s.obs.trace_dropped_reads as f64),
+                ),
+            ])),
+        );
+        m.insert(
+            "telemetry_dropped_reads".to_string(),
+            Json::Num(s.obs.telemetry_dropped_reads as f64),
+        );
+        Json::Obj(m)
+    }
+
+    /// Prometheus text exposition format (deterministic line order).
+    pub fn to_prometheus(&self) -> String {
+        let s = &self.stats;
+        let mut out = String::new();
+        let mut counter = |name: &str, v: f64| {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        counter("dynaprec_served_total", s.served as f64);
+        counter("dynaprec_shed_total", s.shed as f64);
+        counter("dynaprec_batches_total", s.batches as f64);
+        counter("dynaprec_dispatch_shed_total", self.fleet.dispatch_shed as f64);
+        counter("dynaprec_energy_units_total", s.ledger.total_energy);
+        counter("dynaprec_trace_events_total", s.obs.trace_events as f64);
+        counter(
+            "dynaprec_trace_dropped_reads_total",
+            s.obs.trace_dropped_reads as f64,
+        );
+        counter(
+            "dynaprec_telemetry_dropped_reads_total",
+            s.obs.telemetry_dropped_reads as f64,
+        );
+        let _ = writeln!(out, "# TYPE dynaprec_inflight gauge");
+        let _ = writeln!(out, "dynaprec_inflight {}", self.inflight);
+        let _ = writeln!(out, "# TYPE dynaprec_scale gauge");
+        for (model, scale) in &s.scales {
+            let _ = writeln!(
+                out,
+                "dynaprec_scale{{model=\"{model}\"}} {scale}"
+            );
+        }
+        prom_hist(&mut out, "dynaprec_latency_us", &s.obs.latency_us, 1.0);
+        prom_hist(
+            &mut out,
+            "dynaprec_out_err",
+            &s.obs.out_err_u,
+            ERR_TICKS_PER_UNIT,
+        );
+        prom_hist(
+            &mut out,
+            "dynaprec_energy_per_request_units",
+            &s.obs.energy_per_req,
+            1.0,
+        );
+        prom_hist(&mut out, "dynaprec_queue_depth", &s.obs.queue_depth, 1.0);
+        prom_hist(&mut out, "dynaprec_batch_fill", &s.obs.batch_fill, 1.0);
+        let _ = writeln!(out, "# TYPE dynaprec_device_alive gauge");
+        for d in &self.fleet.devices {
+            let _ = writeln!(
+                out,
+                "dynaprec_device_alive{{device=\"{}\",name=\"{}\"}} {}",
+                d.id,
+                d.name,
+                d.alive as u8
+            );
+        }
+        let _ = writeln!(out, "# TYPE dynaprec_device_pending_batches gauge");
+        for d in &self.fleet.devices {
+            let _ = writeln!(
+                out,
+                "dynaprec_device_pending_batches{{device=\"{}\"}} {}",
+                d.id, d.pending_batches
+            );
+        }
+        let _ = writeln!(out, "# TYPE dynaprec_device_served_total counter");
+        for d in &self.fleet.devices {
+            let _ = writeln!(
+                out,
+                "dynaprec_device_served_total{{device=\"{}\"}} {}",
+                d.id, d.served
+            );
+        }
+        out
+    }
+
+    /// Human report: the serving-stats section (shared with
+    /// `ServerStats::report`) plus the per-device fleet table.
+    pub fn render_text(&self) -> String {
+        format!("{}\n{}", stats_text(&self.stats), self.fleet.report())
+    }
+
+    /// FNV-1a over the canonical JSON rendering. Bit-identical across
+    /// replays of one virtual-clock scenario — the metrics half of the
+    /// observability determinism acceptance test.
+    pub fn digest(&self) -> u64 {
+        fnv1a(self.to_json().to_string().as_bytes())
+    }
+}
+
+/// The single text-rendering path for serving stats: used verbatim by
+/// `ServerStats::report` and (with the fleet table appended) by
+/// [`MetricsSnapshot::render_text`].
+pub fn stats_text(s: &ServerStats) -> String {
+    let scales: Vec<String> =
+        s.scales.iter().map(|(m, v)| format!("{m}={v:.3}")).collect();
+    let err = match s.window.mean_out_err {
+        Some(e) => format!("{e:.4}"),
+        None => "unmeasured".to_string(),
+    };
+    let p95_err = match s.window.p95_out_err {
+        Some(e) => format!("{e:.4}"),
+        None => "unmeasured".to_string(),
+    };
+    let mut out = format!(
+        "served={} shed={} batches={} | window[{} batches]: \
+         lat_p50={:.0}us lat_p95={:.0}us lat_p99={:.0}us \
+         exec_mean={:.0}us occupancy={:.2} queue={:.1} \
+         out_err={err} p95_err={p95_err}\n",
+        s.served,
+        s.shed,
+        s.batches,
+        s.window.batches,
+        s.window.p50_lat_us,
+        s.window.p95_lat_us,
+        s.window.p99_lat_us,
+        s.window.mean_exec_us,
+        s.window.mean_occupancy,
+        s.window.mean_queue_depth,
+    );
+    if s.obs.latency_us.count() > 0 {
+        let h = &s.obs.latency_us;
+        let _ = writeln!(
+            out,
+            "lifetime tails[{} reqs]: lat p50/p95/p99/p999 = \
+             {:.0}/{:.0}/{:.0}/{:.0}us; out_err p95={}; \
+             energy/req p99={:.3e}",
+            h.count(),
+            h.quantile(0.5),
+            h.quantile(0.95),
+            h.quantile(0.99),
+            h.quantile(0.999),
+            match s.obs.out_err_quantile(0.95) {
+                Some(e) => format!("{e:.4}"),
+                None => "unmeasured".to_string(),
+            },
+            s.obs.energy_per_req.quantile(0.99),
+        );
+    }
+    let _ = writeln!(
+        out,
+        "trace: {} events ({} dropped reads); telemetry dropped \
+         reads: {}",
+        s.obs.trace_events,
+        s.obs.trace_dropped_reads,
+        s.obs.telemetry_dropped_reads,
+    );
+    let _ = write!(
+        out,
+        "energy/request: {:.4e} units; precision scales: {}\n{}",
+        s.energy_per_request(),
+        if scales.is_empty() { "-".to_string() } else { scales.join(" ") },
+        s.ledger.report()
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Histogram;
+
+    fn snapshot_with_data() -> MetricsSnapshot {
+        let h = Histogram::new();
+        for i in 1..=100u64 {
+            h.record(i * 100);
+        }
+        let mut stats = ServerStats {
+            served: 100,
+            shed: 3,
+            batches: 10,
+            ..Default::default()
+        };
+        stats.obs.latency_us = h.snapshot();
+        stats.obs.trace_events = 5;
+        stats.obs.trace_digest = 0xdeadbeef;
+        stats.scales.insert("m".to_string(), 0.5);
+        MetricsSnapshot {
+            stats,
+            fleet: FleetStats::default(),
+            inflight: 2,
+            t_us: 1_000_000,
+        }
+    }
+
+    #[test]
+    fn json_carries_tails_and_roundtrips() {
+        let m = snapshot_with_data();
+        let j = m.to_json();
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("valid json");
+        assert_eq!(back, j);
+        assert_eq!(back.f64_field("served").unwrap(), 100.0);
+        let p99 = back
+            .field("latency_us")
+            .unwrap()
+            .f64_field("p99")
+            .unwrap();
+        assert!(
+            (p99 - 9900.0).abs() <= 9900.0 * Histogram::REL_ERROR_BOUND,
+            "{p99}"
+        );
+        assert_eq!(
+            back.field("trace").unwrap().str_field("digest").unwrap(),
+            "0x00000000deadbeef"
+        );
+    }
+
+    #[test]
+    fn prometheus_has_quantiles_and_scales() {
+        let m = snapshot_with_data();
+        let p = m.to_prometheus();
+        assert!(p.contains("dynaprec_served_total 100"));
+        assert!(p.contains("dynaprec_latency_us{quantile=\"0.99\"}"));
+        assert!(p.contains("dynaprec_scale{model=\"m\"} 0.5"));
+        assert!(p.contains("dynaprec_latency_us_count 100"));
+    }
+
+    #[test]
+    fn digest_tracks_content() {
+        let m = snapshot_with_data();
+        let d1 = m.digest();
+        assert_eq!(d1, m.digest(), "digest is a pure function");
+        let mut m2 = m.clone();
+        m2.stats.served += 1;
+        assert_ne!(d1, m2.digest());
+    }
+
+    #[test]
+    fn stats_text_is_the_report_path() {
+        let m = snapshot_with_data();
+        let t = stats_text(&m.stats);
+        assert!(t.contains("served=100"));
+        assert!(t.contains("lifetime tails[100 reqs]"));
+        assert!(t.contains("trace: 5 events"));
+        assert_eq!(t, m.stats.report());
+    }
+}

@@ -1,0 +1,199 @@
+//! Fleet-wide observability: lock-free tail-latency/error histograms,
+//! structured decision tracing, and metric export.
+//!
+//! Three pillars (see `docs/ARCHITECTURE.md`, "Observability"):
+//!
+//! - [`histogram`] — HdrHistogram-style log-linear histograms with
+//!   atomic buckets and a bounded relative error, recorded by device
+//!   workers and the dispatcher on the hot path, snapshot-mergeable
+//!   across devices (fleet p99 is an exact aggregation, not an average
+//!   of averages).
+//! - [`trace`] — a fixed-capacity seqlock event ring recording *why*
+//!   the control plane acted (scale steps with their triggering
+//!   observation, budget fits, shed transitions, policy swaps, fault
+//!   injections, device deaths, re-routes), clock-stamped so traces
+//!   replay bit-identically under `sim::VirtualClock`.
+//! - [`metrics`] — the snapshot/export layer: one
+//!   [`MetricsSnapshot`] rendered as human text (the single path
+//!   behind `ServerStats::report`), Prometheus text format, and
+//!   machine-readable JSON (`Coordinator::metrics_snapshot`).
+//!
+//! The [`ObsHub`] instance lives on `control::ControlShared`, so every
+//! thread that already holds the control state (router, dispatcher,
+//! device workers, control thread) records without extra plumbing.
+
+pub mod histogram;
+pub mod metrics;
+pub mod trace;
+
+pub use histogram::{HistSnapshot, Histogram};
+pub use metrics::{
+    DeviceObsSnapshot, MetricsSnapshot, ObsSnapshot,
+};
+pub use trace::{DecisionTrace, TraceEvent, TraceKind};
+
+use crate::sim::clock::ClockRef;
+
+/// Output error is recorded in fixed-point micro-units (an RMS error
+/// of 0.031 records the tick 31_000), keeping the histogram integer
+/// while resolving errors far below any practical SLO.
+pub const ERR_TICKS_PER_UNIT: f64 = 1e6;
+
+/// Per-device hot-path histograms. Latency is recorded per *request*
+/// (exact request-level tails, not per-batch summaries); output error
+/// and energy are per-batch measurements weighted by the requests they
+/// cover; queue depth is sampled at each batch completion.
+#[derive(Default)]
+pub struct DeviceObs {
+    pub latency_us: Histogram,
+    /// Measured output error in micro-units ([`ERR_TICKS_PER_UNIT`]).
+    pub out_err_u: Histogram,
+    /// Simulated analog energy per request, base units.
+    pub energy_per_req: Histogram,
+    /// Admission-gate depth observed at batch completion.
+    pub queue_depth: Histogram,
+}
+
+/// The fleet's observability state: one decision trace, one
+/// dispatcher-side batch-fill histogram, and a [`DeviceObs`] per
+/// device. Shared via `ControlShared`.
+pub struct ObsHub {
+    pub trace: DecisionTrace,
+    /// Real samples per dispatched batch (batcher effectiveness).
+    pub batch_fill: Histogram,
+    models: Vec<String>,
+    devices: Vec<DeviceObs>,
+}
+
+impl ObsHub {
+    /// `models` must be the coordinator's model names in a stable
+    /// order (they intern to the `u32` ids carried by trace events).
+    pub fn new(
+        models: Vec<String>,
+        n_devices: usize,
+        trace_cap: usize,
+        clock: ClockRef,
+    ) -> ObsHub {
+        ObsHub {
+            trace: DecisionTrace::with_clock(trace_cap, clock),
+            batch_fill: Histogram::new(),
+            models,
+            devices: (0..n_devices.max(1))
+                .map(|_| DeviceObs::default())
+                .collect(),
+        }
+    }
+
+    /// Interned id for a model name (for trace-event payloads).
+    pub fn model_id(&self, name: &str) -> Option<u32> {
+        self.models.iter().position(|m| m == name).map(|i| i as u32)
+    }
+
+    /// Reverse lookup for rendering trace events.
+    pub fn model_name(&self, id: u32) -> Option<&str> {
+        self.models.get(id as usize).map(|s| s.as_str())
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// The hot-path histograms for one device (clamped defensively so
+    /// an out-of-range id can never panic a worker).
+    pub fn device(&self, id: usize) -> &DeviceObs {
+        &self.devices[id.min(self.devices.len() - 1)]
+    }
+
+    /// Snapshot everything: per-device histograms, their fleet-wide
+    /// merge, and the decision-trace summary. The caller (coordinator)
+    /// adds telemetry-ring drop counters it owns.
+    pub fn snapshot(&self) -> ObsSnapshot {
+        let per_device: Vec<DeviceObsSnapshot> = self
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| DeviceObsSnapshot {
+                device: i as u32,
+                latency_us: d.latency_us.snapshot(),
+                out_err_u: d.out_err_u.snapshot(),
+                energy_per_req: d.energy_per_req.snapshot(),
+                queue_depth: d.queue_depth.snapshot(),
+            })
+            .collect();
+        let mut merged = ObsSnapshot {
+            batch_fill: self.batch_fill.snapshot(),
+            trace_events: self.trace.pushed(),
+            trace_digest: self.trace.digest(),
+            trace_dropped_reads: self.trace.dropped_reads(),
+            ..Default::default()
+        };
+        for d in &per_device {
+            merged.latency_us.merge(&d.latency_us);
+            merged.out_err_u.merge(&d.out_err_u);
+            merged.energy_per_req.merge(&d.energy_per_req);
+            merged.queue_depth.merge(&d.queue_depth);
+        }
+        merged.per_device = per_device;
+        merged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::clock::WallClock;
+    use std::sync::Arc;
+
+    fn hub() -> ObsHub {
+        ObsHub::new(
+            vec!["a".into(), "b".into()],
+            2,
+            64,
+            Arc::new(WallClock::new()),
+        )
+    }
+
+    #[test]
+    fn model_interning_roundtrips() {
+        let h = hub();
+        assert_eq!(h.model_id("a"), Some(0));
+        assert_eq!(h.model_id("b"), Some(1));
+        assert_eq!(h.model_id("c"), None);
+        assert_eq!(h.model_name(1), Some("b"));
+        assert_eq!(h.model_name(9), None);
+    }
+
+    #[test]
+    fn snapshot_merges_devices() {
+        let h = hub();
+        h.device(0).latency_us.record(100);
+        h.device(1).latency_us.record(300);
+        h.device(1).out_err_u.record_n(20_000, 8);
+        let s = h.snapshot();
+        assert_eq!(s.latency_us.count(), 2);
+        assert_eq!(s.out_err_u.count(), 8);
+        assert_eq!(s.per_device.len(), 2);
+        assert_eq!(s.per_device[0].latency_us.count(), 1);
+        assert_eq!(s.per_device[1].latency_us.count(), 1);
+        // Out-of-range device ids clamp instead of panicking.
+        h.device(99).latency_us.record(1);
+        assert_eq!(h.snapshot().per_device[1].latency_us.count(), 2);
+    }
+
+    #[test]
+    fn trace_is_wired() {
+        let h = hub();
+        h.trace.push(
+            TraceKind::ScaleStep,
+            h.model_id("a"),
+            None,
+            1.0,
+            0.7,
+            0.0,
+            -1.0,
+        );
+        let s = h.snapshot();
+        assert_eq!(s.trace_events, 1);
+        assert_ne!(s.trace_digest, DecisionTrace::new(8).digest());
+    }
+}

@@ -1,0 +1,418 @@
+//! Decision tracing: a fixed-capacity seqlock ring of structured
+//! control-plane events recording *why* the stack acted — autotuner
+//! scale steps (with the triggering tail observation), governor budget
+//! fits, admission shed transitions, policy hot-swaps, fault
+//! injections, device deaths and stray-batch re-routes.
+//!
+//! The slot protocol mirrors `control::telemetry::TelemetryRing` (odd
+//! version = write in progress), extended to multiple writers: a writer
+//! claims a sequence number with one `fetch_add` on the head, then
+//! acquires its slot's version via compare-exchange (even -> odd), so
+//! two writers wrapping onto the same slot serialize on eight word
+//! stores instead of tearing each other. Readers retry a bounded number
+//! of times and — unlike the original telemetry ring — *count* the
+//! slots they had to skip ([`DecisionTrace::dropped_reads`]), so
+//! contention is visible in the metrics snapshot instead of silent.
+//!
+//! Events are clock-stamped through the coordinator's [`ClockRef`]:
+//! under a `VirtualClock` every stamp and every sequence number is a
+//! deterministic function of the scenario, so [`DecisionTrace::digest`]
+//! is bit-identical across replays and scenario digests can cover it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::sim::clock::{ClockRef, WallClock};
+use crate::util::rng::{fnv1a_word, FNV_OFFSET};
+
+/// Sentinel for "no model / no device" in the packed id word.
+const NONE_ID: u32 = u32::MAX;
+
+/// What kind of control-plane decision an event records. The `a..d`
+/// payload fields are per-kind (documented on each variant).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum TraceKind {
+    /// Autotuner/governor committed a new precision scale for `model`:
+    /// `a` = previous scale, `b` = new scale, `c` = the window's p99
+    /// latency (us), `d` = the window's tail output error (-1 when
+    /// unmeasured) — the observation that triggered the step.
+    ScaleStep = 0,
+    /// The energy governor tightened the committed scale below the
+    /// autotuner's ask: `a` = autotuner proposal, `b` = fitted scale.
+    BudgetFit = 1,
+    /// The admission gate started shedding `model`: `a` = queue depth
+    /// at the transition, `b` = committed scale.
+    ShedStart = 2,
+    /// The admission gate stopped shedding `model`: same payload.
+    ShedStop = 3,
+    /// A precision policy was hot-swapped out-of-band for `model`.
+    PolicySwap = 4,
+    /// A fault was injected into `device`: `a` = fault code (0 stall,
+    /// 1 die, 2 noise drift), `b` = parameter (stall seconds / drift
+    /// factor).
+    FaultInjected = 5,
+    /// `device`'s worker died (injected death or panic — never clean
+    /// shutdown).
+    DeviceDeath = 6,
+    /// A batch stranded on a dead device was recovered for re-route:
+    /// `a` = requests in the batch.
+    Reroute = 7,
+}
+
+impl TraceKind {
+    fn from_u8(v: u8) -> Option<TraceKind> {
+        Some(match v {
+            0 => TraceKind::ScaleStep,
+            1 => TraceKind::BudgetFit,
+            2 => TraceKind::ShedStart,
+            3 => TraceKind::ShedStop,
+            4 => TraceKind::PolicySwap,
+            5 => TraceKind::FaultInjected,
+            6 => TraceKind::DeviceDeath,
+            7 => TraceKind::Reroute,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceKind::ScaleStep => "scale_step",
+            TraceKind::BudgetFit => "budget_fit",
+            TraceKind::ShedStart => "shed_start",
+            TraceKind::ShedStop => "shed_stop",
+            TraceKind::PolicySwap => "policy_swap",
+            TraceKind::FaultInjected => "fault_injected",
+            TraceKind::DeviceDeath => "device_death",
+            TraceKind::Reroute => "reroute",
+        }
+    }
+}
+
+/// One decoded decision event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Microseconds since the clock epoch.
+    pub t_us: u64,
+    /// Global event sequence number (total order of decisions).
+    pub seq: u64,
+    pub kind: TraceKind,
+    /// Interned model id (see `ObsHub::model_name`), if model-scoped.
+    pub model: Option<u32>,
+    /// Fleet device id, if device-scoped.
+    pub device: Option<u32>,
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub d: f64,
+}
+
+const WORDS: usize = 8;
+
+fn pack(e: &TraceEvent) -> [u64; WORDS] {
+    let ids = ((e.model.unwrap_or(NONE_ID) as u64) << 32)
+        | e.device.unwrap_or(NONE_ID) as u64;
+    [
+        e.t_us,
+        e.seq,
+        ids,
+        e.kind as u8 as u64,
+        e.a.to_bits(),
+        e.b.to_bits(),
+        e.c.to_bits(),
+        e.d.to_bits(),
+    ]
+}
+
+fn unpack(w: &[u64; WORDS]) -> Option<TraceEvent> {
+    let kind = TraceKind::from_u8(w[3] as u8)?;
+    let model = (w[2] >> 32) as u32;
+    let device = w[2] as u32;
+    Some(TraceEvent {
+        t_us: w[0],
+        seq: w[1],
+        kind,
+        model: (model != NONE_ID).then_some(model),
+        device: (device != NONE_ID).then_some(device),
+        a: f64::from_bits(w[4]),
+        b: f64::from_bits(w[5]),
+        c: f64::from_bits(w[6]),
+        d: f64::from_bits(w[7]),
+    })
+}
+
+struct Slot {
+    /// Even = stable, odd = write in progress.
+    version: AtomicU64,
+    words: [AtomicU64; WORDS],
+}
+
+/// Fixed-capacity multi-writer decision-event ring.
+pub struct DecisionTrace {
+    clock: ClockRef,
+    cap: usize,
+    /// Total events ever pushed (the claimed index is the event's
+    /// sequence number; head % cap is its slot).
+    head: AtomicU64,
+    /// Reader-side data loss: slots skipped after exhausting seqlock
+    /// retries (surfaced in the metrics snapshot).
+    dropped: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl DecisionTrace {
+    pub fn new(cap: usize) -> DecisionTrace {
+        Self::with_clock(cap, Arc::new(WallClock::new()))
+    }
+
+    pub fn with_clock(cap: usize, clock: ClockRef) -> DecisionTrace {
+        let cap = cap.max(8);
+        let slots: Vec<Slot> = (0..cap)
+            .map(|_| Slot {
+                version: AtomicU64::new(0),
+                words: std::array::from_fn(|_| AtomicU64::new(0)),
+            })
+            .collect();
+        DecisionTrace {
+            clock,
+            cap,
+            head: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            slots: slots.into_boxed_slice(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Total events ever pushed (the ring keeps the last `capacity`).
+    pub fn pushed(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Slots a reader had to skip because a writer kept overwriting
+    /// them mid-read.
+    pub fn dropped_reads(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Record one decision event, stamped with the shared clock. Any
+    /// thread may push: the slot is claimed with one `fetch_add`, then
+    /// the per-slot seqlock serializes rare same-slot collisions.
+    pub fn push(
+        &self,
+        kind: TraceKind,
+        model: Option<u32>,
+        device: Option<u32>,
+        a: f64,
+        b: f64,
+        c: f64,
+        d: f64,
+    ) {
+        let seq = self.head.fetch_add(1, Ordering::SeqCst);
+        let e = TraceEvent {
+            t_us: self.clock.now_ns() / 1_000,
+            seq,
+            kind,
+            model,
+            device,
+            a,
+            b,
+            c,
+            d,
+        };
+        let slot = &self.slots[(seq % self.cap as u64) as usize];
+        // Acquire the slot: even -> odd. A concurrent writer that
+        // wrapped onto the same slot holds it for eight stores at most.
+        let v = loop {
+            let v = slot.version.load(Ordering::Relaxed);
+            if v & 1 == 0
+                && slot
+                    .version
+                    .compare_exchange_weak(
+                        v,
+                        v.wrapping_add(1),
+                        Ordering::SeqCst,
+                        Ordering::Relaxed,
+                    )
+                    .is_ok()
+            {
+                break v;
+            }
+            std::hint::spin_loop();
+        };
+        for (word, value) in slot.words.iter().zip(pack(&e)) {
+            word.store(value, Ordering::SeqCst);
+        }
+        slot.version.store(v.wrapping_add(2), Ordering::SeqCst);
+    }
+
+    fn read_slot(&self, idx: usize) -> Option<TraceEvent> {
+        let slot = &self.slots[idx];
+        for _ in 0..4 {
+            let v1 = slot.version.load(Ordering::SeqCst);
+            if v1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let mut words = [0u64; WORDS];
+            for (out, word) in words.iter_mut().zip(slot.words.iter()) {
+                *out = word.load(Ordering::SeqCst);
+            }
+            let v2 = slot.version.load(Ordering::SeqCst);
+            if v1 == v2 {
+                return unpack(&words);
+            }
+        }
+        // Unlike the telemetry ring, data loss is counted, not silent.
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// The retained events, oldest first (sorted by sequence number).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let head = self.head.load(Ordering::Acquire);
+        let n = (self.cap as u64).min(head);
+        let mut out = Vec::with_capacity(n as usize);
+        for i in (head - n)..head {
+            if let Some(e) = self.read_slot((i % self.cap as u64) as usize)
+            {
+                out.push(e);
+            }
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+
+    /// FNV-1a fold over every retained event, in sequence order. Two
+    /// replays of the same virtual-clock scenario must produce equal
+    /// digests — that is the trace-determinism acceptance test.
+    pub fn digest(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for e in self.snapshot() {
+            for w in pack(&e) {
+                h = fnv1a_word(h, w);
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push_simple(t: &DecisionTrace, kind: TraceKind, a: f64) {
+        t.push(kind, Some(0), None, a, 0.0, 0.0, 0.0);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let e = TraceEvent {
+            t_us: 123_456,
+            seq: 42,
+            kind: TraceKind::ScaleStep,
+            model: Some(3),
+            device: None,
+            a: 0.5,
+            b: 0.35,
+            c: 12_000.0,
+            d: -1.0,
+        };
+        assert_eq!(unpack(&pack(&e)), Some(e.clone()));
+        let e2 = TraceEvent {
+            model: None,
+            device: Some(7),
+            kind: TraceKind::DeviceDeath,
+            ..e
+        };
+        assert_eq!(unpack(&pack(&e2)), Some(e2));
+    }
+
+    #[test]
+    fn events_keep_sequence_order() {
+        let t = DecisionTrace::new(16);
+        for i in 0..10 {
+            push_simple(&t, TraceKind::ScaleStep, i as f64);
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 10);
+        for (i, e) in snap.iter().enumerate() {
+            assert_eq!(e.seq, i as u64);
+            assert_eq!(e.a, i as f64);
+        }
+        assert_eq!(t.pushed(), 10);
+        assert_eq!(t.dropped_reads(), 0);
+    }
+
+    #[test]
+    fn wraparound_keeps_latest() {
+        let t = DecisionTrace::new(8);
+        for i in 0..100 {
+            push_simple(&t, TraceKind::Reroute, i as f64);
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 8);
+        assert_eq!(snap[0].seq, 92);
+        assert_eq!(snap[7].seq, 99);
+    }
+
+    #[test]
+    fn digest_is_stable_and_order_sensitive() {
+        let t1 = DecisionTrace::new(32);
+        let t2 = DecisionTrace::new(32);
+        for i in 0..5 {
+            push_simple(&t1, TraceKind::ScaleStep, i as f64);
+            push_simple(&t2, TraceKind::ScaleStep, i as f64);
+        }
+        // Same events, same sequence: stamps come from each ring's own
+        // wall clock, so compare with stamps zeroed via re-pack.
+        let strip = |t: &DecisionTrace| {
+            let mut h = FNV_OFFSET;
+            for mut e in t.snapshot() {
+                e.t_us = 0;
+                for w in pack(&e) {
+                    h = fnv1a_word(h, w);
+                }
+            }
+            h
+        };
+        assert_eq!(strip(&t1), strip(&t2));
+        push_simple(&t2, TraceKind::ShedStart, 0.0);
+        assert_ne!(strip(&t1), strip(&t2));
+    }
+
+    #[test]
+    fn concurrent_pushes_all_land() {
+        let t = std::sync::Arc::new(DecisionTrace::new(4096));
+        let threads: Vec<_> = (0..4)
+            .map(|k| {
+                let t = t.clone();
+                std::thread::spawn(move || {
+                    for i in 0..500 {
+                        t.push(
+                            TraceKind::ScaleStep,
+                            Some(k),
+                            None,
+                            i as f64,
+                            0.0,
+                            0.0,
+                            0.0,
+                        );
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        assert_eq!(t.pushed(), 2000);
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 2000);
+        // Sequence numbers are unique and dense.
+        for (i, e) in snap.iter().enumerate() {
+            assert_eq!(e.seq, i as u64);
+        }
+    }
+}

@@ -142,6 +142,19 @@ pub struct SimReport {
     pub err_converged_at_ns: Option<u64>,
     /// Invariant-checker steps executed.
     pub checks: u64,
+    /// Request-level p99 latency over the whole run, from the merged
+    /// device histograms (microseconds; 0 when nothing served).
+    pub p99_lat_us: f64,
+    /// p95 of measured per-batch output errors over the whole run
+    /// (request-weighted); `None` when no batch measured one.
+    pub p95_out_err: Option<f64>,
+    /// The decision trace captured at the end of the run (before
+    /// shutdown, so it covers only virtual-clock-ordered events).
+    pub trace: Vec<crate::obs::TraceEvent>,
+    /// FNV digest of the decision trace — replay-stable.
+    pub trace_digest: u64,
+    /// FNV digest of the full metrics snapshot JSON — replay-stable.
+    pub metrics_digest: u64,
     pub virtual_ms: f64,
     pub wall_ms: f64,
 }
@@ -154,12 +167,22 @@ impl SimReport {
     pub fn summary(&self) -> String {
         format!(
             "submitted={} served={} shed={} digest={:#018x} \
+             p99_lat={:.0}us p95_err={} trace[{} events]={:#018x} \
+             metrics={:#018x} \
              virtual={:.0}ms wall={:.0}ms speedup={:.0}x \
              invariant checks={} violations={}",
             self.submitted,
             self.served,
             self.shed,
             self.digest,
+            self.p99_lat_us,
+            match self.p95_out_err {
+                Some(e) => format!("{e:.4}"),
+                None => "unmeasured".to_string(),
+            },
+            self.trace.len(),
+            self.trace_digest,
+            self.metrics_digest,
             self.virtual_ms,
             self.wall_ms,
             if self.wall_ms > 0.0 {
@@ -293,6 +316,15 @@ pub fn run_scenario(
 
     let fleet = coord.fleet_stats();
     let virtual_ms = clock.now_ns() as f64 / 1e6;
+    // Capture observability state *before* shutdown: the post-shutdown
+    // drain runs at real-thread speed, so only the pre-shutdown
+    // snapshot is ordered by the virtual clock and replay-stable.
+    let metrics = coord.metrics_snapshot();
+    let metrics_digest = metrics.digest();
+    let trace = coord.trace();
+    let trace_digest = metrics.stats.obs.trace_digest;
+    let p99_lat_us = metrics.stats.obs.latency_us.quantile(0.99);
+    let p95_out_err = metrics.stats.obs.out_err_quantile(0.95);
     let stats = coord.shutdown();
     let mut violations = std::mem::take(&mut checker.violations);
     if stats.served + stats.shed != submitted {
@@ -342,6 +374,11 @@ pub fn run_scenario(
         violations,
         err_converged_at_ns: checker.err_converged_at_ns,
         checks: checker.steps(),
+        p99_lat_us,
+        p95_out_err,
+        trace,
+        trace_digest,
+        metrics_digest,
         virtual_ms,
         wall_ms: wall0.elapsed().as_secs_f64() * 1e3,
     })

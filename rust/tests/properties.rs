@@ -1,6 +1,7 @@
 //! Cross-module property tests (pure host-side; no artifacts needed).
 
 use dynaprec::analog::{plan_layer, AveragingMode, HardwareConfig};
+use dynaprec::obs::Histogram;
 use dynaprec::quant::{self, noise_bits};
 use dynaprec::runtime::artifact::SiteMeta;
 use dynaprec::util::json::Json;
@@ -320,6 +321,97 @@ fn prop_levels_for_bits_consistent_with_log2() {
             let got = quant::levels_for_bits((n as f64).log2());
             if got != n {
                 return Err(format!("{got} vs {n}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Log-uniform u64 ticks spanning the linear region through the high
+/// octaves — the value profile latency/energy histograms actually see.
+fn log_uniform_ticks(r: &mut Rng, n: usize) -> Vec<u64> {
+    (0..n)
+        .map(|_| 10f64.powf(r.uniform_in(0.0, 9.0)) as u64)
+        .collect()
+}
+
+#[test]
+fn prop_histogram_quantile_within_rel_error_bound() {
+    // The observability acceptance bound: any quantile read from the
+    // log-linear histogram is within REL_ERROR_BOUND (relative, plus
+    // half a tick for integer rounding) of the exact sort-based
+    // quantile under the same rank convention (smallest value whose
+    // cumulative count reaches ceil(q * n)).
+    check(
+        "histogram quantile vs exact sorted quantile",
+        default_cases(200),
+        |r: &mut Rng| {
+            let n = 1 + r.below(400) as usize;
+            (log_uniform_ticks(r, n), r.uniform_in(0.01, 1.0))
+        },
+        |(vals, q)| {
+            let h = Histogram::new();
+            for &v in vals {
+                h.record(v);
+            }
+            let s = h.snapshot();
+            let mut sorted = vals.clone();
+            sorted.sort_unstable();
+            let n = sorted.len();
+            let target = ((q * n as f64).ceil() as usize).clamp(1, n);
+            let exact = sorted[target - 1] as f64;
+            let got = s.quantile(*q);
+            let tol = exact * Histogram::REL_ERROR_BOUND + 0.5;
+            if (got - exact).abs() > tol {
+                return Err(format!(
+                    "q={q}: hist {got} vs exact {exact} (tol {tol}, n={n})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_histogram_merge_is_record_all_in_one() {
+    // Fleet aggregation correctness: merging two device snapshots is
+    // exactly the histogram that recorded every sample itself — so
+    // fleet quantiles are true aggregations, not averages of averages.
+    check(
+        "merge(h1, h2) == record-all-in-one",
+        default_cases(200),
+        |r: &mut Rng| {
+            let na = r.below(200) as usize;
+            let nb = r.below(200) as usize;
+            let a = log_uniform_ticks(r, na);
+            let b = log_uniform_ticks(r, nb);
+            (a, b)
+        },
+        |(a, b)| {
+            let (ha, hb, hall) =
+                (Histogram::new(), Histogram::new(), Histogram::new());
+            for &v in a {
+                ha.record(v);
+                hall.record(v);
+            }
+            for &v in b {
+                hb.record(v);
+                hall.record(v);
+            }
+            let mut m = ha.snapshot();
+            m.merge(&hb.snapshot());
+            let all = hall.snapshot();
+            if m != all {
+                return Err(format!(
+                    "merged snapshot != all-in-one ({} + {} samples)",
+                    a.len(),
+                    b.len()
+                ));
+            }
+            for q in [0.5, 0.95, 0.99, 0.999] {
+                if m.quantile(q) != all.quantile(q) {
+                    return Err(format!("quantile {q} diverged"));
+                }
             }
             Ok(())
         },

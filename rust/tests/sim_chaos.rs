@@ -140,6 +140,16 @@ fn ten_minute_burst_with_device_death_replays_bit_identically() {
     assert_eq!(a.served, b.served);
     assert_eq!(a.shed, b.shed);
     assert_eq!(a.final_scales, b.final_scales);
+    // ... and the observability layer replays with it: the decision
+    // trace and the full metrics snapshot digest identically, with the
+    // lifetime tails populated in the report.
+    assert_eq!(a.trace_digest, b.trace_digest, "trace must replay");
+    assert_eq!(a.metrics_digest, b.metrics_digest, "metrics must replay");
+    assert!(a.p99_lat_us > 0.0, "p99 latency missing from the report");
+    assert!(
+        a.p95_out_err.is_some(),
+        "native fleet must report a p95 output error"
+    );
     assert_eq!(
         a.stats.ledger.total_energy.to_bits(),
         b.stats.ledger.total_energy.to_bits(),
@@ -444,6 +454,67 @@ fn per_layer_policy_hot_swap_replays_bit_identically() {
         "per-layer split {sum} != ledger total {}",
         a.stats.ledger.total_energy
     );
+}
+
+/// The decision trace is replay-deterministic and causally ordered:
+/// two runs of a seeded kill scenario produce identical trace and
+/// metrics digests, and the trace shows the injected Die fault strictly
+/// before the device death and the re-route it caused.
+#[test]
+fn decision_trace_replays_deterministically_with_causal_order() {
+    use dynaprec::obs::TraceKind;
+    let run = || {
+        // Slow devices (~64ms per 4-sample batch) so device 1 dies with
+        // work still queued behind it — the re-route is guaranteed.
+        let cfg = fleet_cfg(
+            vec![dev("d0", 2_000_000.0), dev("d1", 2_000_000.0)],
+            DispatchPolicy::RoundRobin,
+            4,
+        );
+        let events = vec![
+            SimEvent::Submit { t_ns: 0, model: MODEL.into(), n: 32 },
+            SimEvent::fault_at(Duration::from_millis(1), 1, Fault::Die),
+        ];
+        let scenario =
+            Scenario::new(events).with_tail(Duration::from_secs(10));
+        run_scenario(vec![bundle(4)], sched(), cfg, &scenario).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert!(a.ok(), "invariants violated:\n{}", a.violations.join("\n"));
+    assert_eq!(a.trace_digest, b.trace_digest, "trace replay diverged");
+    assert_eq!(
+        a.metrics_digest, b.metrics_digest,
+        "metrics snapshot replay diverged"
+    );
+    assert_eq!(a.trace.len(), b.trace.len());
+    // The report carries the request-level tails.
+    assert!(a.p99_lat_us > 0.0, "p99 latency missing");
+    assert!(a.p95_out_err.is_some(), "p95 output error missing");
+    // Causal chain in the trace: the injected Die fault on device 1 ...
+    let fi = a
+        .trace
+        .iter()
+        .find(|e| e.kind == TraceKind::FaultInjected)
+        .expect("fault injection must be traced");
+    assert_eq!(fi.device, Some(1));
+    assert_eq!(fi.a, 1.0, "fault code 1 = Die");
+    // ... strictly precedes the worker death it causes ...
+    let death = a
+        .trace
+        .iter()
+        .find(|e| e.kind == TraceKind::DeviceDeath)
+        .expect("device death must be traced");
+    assert_eq!(death.device, Some(1));
+    assert!(death.seq > fi.seq, "cause must precede effect");
+    // ... and the stranded batches' re-route to the survivor.
+    let reroute = a
+        .trace
+        .iter()
+        .find(|e| e.kind == TraceKind::Reroute)
+        .expect("re-route must be traced");
+    assert!(reroute.seq > fi.seq, "re-route follows the injection");
+    assert!(reroute.a >= 1.0, "re-routed batch carries requests");
 }
 
 /// Same scenario, two seeds: different traces (sanity check that the
