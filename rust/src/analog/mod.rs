@@ -12,7 +12,9 @@
 //!   ([`HardwareConfig`]); a fleet may mix several (see
 //!   `coordinator::fleet`).
 //! - [`redundancy`] — the Fig.-3 planner: energy request -> repetition
-//!   factor K -> cycles/area/energy ([`plan_layer`], [`plan_model`]).
+//!   factor K -> cycles/area/energy ([`plan_layer`], [`plan_model`]) —
+//!   plus the fault-masking replica codec ([`encode_replicas`],
+//!   [`decode_replicas`]) the native path uses to survive stuck cells.
 //! - [`ledger`] — serving-time accounting ([`EnergyLedger`]); each
 //!   fleet device keeps its own and the coordinator merges them.
 
@@ -22,4 +24,7 @@ pub mod redundancy;
 
 pub use device::{DeviceModel, HardwareConfig, NoiseKind};
 pub use ledger::EnergyLedger;
-pub use redundancy::{plan_layer, plan_model, AveragingMode, LayerPlan};
+pub use redundancy::{
+    decode_replicas, decode_replicas_into, encode_replicas, fault_budget,
+    plan_layer, plan_model, AveragingMode, DecodeMode, LayerPlan,
+};

@@ -98,6 +98,82 @@ pub fn plan_layer(
     }
 }
 
+/// How redundant replicas of a tile are combined back into one value.
+///
+/// `Median` masks corrupted replicas *exactly* as long as at most
+/// [`fault_budget`] of them are faulty (the clean values outnumber the
+/// corrupt ones around the middle of the order statistics). `Average`
+/// has no masking guarantee — a corrupt replica leaks into the result
+/// attenuated by 1/n — but preserves the unbiased-mean noise model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeMode {
+    Median,
+    Average,
+}
+
+/// Max number of corrupted replicas an n-replica `Median` decode masks
+/// exactly: floor((n - 1) / 2).
+pub fn fault_budget(n: usize) -> usize {
+    n.saturating_sub(1) / 2
+}
+
+/// Encode a tile (any flat value block) into `n` redundant replicas.
+/// Replicas are value-identical; fault isolation comes from mapping
+/// each replica to a distinct physical tile.
+pub fn encode_replicas(tile: &[f32], n: usize) -> Vec<Vec<f32>> {
+    assert!(n >= 1, "need at least one replica");
+    (0..n).map(|_| tile.to_vec()).collect()
+}
+
+/// Decode replicas element-wise into `out` (all lengths must match).
+/// The hot-path form used by the native kernel: `out` is reused across
+/// batches, `scratch` avoids a per-element allocation.
+pub fn decode_replicas_into(
+    out: &mut [f32],
+    replicas: &[&[f32]],
+    mode: DecodeMode,
+) {
+    assert!(!replicas.is_empty());
+    for r in replicas {
+        assert_eq!(r.len(), out.len(), "replica length mismatch");
+    }
+    if replicas.len() == 1 {
+        out.copy_from_slice(replicas[0]);
+        return;
+    }
+    let mut scratch = vec![0.0f32; replicas.len()];
+    for (i, o) in out.iter_mut().enumerate() {
+        for (s, r) in scratch.iter_mut().zip(replicas) {
+            *s = r[i];
+        }
+        *o = match mode {
+            DecodeMode::Median => median_of(&mut scratch),
+            DecodeMode::Average => {
+                let sum: f64 = scratch.iter().map(|&v| v as f64).sum();
+                (sum / scratch.len() as f64) as f32
+            }
+        };
+    }
+}
+
+/// Decode replicas element-wise, returning a fresh buffer.
+pub fn decode_replicas(replicas: &[Vec<f32>], mode: DecodeMode) -> Vec<f32> {
+    let views: Vec<&[f32]> = replicas.iter().map(|r| r.as_slice()).collect();
+    let mut out = vec![0.0f32; replicas[0].len()];
+    decode_replicas_into(&mut out, &views, mode);
+    out
+}
+
+fn median_of(vals: &mut [f32]) -> f32 {
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = vals.len();
+    if n % 2 == 1 {
+        vals[n / 2]
+    } else {
+        0.5 * (vals[n / 2 - 1] + vals[n / 2])
+    }
+}
+
 /// Model-level plan: per-layer plans + totals.
 #[derive(Clone, Debug, Default)]
 pub struct ModelPlan {
@@ -188,6 +264,106 @@ mod tests {
         assert_eq!(mp.layers.len(), 2);
         assert!((mp.total_energy - (2.0 * 10.0 * 4.0 + 8.0 * 5.0 * 2.0)).abs() < 1e-9);
         assert_eq!(mp.total_cycles, 10.0);
+    }
+
+    // ------------------------------------------- redundant tile coding
+
+    fn tile(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.uniform_in(-0.5, 0.5) as f32).collect()
+    }
+
+    #[test]
+    fn encode_decode_round_trips_with_zero_faults() {
+        let w = tile(11, 64);
+        for n in [1, 2, 3, 5] {
+            let reps = encode_replicas(&w, n);
+            assert_eq!(reps.len(), n);
+            for mode in [DecodeMode::Median, DecodeMode::Average] {
+                // Bit-exact: identical replicas decode to the original.
+                assert_eq!(decode_replicas(&reps, mode), w, "n={n} {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn median_masks_exactly_up_to_fault_budget() {
+        let w = tile(23, 48);
+        for n in [3usize, 4, 5, 7] {
+            let budget = fault_budget(n);
+            assert_eq!(budget, (n - 1) / 2);
+            let mut reps = encode_replicas(&w, n);
+            // Worst-case corruption: pull some replicas high, some low.
+            for (k, rep) in reps.iter_mut().take(budget).enumerate() {
+                let blow = if k % 2 == 0 { 1e6 } else { -1e6 };
+                for v in rep.iter_mut() {
+                    *v += blow;
+                }
+            }
+            assert_eq!(
+                decode_replicas(&reps, DecodeMode::Median),
+                w,
+                "n={n} masks {budget} faulty replicas exactly"
+            );
+        }
+    }
+
+    #[test]
+    fn median_budget_is_tight_one_extra_fault_leaks() {
+        let w = tile(31, 16);
+        let n = 5;
+        let k = fault_budget(n) + 1; // 3 of 5: clean values lose the vote
+        let mut reps = encode_replicas(&w, n);
+        for rep in reps.iter_mut().take(k) {
+            for v in rep.iter_mut() {
+                *v += 1e6;
+            }
+        }
+        let decoded = decode_replicas(&reps, DecodeMode::Median);
+        assert_ne!(decoded, w, "budget+1 faults must corrupt the decode");
+    }
+
+    #[test]
+    fn average_decode_attenuates_but_does_not_mask() {
+        let w = tile(47, 8);
+        let mut reps = encode_replicas(&w, 4);
+        for v in reps[0].iter_mut() {
+            *v += 4.0;
+        }
+        let decoded = decode_replicas(&reps, DecodeMode::Average);
+        for (d, orig) in decoded.iter().zip(&w) {
+            assert!((d - orig - 1.0).abs() < 1e-5, "1/n of the fault leaks");
+        }
+    }
+
+    #[test]
+    fn prop_median_decode_masks_random_faults_within_budget() {
+        check(
+            "median masks <= budget faulty replicas",
+            default_cases(200),
+            |r: &mut Rng| {
+                let n = 2 * gens::usize_in(r, 1, 3) + 1; // 3, 5, 7
+                let len = gens::usize_in(r, 1, 32);
+                let seed = r.next_u64();
+                (n, len, seed)
+            },
+            |&(n, len, seed)| {
+                let w = tile(seed, len);
+                let mut reps = encode_replicas(&w, n);
+                let mut r = Rng::new(seed ^ 0xDEAD);
+                let k = r.below(fault_budget(n) as u64 + 1) as usize;
+                for rep in reps.iter_mut().take(k) {
+                    for v in rep.iter_mut() {
+                        *v = r.uniform_in(-1e3, 1e3) as f32;
+                    }
+                }
+                let got = decode_replicas(&reps, DecodeMode::Median);
+                if got != w {
+                    return Err(format!("n={n} k={k}: decode leaked"));
+                }
+                Ok(())
+            },
+        );
     }
 
     // ------------------------------------------------------- properties

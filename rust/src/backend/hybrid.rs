@@ -1,0 +1,361 @@
+//! Hybrid digital–analog execution engine.
+//!
+//! Splits each model's GEMM chain between the exact digital plane and
+//! the native noisy kernel: the most error-sensitive noise sites —
+//! ranked by the scheduled per-layer energies, which are the Eq.-14
+//! trainer's learned allocation (`optim::TrainResult::e_per_layer`) —
+//! execute digitally at a fixed per-MAC energy, the rest run the
+//! analog noise model with redundant replica coding so injected
+//! stuck/dead tiles are masked instead of sinking accuracy.
+//!
+//! The digital fraction is a runtime knob (`set_digital_fraction`):
+//! more digital buys exactness at `DIGITAL_MAC_ENERGY_AJ` per MAC,
+//! more analog buys energy at the scheduled noise level — the tradeoff
+//! the control plane's governor prices via `hybrid_charged_cost`.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::analog::{plan_layer, AveragingMode, HardwareConfig, NoiseKind};
+use crate::backend::kernel::{site_noise, TileFaults};
+use crate::backend::native::{
+    masked_faults, name_seed, rms_error, NativeModel, NativeModelSet,
+    SitePlan,
+};
+use crate::backend::{
+    front_rows, hybrid_split, BatchJob, BatchOutput, ExecutionBackend,
+    DIGITAL_MAC_ENERGY_AJ,
+};
+use crate::util::rng::Rng;
+
+/// Digital–analog split engine over the shared native weight set.
+pub struct HybridBackend {
+    hw: HardwareConfig,
+    averaging: AveragingMode,
+    kind: NoiseKind,
+    models: Arc<NativeModelSet>,
+    /// Digital fraction in [0, 1]: `ceil(fraction x n_sites)`
+    /// top-sensitivity sites route to the exact plane.
+    fraction: f64,
+    /// Replica groups per analog site (1 = unprotected).
+    redundancy: usize,
+    /// Noise-drift multiplier on the analog sites (1.0 = nominal).
+    drift: f64,
+    /// Injected stuck/dead physical tiles (analog sites only).
+    faults: TileFaults,
+}
+
+impl HybridBackend {
+    pub fn new(
+        hw: HardwareConfig,
+        averaging: AveragingMode,
+        models: Arc<NativeModelSet>,
+        fraction: f64,
+        redundancy: usize,
+    ) -> HybridBackend {
+        let kind = hw.default_noise();
+        HybridBackend {
+            hw,
+            averaging,
+            kind,
+            models,
+            fraction: fraction.clamp(0.0, 1.0),
+            redundancy: redundancy.max(1),
+            drift: 1.0,
+            faults: TileFaults::default(),
+        }
+    }
+
+    /// The digital fraction currently in force.
+    pub fn digital_fraction(&self) -> f64 {
+        self.fraction
+    }
+
+    fn model(&self, name: &str) -> Result<&Arc<NativeModel>> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("no native model built for {name}"))
+    }
+}
+
+impl ExecutionBackend for HybridBackend {
+    fn label(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn execute(&mut self, job: &BatchJob<'_>) -> BatchOutput {
+        let meta = &job.bundle.meta;
+        let model = match self.model(&meta.name) {
+            Ok(m) => m.clone(),
+            Err(e) => return BatchOutput::failed(e),
+        };
+        let rows = job.n_real.max(1).min(meta.batch.max(1));
+        let x = front_rows(job.x, meta.batch, rows);
+        // Same seeding as the native engine, so a hybrid device at
+        // digital fraction 0 serves bit-identical logits to a native
+        // device given the same batch.
+        let mut rng = Rng::new(job.seed as u64 ^ name_seed(&meta.name));
+        let Some(e) = job.e else {
+            let logits = model.run(&x, rows, None, &mut rng);
+            return BatchOutput {
+                logits: Ok(logits),
+                rows,
+                out_err: 0.0,
+                energy_per_sample: 0.0,
+                cycles_per_sample: model.sites.len() as f64,
+                energy_per_layer: Vec::new(),
+                faults_masked: 0,
+            };
+        };
+        if e.len() != meta.e_len {
+            return BatchOutput::failed(anyhow!(
+                "E length {} != {} for model {}",
+                e.len(),
+                meta.e_len,
+                meta.name
+            ));
+        }
+        let digital = hybrid_split(meta, e, self.fraction);
+        let mut plans = Vec::with_capacity(model.sites.len());
+        let mut energy = 0.0f64;
+        let mut cycles = 0.0f64;
+        let mut energy_per_layer = Vec::with_capacity(model.sites.len());
+        for (si, ns) in model.sites.iter().enumerate() {
+            let s = &ns.site;
+            if digital[si] {
+                // Exact plane: per-MAC digital energy, one pipelined
+                // cycle, immune to analog noise and tile faults.
+                let site_energy = s.macs_per_channel
+                    * s.n_channels as f64
+                    * DIGITAL_MAC_ENERGY_AJ;
+                energy += site_energy;
+                cycles += 1.0;
+                energy_per_layer.push(site_energy);
+                plans.push(SitePlan {
+                    ks: Vec::new(),
+                    noise: site_noise(self.kind, s, meta, &self.hw),
+                    digital: true,
+                    groups: 1,
+                });
+                continue;
+            }
+            let es: Vec<f64> = e[s.e_offset..s.e_offset + s.n_channels]
+                .iter()
+                .map(|&v| v as f64)
+                .collect();
+            let plan = plan_layer(
+                &self.hw,
+                self.averaging,
+                &es,
+                s.n_dot,
+                s.macs_per_channel,
+                true,
+            );
+            energy += plan.energy;
+            cycles += plan.cycles;
+            energy_per_layer.push(plan.energy);
+            let mut noise = site_noise(self.kind, s, meta, &self.hw);
+            noise.additive_std *= self.drift;
+            noise.weight_std *= self.drift;
+            plans.push(SitePlan {
+                ks: plan.k_per_channel,
+                noise,
+                digital: false,
+                groups: self.redundancy,
+            });
+        }
+        let clean = model.run(&x, rows, None, &mut rng);
+        let noisy =
+            model.run_faulted(&x, rows, Some(&plans), self.faults, &mut rng);
+        let out_err = rms_error(
+            &noisy,
+            &clean,
+            job.n_real * model.classes,
+            model.out_range(),
+        );
+        BatchOutput {
+            logits: Ok(noisy),
+            rows,
+            out_err: out_err as f32,
+            energy_per_sample: energy,
+            cycles_per_sample: cycles,
+            energy_per_layer,
+            faults_masked: masked_faults(&plans, self.faults),
+        }
+    }
+
+    fn set_noise_drift(&mut self, factor: f64) {
+        self.drift = factor.max(0.0);
+    }
+
+    fn set_tile_faults(&mut self, faults: TileFaults) {
+        self.faults = faults;
+    }
+
+    fn set_digital_fraction(&mut self, fraction: f64) {
+        self.fraction = fraction.clamp(0.0, 1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeAnalogBackend;
+    use crate::data::Features;
+    use crate::runtime::artifact::{ModelBundle, ModelMeta};
+
+    const BATCH: usize = 8;
+
+    fn meta() -> ModelMeta {
+        ModelMeta::synthetic("hyb", BATCH, 2, 4, 64, 250.0)
+    }
+
+    fn job<'a>(
+        bundle: &'a ModelBundle,
+        x: &'a Features,
+        e: Option<&'a [f32]>,
+    ) -> BatchJob<'a> {
+        BatchJob { bundle, x, n_real: BATCH, seed: 7, e, tag: "shot.fwd" }
+    }
+
+    fn backend(fraction: f64, redundancy: usize) -> HybridBackend {
+        let m = meta();
+        let natives = Arc::new(NativeModelSet::build([&m]));
+        HybridBackend::new(
+            HardwareConfig::homodyne(),
+            AveragingMode::Time,
+            natives,
+            fraction,
+            redundancy,
+        )
+    }
+
+    #[test]
+    fn all_digital_is_exact_and_charges_digital_macs() {
+        let bundle = ModelBundle::synthetic(meta());
+        let x = Features::F32(vec![0.25; BATCH * 4]);
+        let e = vec![16.0f32; meta().e_len];
+        let mut b = backend(1.0, 1);
+        let out = b.execute(&job(&bundle, &x, Some(&e)));
+        assert!(out.logits.is_ok());
+        assert_eq!(out.out_err, 0.0, "digital plane is exact");
+        let macs = 2.0 * 250.0 * 4.0;
+        assert!(
+            (out.energy_per_sample - macs * DIGITAL_MAC_ENERGY_AJ).abs()
+                < 1e-9
+        );
+        assert_eq!(out.cycles_per_sample, 2.0);
+    }
+
+    #[test]
+    fn zero_digital_matches_the_native_engine_bit_for_bit() {
+        let m = meta();
+        let bundle = ModelBundle::synthetic(meta());
+        let x = Features::F32(vec![0.25; BATCH * 4]);
+        let e = vec![16.0f32; m.e_len];
+        let natives = Arc::new(NativeModelSet::build([&m]));
+        let mut hybrid = backend(0.0, 1);
+        let mut native = NativeAnalogBackend::new(
+            HardwareConfig::homodyne(),
+            AveragingMode::Time,
+            natives,
+        );
+        let h = hybrid.execute(&job(&bundle, &x, Some(&e)));
+        let n = native.execute(&job(&bundle, &x, Some(&e)));
+        assert_eq!(h.logits.unwrap(), n.logits.unwrap());
+        assert_eq!(h.out_err, n.out_err);
+        assert_eq!(h.energy_per_sample, n.energy_per_sample);
+    }
+
+    #[test]
+    fn digital_sites_are_immune_to_tile_faults() {
+        let bundle = ModelBundle::synthetic(meta());
+        let x = Features::F32(vec![0.25; BATCH * 4]);
+        // Site 1 carries the higher energy -> digitized at 50%.
+        let mut e = vec![4.0f32; meta().e_len];
+        for c in 0..4 {
+            e[4 + c] = 16.0;
+        }
+        let mut b = backend(0.5, 1);
+        let clean_err = b.execute(&job(&bundle, &x, Some(&e))).out_err;
+        // Stuck-fault the tile hosting site 1 (tile id 1 at groups=1):
+        // the digitized site must not feel it.
+        b.set_tile_faults(TileFaults {
+            stuck_mask: 1 << 1,
+            stuck_seed: 99,
+            dead_mask: 0,
+        });
+        let faulted_err = b.execute(&job(&bundle, &x, Some(&e))).out_err;
+        assert_eq!(clean_err, faulted_err, "digital plane immune");
+        // The same fault on the analog site 0 bites.
+        b.set_tile_faults(TileFaults {
+            stuck_mask: 1 << 0,
+            stuck_seed: 99,
+            dead_mask: 0,
+        });
+        let analog_hit = b.execute(&job(&bundle, &x, Some(&e)));
+        assert!(analog_hit.out_err > 2.0 * clean_err.max(1e-6));
+        assert_eq!(analog_hit.faults_masked, 0, "unprotected: not masked");
+    }
+
+    #[test]
+    fn redundancy_masks_the_stuck_tile() {
+        let bundle = ModelBundle::synthetic(meta());
+        let x = Features::F32(vec![0.25; BATCH * 4]);
+        let e = vec![16.0f32; meta().e_len];
+        // 3-way replica coding: a single stuck tile is within budget.
+        let mut b = backend(0.0, 3);
+        let base = b.execute(&job(&bundle, &x, Some(&e)));
+        b.set_tile_faults(TileFaults {
+            stuck_mask: 1 << 2, // site 0, replica 2
+            stuck_seed: 42,
+            dead_mask: 0,
+        });
+        let masked = b.execute(&job(&bundle, &x, Some(&e)));
+        assert_eq!(masked.faults_masked, 1);
+        // Masked: the median discards the corrupt replica, so the
+        // served error stays at the noise floor instead of jumping to
+        // the fault magnitude — compare against the unprotected engine
+        // eating the same fault.
+        let mut unprotected = backend(0.0, 1);
+        unprotected.set_tile_faults(TileFaults {
+            stuck_mask: 1 << 0, // site 0, its only replica
+            stuck_seed: 42,
+            dead_mask: 0,
+        });
+        let hit = unprotected.execute(&job(&bundle, &x, Some(&e)));
+        assert_eq!(hit.faults_masked, 0);
+        assert!(
+            masked.out_err < 5.0 * base.out_err.max(1e-4),
+            "masked err {} must stay near the noise floor {}",
+            masked.out_err,
+            base.out_err
+        );
+        assert!(
+            hit.out_err > 3.0 * masked.out_err,
+            "unprotected err {} must dwarf masked err {}",
+            hit.out_err,
+            masked.out_err
+        );
+        // Redundancy is energy-free by construction.
+        assert_eq!(base.energy_per_sample, masked.energy_per_sample);
+    }
+
+    #[test]
+    fn runtime_knob_moves_the_split() {
+        let bundle = ModelBundle::synthetic(meta());
+        let x = Features::F32(vec![0.25; BATCH * 4]);
+        let e = vec![16.0f32; meta().e_len];
+        let mut b = backend(0.0, 1);
+        let analog = b.execute(&job(&bundle, &x, Some(&e)));
+        b.set_digital_fraction(1.0);
+        assert_eq!(b.digital_fraction(), 1.0);
+        let digital = b.execute(&job(&bundle, &x, Some(&e)));
+        assert_eq!(digital.out_err, 0.0);
+        assert!(
+            digital.energy_per_sample > analog.energy_per_sample,
+            "digital MACs are not free"
+        );
+    }
+}

@@ -159,6 +159,65 @@ pub fn apply_weight_noise(
     gemm_blocked(x, &dw, out, batch, n_dot, n_channels);
 }
 
+/// Stuck/dead physical-tile faults an analog engine must suffer, as
+/// bitmasks over physical tile ids (tile `t` maps to bit `t % 64`).
+/// Injected via `coordinator::Fault::{StuckCell, DeadTile}` and carried
+/// to the engine through `ExecutionBackend::set_tile_faults`; the
+/// corruption is derived from `stuck_seed`, never from wall time, so
+/// replays under `VirtualClock` are bit-identical.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TileFaults {
+    /// Tiles with permanently stuck weight cells.
+    pub stuck_mask: u64,
+    /// Seed for the deterministic stuck-cell pattern.
+    pub stuck_seed: u64,
+    /// Tiles that are dead outright (replica outputs read zero).
+    pub dead_mask: u64,
+}
+
+impl TileFaults {
+    pub fn is_clean(&self) -> bool {
+        self.stuck_mask == 0 && self.dead_mask == 0
+    }
+}
+
+/// Physical tile id hosting replica `group` of site `site` when each
+/// site spreads over `groups` redundant tiles: a fixed round-robin
+/// layout, so a fault injected at one tile id lands on one known
+/// (site, replica) pair in every batch.
+pub fn phys_tile(site: usize, group: usize, groups: usize) -> u32 {
+    ((site * groups.max(1) + group) % 64) as u32
+}
+
+/// Corrupt `out` as if a sparse, deterministic set of weight cells in
+/// this tile were stuck at `w_stuck`: for each stuck cell `(i, j)` the
+/// served output gains `x[b, i] * (w_stuck - w[i, j])`. Cell positions
+/// derive from `seed` alone (stable across batches — a stuck cell
+/// stays stuck), covering ~1/64 of the tile's cells.
+#[allow(clippy::too_many_arguments)]
+pub fn apply_stuck_cells(
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    batch: usize,
+    n_dot: usize,
+    n_channels: usize,
+    w_stuck: f32,
+    seed: u64,
+) {
+    debug_assert_eq!(w.len(), n_dot * n_channels);
+    let n_stuck = (n_dot * n_channels / 64).max(1);
+    let mut rng = Rng::new(seed);
+    for _ in 0..n_stuck {
+        let i = rng.below(n_dot as u64) as usize;
+        let j = rng.below(n_channels as u64) as usize;
+        let dw = w_stuck - w[i * n_channels + j];
+        for b in 0..batch {
+            out[b * n_channels + j] += x[b * n_dot + i] * dw;
+        }
+    }
+}
+
 /// Cycle (and clip) an arbitrary-length feature row into a site's
 /// `n_dot`-element input vector. Token ids (I32 features) are first
 /// hashed to a deterministic embedding in [-1, 1].
@@ -287,6 +346,47 @@ mod tests {
         );
         assert!(out.iter().all(|&v| v == out[0]));
         assert_ne!(out[0], 0.0);
+    }
+
+    #[test]
+    fn stuck_cells_are_deterministic_and_batch_stable() {
+        let (batch, n_dot, n_channels) = (3, 16, 4);
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> =
+            (0..batch * n_dot).map(|_| rng.gaussian() as f32).collect();
+        let w: Vec<f32> = (0..n_dot * n_channels)
+            .map(|_| rng.gaussian() as f32)
+            .collect();
+        let run = |seed: u64| {
+            let mut out = vec![0.0f32; batch * n_channels];
+            apply_stuck_cells(
+                &x, &w, &mut out, batch, n_dot, n_channels, 0.5, seed,
+            );
+            out
+        };
+        assert_eq!(run(7), run(7), "same seed -> same stuck pattern");
+        assert_ne!(run(7), run(8), "different seed -> different cells");
+        assert!(run(7).iter().any(|&v| v != 0.0), "fault must bite");
+    }
+
+    #[test]
+    fn phys_tile_layout_is_stable_and_bounded() {
+        assert_eq!(phys_tile(0, 0, 3), 0);
+        assert_eq!(phys_tile(0, 2, 3), 2);
+        assert_eq!(phys_tile(1, 0, 3), 3);
+        assert_eq!(phys_tile(1, 0, 1), 1);
+        for s in 0..100 {
+            for g in 0..5 {
+                assert!(phys_tile(s, g, 5) < 64);
+            }
+        }
+    }
+
+    #[test]
+    fn tile_faults_default_is_clean() {
+        assert!(TileFaults::default().is_clean());
+        let f = TileFaults { stuck_mask: 2, stuck_seed: 1, dead_mask: 0 };
+        assert!(!f.is_clean());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! |----------------------|-------------------------------|-------------------|--------------|
 //! | [`NativeAnalogBackend`] | pure-Rust noisy GEMM, K-rep averaging | quantized `plan_layer` | measured per batch |
 //! | [`DigitalReferenceBackend`] | exact f32 GEMM (golden)   | none (digital)    | 0 by definition |
+//! | [`HybridBackend`]    | sensitive sites digital, rest noisy GEMM | digital MACs + quantized `plan_layer` | measured per batch |
 //! | [`PjrtBackend`]      | AOT PJRT artifacts            | continuous `plan_layer` | unmeasured |
 //!
 //! The native backend is what closes the paper's precision-energy loop
@@ -19,17 +20,19 @@
 //! measured error against the digital reference flows back through
 //! telemetry into the autotuner.
 
+pub mod hybrid;
 pub mod kernel;
 pub mod native;
 pub mod pjrt;
 
+pub use hybrid::HybridBackend;
 pub use kernel::{
-    apply_additive_noise, apply_weight_noise, gemm_blocked, site_noise,
-    SiteNoise,
+    apply_additive_noise, apply_stuck_cells, apply_weight_noise,
+    gemm_blocked, phys_tile, site_noise, SiteNoise, TileFaults,
 };
 pub use native::{
-    DigitalReferenceBackend, NativeAnalogBackend, NativeModel,
-    NativeModelSet, SitePlan,
+    masked_faults, DigitalReferenceBackend, NativeAnalogBackend,
+    NativeModel, NativeModelSet, SitePlan,
 };
 pub use pjrt::PjrtBackend;
 
@@ -59,6 +62,21 @@ pub enum BackendKind {
     NativeAnalog { simulate_time: bool },
     /// Exact f32 GEMM over the same native weights: golden outputs.
     DigitalReference { simulate_time: bool },
+    /// Digital–analog split engine: the most error-sensitive noise
+    /// sites (ranked by the scheduled per-layer energies, i.e. the
+    /// Eq.-14 trainer's learned allocation) run on an exact digital
+    /// plane charged per MAC, the rest on the native noisy kernel with
+    /// `redundancy`-way replica coding masking injected tile faults.
+    Hybrid {
+        simulate_time: bool,
+        /// Initial digital fraction in thousandths (0..=1000):
+        /// `ceil(fraction x n_sites)` top-ranked sites go digital.
+        /// Runtime-adjustable per device via
+        /// `Coordinator::set_digital_fraction`.
+        digital_milli: u16,
+        /// Replica groups per analog site (1 = unprotected).
+        redundancy: u8,
+    },
 }
 
 impl BackendKind {
@@ -68,6 +86,7 @@ impl BackendKind {
             BackendKind::Pjrt => "pjrt",
             BackendKind::NativeAnalog { .. } => "native",
             BackendKind::DigitalReference { .. } => "reference",
+            BackendKind::Hybrid { .. } => "hybrid",
         }
     }
 
@@ -76,15 +95,24 @@ impl BackendKind {
         match self {
             BackendKind::Pjrt => false,
             BackendKind::NativeAnalog { simulate_time }
-            | BackendKind::DigitalReference { simulate_time } => {
-                *simulate_time
-            }
+            | BackendKind::DigitalReference { simulate_time }
+            | BackendKind::Hybrid { simulate_time, .. } => *simulate_time,
         }
     }
 
     /// Whether this backend executes on the shared native weight set.
     pub fn needs_native_models(&self) -> bool {
         !matches!(self, BackendKind::Pjrt)
+    }
+
+    /// The hybrid kind's digital fraction in [0, 1] (0 otherwise).
+    pub fn digital_fraction(&self) -> f64 {
+        match self {
+            BackendKind::Hybrid { digital_milli, .. } => {
+                (*digital_milli).min(1000) as f64 / 1000.0
+            }
+            _ => 0.0,
+        }
     }
 }
 
@@ -123,6 +151,11 @@ pub struct BatchOutput {
     /// ledger's per-layer audit trail; empty when the backend charges
     /// no analog energy (clean forwards, digital reference, failures).
     pub energy_per_layer: Vec<f64>,
+    /// Injected tile faults the engine's redundant decode masked this
+    /// batch (site-replica hits); 0 when fault-free or unprotected.
+    /// The fleet worker surfaces a nonzero count as a `FaultMasked`
+    /// decision-trace event.
+    pub faults_masked: u32,
 }
 
 impl BatchOutput {
@@ -135,6 +168,7 @@ impl BatchOutput {
             energy_per_sample: 0.0,
             cycles_per_sample: 0.0,
             energy_per_layer: Vec::new(),
+            faults_masked: 0,
         }
     }
 }
@@ -168,6 +202,14 @@ pub trait ExecutionBackend: Send {
     /// it to simulate a device drifting out of calibration, which the
     /// measured `out_err` then surfaces to the control plane.
     fn set_noise_drift(&mut self, _factor: f64) {}
+    /// Fault-injection hook: stuck/dead physical tiles this engine's
+    /// analog plane must suffer from the next batch on. Engines
+    /// without analog tiles (reference, PJRT) ignore it.
+    fn set_tile_faults(&mut self, _faults: TileFaults) {}
+    /// Runtime digital-fraction knob (hybrid engines only): route
+    /// `ceil(fraction x n_sites)` top-sensitivity sites digital from
+    /// the next batch on. Other engines ignore it.
+    fn set_digital_fraction(&mut self, _fraction: f64) {}
 }
 
 /// Build the backend a device spec asks for. `natives` must be `Some`
@@ -191,6 +233,15 @@ pub fn make_backend(
         }
         BackendKind::DigitalReference { .. } => {
             Box::new(DigitalReferenceBackend::new(models()))
+        }
+        BackendKind::Hybrid { digital_milli, redundancy, .. } => {
+            Box::new(HybridBackend::new(
+                hw,
+                averaging,
+                models(),
+                digital_milli.min(1000) as f64 / 1000.0,
+                redundancy.max(1) as usize,
+            ))
         }
     }
 }
@@ -260,6 +311,72 @@ pub fn quantized_analog_cost(
     analog_cost_with(meta, e, hw, averaging, true)
 }
 
+/// Modeled energy of one exact digital MAC, in the same aJ units as
+/// the analog base energy. Digital MACs are *not* free: at 64 aJ
+/// (an optimistic 8-bit digital multiply-accumulate) the digital plane
+/// costs ~64x the one-repetition analog MAC, which is exactly the gap
+/// dynamic precision exploits — and what a budget fit over a hybrid
+/// device must charge, or a 100% digital split would silently read as
+/// cheaper than the analog floor.
+pub const DIGITAL_MAC_ENERGY_AJ: f64 = 64.0;
+
+/// Which noise sites a hybrid engine routes to the digital plane at
+/// `fraction`: the `ceil(fraction x n_sites)` sites with the highest
+/// scheduled mean channel energy. The scheduled e-vector *is* the
+/// learned sensitivity signal (the Eq.-14 trainer allocates the most
+/// energy to the layers where noise hurts accuracy most — see
+/// `TrainResult::sensitivity_ranking`), so ranking by it sends the
+/// most error-sensitive layers to the exact plane. Deterministic:
+/// ties break toward the earlier site.
+pub fn hybrid_split(meta: &ModelMeta, e: &[f32], fraction: f64) -> Vec<bool> {
+    let means: Vec<f64> = meta
+        .noise_sites()
+        .map(|(_, site)| {
+            let es = &e[site.e_offset..site.e_offset + site.n_channels];
+            es.iter().map(|&v| v as f64).sum::<f64>() / es.len().max(1) as f64
+        })
+        .collect();
+    let n = means.len();
+    let n_digital = ((fraction.clamp(0.0, 1.0) * n as f64).ceil() as usize)
+        .min(n);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        means[b].partial_cmp(&means[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut digital = vec![false; n];
+    for &i in order.iter().take(n_digital) {
+        digital[i] = true;
+    }
+    digital
+}
+
+/// Per-sample `(energy, cycles)` a hybrid engine charges: digital
+/// sites pay `DIGITAL_MAC_ENERGY_AJ` per MAC and one pipelined cycle,
+/// analog sites the quantized redundancy plan. Redundant replica
+/// coding is free here by construction (the groups partition the same
+/// K repetitions).
+pub fn hybrid_charged_cost(
+    meta: &ModelMeta,
+    e: &[f32],
+    hw: &HardwareConfig,
+    averaging: AveragingMode,
+    fraction: f64,
+) -> (f64, f64) {
+    let digital = hybrid_split(meta, e, fraction);
+    let per_layer = per_layer_analog_cost(meta, e, hw, averaging, true);
+    meta.noise_sites()
+        .zip(&digital)
+        .zip(&per_layer)
+        .fold((0.0, 0.0), |(en, cy), (((_, site), &dig), &(ae, ac))| {
+            if dig {
+                let macs = site.macs_per_channel * site.n_channels as f64;
+                (en + macs * DIGITAL_MAC_ENERGY_AJ, cy + 1.0)
+            } else {
+                (en + ae, cy + ac)
+            }
+        })
+}
+
 /// The per-sample cost `kind`'s engine will actually charge for this
 /// e-vector — what dispatch-time energy scoring should predict so the
 /// balance it maintains matches the ledgers it reads.
@@ -277,6 +394,13 @@ pub fn charged_analog_cost(
         }
         // The digital reference charges no analog energy at all.
         BackendKind::DigitalReference { .. } => (0.0, 0.0),
+        BackendKind::Hybrid { .. } => hybrid_charged_cost(
+            meta,
+            e,
+            hw,
+            averaging,
+            kind.digital_fraction(),
+        ),
     }
 }
 
@@ -297,6 +421,16 @@ mod tests {
         assert_eq!(r.label(), "reference");
         assert!(!r.simulates_time());
         assert!(r.needs_native_models());
+        let h = BackendKind::Hybrid {
+            simulate_time: true,
+            digital_milli: 500,
+            redundancy: 3,
+        };
+        assert_eq!(h.label(), "hybrid");
+        assert!(h.simulates_time());
+        assert!(h.needs_native_models());
+        assert!((h.digital_fraction() - 0.5).abs() < 1e-12);
+        assert_eq!(n.digital_fraction(), 0.0);
     }
 
     #[test]
@@ -310,6 +444,14 @@ mod tests {
             (
                 BackendKind::DigitalReference { simulate_time: false },
                 "reference",
+            ),
+            (
+                BackendKind::Hybrid {
+                    simulate_time: false,
+                    digital_milli: 250,
+                    redundancy: 3,
+                },
+                "hybrid",
             ),
         ] {
             let b = make_backend(
@@ -332,5 +474,64 @@ mod tests {
         // 2 sites x K=16 x 250 MACs x 4 channels = 32000; 16+16 cycles.
         assert!((energy - 32_000.0).abs() < 1e-9, "{energy}");
         assert!((cycles - 32.0).abs() < 1e-9, "{cycles}");
+    }
+
+    #[test]
+    fn hybrid_split_digitizes_highest_energy_sites_first() {
+        let meta = ModelMeta::synthetic("h", 8, 4, 4, 64, 250.0);
+        // Site 2 carries the highest scheduled energy, then site 0.
+        let mut e = vec![4.0f32; meta.e_len];
+        for c in 0..4 {
+            e[2 * 4 + c] = 32.0;
+            e[c] = 16.0;
+        }
+        assert_eq!(
+            hybrid_split(&meta, &e, 0.0),
+            vec![false, false, false, false]
+        );
+        assert_eq!(
+            hybrid_split(&meta, &e, 0.25),
+            vec![false, false, true, false]
+        );
+        assert_eq!(
+            hybrid_split(&meta, &e, 0.5),
+            vec![true, false, true, false]
+        );
+        assert_eq!(
+            hybrid_split(&meta, &e, 1.0),
+            vec![true, true, true, true]
+        );
+    }
+
+    #[test]
+    fn hybrid_cost_interpolates_between_analog_and_digital() {
+        let meta = ModelMeta::synthetic("hc", 8, 2, 4, 64, 250.0);
+        let hw = HardwareConfig::homodyne();
+        let e = vec![16.0f32; meta.e_len];
+        let (analog, _) =
+            quantized_analog_cost(&meta, &e, &hw, AveragingMode::Time);
+        let macs = 2.0 * 250.0 * 4.0;
+        let (full, _) =
+            hybrid_charged_cost(&meta, &e, &hw, AveragingMode::Time, 1.0);
+        assert!((full - macs * DIGITAL_MAC_ENERGY_AJ).abs() < 1e-9);
+        let (none, _) =
+            hybrid_charged_cost(&meta, &e, &hw, AveragingMode::Time, 0.0);
+        assert!((none - analog).abs() < 1e-9);
+        let (half, _) =
+            hybrid_charged_cost(&meta, &e, &hw, AveragingMode::Time, 0.5);
+        assert!(
+            (half - (analog / 2.0 + macs / 2.0 * DIGITAL_MAC_ENERGY_AJ))
+                .abs()
+                < 1e-9
+        );
+        // The charged-cost dispatcher view agrees with the hybrid kind.
+        let kind = BackendKind::Hybrid {
+            simulate_time: false,
+            digital_milli: 500,
+            redundancy: 3,
+        };
+        let (charged, _) =
+            charged_analog_cost(kind, &meta, &e, &hw, AveragingMode::Time);
+        assert!((charged - half).abs() < 1e-9);
     }
 }

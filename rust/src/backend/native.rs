@@ -14,10 +14,14 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::analog::{plan_layer, AveragingMode, HardwareConfig, NoiseKind};
+use crate::analog::{
+    decode_replicas_into, fault_budget, plan_layer, AveragingMode,
+    DecodeMode, HardwareConfig, NoiseKind,
+};
 use crate::backend::kernel::{
-    apply_additive_noise, apply_weight_noise, embed_row_f32, embed_token,
-    gemm_blocked, site_noise, SiteNoise,
+    apply_additive_noise, apply_stuck_cells, apply_weight_noise,
+    embed_row_f32, embed_token, gemm_blocked, phys_tile, site_noise,
+    SiteNoise, TileFaults,
 };
 use crate::backend::{front_rows, BatchJob, BatchOutput, ExecutionBackend};
 use crate::data::Features;
@@ -44,7 +48,7 @@ pub struct NativeModel {
 }
 
 /// FNV-1a, the stable name -> weight-stream seed.
-fn name_seed(name: &str) -> u64 {
+pub(crate) fn name_seed(name: &str) -> u64 {
     crate::util::rng::fnv1a(name.as_bytes())
 }
 
@@ -53,6 +57,47 @@ fn name_seed(name: &str) -> u64 {
 pub struct SitePlan {
     pub ks: Vec<f64>,
     pub noise: SiteNoise,
+    /// Route this site to the exact digital plane: no noise, no analog
+    /// faults. Hybrid engines mark their most error-sensitive sites.
+    pub digital: bool,
+    /// Redundant replica groups for fault masking: the site's K
+    /// repetitions split into `groups` sub-averages on distinct
+    /// physical tiles, decoded by element-wise median. Energy is
+    /// unchanged (the groups partition the same K), each replica's
+    /// noise std grows by sqrt(groups), and up to
+    /// `fault_budget(groups)` faulty tiles are masked exactly.
+    pub groups: usize,
+}
+
+impl SitePlan {
+    /// Plain analog execution: no digital routing, single replica.
+    pub fn analog(ks: Vec<f64>, noise: SiteNoise) -> SitePlan {
+        SitePlan { ks, noise, digital: false, groups: 1 }
+    }
+}
+
+/// Injected tile faults the redundant decode will mask this batch:
+/// site-replica hits on non-digital sites whose per-site hit count is
+/// within the median decode's design budget.
+pub fn masked_faults(plans: &[SitePlan], faults: TileFaults) -> u32 {
+    if faults.is_clean() {
+        return 0;
+    }
+    let bad = faults.stuck_mask | faults.dead_mask;
+    let mut masked = 0u32;
+    for (si, p) in plans.iter().enumerate() {
+        if p.digital {
+            continue;
+        }
+        let groups = p.groups.max(1);
+        let hit = (0..groups)
+            .filter(|&g| bad >> phys_tile(si, g, groups) & 1 == 1)
+            .count();
+        if hit > 0 && hit <= fault_budget(groups) {
+            masked += hit as u32;
+        }
+    }
+    masked
 }
 
 impl NativeModel {
@@ -83,6 +128,22 @@ impl NativeModel {
         plans: Option<&[SitePlan]>,
         rng: &mut Rng,
     ) -> Vec<f32> {
+        self.run_faulted(x, batch, plans, TileFaults::default(), rng)
+    }
+
+    /// [`run`](NativeModel::run) with injected physical-tile faults:
+    /// stuck/dead tiles corrupt the analog replicas they host (digital
+    /// sites and clean forwards are immune), and sites planned with
+    /// `groups > 1` decode the surviving replicas by element-wise
+    /// median, masking up to `fault_budget(groups)` hits exactly.
+    pub fn run_faulted(
+        &self,
+        x: &Features,
+        batch: usize,
+        plans: Option<&[SitePlan]>,
+        faults: TileFaults,
+        rng: &mut Rng,
+    ) -> Vec<f32> {
         if self.sites.is_empty() || batch == 0 {
             return Vec::new();
         }
@@ -107,25 +168,63 @@ impl NativeModel {
             }
             let mut out = vec![0.0f32; batch * s.n_channels];
             gemm_blocked(&xin, &ns.w, &mut out, batch, s.n_dot, s.n_channels);
-            if let Some(plans) = plans {
-                let p = &plans[si];
-                apply_weight_noise(
-                    &xin,
-                    &mut out,
-                    batch,
-                    s.n_dot,
-                    s.n_channels,
-                    &p.ks,
-                    p.noise.weight_std,
-                    rng,
-                );
-                apply_additive_noise(
-                    &mut out,
-                    s.n_channels,
-                    &p.ks,
-                    p.noise.additive_std,
-                    rng,
-                );
+            match plans {
+                Some(plans) if !plans[si].digital => {
+                    let p = &plans[si];
+                    let groups = p.groups.max(1);
+                    // Each replica sub-averages K/groups repetitions on
+                    // its own physical tile, so its one-shot noise std
+                    // grows by sqrt(groups); the median decode restores
+                    // the 1/sqrt(K) scaling at unchanged total energy.
+                    let sg = (groups as f64).sqrt();
+                    let mut reps: Vec<Vec<f32>> =
+                        Vec::with_capacity(groups);
+                    for g in 0..groups {
+                        let mut rep = if groups == 1 {
+                            std::mem::take(&mut out)
+                        } else {
+                            out.clone()
+                        };
+                        apply_weight_noise(
+                            &xin,
+                            &mut rep,
+                            batch,
+                            s.n_dot,
+                            s.n_channels,
+                            &p.ks,
+                            p.noise.weight_std * sg,
+                            rng,
+                        );
+                        apply_additive_noise(
+                            &mut rep,
+                            s.n_channels,
+                            &p.ks,
+                            p.noise.additive_std * sg,
+                            rng,
+                        );
+                        fault_tile(
+                            ns,
+                            &xin,
+                            &mut rep,
+                            batch,
+                            phys_tile(si, g, groups),
+                            faults,
+                        );
+                        reps.push(rep);
+                    }
+                    if groups == 1 {
+                        out = reps.pop().unwrap();
+                    } else {
+                        let views: Vec<&[f32]> =
+                            reps.iter().map(|r| r.as_slice()).collect();
+                        decode_replicas_into(
+                            &mut out,
+                            &views,
+                            DecodeMode::Median,
+                        );
+                    }
+                }
+                _ => {}
             }
             width = s.n_channels;
             cur = out;
@@ -174,9 +273,38 @@ impl NativeModelSet {
     }
 }
 
+/// Apply whatever fault the physical tile hosting this replica carries:
+/// a dead tile reads zero; a stuck tile gains the deterministic
+/// stuck-cell corruption (seeded per tile, stable across batches).
+fn fault_tile(
+    ns: &NativeSite,
+    xin: &[f32],
+    rep: &mut [f32],
+    batch: usize,
+    tile: u32,
+    faults: TileFaults,
+) {
+    if faults.dead_mask >> tile & 1 == 1 {
+        rep.fill(0.0);
+    } else if faults.stuck_mask >> tile & 1 == 1 {
+        let s = &ns.site;
+        apply_stuck_cells(
+            xin,
+            &ns.w,
+            rep,
+            batch,
+            s.n_dot,
+            s.n_channels,
+            s.w_hi_layer as f32,
+            faults.stuck_seed
+                ^ (tile as u64).wrapping_mul(0x9E3779B97F4A7C15),
+        );
+    }
+}
+
 /// RMS distance between two logit buffers over the first `n` elements,
 /// normalized by `range`.
-fn rms_error(a: &[f32], b: &[f32], n: usize, range: f64) -> f64 {
+pub(crate) fn rms_error(a: &[f32], b: &[f32], n: usize, range: f64) -> f64 {
     let n = n.min(a.len()).min(b.len());
     if n == 0 {
         return 0.0;
@@ -212,6 +340,11 @@ pub struct NativeAnalogBackend {
     /// Fault-injection multiplier on the one-repetition noise stds
     /// (1.0 = nominal). See `ExecutionBackend::set_noise_drift`.
     drift: f64,
+    /// Injected stuck/dead physical tiles (see
+    /// `ExecutionBackend::set_tile_faults`).
+    faults: TileFaults,
+    /// Replica groups per site for fault masking (1 = unprotected).
+    redundancy: usize,
 }
 
 impl NativeAnalogBackend {
@@ -228,7 +361,17 @@ impl NativeAnalogBackend {
             models,
             warned_mismatch: false,
             drift: 1.0,
+            faults: TileFaults::default(),
+            redundancy: 1,
         }
+    }
+
+    /// Protect every site with `n`-way redundant tile encoding (median
+    /// decode): masks up to `fault_budget(n)` faulty replicas per site
+    /// at unchanged energy.
+    pub fn with_redundancy(mut self, n: usize) -> NativeAnalogBackend {
+        self.redundancy = n.max(1);
+        self
     }
 
     fn model(&self, name: &str) -> Result<&Arc<NativeModel>> {
@@ -289,6 +432,7 @@ impl ExecutionBackend for NativeAnalogBackend {
                 energy_per_sample: 0.0,
                 cycles_per_sample: model.sites.len() as f64,
                 energy_per_layer: Vec::new(),
+                faults_masked: 0,
             };
         };
         if e.len() != meta.e_len {
@@ -330,7 +474,12 @@ impl ExecutionBackend for NativeAnalogBackend {
             let mut noise = site_noise(self.kind, s, meta, &self.hw);
             noise.additive_std *= self.drift;
             noise.weight_std *= self.drift;
-            plans.push(SitePlan { ks: plan.k_per_channel, noise });
+            plans.push(SitePlan {
+                ks: plan.k_per_channel,
+                noise,
+                digital: false,
+                groups: self.redundancy,
+            });
         }
         // Per-batch golden pass: measuring the served error costs one
         // extra digital forward per batch — a deliberate tradeoff
@@ -339,7 +488,8 @@ impl ExecutionBackend for NativeAnalogBackend {
         // simulated-fleet throughput). Sample batches here if a
         // host-bound native deployment ever needs the compute back.
         let clean = model.run(&x, rows, None, &mut rng);
-        let noisy = model.run(&x, rows, Some(&plans), &mut rng);
+        let noisy =
+            model.run_faulted(&x, rows, Some(&plans), self.faults, &mut rng);
         let classes = model.classes;
         let out_err = rms_error(
             &noisy,
@@ -354,11 +504,16 @@ impl ExecutionBackend for NativeAnalogBackend {
             energy_per_sample: energy,
             cycles_per_sample: cycles,
             energy_per_layer,
+            faults_masked: masked_faults(&plans, self.faults),
         }
     }
 
     fn set_noise_drift(&mut self, factor: f64) {
         self.drift = factor.max(0.0);
+    }
+
+    fn set_tile_faults(&mut self, faults: TileFaults) {
+        self.faults = faults;
     }
 }
 
@@ -401,6 +556,7 @@ impl ExecutionBackend for DigitalReferenceBackend {
             energy_per_sample: 0.0,
             cycles_per_sample: model.sites.len() as f64,
             energy_per_layer: Vec::new(),
+            faults_masked: 0,
         }
     }
 }

@@ -45,6 +45,7 @@ impl ExecutionBackend for PjrtBackend {
                 energy_per_sample: 0.0,
                 cycles_per_sample: 0.0,
                 energy_per_layer: Vec::new(),
+                faults_masked: 0,
             },
             Some(e) => {
                 let per_layer = per_layer_analog_cost(
@@ -69,6 +70,7 @@ impl ExecutionBackend for PjrtBackend {
                     energy_per_sample: energy,
                     cycles_per_sample: cycles,
                     energy_per_layer,
+                    faults_masked: 0,
                 }
             }
         }

@@ -15,6 +15,7 @@ use anyhow::Result;
 
 use super::telemetry::WindowStats;
 use crate::analog::{plan_layer, AveragingMode, HardwareConfig};
+use crate::backend::{hybrid_charged_cost, BackendKind};
 use crate::coordinator::scheduler::EnergyPolicy;
 use crate::runtime::artifact::ModelMeta;
 
@@ -126,11 +127,44 @@ impl EnergyGovernor {
         Ok((energy, cycles))
     }
 
-    /// Refine `scale` downward until the *predicted* quantized cost of
-    /// `base.scaled(scale)` fits the per-request budget (bounded
-    /// iterations; quantization makes cost piecewise in the scale).
+    /// Predicted (energy, cycles) per sample for a policy on a specific
+    /// execution backend. Hybrid devices charge their digital sites a
+    /// real per-MAC energy (`backend::DIGITAL_MAC_ENERGY_AJ` — exact
+    /// arithmetic is not free), so their cost only partially tracks the
+    /// scale; every other backend reduces to the quantized analog plan
+    /// of [`EnergyGovernor::predict`].
+    pub fn predict_backend(
+        kind: BackendKind,
+        meta: &ModelMeta,
+        hw: &HardwareConfig,
+        mode: AveragingMode,
+        policy: &EnergyPolicy,
+    ) -> Result<(f64, f64)> {
+        match kind {
+            BackendKind::Hybrid { .. } => {
+                let e = policy.e_vector(meta)?;
+                Ok(hybrid_charged_cost(
+                    meta,
+                    &e,
+                    hw,
+                    mode,
+                    kind.digital_fraction(),
+                ))
+            }
+            _ => Self::predict(meta, hw, mode, policy),
+        }
+    }
+
+    /// Refine `scale` downward until the *predicted* cost of
+    /// `base.scaled(scale)` on `kind` fits the per-request budget
+    /// (bounded iterations; quantization makes cost piecewise in the
+    /// scale). On a hybrid backend the digital share of the cost does
+    /// not shrink with the scale at all, so a budget below the digital
+    /// floor bottoms out at `floor` — the honest answer: only moving
+    /// the split (or the budget) can close that gap.
     pub fn fit_to_request_budget(
         &self,
+        kind: BackendKind,
         meta: &ModelMeta,
         hw: &HardwareConfig,
         mode: AveragingMode,
@@ -146,7 +180,7 @@ impl EnergyGovernor {
                 return floor;
             }
             let Ok((energy, _)) =
-                Self::predict(meta, hw, mode, &base.scaled(scale))
+                Self::predict_backend(kind, meta, hw, mode, &base.scaled(scale))
             else {
                 return scale;
             };
@@ -226,6 +260,71 @@ mod tests {
         // Rate fine (1x) but 20 units/req = 2x over -> halve.
         let s = g.propose(&window(1000.0, 20.0), 1.0);
         assert!((s - 0.5).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn all_digital_split_costs_more_than_the_analog_floor() {
+        use crate::backend::DIGITAL_MAC_ENERGY_AJ;
+        use crate::runtime::artifact::ModelMeta;
+
+        let meta = ModelMeta::synthetic("m", 8, 2, 4, 64, 250.0);
+        let hw = HardwareConfig::homodyne();
+        let mode = AveragingMode::Time;
+        let all_digital = BackendKind::Hybrid {
+            simulate_time: false,
+            digital_milli: 1000,
+            redundancy: 1,
+        };
+        let (e_dig, _) = EnergyGovernor::predict_backend(
+            all_digital,
+            &meta,
+            &hw,
+            mode,
+            &EnergyPolicy::Uniform(16.0),
+        )
+        .unwrap();
+        // Digital MACs are not free: the fully digital split charges
+        // every MAC the modeled 8-bit energy...
+        assert!(
+            (e_dig - meta.total_macs * DIGITAL_MAC_ENERGY_AJ).abs() < 1e-6,
+            "all-digital energy {e_dig}"
+        );
+        // ...which strictly exceeds the analog plan at the autotuner's
+        // floor (the learned policy scaled to its minimum).
+        let native = BackendKind::NativeAnalog { simulate_time: false };
+        let floor = EnergyPolicy::Uniform(16.0).scaled(0.25f64.powf(1.5));
+        let (e_floor, _) = EnergyGovernor::predict_backend(
+            native, &meta, &hw, mode, &floor,
+        )
+        .unwrap();
+        assert!(
+            e_dig > e_floor,
+            "all-digital {e_dig} must out-cost analog floor {e_floor}"
+        );
+    }
+
+    #[test]
+    fn hybrid_fit_bottoms_out_when_budget_is_below_the_digital_share() {
+        use crate::runtime::artifact::ModelMeta;
+
+        let meta = ModelMeta::synthetic("m", 8, 2, 4, 64, 250.0);
+        let hw = HardwareConfig::homodyne();
+        let g = gov(None, Some(10.0)); // far below the digital share
+        let kind = BackendKind::Hybrid {
+            simulate_time: false,
+            digital_milli: 500,
+            redundancy: 1,
+        };
+        let s = g.fit_to_request_budget(
+            kind,
+            &meta,
+            &hw,
+            AveragingMode::Time,
+            &EnergyPolicy::Uniform(16.0),
+            1.0,
+            0.05,
+        );
+        assert!((s - 0.05).abs() < 1e-12, "{s}");
     }
 
     #[test]

@@ -240,8 +240,12 @@ pub fn control_loop(
                 // Fit the per-request budget on every device: predicted
                 // cost is monotone in the scale, so applying the fits in
                 // sequence lands on a scale that fits the whole fleet.
+                // The fit is backend-aware — a hybrid device's digital
+                // share charges real MAC energy that no precision scale
+                // can reduce.
                 for d in &ctx.devices {
                     scale = governor.fit_to_request_budget(
+                        d.backend,
                         meta,
                         &d.hw,
                         d.averaging,

@@ -59,7 +59,9 @@
 //! ```
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{
+    AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex, PoisonError, RwLock};
 use std::thread::JoinHandle;
@@ -70,7 +72,7 @@ use anyhow::Result;
 use crate::analog::{AveragingMode, EnergyLedger, HardwareConfig};
 use crate::backend::{
     charged_analog_cost, make_backend, BackendKind, BatchJob,
-    ExecutionBackend, NativeModelSet,
+    ExecutionBackend, NativeModelSet, TileFaults,
 };
 use crate::control::{
     AdmissionGate, BatchSample, ControlShared, ModelControl, WindowStats,
@@ -147,6 +149,17 @@ pub enum Fault {
     /// `out_err` rises; an error-SLO autotuner answers with more
     /// redundancy K.
     NoiseDrift(f64),
+    /// Corrupt one physical weight tile with stuck-at cells (native
+    /// and hybrid backends): every batch routed over that tile sees a
+    /// deterministic, `seed`-keyed subset of its weights pinned to the
+    /// device's stuck-at-high conductance. Redundant tile encoding
+    /// (`BackendKind::Hybrid { redundancy, .. }`) masks the hit as
+    /// long as the faulty replicas stay within the decode budget.
+    StuckCell { tile: u32, seed: u64 },
+    /// Kill one physical weight tile outright: its partial products
+    /// read as zero. The harshest maskable fault — an unprotected
+    /// site loses the whole layer output.
+    DeadTile { tile: u32 },
 }
 
 /// Per-device fault state, shared between the fleet handle (injection
@@ -159,6 +172,19 @@ struct FaultCell {
     /// is a legal injection meaning "noiseless device".
     drift_bits: AtomicU64,
     dead: AtomicBool,
+    /// Stuck-cell tile bitmask (bit `tile % 64`). Faults accumulate —
+    /// tiles only un-stick when the fleet restarts.
+    stuck_mask: AtomicU64,
+    /// Seed keying *which* cells are stuck on the faulted tiles; the
+    /// latest injection's seed wins (injections are serialized through
+    /// the deterministic scenario driver, so replays agree).
+    stuck_seed: AtomicU64,
+    /// Dead-tile bitmask (bit `tile % 64`).
+    dead_mask: AtomicU64,
+    /// Runtime override for a hybrid backend's digital fraction, in
+    /// milli-units. `u32::MAX` = unset (the device follows its
+    /// `BackendKind::Hybrid { digital_milli, .. }` spec).
+    digital_milli: AtomicU32,
 }
 
 impl Default for FaultCell {
@@ -167,6 +193,10 @@ impl Default for FaultCell {
             stall_ns: AtomicU64::new(0),
             drift_bits: AtomicU64::new(1.0f64.to_bits()),
             dead: AtomicBool::new(false),
+            stuck_mask: AtomicU64::new(0),
+            stuck_seed: AtomicU64::new(0),
+            dead_mask: AtomicU64::new(0),
+            digital_milli: AtomicU32::new(u32::MAX),
         }
     }
 }
@@ -182,6 +212,15 @@ impl FaultCell {
             Fault::NoiseDrift(f) => {
                 self.drift_bits.store(f.to_bits(), Ordering::Relaxed);
             }
+            Fault::StuckCell { tile, seed } => {
+                self.stuck_seed.store(seed, Ordering::Relaxed);
+                self.stuck_mask
+                    .fetch_or(1u64 << (tile % 64), Ordering::Relaxed);
+            }
+            Fault::DeadTile { tile } => {
+                self.dead_mask
+                    .fetch_or(1u64 << (tile % 64), Ordering::Relaxed);
+            }
         }
     }
 
@@ -195,6 +234,28 @@ impl FaultCell {
 
     fn is_dead(&self) -> bool {
         self.dead.load(Ordering::Acquire)
+    }
+
+    /// Snapshot of the injected tile faults, consumed by the worker at
+    /// each batch boundary and handed to the execution backend.
+    fn tile_faults(&self) -> TileFaults {
+        TileFaults {
+            stuck_mask: self.stuck_mask.load(Ordering::Relaxed),
+            stuck_seed: self.stuck_seed.load(Ordering::Relaxed),
+            dead_mask: self.dead_mask.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The runtime digital-fraction override, if one was set.
+    fn digital_fraction(&self) -> Option<f64> {
+        match self.digital_milli.load(Ordering::Relaxed) {
+            u32::MAX => None,
+            m => Some(m.min(1000) as f64 / 1000.0),
+        }
+    }
+
+    fn set_digital_milli(&self, milli: u32) {
+        self.digital_milli.store(milli.min(1000), Ordering::Relaxed);
     }
 }
 
@@ -579,6 +640,8 @@ impl DeviceFleet {
             Fault::Stall(d) => (0.0, d.as_nanos() as f64),
             Fault::Die => (1.0, 0.0),
             Fault::NoiseDrift(f) => (2.0, f),
+            Fault::StuckCell { tile, .. } => (3.0, tile as f64),
+            Fault::DeadTile { tile } => (4.0, tile as f64),
         };
         self.shared.obs.trace.push(
             TraceKind::FaultInjected,
@@ -590,6 +653,40 @@ impl DeviceFleet {
             0.0,
         );
         w.fault.inject(fault);
+        self.clock.notify();
+        true
+    }
+
+    /// Move one device's hybrid digital fraction at runtime (the
+    /// autotuner's energy/robustness trade knob). Returns false for an
+    /// out-of-range device id. Takes effect at the device's next batch;
+    /// non-hybrid backends ignore the override (their
+    /// `set_digital_fraction` hook is a no-op). Traced as `SplitShift`
+    /// (`a` = previous fraction, `b` = new) so replays can audit every
+    /// split move.
+    pub fn set_digital_fraction(
+        &self,
+        device: usize,
+        fraction: f64,
+    ) -> bool {
+        let Some(w) = self.workers.get(device) else {
+            return false;
+        };
+        let fraction = fraction.clamp(0.0, 1.0);
+        let old = w
+            .fault
+            .digital_fraction()
+            .unwrap_or_else(|| w.spec.backend.digital_fraction());
+        self.shared.obs.trace.push(
+            TraceKind::SplitShift,
+            None,
+            Some(device as u32),
+            old,
+            fraction,
+            0.0,
+            0.0,
+        );
+        w.fault.set_digital_milli((fraction * 1000.0).round() as u32);
         self.clock.notify();
         true
     }
@@ -988,6 +1085,10 @@ fn worker_loop(ctx: WorkerCtx) {
                     ctx.clock.sleep(ctx.slot, stall);
                 }
                 backend.set_noise_drift(ctx.fault.drift());
+                backend.set_tile_faults(ctx.fault.tile_faults());
+                if let Some(frac) = ctx.fault.digital_fraction() {
+                    backend.set_digital_fraction(frac);
+                }
                 if let Some(bundle) = ctx.bundles.get(&b.model) {
                     execute_batch(
                         &ctx,
@@ -1212,6 +1313,19 @@ fn execute_batch(
     // reflects this batch's completion.
     drop(gate_guard);
     // Per-batch measurements, weighted by the requests they cover.
+    if out.faults_masked > 0 {
+        // Redundant decode absorbed injected tile faults this batch —
+        // traced so chaos suites can assert masking actually engaged.
+        ctx.shared.obs.trace.push(
+            TraceKind::FaultMasked,
+            ctx.shared.obs.model_id(&meta.name),
+            Some(device),
+            out.faults_masked as f64,
+            0.0,
+            0.0,
+            0.0,
+        );
+    }
     obs.energy_per_req.record(energy_per_sample.max(0.0).round() as u64);
     if out.out_err >= 0.0 {
         let ticks =
@@ -1284,6 +1398,21 @@ mod tests {
         ] {
             assert_eq!(pick_device(p, 0, &pending, &caps, &e), None);
         }
+    }
+
+    #[test]
+    fn fault_cell_accumulates_tile_faults() {
+        let c = FaultCell::default();
+        assert!(c.tile_faults().is_clean());
+        assert_eq!(c.digital_fraction(), None);
+        c.inject(Fault::StuckCell { tile: 3, seed: 9 });
+        c.inject(Fault::DeadTile { tile: 65 });
+        let f = c.tile_faults();
+        assert_eq!(f.stuck_mask, 1 << 3);
+        assert_eq!(f.stuck_seed, 9);
+        assert_eq!(f.dead_mask, 1 << 1, "tile ids wrap at 64");
+        c.set_digital_milli(250);
+        assert_eq!(c.digital_fraction(), Some(0.25));
     }
 
     #[test]

@@ -400,6 +400,19 @@ impl Coordinator {
         self.fleet.inject(device, fault)
     }
 
+    /// Move one hybrid device's digital fraction at runtime — the
+    /// energy/robustness trade knob (see
+    /// `crate::backend::HybridBackend`). Returns false for an
+    /// out-of-range device id; non-hybrid devices accept and ignore
+    /// the override. Traced as `SplitShift`.
+    pub fn set_digital_fraction(
+        &self,
+        device: usize,
+        fraction: f64,
+    ) -> bool {
+        self.fleet.set_digital_fraction(device, fraction)
+    }
+
     /// True while the device worker is running (not killed/panicked).
     pub fn device_alive(&self, device: usize) -> bool {
         self.fleet.device_alive(device)

@@ -49,8 +49,8 @@ pub enum TraceKind {
     /// A precision policy was hot-swapped out-of-band for `model`.
     PolicySwap = 4,
     /// A fault was injected into `device`: `a` = fault code (0 stall,
-    /// 1 die, 2 noise drift), `b` = parameter (stall seconds / drift
-    /// factor).
+    /// 1 die, 2 noise drift, 3 stuck cell, 4 dead tile), `b` =
+    /// parameter (stall seconds / drift factor / physical tile id).
     FaultInjected = 5,
     /// `device`'s worker died (injected death or panic — never clean
     /// shutdown).
@@ -58,6 +58,12 @@ pub enum TraceKind {
     /// A batch stranded on a dead device was recovered for re-route:
     /// `a` = requests in the batch.
     Reroute = 7,
+    /// `device`'s hybrid digital fraction was moved (operator knob or
+    /// autotuner trade): `a` = previous fraction, `b` = new fraction.
+    SplitShift = 8,
+    /// `device`'s redundant decode masked injected tile faults for a
+    /// served batch: `a` = masked site-replica hits.
+    FaultMasked = 9,
 }
 
 impl TraceKind {
@@ -71,6 +77,8 @@ impl TraceKind {
             5 => TraceKind::FaultInjected,
             6 => TraceKind::DeviceDeath,
             7 => TraceKind::Reroute,
+            8 => TraceKind::SplitShift,
+            9 => TraceKind::FaultMasked,
             _ => return None,
         })
     }
@@ -85,6 +93,8 @@ impl TraceKind {
             TraceKind::FaultInjected => "fault_injected",
             TraceKind::DeviceDeath => "device_death",
             TraceKind::Reroute => "reroute",
+            TraceKind::SplitShift => "split_shift",
+            TraceKind::FaultMasked => "fault_masked",
         }
     }
 }
@@ -328,6 +338,26 @@ mod tests {
             ..e
         };
         assert_eq!(unpack(&pack(&e2)), Some(e2));
+    }
+
+    #[test]
+    fn hybrid_fault_kinds_roundtrip() {
+        for kind in [TraceKind::SplitShift, TraceKind::FaultMasked] {
+            let e = TraceEvent {
+                t_us: 9,
+                seq: 1,
+                kind,
+                model: None,
+                device: Some(2),
+                a: 0.25,
+                b: 0.5,
+                c: 0.0,
+                d: 0.0,
+            };
+            assert_eq!(unpack(&pack(&e)), Some(e.clone()));
+        }
+        assert_eq!(TraceKind::SplitShift.label(), "split_shift");
+        assert_eq!(TraceKind::FaultMasked.label(), "fault_masked");
     }
 
     #[test]

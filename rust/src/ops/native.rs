@@ -131,10 +131,10 @@ impl NativeOps {
                     .iter()
                     .map(|&v| (v as f64 / base).max(f64::MIN_POSITIVE))
                     .collect();
-                SitePlan {
+                SitePlan::analog(
                     ks,
-                    noise: site_noise(self.kind, s, &self.meta, &self.hw),
-                }
+                    site_noise(self.kind, s, &self.meta, &self.hw),
+                )
             })
             .collect()
     }

@@ -65,6 +65,28 @@ pub struct TrainResult {
     pub final_acc: f32,
 }
 
+impl TrainResult {
+    /// Noise-site indices ranked most-error-sensitive first. The Eq.-14
+    /// trainer spends its budget where noise hurts accuracy most, so
+    /// the learned per-layer energy *is* the sensitivity signal: a
+    /// layer allocated more energy/MAC needs its GEMM protected first.
+    /// This is the ranking a hybrid split consumes when deciding which
+    /// layers to run on exact digital tiles
+    /// (`crate::backend::hybrid_split` applies the same ordering to a
+    /// scheduled e-vector). Ties keep site order, so the ranking is
+    /// deterministic.
+    pub fn sensitivity_ranking(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.e_per_layer.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.e_per_layer[b]
+                .partial_cmp(&self.e_per_layer[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx
+    }
+}
+
 pub fn train_energy(
     ops: &dyn ModelOps,
     data: &Dataset,
@@ -227,6 +249,19 @@ mod tests {
           ]
         }"#;
         ModelMeta::parse(text).unwrap()
+    }
+
+    #[test]
+    fn sensitivity_ranking_orders_sites_by_learned_energy() {
+        let r = TrainResult {
+            e: vec![],
+            e_per_layer: vec![4.0, 32.0, 4.0, 16.0],
+            avg_e: 0.0,
+            loss_history: vec![],
+            final_acc: 0.0,
+        };
+        // Highest learned energy first; the 4.0 tie keeps site order.
+        assert_eq!(r.sensitivity_ranking(), vec![1, 3, 0, 2]);
     }
 
     #[test]

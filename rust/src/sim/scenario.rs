@@ -43,6 +43,11 @@ pub enum SimEvent {
     /// fully determined by the virtual timeline — the swap replays
     /// bit-identically.
     SetPolicy { t_ns: u64, model: String, precision: ModelPrecision },
+    /// Move a hybrid device's digital fraction mid-run (the
+    /// energy/robustness knob; traced as `SplitShift`). Applied at a
+    /// quiescent point, so which batches run under which split replays
+    /// bit-identically. Non-hybrid devices ignore it.
+    SplitShift { t_ns: u64, device: usize, fraction: f64 },
 }
 
 impl SimEvent {
@@ -50,13 +55,23 @@ impl SimEvent {
         match self {
             SimEvent::Submit { t_ns, .. }
             | SimEvent::Fault { t_ns, .. }
-            | SimEvent::SetPolicy { t_ns, .. } => *t_ns,
+            | SimEvent::SetPolicy { t_ns, .. }
+            | SimEvent::SplitShift { t_ns, .. } => *t_ns,
         }
     }
 
     /// Convenience constructor for fault events.
     pub fn fault_at(t: Duration, device: usize, fault: Fault) -> SimEvent {
         SimEvent::Fault { t_ns: t.as_nanos() as u64, device, fault }
+    }
+
+    /// Convenience constructor for digital-fraction moves.
+    pub fn split_at(t: Duration, device: usize, fraction: f64) -> SimEvent {
+        SimEvent::SplitShift {
+            t_ns: t.as_nanos() as u64,
+            device,
+            fraction,
+        }
     }
 
     /// Convenience constructor for policy hot-swap events.
@@ -286,6 +301,9 @@ pub fn run_scenario(
             }
             SimEvent::SetPolicy { model, precision, .. } => {
                 coord.set_policy(model, precision.clone());
+            }
+            SimEvent::SplitShift { device, fraction, .. } => {
+                coord.set_digital_fraction(*device, *fraction);
             }
         }
         // Play the event out (zero-width advance = deliver messages,

@@ -18,7 +18,7 @@ use std::time::Duration;
 use dynaprec::analog::{AveragingMode, HardwareConfig};
 use dynaprec::backend::{
     BackendKind, BatchJob, DigitalReferenceBackend, ExecutionBackend,
-    NativeAnalogBackend, NativeModelSet,
+    NativeAnalogBackend, NativeModelSet, TileFaults,
 };
 use dynaprec::control::{AutotunerConfig, ControlConfig};
 use dynaprec::coordinator::scheduler::ModelPrecision;
@@ -92,6 +92,51 @@ fn mean_err(e_layer: f64, reps: u32) -> f64 {
         / reps as f64
 }
 
+/// Like `native_run`, but with tile-level redundancy and injected
+/// stuck-cell faults; returns (out_err, energy_per_sample).
+fn faulted_run(
+    e_layer: f64,
+    seed: u32,
+    redundancy: usize,
+    faults: TileFaults,
+) -> (f64, f64) {
+    let m = meta();
+    let natives = Arc::new(NativeModelSet::build([&m]));
+    let bundle = ModelBundle::synthetic(meta());
+    let e = m
+        .broadcast_per_layer(&[e_layer, e_layer])
+        .expect("2 noise sites");
+    let mut native = NativeAnalogBackend::new(
+        HardwareConfig::broadcast_weight(),
+        AveragingMode::Time,
+        natives,
+    )
+    .with_redundancy(redundancy);
+    native.set_tile_faults(faults);
+    let feats = x();
+    let out = native.execute(&BatchJob {
+        bundle: &bundle,
+        x: &feats,
+        n_real: BATCH,
+        seed,
+        e: Some(&e),
+        tag: "thermal.fwd",
+    });
+    (out.out_err as f64, out.energy_per_sample)
+}
+
+fn mean_faulted_err(
+    e_layer: f64,
+    reps: u32,
+    redundancy: usize,
+    faults: TileFaults,
+) -> f64 {
+    (0..reps)
+        .map(|s| faulted_run(e_layer, 2000 + s, redundancy, faults).0)
+        .sum::<f64>()
+        / reps as f64
+}
+
 #[test]
 fn repetition_averaging_shrinks_error_like_inv_sqrt_k() {
     // K = 1 vs K = 16: the measured output error must shrink ~4x
@@ -140,6 +185,56 @@ fn native_converges_to_digital_reference_at_large_k() {
         (err1 - direct).abs() < 1e-6,
         "reported {err1} vs direct {direct}"
     );
+}
+
+#[test]
+fn redundancy_restores_inv_sqrt_k_under_stuck_faults() {
+    // One stuck tile on site 0. Unprotected, the corruption is a
+    // constant error floor that no amount of averaging energy removes;
+    // with 3-way redundant tiles the median decode masks the faulty
+    // replica and the 1/sqrt(K) law comes back.
+    let hit_one_replica = TileFaults {
+        stuck_mask: 1 << 1, // site 0, replica 1 of 3
+        stuck_seed: 0xFEED,
+        dead_mask: 0,
+    };
+    let hit_site = TileFaults {
+        stuck_mask: 1 << 0, // site 0's only tile when unprotected
+        stuck_seed: 0xFEED,
+        dead_mask: 0,
+    };
+    let prot = |e: f64| mean_faulted_err(e, 20, 3, hit_one_replica);
+    let unprot = |e: f64| mean_faulted_err(e, 20, 1, hit_site);
+
+    // Protected: scaling energy 1 -> 16 still shrinks the error ~4x.
+    let ratio_prot = prot(1.0) / prot(16.0);
+    assert!(
+        (3.0..=6.5).contains(&ratio_prot),
+        "protected err(K=1)/err(K=16) = {ratio_prot} (want ~4)"
+    );
+
+    // Unprotected: the same energy raise buys far less — the constant
+    // fault floor dominates once averaging noise drops below it.
+    let ratio_unprot = unprot(1.0) / unprot(16.0);
+    assert!(
+        ratio_unprot < 2.8 && ratio_unprot < ratio_prot,
+        "unprotected error should plateau at the fault floor: \
+         ratio {ratio_unprot} vs protected {ratio_prot}"
+    );
+
+    // The floor itself: at K -> huge the unprotected error is pure
+    // fault corruption, while the redundant decode masks it away.
+    let floor = unprot(1e6);
+    let masked = prot(1e6);
+    assert!(floor > 0.02, "fault floor should be visible: {floor}");
+    assert!(masked < 0.01, "masked residual {masked}");
+    assert!(floor > 5.0 * masked, "floor {floor} vs masked {masked}");
+
+    // Redundant tiles split the same repetition budget: the protection
+    // is energy-free by construction.
+    let (_, e_prot) = faulted_run(16.0, 1, 3, hit_one_replica);
+    let (_, e_unprot) = faulted_run(16.0, 1, 1, hit_site);
+    assert!((e_prot - e_unprot).abs() < 1e-9, "{e_prot} vs {e_unprot}");
 }
 
 #[test]

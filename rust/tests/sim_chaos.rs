@@ -21,10 +21,11 @@ use dynaprec::coordinator::{
 use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
 use dynaprec::sim::{
     heavy_tail, merge, run_scenario, steady, Scenario, SimEvent,
-    TrafficSpec,
+    SimReport, TrafficSpec,
 };
 
 const MODEL: &str = "m";
+const HYB: &str = "hyb";
 
 /// 2 noise sites x 4 channels, 2000 MACs/sample; per-layer energy 16
 /// costs 32 device cycles and 32000 energy units per sample.
@@ -544,4 +545,240 @@ fn different_seeds_produce_different_digests() {
         a.digest, b.digest,
         "different traces must not collide in the digest"
     );
+}
+
+/// 4 noise sites x 4 channels, 4000 MACs/sample — the hybrid-split
+/// testbed. On the thermal broadcast-and-weight device a per-layer
+/// energy of 16 buys each analog site a K=16 averaging schedule.
+fn hybrid_bundle(batch: usize) -> ModelBundle {
+    ModelBundle::synthetic(ModelMeta::synthetic(HYB, batch, 4, 4, 64, 250.0))
+}
+
+fn hybrid_sched() -> PrecisionScheduler {
+    let mut s = PrecisionScheduler::new();
+    s.set(
+        HYB,
+        ModelPrecision {
+            noise: "thermal".into(),
+            policy: EnergyPolicy::PerLayer(vec![16.0; 4]),
+        },
+    );
+    s
+}
+
+fn hybrid_dev(name: &str, milli: u16, redundancy: u8) -> DeviceSpec {
+    DeviceSpec::new(
+        name,
+        HardwareConfig::broadcast_weight(),
+        AveragingMode::Time,
+    )
+    .with_backend(BackendKind::Hybrid {
+        simulate_time: true,
+        digital_milli: milli,
+        redundancy,
+    })
+}
+
+/// 10 virtual seconds of steady traffic over a two-device hybrid fleet
+/// (same seeded trace every call), with the given fault script merged
+/// in. With uniform per-layer energies the split digitizes the lowest-
+/// indexed sites first, so `digital_milli = 250` puts site 0 on the
+/// exact plane and sites 1..3 on redundant analog tiles.
+fn run_hybrid_fleet(
+    milli: u16,
+    redundancy: u8,
+    faults: Vec<SimEvent>,
+) -> SimReport {
+    let spec = TrafficSpec::new(HYB, Duration::from_secs(10))
+        .with_bucket(Duration::from_millis(50))
+        .with_seed(33);
+    let events = merge(vec![steady(&spec, 200.0), faults]);
+    let cfg = fleet_cfg(
+        vec![
+            hybrid_dev("h0", milli, redundancy),
+            hybrid_dev("h1", milli, redundancy),
+        ],
+        DispatchPolicy::LeastQueueDepth,
+        16,
+    );
+    let scenario = Scenario::new(events).with_tail(Duration::from_secs(5));
+    run_scenario(vec![hybrid_bundle(16)], hybrid_sched(), cfg, &scenario)
+        .unwrap()
+}
+
+/// The PR's acceptance scenario. Stuck-cell and dead-tile faults land
+/// mid-run on every device of a hybrid fleet with 3-way replica
+/// coding; the run replays bit-identically (response, trace and
+/// metrics digests), the trace shows each injection strictly before
+/// the replica decode that masks it, and the fleet holds the p95
+/// output-error SLO at under half the energy per request of the
+/// all-digital fallback serving the same faulted trace.
+#[test]
+fn hybrid_fleet_holds_error_slo_at_half_digital_energy_under_faults() {
+    use dynaprec::obs::TraceKind;
+    // At redundancy 3 the analog sites 1..3 own physical tiles 3..12
+    // (site*3+group): kill site 1's middle replica and stick cells in
+    // site 2's last one — both within every site's 1-replica decode
+    // budget.
+    let protected_faults = || {
+        let t = Duration::from_secs(3);
+        vec![
+            SimEvent::fault_at(t, 0, Fault::DeadTile { tile: 4 }),
+            SimEvent::fault_at(
+                t,
+                0,
+                Fault::StuckCell { tile: 8, seed: 0xC0FFEE },
+            ),
+            SimEvent::fault_at(t, 1, Fault::DeadTile { tile: 4 }),
+            SimEvent::fault_at(
+                t,
+                1,
+                Fault::StuckCell { tile: 8, seed: 0xC0FFEE },
+            ),
+        ]
+    };
+    let a = run_hybrid_fleet(250, 3, protected_faults());
+    let b = run_hybrid_fleet(250, 3, protected_faults());
+    assert!(a.ok(), "invariants violated:\n{}", a.violations.join("\n"));
+    assert_eq!(a.served, a.submitted, "nothing sheds at this load");
+    // Seeded corruption replays bit-identically: responses, decision
+    // trace, metrics snapshot, energy ledger.
+    assert_eq!(a.digest, b.digest, "faulted run must replay");
+    assert_eq!(a.trace_digest, b.trace_digest, "trace must replay");
+    assert_eq!(a.metrics_digest, b.metrics_digest, "metrics must replay");
+    assert_eq!(
+        a.stats.ledger.total_energy.to_bits(),
+        b.stats.ledger.total_energy.to_bits(),
+        "energy ledger must replay exactly"
+    );
+    // Causal order: the injected dead tile strictly precedes the first
+    // replica decode that masks it.
+    let fi = a
+        .trace
+        .iter()
+        .find(|e| e.kind == TraceKind::FaultInjected && e.a == 4.0)
+        .expect("dead-tile injection must be traced");
+    assert_eq!(fi.b, 4.0, "trace param carries the physical tile id");
+    let fm = a
+        .trace
+        .iter()
+        .find(|e| e.kind == TraceKind::FaultMasked)
+        .expect("redundant decode must trace the masked faults");
+    assert!(fm.seq > fi.seq, "mask must follow its injection");
+    assert!(fm.a >= 1.0, "masked replica-hit count rides in the trace");
+
+    // The SLO: the protected fleet's p95 error stays at the clean
+    // fleet's noise floor; the same faults on an unprotected fleet
+    // (redundancy 1 -> site i on tile i, zero decode budget) blow
+    // straight past it.
+    let clean = run_hybrid_fleet(250, 3, vec![]);
+    let t = Duration::from_secs(3);
+    let unprot = run_hybrid_fleet(
+        250,
+        1,
+        vec![
+            SimEvent::fault_at(t, 0, Fault::DeadTile { tile: 1 }),
+            SimEvent::fault_at(
+                t,
+                0,
+                Fault::StuckCell { tile: 2, seed: 0xC0FFEE },
+            ),
+            SimEvent::fault_at(t, 1, Fault::DeadTile { tile: 1 }),
+            SimEvent::fault_at(
+                t,
+                1,
+                Fault::StuckCell { tile: 2, seed: 0xC0FFEE },
+            ),
+        ],
+    );
+    const SLO: f64 = 0.25;
+    let p95 = a.p95_out_err.expect("hybrid fleet measures output error");
+    let clean_p95 = clean.p95_out_err.expect("clean baseline");
+    let un_p95 = unprot.p95_out_err.expect("unprotected baseline");
+    assert!(p95 <= SLO, "protected fleet broke the SLO: p95 {p95}");
+    assert!(
+        p95 <= 1.5 * clean_p95 + 0.02,
+        "masking should hold the faulted error at the noise floor: \
+         faulted {p95} vs clean {clean_p95}"
+    );
+    assert!(
+        un_p95 > 2.0 * p95.max(0.01),
+        "without redundancy the same faults must dominate the error: \
+         unprotected {un_p95} vs protected {p95}"
+    );
+    assert!(
+        unprot.trace.iter().all(|e| e.kind != TraceKind::FaultMasked),
+        "redundancy 1 has no decode budget: nothing may mask"
+    );
+
+    // The energy bar: the all-digital fallback serves the same faulted
+    // trace exactly (digital sites are immune), but at more than twice
+    // the energy per request.
+    let digital = run_hybrid_fleet(1000, 3, protected_faults());
+    assert_eq!(digital.served, a.served, "same trace, same service");
+    assert!(
+        digital.p95_out_err.unwrap_or(0.0) < 1e-6,
+        "all-digital fallback is exact"
+    );
+    let e_hybrid = a.stats.ledger.total_energy / a.served as f64;
+    let e_digital =
+        digital.stats.ledger.total_energy / digital.served as f64;
+    assert!(
+        e_hybrid <= 0.5 * e_digital,
+        "hybrid spends {e_hybrid} aJ/req, must be at most half the \
+         all-digital fallback's {e_digital}"
+    );
+}
+
+/// The digital-fraction runtime knob under chaos: a stuck cell lands
+/// on an *unprotected* analog site, and an operator answers mid-run by
+/// digitizing that site. The split shift is traced strictly after the
+/// injection it answers, carries old and new fractions, and the whole
+/// episode replays bit-identically.
+#[test]
+fn split_shift_digitizes_a_stuck_site_and_replays() {
+    use dynaprec::obs::TraceKind;
+    let run = || {
+        run_hybrid_fleet(
+            250,
+            1,
+            vec![
+                // Tile 1 hosts site 1's only replica at redundancy 1.
+                SimEvent::fault_at(
+                    Duration::from_secs(3),
+                    0,
+                    Fault::StuckCell { tile: 1, seed: 7 },
+                ),
+                // Fraction 0.5 digitizes sites 0 and 1 -> the stuck
+                // tile no longer touches any analog site.
+                SimEvent::split_at(Duration::from_secs(5), 0, 0.5),
+            ],
+        )
+    };
+    let a = run();
+    let b = run();
+    assert!(a.ok(), "invariants violated:\n{}", a.violations.join("\n"));
+    assert_eq!(a.served, a.submitted, "the fleet keeps serving");
+    assert_eq!(a.digest, b.digest, "knob move must replay");
+    assert_eq!(a.trace_digest, b.trace_digest, "trace must replay");
+    let fi = a
+        .trace
+        .iter()
+        .find(|e| e.kind == TraceKind::FaultInjected)
+        .expect("stuck-cell injection must be traced");
+    assert_eq!(fi.a, 3.0, "fault code 3 = StuckCell");
+    assert_eq!(fi.b, 1.0, "trace param carries the tile id");
+    let ss = a
+        .trace
+        .iter()
+        .find(|e| e.kind == TraceKind::SplitShift)
+        .expect("the split shift must be traced");
+    assert!(ss.seq > fi.seq, "the shift answers the fault");
+    assert_eq!(ss.device, Some(0));
+    assert!(
+        (ss.a - 0.25).abs() < 1e-9,
+        "old fraction comes from the device spec: {}",
+        ss.a
+    );
+    assert!((ss.b - 0.5).abs() < 1e-9, "new fraction: {}", ss.b);
 }
