@@ -11,8 +11,11 @@
 //!
 //! Exits non-zero if the snapshot is missing what the dashboards need:
 //! request-level latency tails (p50 <= p99, both > 0), a non-empty
-//! decision trace, and the Prometheus quantile series. Wired into CI
-//! as an observability smoke.
+//! decision trace, the Prometheus quantile series, per-phase span
+//! attribution (the burst runs with 1-in-1 span sampling), and a fired
+//! burn-rate alert (the burst's queueing latency blows the tight
+//! alerting SLO configured below). Wired into CI as an observability
+//! smoke.
 //!
 //! Run: `cargo run --release --example observe_fleet`
 
@@ -28,6 +31,7 @@ use dynaprec::coordinator::{
     DispatchPolicy, EnergyPolicy, FleetConfig, PrecisionScheduler,
 };
 use dynaprec::data::Features;
+use dynaprec::obs::{AlertConfig, Phase, SpanConfig, TraceKind};
 use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
 
 const MODEL: &str = "synth";
@@ -77,6 +81,19 @@ fn main() -> Result<()> {
             admission: AdmissionConfig {
                 queue_soft_limit: 1_000,
                 queue_hard_limit: 50_000,
+            },
+            // Trace every request: the burst is small and the smoke
+            // wants every phase histogram populated.
+            spans: SpanConfig::every(1),
+            // The burst queues ~100ms of work behind a 2ms alerting
+            // SLO: the latency burn is sustained and the alert must
+            // fire while the queue drains.
+            alerts: AlertConfig {
+                fast_window: 2,
+                slow_window: 2,
+                min_ticks: 2,
+                slo_p99_us: 2_000.0,
+                ..Default::default()
             },
             ..Default::default()
         },
@@ -148,14 +165,62 @@ fn main() -> Result<()> {
         eprintln!("FAIL: json export is missing fields");
         failed = true;
     }
+    // Span phase attribution: with 1-in-1 sampling every served request
+    // left a span, so the queue and execute phase histograms (and the
+    // analog-plane energy histogram) must all be populated.
+    let queue = &m.stats.obs.phase_us[Phase::Queue as usize];
+    let exec = &m.stats.obs.phase_us[Phase::Execute as usize];
+    if m.stats.obs.span_events == 0
+        || queue.count() == 0
+        || exec.count() == 0
+        || exec.quantile(0.50) <= 0.0
+        || m.stats.obs.plane_analog_aj.count() == 0
+    {
+        eprintln!(
+            "FAIL: span phase attribution missing ({} spans, queue \
+             count {}, execute count {})",
+            m.stats.obs.span_events,
+            queue.count(),
+            exec.count()
+        );
+        failed = true;
+    }
+    if !prom.contains("dynaprec_phase_us{phase=\"execute\",quantile=\"0.99\"}")
+        || !prom.contains("dynaprec_span_events_total")
+    {
+        eprintln!("FAIL: prometheus export is missing the phase series");
+        failed = true;
+    }
+    if !js.contains("\"phases\"") || !js.contains("\"spans\"") {
+        eprintln!("FAIL: json export is missing the span sections");
+        failed = true;
+    }
+    // Burn-rate alerting: the queued burst held p99 far over the 2ms
+    // alerting SLO for many control ticks — the latency alert must
+    // have fired into the decision trace.
+    let fired = coord
+        .trace()
+        .iter()
+        .any(|e| e.kind == TraceKind::AlertFire);
+    if !fired {
+        eprintln!("FAIL: latency burn never fired an alert");
+        failed = true;
+    }
+    // And the span dump is a loadable Chrome trace.
+    let dump = coord.dump_spans();
+    if !dump.contains("\"traceEvents\"") || !dump.contains("execute") {
+        eprintln!("FAIL: chrome trace dump is missing events");
+        failed = true;
+    }
     coord.shutdown();
     if failed {
         std::process::exit(1);
     }
     println!(
         "\nOK: tails present (p50 {p50:.0}us <= p99 {p99:.0}us), \
-         {} trace events, all three export forms render.",
-        m.stats.obs.trace_events
+         {} trace events, {} spans with phase attribution, alert \
+         fired, all three export forms render.",
+        m.stats.obs.trace_events, m.stats.obs.span_events
     );
     Ok(())
 }

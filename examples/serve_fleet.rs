@@ -16,7 +16,9 @@
 //! Run: `cargo run --release --example serve_fleet`
 //! (set DYNAPREC_CONTROL_LOG=1 to trace every controller decision;
 //! pass `--json` to emit one machine-readable metrics snapshot instead
-//! of the human report)
+//! of the human report; pass `--spans` to sample request lifecycles at
+//! 1-in-16 and emit a Chrome trace-event JSON document — redirect to a
+//! file and load it in Perfetto or `chrome://tracing`)
 
 use std::time::{Duration, Instant};
 
@@ -32,6 +34,7 @@ use dynaprec::coordinator::{
     DispatchPolicy, EnergyPolicy, FleetConfig, PrecisionScheduler,
 };
 use dynaprec::data::Features;
+use dynaprec::obs::SpanConfig;
 use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
 use dynaprec::util::cli::Args;
 
@@ -133,6 +136,8 @@ fn phase(
 fn main() -> Result<()> {
     let args = Args::parse_env();
     let json = args.bool("json");
+    let spans = args.bool("spans");
+    let quiet = json || spans;
     // Synthetic profile: 2 noise sites x 4 channels, 2000 MACs/sample.
     // Learned per-layer energies [16, 16]: on a homodyne device a sample
     // needs K = 16 repeats/site = 32 cycles and 32k energy units; on a
@@ -177,6 +182,13 @@ fn main() -> Result<()> {
                 queue_soft_limit: 20_000,
                 queue_hard_limit: 200_000,
             },
+            // `--spans`: sample one request lifecycle in 16 for the
+            // Perfetto dump (zero-cost branch-per-request otherwise).
+            spans: if spans {
+                SpanConfig::every(16)
+            } else {
+                SpanConfig::default()
+            },
             ..Default::default()
         },
         fleet: FleetConfig {
@@ -191,7 +203,7 @@ fn main() -> Result<()> {
         cfg,
     )?;
 
-    if !json {
+    if !quiet {
         println!(
             "4-device mixed native/reference fleet (zero PJRT artifacts), \
              least-queue-depth dispatch; SLO p95 < {:.0}ms, precision floor \
@@ -199,10 +211,19 @@ fn main() -> Result<()> {
             slo_us / 1e3
         );
     }
-    phase(&coord, "warmup (light)", 1_500.0, Duration::from_millis(1500), json);
-    phase(&coord, "ramp (overload)", 40_000.0, Duration::from_millis(2500), json);
-    phase(&coord, "subsided (light)", 1_500.0, Duration::from_millis(2000), json);
+    phase(&coord, "warmup (light)", 1_500.0, Duration::from_millis(1500), quiet);
+    phase(&coord, "ramp (overload)", 40_000.0, Duration::from_millis(2500), quiet);
+    phase(&coord, "subsided (light)", 1_500.0, Duration::from_millis(2000), quiet);
 
+    if spans {
+        // One Chrome trace-event document of the sampled request
+        // lifecycles (admission -> ... -> respond, with
+        // execute.digital/execute.analog plane sub-spans). Redirect to
+        // a file and load it in Perfetto / chrome://tracing.
+        println!("{}", coord.dump_spans());
+        coord.shutdown();
+        return Ok(());
+    }
     if json {
         // One machine-readable document: the full metrics snapshot
         // (histogram tails, per-device state, decision-trace summary),

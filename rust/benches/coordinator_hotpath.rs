@@ -36,6 +36,7 @@ fn main() {
                 x: Features::F32(vec![0.0; 4]),
                 enqueued: now_ns,
                 resp: tx,
+                span: None,
             });
         }
         assert!(b.try_batch(now_ns).is_some());

@@ -1,5 +1,6 @@
 //! Observability hot-path overhead (acceptance: < 5% of the batch hot
-//! path). No artifacts needed: records straight into an `ObsHub`.
+//! path; span sampling <= 1% on its own). No artifacts needed: records
+//! straight into an `ObsHub`.
 //!
 //! The serving stack pays these observability costs per dispatched
 //! batch of `BATCH` requests:
@@ -11,24 +12,59 @@
 //! steps, sheds, faults), not per batch — a push is measured and
 //! charged here anyway as a worst case of one decision per batch.
 //!
-//! Run: `cargo bench --bench observability`
+//! Span tracing adds, per batch at 1-in-64 sampling:
+//!   4. `BATCH` sampling decisions (a hash + modulo on the router),
+//!   5. `BATCH/64` expected full span records (stamps folded into the
+//!      phase histograms + one seqlock ring push).
+//! With sampling disabled the whole span path is one branch per
+//! request — asserted to cost effectively nothing below.
+//!
+//! Run: `cargo bench --bench observability` (writes `BENCH_obs.json`).
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
-use dynaprec::obs::{ObsHub, TraceKind, ERR_TICKS_PER_UNIT};
+use dynaprec::obs::{
+    ObsHub, RequestSpan, SpanConfig, TraceKind, ERR_TICKS_PER_UNIT,
+};
 use dynaprec::sim::clock::WallClock;
-use dynaprec::util::stats::bench;
+use dynaprec::util::stats::{bench, write_bench_json};
 
 const BATCH: u64 = 8;
 
 fn hub() -> ObsHub {
-    ObsHub::new(
+    // Span sampling on at the production-suggested 1-in-64 rate, so the
+    // span benches below exercise the real sampled path.
+    ObsHub::with_spans(
         vec!["synth".to_string()],
         4,
         4096,
+        4096,
+        SpanConfig { sample_every: 64, seed: 0x5eed },
         Arc::new(WallClock::new()),
     )
+}
+
+/// A fully stamped span, as the device worker finalizes one.
+fn span(id: u64) -> RequestSpan {
+    RequestSpan {
+        id,
+        model: 0,
+        device: 1,
+        t_submit: 1_000,
+        t_enqueue: 1_000,
+        t_assemble: 3_000,
+        t_dispatch: 10_000,
+        t_execute: 12_000,
+        t_kernel: 52_000,
+        t_decode: 53_000,
+        t_respond: 53_000,
+        digital_ns: 8_000,
+        digital_aj: 64.0,
+        analog_aj: 12.5,
+        k_total: 96.0,
+    }
 }
 
 fn main() {
@@ -78,6 +114,40 @@ fn main() {
     });
     r_trace.report();
 
+    // 4. Router: the per-request sampling decision at 1-in-64 — the
+    // only cost the unsampled 63/64 majority ever pays.
+    let cfg = hub.span_cfg();
+    let mut id = 0u64;
+    let r_sample = bench("span_sampled_check_x8", || {
+        for _ in 0..BATCH {
+            std::hint::black_box(cfg.sampled(id));
+            id += 1;
+        }
+    });
+    r_sample.report();
+
+    // ... and with sampling disabled the check must reduce to a single
+    // branch on an immutable config (the "0-cost when off" guarantee).
+    let off = SpanConfig::default();
+    let mut od = 0u64;
+    let r_off = bench("span_sampled_check_disabled_x8", || {
+        for _ in 0..BATCH {
+            std::hint::black_box(off.sampled(od));
+            od += 1;
+        }
+    });
+    r_off.report();
+
+    // 5. Device worker: one full span finalization — seven phase
+    // histogram folds, two plane folds, one seqlock ring push. Paid by
+    // 1-in-64 requests; amortized per batch below.
+    let mut sid = 0u64;
+    let r_span = bench("span_record", || {
+        hub.record_span(span(sid));
+        sid += 1;
+    });
+    r_span.report();
+
     // Off-hot-path, for visibility: a full hub snapshot (merge across
     // devices + trace digest) as taken by `Coordinator::stats`.
     let r_snap = bench("hub_snapshot", || {
@@ -95,6 +165,13 @@ fn main() {
         + r_trace.p50.as_secs_f64();
     let reference_batch_s = 1.0e-3;
     let pct = 100.0 * per_batch / reference_batch_s;
+
+    // Span budget: 8 sampling checks plus the expected 8/64 span
+    // records per batch, against the same 1 ms reference batch.
+    let span_per_batch = r_sample.p50.as_secs_f64()
+        + r_span.p50.as_secs_f64() * (BATCH as f64 / 64.0);
+    let span_pct = 100.0 * span_per_batch / reference_batch_s;
+    let off_us = r_off.p50.as_secs_f64() * 1e6;
 
     // Measured end-to-end sanity: time 10k simulated "batches" (fill +
     // 8 latencies + completion + trace) in one loop.
@@ -130,10 +207,52 @@ fn main() {
     println!(
         "overhead vs 1 ms reference batch: {pct:.3}% (acceptance < 5%)"
     );
-    if pct < 5.0 {
-        println!("PASS: observability overhead under the 5% bar");
-    } else {
+    println!(
+        "span sampling at 1/64: {:.3} us/batch = {span_pct:.4}% \
+         (acceptance <= 1%); disabled check: {off_us:.4} us/batch",
+        span_per_batch * 1e6
+    );
+
+    let results = [
+        r_fill, r_lat, r_done, r_trace, r_sample, r_off, r_span, r_snap,
+    ];
+    let path = Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../BENCH_obs.json"
+    ));
+    write_bench_json(
+        path,
+        "observability",
+        &results,
+        &[
+            ("hotpath_pct_of_1ms_batch", pct),
+            ("span_pct_of_1ms_batch", span_pct),
+            ("span_us_per_batch_1_in_64", span_per_batch * 1e6),
+            ("span_disabled_check_us_per_batch", off_us),
+        ],
+    )
+    .expect("write BENCH_obs.json");
+    println!("wrote {}", path.display());
+
+    let mut pass = true;
+    if pct >= 5.0 {
         println!("FAIL: observability overhead exceeds the 5% bar");
+        pass = false;
+    }
+    if span_pct > 1.0 {
+        println!("FAIL: span sampling exceeds its 1% budget");
+        pass = false;
+    }
+    // "0-cost disabled": one branch per request. 1 us for a whole batch
+    // of 8 checks is two orders of magnitude of slack over the real
+    // cost, while still catching an accidental hash-on-every-request.
+    if off_us > 1.0 {
+        println!("FAIL: disabled span check is not free");
+        pass = false;
+    }
+    if pass {
+        println!("PASS: observability overhead under the bars");
+    } else {
         std::process::exit(1);
     }
 }

@@ -25,7 +25,7 @@ use crate::backend::native::{
 };
 use crate::backend::{
     front_rows, hybrid_split, BatchJob, BatchOutput, ExecutionBackend,
-    DIGITAL_MAC_ENERGY_AJ,
+    PlaneBreakdown, DIGITAL_MAC_ENERGY_AJ,
 };
 use crate::util::rng::Rng;
 
@@ -106,6 +106,10 @@ impl ExecutionBackend for HybridBackend {
                 cycles_per_sample: model.sites.len() as f64,
                 energy_per_layer: Vec::new(),
                 faults_masked: 0,
+                planes: PlaneBreakdown {
+                    digital_cycles: model.sites.len() as f64,
+                    ..Default::default()
+                },
             };
         };
         if e.len() != meta.e_len {
@@ -120,6 +124,7 @@ impl ExecutionBackend for HybridBackend {
         let mut plans = Vec::with_capacity(model.sites.len());
         let mut energy = 0.0f64;
         let mut cycles = 0.0f64;
+        let mut planes = PlaneBreakdown::default();
         let mut energy_per_layer = Vec::with_capacity(model.sites.len());
         for (si, ns) in model.sites.iter().enumerate() {
             let s = &ns.site;
@@ -131,6 +136,8 @@ impl ExecutionBackend for HybridBackend {
                     * DIGITAL_MAC_ENERGY_AJ;
                 energy += site_energy;
                 cycles += 1.0;
+                planes.digital_energy += site_energy;
+                planes.digital_cycles += 1.0;
                 energy_per_layer.push(site_energy);
                 plans.push(SitePlan {
                     ks: Vec::new(),
@@ -154,6 +161,9 @@ impl ExecutionBackend for HybridBackend {
             );
             energy += plan.energy;
             cycles += plan.cycles;
+            planes.analog_energy += plan.energy;
+            planes.analog_cycles += plan.cycles;
+            planes.k_total += plan.k_per_channel.iter().sum::<f64>();
             energy_per_layer.push(plan.energy);
             let mut noise = site_noise(self.kind, s, meta, &self.hw);
             noise.additive_std *= self.drift;
@@ -182,6 +192,7 @@ impl ExecutionBackend for HybridBackend {
             cycles_per_sample: cycles,
             energy_per_layer,
             faults_masked: masked_faults(&plans, self.faults),
+            planes,
         }
     }
 

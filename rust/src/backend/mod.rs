@@ -132,6 +132,41 @@ pub struct BatchJob<'a> {
     pub tag: &'a str,
 }
 
+/// Per-sample execution-plane attribution for one batch: how much of
+/// the charged energy and modeled cycles belong to the exact digital
+/// plane vs the noisy analog plane, plus the total quantized
+/// K-repetition work. All-digital engines (reference, clean forwards)
+/// and all-analog engines fill one side and zero the other; the hybrid
+/// engine splits per its site routing. Consumed by span tracing to
+/// attribute execute-phase time and aJ per plane.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PlaneBreakdown {
+    /// aJ per sample charged to digital MACs.
+    pub digital_energy: f64,
+    /// aJ per sample charged to the analog plan.
+    pub analog_energy: f64,
+    /// Modeled pipelined cycles per sample on the digital plane.
+    pub digital_cycles: f64,
+    /// Modeled cycles per sample on the analog plane (K repetitions).
+    pub analog_cycles: f64,
+    /// Sum of quantized per-channel K over the analog sites — the
+    /// paper's repetition count, aggregated per sample.
+    pub k_total: f64,
+}
+
+impl PlaneBreakdown {
+    /// Fraction of modeled cycles on the digital plane (0 when no
+    /// cycles were modeled at all).
+    pub fn digital_time_fraction(&self) -> f64 {
+        let total = self.digital_cycles + self.analog_cycles;
+        if total > 0.0 {
+            self.digital_cycles / total
+        } else {
+            0.0
+        }
+    }
+}
+
 /// What a backend produced for one batch. `logits` mirrors the old
 /// direct `ModelOps` call: an `Err` fails the batch's numerics (clients
 /// get empty logits) but the analog cost is still charged.
@@ -156,6 +191,9 @@ pub struct BatchOutput {
     /// The fleet worker surfaces a nonzero count as a `FaultMasked`
     /// decision-trace event.
     pub faults_masked: u32,
+    /// Digital vs analog attribution of `energy_per_sample` /
+    /// `cycles_per_sample` (zeroed when nothing was charged).
+    pub planes: PlaneBreakdown,
 }
 
 impl BatchOutput {
@@ -169,6 +207,7 @@ impl BatchOutput {
             cycles_per_sample: 0.0,
             energy_per_layer: Vec::new(),
             faults_masked: 0,
+            planes: PlaneBreakdown::default(),
         }
     }
 }

@@ -23,7 +23,9 @@ use crate::backend::kernel::{
     embed_row_f32, embed_token, gemm_blocked, phys_tile, site_noise,
     SiteNoise, TileFaults,
 };
-use crate::backend::{front_rows, BatchJob, BatchOutput, ExecutionBackend};
+use crate::backend::{
+    front_rows, BatchJob, BatchOutput, ExecutionBackend, PlaneBreakdown,
+};
 use crate::data::Features;
 use crate::runtime::artifact::{ModelMeta, SiteMeta};
 use crate::util::rng::Rng;
@@ -433,6 +435,10 @@ impl ExecutionBackend for NativeAnalogBackend {
                 cycles_per_sample: model.sites.len() as f64,
                 energy_per_layer: Vec::new(),
                 faults_masked: 0,
+                planes: PlaneBreakdown {
+                    digital_cycles: model.sites.len() as f64,
+                    ..Default::default()
+                },
             };
         };
         if e.len() != meta.e_len {
@@ -450,6 +456,7 @@ impl ExecutionBackend for NativeAnalogBackend {
         let mut plans = Vec::with_capacity(model.sites.len());
         let mut energy = 0.0f64;
         let mut cycles = 0.0f64;
+        let mut k_total = 0.0f64;
         let mut energy_per_layer = Vec::with_capacity(model.sites.len());
         for ns in &model.sites {
             let s = &ns.site;
@@ -467,6 +474,7 @@ impl ExecutionBackend for NativeAnalogBackend {
             );
             energy += plan.energy;
             cycles += plan.cycles;
+            k_total += plan.k_per_channel.iter().sum::<f64>();
             energy_per_layer.push(plan.energy);
             // A drifted device still *charges* the scheduled plan — it
             // believes its calibration — but suffers scaled noise; the
@@ -505,6 +513,12 @@ impl ExecutionBackend for NativeAnalogBackend {
             cycles_per_sample: cycles,
             energy_per_layer,
             faults_masked: masked_faults(&plans, self.faults),
+            planes: PlaneBreakdown {
+                analog_energy: energy,
+                analog_cycles: cycles,
+                k_total,
+                ..Default::default()
+            },
         }
     }
 
@@ -557,6 +571,10 @@ impl ExecutionBackend for DigitalReferenceBackend {
             cycles_per_sample: model.sites.len() as f64,
             energy_per_layer: Vec::new(),
             faults_masked: 0,
+            planes: PlaneBreakdown {
+                digital_cycles: model.sites.len() as f64,
+                ..Default::default()
+            },
         }
     }
 }

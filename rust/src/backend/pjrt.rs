@@ -12,7 +12,7 @@
 use crate::analog::{AveragingMode, HardwareConfig};
 use crate::backend::{
     per_layer_analog_cost, BatchJob, BatchOutput, ExecutionBackend,
-    ERR_UNMEASURED,
+    PlaneBreakdown, ERR_UNMEASURED,
 };
 use crate::ops::{ArtifactOps, ModelOps};
 
@@ -46,6 +46,7 @@ impl ExecutionBackend for PjrtBackend {
                 cycles_per_sample: 0.0,
                 energy_per_layer: Vec::new(),
                 faults_masked: 0,
+                planes: PlaneBreakdown::default(),
             },
             Some(e) => {
                 let per_layer = per_layer_analog_cost(
@@ -71,6 +72,13 @@ impl ExecutionBackend for PjrtBackend {
                     cycles_per_sample: cycles,
                     energy_per_layer,
                     faults_masked: 0,
+                    // Artifact execution is all-analog: the continuous-K
+                    // plan charged above is analog-plane work.
+                    planes: PlaneBreakdown {
+                        analog_energy: energy,
+                        analog_cycles: cycles,
+                        ..Default::default()
+                    },
                 }
             }
         }

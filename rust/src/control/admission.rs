@@ -41,6 +41,9 @@ pub struct AdmissionGate {
     /// Precision floor, stored as f64 bits.
     floor_bits: AtomicU64,
     shed: AtomicU64,
+    /// Completed (served) requests: monotone counter differenced by the
+    /// burn-rate alert engine to compute shed fractions of offered load.
+    completed: AtomicU64,
     /// Whether the most recent verdict was a shed — edge detection for
     /// the decision trace (record transitions, not every request).
     shedding: AtomicBool,
@@ -54,6 +57,7 @@ impl AdmissionGate {
             scale_bits: AtomicU64::new(1.0f64.to_bits()),
             floor_bits: AtomicU64::new(floor.to_bits()),
             shed: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
             shedding: AtomicBool::new(false),
         }
     }
@@ -82,6 +86,11 @@ impl AdmissionGate {
         self.shed.load(Ordering::Relaxed)
     }
 
+    /// Lifetime completed (served) requests for this model.
+    pub fn completed_total(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
     /// Router-side decision. With `gated` false (control plane
     /// disabled) every request is admitted; depth is still tracked for
     /// telemetry.
@@ -102,6 +111,7 @@ impl AdmissionGate {
     /// Device-side completion of `n` admitted requests.
     pub fn on_complete(&self, n: usize) {
         self.depth.fetch_sub(n, Ordering::Relaxed);
+        self.completed.fetch_add(n as u64, Ordering::Relaxed);
     }
 
     /// Edge detection for the decision trace: returns `Some(v)` when
@@ -169,6 +179,7 @@ mod tests {
         assert_eq!(g.on_submit(true), Verdict::Shed);
         g.on_complete(1);
         assert_eq!(g.depth(), 0);
+        assert_eq!(g.completed_total(), 1);
         assert_eq!(g.on_submit(true), Verdict::Admit);
     }
 

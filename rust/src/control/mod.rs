@@ -44,7 +44,9 @@ use std::time::Duration;
 
 use crate::coordinator::fleet::DeviceSpec;
 use crate::coordinator::scheduler::{ModelPrecision, PrecisionScheduler};
-use crate::obs::{ObsHub, TraceKind};
+use crate::obs::{
+    AlertConfig, AlertEngine, AlertSample, ObsHub, SpanConfig, TraceKind,
+};
 use crate::runtime::artifact::ModelMeta;
 use crate::sim::clock::{ClockRef, SlotId, WaitOutcome};
 
@@ -66,6 +68,13 @@ pub struct ControlConfig {
     pub autotuner: AutotunerConfig,
     pub governor: GovernorConfig,
     pub admission: AdmissionConfig,
+    /// Request-lifecycle span sampling (disabled by default: the
+    /// unsampled path carries zero tracing state).
+    pub spans: SpanConfig,
+    /// Span ring capacity (sampled requests retained for export).
+    pub span_capacity: usize,
+    /// Multi-window burn-rate alerting (runs only with `enabled`).
+    pub alerts: AlertConfig,
 }
 
 impl Default for ControlConfig {
@@ -80,6 +89,9 @@ impl Default for ControlConfig {
             autotuner: AutotunerConfig::default(),
             governor: GovernorConfig::default(),
             admission: AdmissionConfig::default(),
+            spans: SpanConfig::default(),
+            span_capacity: 4096,
+            alerts: AlertConfig::default(),
         }
     }
 }
@@ -139,8 +151,14 @@ impl ControlShared {
         // Intern the (sorted) model names so trace events can carry a
         // compact model id.
         let names: Vec<String> = models.keys().cloned().collect();
-        let obs =
-            Arc::new(ObsHub::new(names, n_devices, cfg.trace_capacity, clock));
+        let obs = Arc::new(ObsHub::with_spans(
+            names,
+            n_devices,
+            cfg.trace_capacity,
+            cfg.span_capacity,
+            cfg.spans,
+            clock,
+        ));
         Arc::new(ControlShared { models, obs })
     }
 
@@ -207,6 +225,13 @@ pub fn control_loop(
         .keys()
         .map(|m| (m.clone(), Autotuner::new(cfg.autotuner.clone())))
         .collect();
+    // One burn-rate alert engine per model, ticked in lockstep with the
+    // autotuner so its windows are counted in control ticks.
+    let mut alerts: BTreeMap<String, AlertEngine> = shared
+        .models
+        .keys()
+        .map(|m| (m.clone(), AlertEngine::new(cfg.alerts)))
+        .collect();
     let max_age_us = cfg.max_sample_age.as_micros() as u64;
 
     while wait_tick(&clock, slot, cfg.tick, &stop) {
@@ -234,6 +259,39 @@ pub fn control_loop(
 
             let committed = mc.gate.scale();
             let mut scale = tuner.step(&w);
+
+            // Burn-rate alerting: ingest this tick's observations.
+            // Fire/clear transitions land in the decision trace *now*,
+            // before any scale commit below — the trace's global
+            // sequence numbers then put an AlertFire strictly before
+            // the ScaleStep it provokes.
+            let engine = alerts.get_mut(model).expect("engine per model");
+            let events = engine.observe(AlertSample {
+                p99_lat_us: w.p99_lat_us,
+                tail_out_err: w.tail_out_err(),
+                shed_total: mc.gate.shed_total(),
+                served_total: mc.gate.completed_total(),
+                masked_total: shared.obs.faults_masked(),
+                batches_total: mc.ring.pushed(),
+            });
+            let mid = shared.obs.model_id(model);
+            for ev in &events {
+                shared.obs.trace.push(
+                    ev.kind(),
+                    mid,
+                    None,
+                    ev.signal as u8 as f64,
+                    ev.fast_burn,
+                    ev.slow_burn,
+                    ev.threshold,
+                );
+            }
+            if cfg.alerts.predegrade_step > 0.0 && engine.fast_burning() {
+                // Pre-emptive degrade: the fast window alone is burning
+                // at fire rate, so trade precision for latency *before*
+                // the admission gate has to shed.
+                scale *= (1.0 - cfg.alerts.predegrade_step).max(0.0);
+            }
             let tuner_ask = scale;
             if governor.enabled() {
                 scale = scale.min(governor.propose(&w, committed).min(1.0));

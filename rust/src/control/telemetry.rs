@@ -264,6 +264,74 @@ impl WindowStats {
     pub fn tail_out_err(&self) -> Option<f64> {
         self.p95_out_err.or(self.mean_out_err)
     }
+
+    /// Fold another window into this one (e.g. per-device shards into a
+    /// fleet view). Sums and weighted means combine exactly; percentiles
+    /// cannot be recomputed without the underlying samples, so the merge
+    /// takes the max of each tail — an upper bound, the conservative
+    /// direction for an SLO controller. The unmeasured-`out_err`
+    /// sentinel merges Option-wise: an all-unmeasured window contributes
+    /// "no measurement", never a fabricated 0.0 that would dilute the
+    /// measured tail, and a merge of two unmeasured windows stays `None`
+    /// instead of dividing by a zero weight.
+    pub fn merge(&mut self, other: &WindowStats) {
+        if other.batches == 0 {
+            return;
+        }
+        if self.batches == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (a, b) = (self.batches as f64, other.batches as f64);
+        let n = a + b;
+        self.mean_exec_us =
+            (self.mean_exec_us * a + other.mean_exec_us * b) / n;
+        self.mean_occupancy =
+            (self.mean_occupancy * a + other.mean_occupancy * b) / n;
+        self.mean_queue_depth =
+            (self.mean_queue_depth * a + other.mean_queue_depth * b) / n;
+        // out_err before the count updates: the measured weight of
+        // `self` is its *pre-merge* err_batches.
+        match (self.mean_out_err, other.mean_out_err) {
+            (_, None) => {}
+            (None, Some(_)) => {
+                self.mean_out_err = other.mean_out_err;
+                self.p95_out_err = other.p95_out_err;
+            }
+            (Some(m0), Some(m1)) => {
+                let w0 = self.err_batches.max(1) as f64;
+                let w1 = other.err_batches.max(1) as f64;
+                self.mean_out_err = Some((m0 * w0 + m1 * w1) / (w0 + w1));
+                self.p95_out_err =
+                    match (self.p95_out_err, other.p95_out_err) {
+                        (Some(x), Some(y)) => Some(x.max(y)),
+                        (x, y) => x.or(y),
+                    };
+            }
+        }
+        self.err_batches += other.err_batches;
+        self.batches += other.batches;
+        self.served += other.served;
+        self.energy += other.energy;
+        self.energy_per_req = if self.served > 0 {
+            self.energy / self.served as f64
+        } else {
+            0.0
+        };
+        self.p50_lat_us = self.p50_lat_us.max(other.p50_lat_us);
+        self.p95_lat_us = self.p95_lat_us.max(other.p95_lat_us);
+        self.p99_lat_us = self.p99_lat_us.max(other.p99_lat_us);
+        self.p999_lat_us = self.p999_lat_us.max(other.p999_lat_us);
+        // Merged windows usually cover the *same* capture interval
+        // (per-device shards of one fleet window), so rates recompute
+        // over the longer span — never the sum of overlapping spans.
+        self.span_us = self.span_us.max(other.span_us);
+        if self.span_us > 0 {
+            let secs = self.span_us as f64 / 1e6;
+            self.energy_rate = self.energy / secs;
+            self.req_rate = self.served as f64 / secs;
+        }
+    }
 }
 
 pub fn window_stats(samples: &[BatchSample]) -> WindowStats {
@@ -475,6 +543,66 @@ mod tests {
         let w = window_stats(&[u]);
         assert_eq!(w.p95_out_err, None);
         assert_eq!(w.tail_out_err(), None);
+    }
+
+    #[test]
+    fn merge_is_option_safe_on_the_unmeasured_sentinel() {
+        // Device 0 measured its errors; device 1 is a pjrt shard that
+        // cannot (sentinel -1.0 -> None). The merged window must keep
+        // device 0's measurement untouched — not dilute it with zeros,
+        // not divide by an empty weight.
+        let mut m0 = sample(0, 10, 100.0, 100.0);
+        m0.out_err = 0.2;
+        let mut measured = window_stats(&[m0]);
+        let mut u = sample(0, 10, 400.0, 100.0);
+        u.out_err = -1.0;
+        let unmeasured = window_stats(&[u]);
+
+        measured.merge(&unmeasured);
+        assert_eq!(measured.batches, 2);
+        assert_eq!(measured.served, 20);
+        assert_eq!(measured.err_batches, 1);
+        assert_eq!(measured.mean_out_err, Some(0.2));
+        assert_eq!(measured.tail_out_err(), Some(0.2));
+        // Latency tails take the conservative max across shards.
+        assert!((measured.p99_lat_us - 800.0).abs() < 1e-9);
+
+        // The reverse direction adopts the measurement instead of
+        // keeping None.
+        let mut base = window_stats(&[u]);
+        base.merge(&window_stats(&[m0]));
+        assert_eq!(base.mean_out_err, Some(0.2));
+        assert_eq!(base.err_batches, 1);
+
+        // Two unmeasured shards stay unmeasured; two empty windows
+        // merge to an empty window (no division by zero anywhere).
+        let mut w = window_stats(&[u]);
+        w.merge(&window_stats(&[u]));
+        assert_eq!(w.mean_out_err, None);
+        assert_eq!(w.err_batches, 0);
+        let mut e = window_stats(&[]);
+        e.merge(&window_stats(&[]));
+        assert_eq!(e.batches, 0);
+        assert_eq!(e.energy_per_req, 0.0);
+    }
+
+    #[test]
+    fn merge_of_measured_shards_weights_by_err_batches() {
+        // Shard A: 2 measured batches at 0.1; shard B: 1 at 0.4.
+        // Err-batch-weighted mean: (2*0.1 + 1*0.4) / 3 = 0.2.
+        let mut a1 = sample(0, 10, 100.0, 0.0);
+        a1.out_err = 0.1;
+        let mut a2 = sample(1000, 10, 100.0, 0.0);
+        a2.out_err = 0.1;
+        let mut b1 = sample(0, 10, 100.0, 0.0);
+        b1.out_err = 0.4;
+        let mut w = window_stats(&[a1, a2]);
+        w.merge(&window_stats(&[b1]));
+        assert_eq!(w.err_batches, 3);
+        let mean = w.mean_out_err.unwrap();
+        assert!((mean - 0.2).abs() < 1e-9, "{mean}");
+        // p95 upper-bounds across shards.
+        assert_eq!(w.p95_out_err, Some(0.4));
     }
 
     #[test]

@@ -109,6 +109,7 @@ mod tests {
             x: Features::F32(vec![0.0; 4]),
             enqueued: at_ns,
             resp: tx,
+            span: None,
         }
     }
 

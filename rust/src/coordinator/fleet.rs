@@ -1248,8 +1248,10 @@ fn execute_batch(
             ctx.clock.sleep(ctx.slot, Duration::from_nanos(ns as u64));
         }
     }
-    let exec_us =
-        ctx.clock.now_ns().saturating_sub(t_exec_ns) as f64 / 1_000.0;
+    // Kernel boundary: modeled device time (the clock sleep above) ends
+    // here; everything after is redundancy decode + response fan-out.
+    let t_kernel_ns = ctx.clock.now_ns();
+    let exec_us = t_kernel_ns.saturating_sub(t_exec_ns) as f64 / 1_000.0;
 
     // Backends may return fewer logit rows than the padded batch
     // (native engines skip the padding lanes); `out.rows` says how
@@ -1262,6 +1264,8 @@ fn execute_batch(
     let occupancy = n as f64 / bsz as f64;
     let mut lat_sum = 0.0f64;
     let mut lat_max = 0.0f64;
+    let mut done_spans = Vec::new();
+    let exec_ns = t_kernel_ns.saturating_sub(t_exec_ns);
     let obs = ctx.shared.obs.device(device as usize);
     {
         let mut c = counters.lock().unwrap_or_else(PoisonError::into_inner);
@@ -1281,7 +1285,7 @@ fn execute_batch(
                 n as u64,
             );
         }
-        for (i, r) in batch.into_iter().enumerate() {
+        for (i, mut r) in batch.into_iter().enumerate() {
             let latency = done_ns.saturating_sub(r.enqueued) / 1_000;
             lat_sum += latency as f64;
             lat_max = lat_max.max(latency as f64);
@@ -1299,6 +1303,7 @@ fn execute_batch(
                     .unwrap_or_default(),
                 Err(_) => vec![],
             };
+            let span = r.span.take();
             let _ = r.resp.send(InferResponse::from_logits(
                 r.id,
                 row,
@@ -1307,11 +1312,34 @@ fn execute_batch(
                 energy_per_sample,
                 device,
             ));
+            if let Some(mut s) = span {
+                // Close out the span: execute/kernel/decode boundaries
+                // are batch-wide, respond is per-request (stamped after
+                // its send). Plane attribution comes straight from the
+                // backend's PlaneBreakdown.
+                s.device = device;
+                s.t_execute = t_exec_ns;
+                s.t_kernel = t_kernel_ns;
+                s.t_decode = done_ns;
+                s.t_respond = ctx.clock.now_ns();
+                s.digital_ns = (exec_ns as f64
+                    * out.planes.digital_time_fraction())
+                .round() as u64;
+                s.digital_aj = out.planes.digital_energy;
+                s.analog_aj = out.planes.analog_energy;
+                s.k_total = out.planes.k_total;
+                done_spans.push(s);
+            }
         }
     }
     // Release the gate before sampling so the telemetry queue depth
     // reflects this batch's completion.
     drop(gate_guard);
+    // Publish finished spans outside the counters lock: the span ring
+    // is lock-free but there is no reason to hold the mutex across it.
+    for s in done_spans {
+        ctx.shared.obs.record_span(*s);
+    }
     // Per-batch measurements, weighted by the requests they cover.
     if out.faults_masked > 0 {
         // Redundant decode absorbed injected tile faults this batch —
@@ -1325,6 +1353,7 @@ fn execute_batch(
             0.0,
             0.0,
         );
+        ctx.shared.obs.add_faults_masked(out.faults_masked as u64);
     }
     obs.energy_per_req.record(energy_per_sample.max(0.0).round() as u64);
     if out.out_err >= 0.0 {

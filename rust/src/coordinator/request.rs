@@ -3,6 +3,7 @@
 use std::sync::mpsc::Sender;
 
 use crate::data::Features;
+use crate::obs::RequestSpan;
 
 /// One inference request (a single sample; the batcher aggregates).
 pub struct InferRequest {
@@ -15,6 +16,10 @@ pub struct InferRequest {
     pub enqueued: u64,
     /// Response channel back to the client.
     pub resp: Sender<InferResponse>,
+    /// Lifecycle span, allocated at submit for sampled requests only
+    /// (`None` otherwise — the unsampled fast path carries no tracing
+    /// state). Boxed so the common case stays one pointer wide.
+    pub span: Option<Box<RequestSpan>>,
 }
 
 /// Response with telemetry for the client.

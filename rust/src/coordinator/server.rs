@@ -42,7 +42,10 @@ use crate::coordinator::fleet::{
 use crate::coordinator::request::{InferRequest, InferResponse};
 use crate::coordinator::scheduler::{ModelPrecision, PrecisionScheduler};
 use crate::data::Features;
-use crate::obs::{MetricsSnapshot, ObsSnapshot, TraceEvent, TraceKind};
+use crate::obs::{
+    MetricsSnapshot, ObsSnapshot, RequestSpan, SpanRecord, TraceEvent,
+    TraceKind,
+};
 use crate::runtime::artifact::{ModelBundle, ModelMeta};
 use crate::sim::clock::{ClockRef, SlotId, WaitOutcome, WallClock};
 
@@ -318,6 +321,7 @@ impl Coordinator {
     ) -> Receiver<InferResponse> {
         let (rtx, rrx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let t_submit = self.clock.now_ns();
         if let Some(mc) = self.shared.get(model) {
             let v = mc.gate.on_submit(self.control_enabled);
             if self.control_enabled {
@@ -345,12 +349,27 @@ impl Coordinator {
                 return rrx;
             }
         }
+        let enqueued = self.clock.now_ns();
+        // Sampled requests carry a lifecycle span; shed requests above
+        // never get one (they have no lifecycle to attribute).
+        let span = if self.shared.obs.span_cfg().sampled(id) {
+            Some(Box::new(RequestSpan {
+                id,
+                model: self.shared.obs.model_id(model).unwrap_or(u32::MAX),
+                t_submit,
+                t_enqueue: enqueued,
+                ..Default::default()
+            }))
+        } else {
+            None
+        };
         let req = InferRequest {
             id,
             model: model.to_string(),
             x,
-            enqueued: self.clock.now_ns(),
+            enqueued,
             resp: rtx,
+            span,
         };
         let _ = self.tx.send(Msg::Req(req));
         // Wake the dispatcher (wall clock) / record the pending message
@@ -481,6 +500,27 @@ impl Coordinator {
         self.shared.obs.trace.snapshot()
     }
 
+    /// The sampled request spans currently in the ring, in sequence
+    /// order (oldest surviving first).
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        self.shared.obs.spans.snapshot()
+    }
+
+    /// Export the sampled request spans as a Chrome trace-event JSON
+    /// document (loadable in Perfetto / `chrome://tracing`): one `"X"`
+    /// event per non-empty lifecycle phase, plus `execute.digital` /
+    /// `execute.analog` sub-events splitting the execute phase between
+    /// the two hardware planes. `pid` is the model id, `tid` the
+    /// device id. Deterministic under a virtual clock (same scenario →
+    /// byte-identical dump).
+    pub fn dump_spans(&self) -> String {
+        let obs = &self.shared.obs;
+        crate::obs::span::chrome_trace_json(&obs.spans.snapshot(), |id| {
+            obs.model_name(id).unwrap_or("?").to_string()
+        })
+        .to_string()
+    }
+
     /// Per-device shard view: counters + ledger per device, each
     /// device's recent telemetry window, and the fleet-wide window.
     pub fn fleet_stats(&self) -> FleetStats {
@@ -578,9 +618,15 @@ fn dispatcher_loop(
         // everything already in the channel: while the fleet was busy
         // executing, requests piled up, and admitting them one per
         // iteration would flush degenerate 1-sample batches under load.
-        let mut enqueue = |r: InferRequest,
+        let mut enqueue = |mut r: InferRequest,
                            batchers: &mut BTreeMap<String, DynamicBatcher>| {
             if let Some(b) = batchers.get_mut(&r.model) {
+                // Queue phase ends here: the dispatcher has picked the
+                // request out of the channel and handed it to the
+                // batcher, where the assembly phase begins.
+                if let Some(s) = r.span.as_deref_mut() {
+                    s.t_assemble = clock.now_ns();
+                }
                 b.push(r);
             } else {
                 // Unknown model: shed (and count it), so that
@@ -658,7 +704,13 @@ fn dispatcher_loop(
                 } else {
                     b.try_batch(now)
                 };
-                let Some(batch) = batch else { break };
+                let Some(mut batch) = batch else { break };
+                let t_dispatch = clock.now_ns();
+                for r in batch.iter_mut() {
+                    if let Some(s) = r.span.as_deref_mut() {
+                        s.t_dispatch = t_dispatch;
+                    }
+                }
                 let seed = seeds.get_mut(model).expect("seed per model");
                 *seed = seed.wrapping_add(1);
                 fleet.dispatch(model, batch, *seed, shared.get(model));

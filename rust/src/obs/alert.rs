@@ -1,0 +1,462 @@
+//! Multi-window burn-rate alerting over the serving telemetry.
+//!
+//! The classic SLO pager problem: a single threshold on p99 either
+//! pages on every blip (threshold tight) or pages after the error
+//! budget is long gone (threshold loose). The standard fix is
+//! *multi-window burn rates*: express each signal as a burn — observed
+//! value over its SLO budget — and fire only when both a fast window
+//! (reacts in a few ticks) and a slow window (confirms the burn is
+//! sustained) exceed the fire threshold; clear on a lower threshold so
+//! the alert doesn't flap at the boundary.
+//!
+//! [`AlertEngine`] runs one instance per model inside the control
+//! loop. Each control tick it ingests one [`AlertSample`] — the
+//! fast-window tail stats the autotuner already computes plus the
+//! cumulative shed / served / fault-mask counters — converts it to
+//! per-signal instantaneous burns, and folds them into its fast/slow
+//! windows. Fire and clear transitions surface as
+//! [`TraceKind::AlertFire`] / [`TraceKind::AlertClear`] decision-trace
+//! events (pushed by the caller, so the trace's global sequence
+//! numbers put an `AlertFire` *strictly before* any scale step it
+//! provokes), and [`AlertEngine::fast_burning`] is the optional hook
+//! the autotuner uses to pre-emptively degrade precision on a fast
+//! burn before the admission gate starts shedding.
+//!
+//! The engine is pure state-machine arithmetic over sampled inputs —
+//! no clocks, no atomics — so it replays bit-identically under a
+//! `VirtualClock` and unit-tests without any serving machinery.
+
+use std::collections::VecDeque;
+
+use super::trace::TraceKind;
+
+/// The four alerted signals. The discriminant is the `a` payload of
+/// the emitted trace events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum AlertSignal {
+    /// Fast-window p99 latency vs `slo_p99_us`.
+    LatencyP99 = 0,
+    /// Fast-window p95 measured output error vs `slo_out_err`
+    /// (unmeasured windows burn 0 — absence of evidence never pages).
+    OutErrP95 = 1,
+    /// Admission-shed fraction of offered load vs `shed_budget`.
+    ShedRate = 2,
+    /// Masked tile-fault hits per served batch vs `mask_budget`.
+    FaultMaskRate = 3,
+}
+
+impl AlertSignal {
+    pub const ALL: [AlertSignal; 4] = [
+        AlertSignal::LatencyP99,
+        AlertSignal::OutErrP95,
+        AlertSignal::ShedRate,
+        AlertSignal::FaultMaskRate,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AlertSignal::LatencyP99 => "latency_p99",
+            AlertSignal::OutErrP95 => "out_err_p95",
+            AlertSignal::ShedRate => "shed_rate",
+            AlertSignal::FaultMaskRate => "fault_mask_rate",
+        }
+    }
+}
+
+/// Burn-rate alerting policy. Windows are counted in control ticks.
+#[derive(Clone, Copy, Debug)]
+pub struct AlertConfig {
+    /// Master switch; a disabled engine ingests nothing and never
+    /// fires.
+    pub enabled: bool,
+    /// Fast (reaction) window, in control ticks.
+    pub fast_window: usize,
+    /// Slow (confirmation) window, in control ticks; also the history
+    /// the engine retains.
+    pub slow_window: usize,
+    /// Fire when *both* windows' mean burn reaches this (1.0 = exactly
+    /// consuming budget at SLO rate).
+    pub fire_burn: f64,
+    /// Clear when the fast window's mean burn falls to/below this;
+    /// must sit below `fire_burn` for hysteresis.
+    pub clear_burn: f64,
+    /// Minimum ingested ticks before anything may fire.
+    pub min_ticks: usize,
+    /// Latency SLO: fast-window p99 target, microseconds.
+    pub slo_p99_us: f64,
+    /// Accuracy SLO: fast-window p95 output-error target.
+    pub slo_out_err: f64,
+    /// Budgeted shed fraction of offered load (e.g. 0.05 = 5%).
+    pub shed_budget: f64,
+    /// Budgeted masked-fault hits per served batch.
+    pub mask_budget: f64,
+    /// When > 0 and the latency signal is fast-burning, the control
+    /// loop multiplies the autotuner's ask by `1 - predegrade_step`
+    /// before committing — trading precision for latency *before* the
+    /// admission gate sheds. 0 disables the hook.
+    pub predegrade_step: f64,
+}
+
+impl Default for AlertConfig {
+    fn default() -> AlertConfig {
+        AlertConfig {
+            enabled: true,
+            fast_window: 6,
+            slow_window: 48,
+            fire_burn: 1.0,
+            clear_burn: 0.5,
+            min_ticks: 4,
+            slo_p99_us: 50_000.0,
+            slo_out_err: 0.05,
+            shed_budget: 0.05,
+            mask_budget: 1.0,
+            predegrade_step: 0.0,
+        }
+    }
+}
+
+/// One control tick's worth of alert inputs: the fast-window tail
+/// observations the autotuner already has, plus cumulative counters
+/// (the engine differentiates them itself).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AlertSample {
+    /// Fast-window p99 latency, microseconds.
+    pub p99_lat_us: f64,
+    /// Fast-window tail output error; `None` when unmeasured.
+    pub tail_out_err: Option<f64>,
+    /// Cumulative admission-shed count for this model.
+    pub shed_total: u64,
+    /// Cumulative served count for this model.
+    pub served_total: u64,
+    /// Cumulative masked-fault hits (fleet, this model's batches).
+    pub masked_total: u64,
+    /// Cumulative served batches.
+    pub batches_total: u64,
+}
+
+/// A fire or clear transition, ready to be pushed into the decision
+/// trace by the caller.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AlertEvent {
+    pub signal: AlertSignal,
+    /// `true` = fire ([`TraceKind::AlertFire`]), `false` = clear.
+    pub fire: bool,
+    /// Fast-window mean burn at the transition.
+    pub fast_burn: f64,
+    /// Slow-window mean burn at the transition.
+    pub slow_burn: f64,
+    /// The threshold crossed (`fire_burn` or `clear_burn`).
+    pub threshold: f64,
+}
+
+impl AlertEvent {
+    /// The decision-trace kind this transition records as.
+    pub fn kind(&self) -> TraceKind {
+        if self.fire { TraceKind::AlertFire } else { TraceKind::AlertClear }
+    }
+}
+
+/// Per-model burn-rate state machine. See the module docs for the
+/// window semantics.
+pub struct AlertEngine {
+    cfg: AlertConfig,
+    /// Last `slow_window` per-tick burns, one slot per signal.
+    history: VecDeque<[f64; 4]>,
+    fired: [bool; 4],
+    prev: AlertSample,
+    ticks: usize,
+}
+
+impl AlertEngine {
+    pub fn new(cfg: AlertConfig) -> AlertEngine {
+        let cfg = AlertConfig {
+            fast_window: cfg.fast_window.max(1),
+            slow_window: cfg.slow_window.max(cfg.fast_window.max(1)),
+            ..cfg
+        };
+        AlertEngine {
+            cfg,
+            history: VecDeque::with_capacity(cfg.slow_window.max(1)),
+            fired: [false; 4],
+            prev: AlertSample::default(),
+            ticks: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> &AlertConfig {
+        &self.cfg
+    }
+
+    /// Whether `signal`'s alert is currently fired.
+    pub fn fired(&self, signal: AlertSignal) -> bool {
+        self.fired[signal as usize]
+    }
+
+    pub fn any_fired(&self) -> bool {
+        self.fired.iter().any(|&f| f)
+    }
+
+    /// The pre-degrade hook: `true` when the latency signal's *fast*
+    /// window alone is burning at fire rate — the earliest credible
+    /// overload evidence, available before the slow window confirms
+    /// and before the admission gate sheds.
+    pub fn fast_burning(&self) -> bool {
+        self.cfg.enabled
+            && self.ticks >= self.cfg.min_ticks
+            && self.window_burn(self.cfg.fast_window)
+                [AlertSignal::LatencyP99 as usize]
+                >= self.cfg.fire_burn
+    }
+
+    /// Instantaneous per-signal burns for one sample, differencing the
+    /// cumulative counters against the previous tick. Division guards:
+    /// an idle tick (no offered load, no batches) burns 0 everywhere
+    /// it would otherwise divide by zero, and an unmeasured error tail
+    /// burns 0 rather than poisoning the window with NaN.
+    fn instant_burns(&self, s: &AlertSample) -> [f64; 4] {
+        let lat = if self.cfg.slo_p99_us > 0.0 {
+            s.p99_lat_us / self.cfg.slo_p99_us
+        } else {
+            0.0
+        };
+        let err = match (s.tail_out_err, self.cfg.slo_out_err > 0.0) {
+            (Some(e), true) => e / self.cfg.slo_out_err,
+            _ => 0.0,
+        };
+        let d_shed = s.shed_total.saturating_sub(self.prev.shed_total);
+        let d_served = s.served_total.saturating_sub(self.prev.served_total);
+        let offered = d_shed + d_served;
+        let shed = if offered > 0 && self.cfg.shed_budget > 0.0 {
+            (d_shed as f64 / offered as f64) / self.cfg.shed_budget
+        } else {
+            0.0
+        };
+        let d_masked = s.masked_total.saturating_sub(self.prev.masked_total);
+        let d_batches =
+            s.batches_total.saturating_sub(self.prev.batches_total);
+        let mask = if d_batches > 0 && self.cfg.mask_budget > 0.0 {
+            (d_masked as f64 / d_batches as f64) / self.cfg.mask_budget
+        } else {
+            0.0
+        };
+        [lat, err, shed, mask]
+    }
+
+    /// Mean burn per signal over the last `window` ticks.
+    fn window_burn(&self, window: usize) -> [f64; 4] {
+        let n = window.min(self.history.len());
+        let mut out = [0.0; 4];
+        if n == 0 {
+            return out;
+        }
+        for burns in self.history.iter().rev().take(n) {
+            for (o, b) in out.iter_mut().zip(burns) {
+                *o += b;
+            }
+        }
+        for o in &mut out {
+            *o /= n as f64;
+        }
+        out
+    }
+
+    /// Ingest one control tick. Returns the fire/clear transitions
+    /// this tick produced (empty almost always), in signal order.
+    pub fn observe(&mut self, s: AlertSample) -> Vec<AlertEvent> {
+        if !self.cfg.enabled {
+            return Vec::new();
+        }
+        let burns = self.instant_burns(&s);
+        self.prev = s;
+        if self.history.len() == self.cfg.slow_window {
+            self.history.pop_front();
+        }
+        self.history.push_back(burns);
+        self.ticks += 1;
+        if self.ticks < self.cfg.min_ticks {
+            return Vec::new();
+        }
+        let fast = self.window_burn(self.cfg.fast_window);
+        let slow = self.window_burn(self.cfg.slow_window);
+        let mut events = Vec::new();
+        for sig in AlertSignal::ALL {
+            let i = sig as usize;
+            if !self.fired[i]
+                && fast[i] >= self.cfg.fire_burn
+                && slow[i] >= self.cfg.fire_burn
+            {
+                self.fired[i] = true;
+                events.push(AlertEvent {
+                    signal: sig,
+                    fire: true,
+                    fast_burn: fast[i],
+                    slow_burn: slow[i],
+                    threshold: self.cfg.fire_burn,
+                });
+            } else if self.fired[i] && fast[i] <= self.cfg.clear_burn {
+                self.fired[i] = false;
+                events.push(AlertEvent {
+                    signal: sig,
+                    fire: false,
+                    fast_burn: fast[i],
+                    slow_burn: slow[i],
+                    threshold: self.cfg.clear_burn,
+                });
+            }
+        }
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AlertConfig {
+        AlertConfig {
+            fast_window: 2,
+            slow_window: 8,
+            min_ticks: 2,
+            slo_p99_us: 1_000.0,
+            ..Default::default()
+        }
+    }
+
+    fn lat_sample(p99: f64) -> AlertSample {
+        AlertSample { p99_lat_us: p99, ..Default::default() }
+    }
+
+    #[test]
+    fn fires_only_when_both_windows_burn() {
+        let mut e = AlertEngine::new(cfg());
+        // One hot tick inside a cold history: fast window (2) sees
+        // mean burn 1.0 only after two hot ticks, and the slow window
+        // needs the sustained burn too.
+        assert!(e.observe(lat_sample(500.0)).is_empty());
+        assert!(e.observe(lat_sample(2_000.0)).is_empty(), "slow not burning");
+        assert!(!e.fired(AlertSignal::LatencyP99));
+        let mut fired = false;
+        for _ in 0..8 {
+            for ev in e.observe(lat_sample(2_000.0)) {
+                assert_eq!(ev.signal, AlertSignal::LatencyP99);
+                assert!(ev.fire);
+                assert!(ev.fast_burn >= 1.0 && ev.slow_burn >= 1.0);
+                fired = true;
+            }
+        }
+        assert!(fired, "sustained 2x burn must fire");
+        assert!(e.fired(AlertSignal::LatencyP99));
+    }
+
+    #[test]
+    fn clears_with_hysteresis() {
+        let mut e = AlertEngine::new(cfg());
+        for _ in 0..10 {
+            e.observe(lat_sample(2_000.0));
+        }
+        assert!(e.fired(AlertSignal::LatencyP99));
+        // Burn 0.8 is below fire (1.0) but above clear (0.5): holds.
+        for _ in 0..4 {
+            assert!(e.observe(lat_sample(800.0)).is_empty());
+        }
+        assert!(e.fired(AlertSignal::LatencyP99), "hysteresis band holds");
+        // Drop the fast window to 0.3: clears.
+        let mut cleared = false;
+        for _ in 0..4 {
+            for ev in e.observe(lat_sample(300.0)) {
+                assert!(!ev.fire);
+                assert_eq!(ev.kind(), TraceKind::AlertClear);
+                cleared = true;
+            }
+        }
+        assert!(cleared);
+        assert!(!e.fired(AlertSignal::LatencyP99));
+    }
+
+    #[test]
+    fn unmeasured_error_and_idle_ticks_burn_zero() {
+        let mut e = AlertEngine::new(cfg());
+        // No traffic at all: every division guard must hold.
+        for _ in 0..10 {
+            assert!(e.observe(AlertSample::default()).is_empty());
+        }
+        assert!(!e.any_fired());
+        for b in e.window_burn(8) {
+            assert_eq!(b, 0.0);
+        }
+    }
+
+    #[test]
+    fn shed_rate_uses_counter_deltas() {
+        let mut e = AlertEngine::new(AlertConfig {
+            shed_budget: 0.10,
+            ..cfg()
+        });
+        let mut shed = 0u64;
+        let mut served = 0u64;
+        let mut fired = false;
+        for _ in 0..10 {
+            // 50% of offered load shed each tick: burn 5.0.
+            shed += 50;
+            served += 50;
+            for ev in e.observe(AlertSample {
+                shed_total: shed,
+                served_total: served,
+                ..Default::default()
+            }) {
+                assert_eq!(ev.signal, AlertSignal::ShedRate);
+                assert!(ev.fire);
+                fired = true;
+            }
+        }
+        assert!(fired);
+        // Shedding stops; the *cumulative* counters keep their value
+        // but deltas are zero, so the alert clears.
+        let mut cleared = false;
+        for _ in 0..4 {
+            for ev in e.observe(AlertSample {
+                shed_total: shed,
+                served_total: served + 500,
+                ..Default::default()
+            }) {
+                cleared |= !ev.fire;
+            }
+        }
+        assert!(cleared);
+    }
+
+    #[test]
+    fn fast_burning_leads_the_full_alert() {
+        let mut e = AlertEngine::new(AlertConfig {
+            fast_window: 2,
+            slow_window: 32,
+            min_ticks: 2,
+            slo_p99_us: 1_000.0,
+            ..Default::default()
+        });
+        for _ in 0..16 {
+            e.observe(lat_sample(100.0));
+        }
+        // Two hot ticks saturate the fast window while the 32-tick
+        // slow window is still far from confirming.
+        e.observe(lat_sample(3_000.0));
+        e.observe(lat_sample(3_000.0));
+        assert!(e.fast_burning(), "pre-degrade hook sees the fast burn");
+        assert!(
+            !e.fired(AlertSignal::LatencyP99),
+            "the paging alert waits for the slow window"
+        );
+    }
+
+    #[test]
+    fn disabled_engine_is_inert() {
+        let mut e =
+            AlertEngine::new(AlertConfig { enabled: false, ..cfg() });
+        for _ in 0..20 {
+            assert!(e.observe(lat_sample(1e9)).is_empty());
+        }
+        assert!(!e.any_fired());
+        assert!(!e.fast_burning());
+    }
+}

@@ -20,6 +20,7 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 use super::histogram::HistSnapshot;
+use super::span::Phase;
 use super::ERR_TICKS_PER_UNIT;
 use crate::coordinator::{FleetStats, ServerStats};
 use crate::util::json::Json;
@@ -51,6 +52,14 @@ pub struct ObsSnapshot {
     pub queue_depth: HistSnapshot,
     /// Real samples per dispatched batch.
     pub batch_fill: HistSnapshot,
+    /// Per-phase durations (us) from sampled request spans, indexed by
+    /// [`Phase`] discriminant — fleet p99 decomposed by lifecycle
+    /// phase.
+    pub phase_us: [HistSnapshot; 7],
+    /// Per-sample aJ attributed to the digital execution plane.
+    pub plane_digital_aj: HistSnapshot,
+    /// Per-sample aJ attributed to the analog execution plane.
+    pub plane_analog_aj: HistSnapshot,
     pub per_device: Vec<DeviceObsSnapshot>,
     /// Decision events ever pushed (ring keeps the last `capacity`).
     pub trace_events: u64,
@@ -58,6 +67,14 @@ pub struct ObsSnapshot {
     pub trace_digest: u64,
     /// Trace slots a reader skipped after exhausting seqlock retries.
     pub trace_dropped_reads: u64,
+    /// Request spans ever completed and pushed (sampled).
+    pub span_events: u64,
+    /// FNV fold over the retained spans, sequence order.
+    pub span_digest: u64,
+    /// Span-ring slots a reader skipped after seqlock retries.
+    pub span_dropped_reads: u64,
+    /// Cumulative masked tile-fault hits across the fleet.
+    pub faults_masked: u64,
     /// Telemetry-ring slots skipped the same way (summed over models;
     /// the satellite fix for the ring's silent data loss).
     pub telemetry_dropped_reads: u64,
@@ -96,12 +113,29 @@ fn hist_json(h: &HistSnapshot, scale: f64) -> Json {
 const QUANTILES: [(&str, f64); 4] =
     [("p50", 0.5), ("p95", 0.95), ("p99", 0.99), ("p999", 0.999)];
 
+/// Escape a label *value* per the Prometheus text exposition format:
+/// backslash, double-quote and newline must be backslash-escaped.
+fn prom_escape(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 fn prom_hist(
     out: &mut String,
     name: &str,
+    help: &str,
     h: &HistSnapshot,
     scale: f64,
 ) {
+    let _ = writeln!(out, "# HELP {name} {help}");
     let _ = writeln!(out, "# TYPE {name} summary");
     for (_, q) in QUANTILES {
         let _ = writeln!(
@@ -183,6 +217,37 @@ impl MetricsSnapshot {
             hist_json(&s.obs.batch_fill, 1.0),
         );
         m.insert(
+            "phases".to_string(),
+            Json::Obj(
+                Phase::ALL
+                    .iter()
+                    .map(|&p| {
+                        (
+                            p.label().to_string(),
+                            hist_json(&s.obs.phase_us[p as usize], 1.0),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "planes".to_string(),
+            Json::Obj(BTreeMap::from([
+                (
+                    "digital_aj".to_string(),
+                    hist_json(&s.obs.plane_digital_aj, 1.0),
+                ),
+                (
+                    "analog_aj".to_string(),
+                    hist_json(&s.obs.plane_analog_aj, 1.0),
+                ),
+            ])),
+        );
+        m.insert(
+            "faults_masked".to_string(),
+            Json::Num(s.obs.faults_masked as f64),
+        );
+        m.insert(
             "devices".to_string(),
             Json::Arr(
                 self.fleet
@@ -253,6 +318,23 @@ impl MetricsSnapshot {
             ])),
         );
         m.insert(
+            "spans".to_string(),
+            Json::Obj(BTreeMap::from([
+                (
+                    "events".to_string(),
+                    Json::Num(s.obs.span_events as f64),
+                ),
+                (
+                    "digest".to_string(),
+                    Json::Str(format!("{:#018x}", s.obs.span_digest)),
+                ),
+                (
+                    "dropped_reads".to_string(),
+                    Json::Num(s.obs.span_dropped_reads as f64),
+                ),
+            ])),
+        );
+        m.insert(
             "telemetry_dropped_reads".to_string(),
             Json::Num(s.obs.telemetry_dropped_reads as f64),
         );
@@ -260,61 +342,183 @@ impl MetricsSnapshot {
     }
 
     /// Prometheus text exposition format (deterministic line order).
+    /// Every series is preceded by `# HELP` and `# TYPE` lines and
+    /// every label value is escaped per the format spec — the
+    /// conformance unit test parses each emitted line back.
     pub fn to_prometheus(&self) -> String {
         let s = &self.stats;
         let mut out = String::new();
-        let mut counter = |name: &str, v: f64| {
+        let mut counter = |name: &str, help: &str, v: f64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
             let _ = writeln!(out, "# TYPE {name} counter");
             let _ = writeln!(out, "{name} {v}");
         };
-        counter("dynaprec_served_total", s.served as f64);
-        counter("dynaprec_shed_total", s.shed as f64);
-        counter("dynaprec_batches_total", s.batches as f64);
-        counter("dynaprec_dispatch_shed_total", self.fleet.dispatch_shed as f64);
-        counter("dynaprec_energy_units_total", s.ledger.total_energy);
-        counter("dynaprec_trace_events_total", s.obs.trace_events as f64);
+        counter(
+            "dynaprec_served_total",
+            "Requests answered with real logits",
+            s.served as f64,
+        );
+        counter(
+            "dynaprec_shed_total",
+            "Requests rejected by the admission gate",
+            s.shed as f64,
+        );
+        counter(
+            "dynaprec_batches_total",
+            "Batches executed across the fleet",
+            s.batches as f64,
+        );
+        counter(
+            "dynaprec_dispatch_shed_total",
+            "Batches rejected at dispatch (no capacity or dead fleet)",
+            self.fleet.dispatch_shed as f64,
+        );
+        counter(
+            "dynaprec_energy_units_total",
+            "Simulated analog energy spent, base units",
+            s.ledger.total_energy,
+        );
+        counter(
+            "dynaprec_trace_events_total",
+            "Decision-trace events ever pushed",
+            s.obs.trace_events as f64,
+        );
         counter(
             "dynaprec_trace_dropped_reads_total",
+            "Decision-trace slots skipped by readers under contention",
             s.obs.trace_dropped_reads as f64,
         );
         counter(
+            "dynaprec_span_events_total",
+            "Sampled request spans completed",
+            s.obs.span_events as f64,
+        );
+        counter(
+            "dynaprec_span_dropped_reads_total",
+            "Span-ring slots skipped by readers under contention",
+            s.obs.span_dropped_reads as f64,
+        );
+        counter(
+            "dynaprec_faults_masked_total",
+            "Tile-fault hits masked by redundant decode",
+            s.obs.faults_masked as f64,
+        );
+        counter(
             "dynaprec_telemetry_dropped_reads_total",
+            "Telemetry-ring slots skipped by readers under contention",
             s.obs.telemetry_dropped_reads as f64,
+        );
+        let _ = writeln!(
+            out,
+            "# HELP dynaprec_inflight Admitted requests not yet answered"
         );
         let _ = writeln!(out, "# TYPE dynaprec_inflight gauge");
         let _ = writeln!(out, "dynaprec_inflight {}", self.inflight);
+        let _ = writeln!(
+            out,
+            "# HELP dynaprec_scale Committed precision scale per model"
+        );
         let _ = writeln!(out, "# TYPE dynaprec_scale gauge");
         for (model, scale) in &s.scales {
             let _ = writeln!(
                 out,
-                "dynaprec_scale{{model=\"{model}\"}} {scale}"
+                "dynaprec_scale{{model=\"{}\"}} {scale}",
+                prom_escape(model)
             );
         }
-        prom_hist(&mut out, "dynaprec_latency_us", &s.obs.latency_us, 1.0);
+        prom_hist(
+            &mut out,
+            "dynaprec_latency_us",
+            "Request latency, microseconds",
+            &s.obs.latency_us,
+            1.0,
+        );
         prom_hist(
             &mut out,
             "dynaprec_out_err",
+            "Measured output error, error units",
             &s.obs.out_err_u,
             ERR_TICKS_PER_UNIT,
         );
         prom_hist(
             &mut out,
             "dynaprec_energy_per_request_units",
+            "Analog energy per request, base units",
             &s.obs.energy_per_req,
             1.0,
         );
-        prom_hist(&mut out, "dynaprec_queue_depth", &s.obs.queue_depth, 1.0);
-        prom_hist(&mut out, "dynaprec_batch_fill", &s.obs.batch_fill, 1.0);
+        prom_hist(
+            &mut out,
+            "dynaprec_queue_depth",
+            "Admission-gate depth at batch completion",
+            &s.obs.queue_depth,
+            1.0,
+        );
+        prom_hist(
+            &mut out,
+            "dynaprec_batch_fill",
+            "Real samples per dispatched batch",
+            &s.obs.batch_fill,
+            1.0,
+        );
+        // The fleet p99 decomposition: one summary series per
+        // lifecycle phase, from sampled request spans.
+        let _ = writeln!(
+            out,
+            "# HELP dynaprec_phase_us Request latency by lifecycle \
+             phase from sampled spans, microseconds"
+        );
+        let _ = writeln!(out, "# TYPE dynaprec_phase_us summary");
+        for p in Phase::ALL {
+            let h = &s.obs.phase_us[p as usize];
+            for (_, q) in QUANTILES {
+                let _ = writeln!(
+                    out,
+                    "dynaprec_phase_us{{phase=\"{}\",quantile=\"{q}\"}} {}",
+                    p.label(),
+                    h.quantile(q)
+                );
+            }
+            let _ = writeln!(
+                out,
+                "dynaprec_phase_us_count{{phase=\"{}\"}} {}",
+                p.label(),
+                h.count()
+            );
+        }
+        prom_hist(
+            &mut out,
+            "dynaprec_plane_digital_aj",
+            "Digital-plane energy per sample from sampled spans, aJ",
+            &s.obs.plane_digital_aj,
+            1.0,
+        );
+        prom_hist(
+            &mut out,
+            "dynaprec_plane_analog_aj",
+            "Analog-plane energy per sample from sampled spans, aJ",
+            &s.obs.plane_analog_aj,
+            1.0,
+        );
+        let _ = writeln!(
+            out,
+            "# HELP dynaprec_device_alive Worker liveness per device"
+        );
         let _ = writeln!(out, "# TYPE dynaprec_device_alive gauge");
         for d in &self.fleet.devices {
             let _ = writeln!(
                 out,
                 "dynaprec_device_alive{{device=\"{}\",name=\"{}\"}} {}",
                 d.id,
-                d.name,
+                prom_escape(&d.name),
                 d.alive as u8
             );
         }
+        let _ = writeln!(
+            out,
+            "# HELP dynaprec_device_pending_batches Batches queued on \
+             each device"
+        );
         let _ = writeln!(out, "# TYPE dynaprec_device_pending_batches gauge");
         for d in &self.fleet.devices {
             let _ = writeln!(
@@ -323,6 +527,11 @@ impl MetricsSnapshot {
                 d.id, d.pending_batches
             );
         }
+        let _ = writeln!(
+            out,
+            "# HELP dynaprec_device_served_total Requests served per \
+             device"
+        );
         let _ = writeln!(out, "# TYPE dynaprec_device_served_total counter");
         for d in &self.fleet.devices {
             let _ = writeln!(
@@ -399,12 +608,34 @@ pub fn stats_text(s: &ServerStats) -> String {
     }
     let _ = writeln!(
         out,
-        "trace: {} events ({} dropped reads); telemetry dropped \
-         reads: {}",
+        "trace: {} events ({} dropped reads); spans: {} sampled \
+         ({} dropped reads); telemetry dropped reads: {}",
         s.obs.trace_events,
         s.obs.trace_dropped_reads,
+        s.obs.span_events,
+        s.obs.span_dropped_reads,
         s.obs.telemetry_dropped_reads,
     );
+    if s.obs.span_events > 0 {
+        let p99 = |p: Phase| s.obs.phase_us[p as usize].quantile(0.99);
+        let _ = writeln!(
+            out,
+            "phase p99 (us): admission={:.0} queue={:.0} \
+             assembly={:.0} dispatch={:.0} execute={:.0} decode={:.0} \
+             respond={:.0}; plane aJ/sample p50: digital={:.0} \
+             analog={:.0}; faults masked: {}",
+            p99(Phase::Admission),
+            p99(Phase::Queue),
+            p99(Phase::Assembly),
+            p99(Phase::Dispatch),
+            p99(Phase::Execute),
+            p99(Phase::Decode),
+            p99(Phase::Respond),
+            s.obs.plane_digital_aj.quantile(0.5),
+            s.obs.plane_analog_aj.quantile(0.5),
+            s.obs.faults_masked,
+        );
+    }
     let _ = write!(
         out,
         "energy/request: {:.4e} units; precision scales: {}\n{}",
@@ -466,6 +697,68 @@ mod tests {
         );
     }
 
+    /// The machine-readable document behind the `--json` flag of the
+    /// serve_fleet / serve_sim / observe_fleet examples (documented in
+    /// docs/ARCHITECTURE.md "Metrics export"). The exact top-level key
+    /// set is pinned: adding a key means updating the doc, removing or
+    /// renaming one breaks downstream dashboards.
+    #[test]
+    fn json_schema_top_level_keys_are_pinned() {
+        let m = snapshot_with_data();
+        let j = m.to_json();
+        let keys: Vec<&str> = match &j {
+            Json::Obj(o) => o.keys().map(String::as_str).collect(),
+            other => panic!("snapshot must be an object: {other:?}"),
+        };
+        assert_eq!(
+            keys,
+            [
+                "batch_fill",
+                "batches",
+                "devices",
+                "dispatch_shed",
+                "energy_per_req",
+                "energy_per_request",
+                "energy_total",
+                "faults_masked",
+                "inflight",
+                "latency_us",
+                "out_err",
+                "phases",
+                "planes",
+                "queue_depth",
+                "scales",
+                "served",
+                "shed",
+                "spans",
+                "t_us",
+                "telemetry_dropped_reads",
+                "trace",
+                "window",
+            ]
+        );
+        // Golden round trip: the canonical rendering parses back to an
+        // equal document and re-renders byte-identically, so nothing is
+        // lost, reordered or double-escaped on the way through.
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("valid json");
+        assert_eq!(back, j);
+        assert_eq!(back.to_string(), text);
+        // Sub-document shape: per-phase histograms keyed by lifecycle
+        // phase label, the plane split keyed digital/analog, and the
+        // span ring summary with its hex digest.
+        let phases = back.field("phases").unwrap();
+        for p in Phase::ALL {
+            assert!(phases.field(p.label()).is_ok(), "missing {}", p.label());
+        }
+        let planes = back.field("planes").unwrap();
+        assert!(planes.field("digital_aj").is_ok());
+        assert!(planes.field("analog_aj").is_ok());
+        let spans = back.field("spans").unwrap();
+        assert!(spans.str_field("digest").unwrap().starts_with("0x"));
+        assert_eq!(spans.f64_field("events").unwrap(), 0.0);
+    }
+
     #[test]
     fn prometheus_has_quantiles_and_scales() {
         let m = snapshot_with_data();
@@ -474,6 +767,120 @@ mod tests {
         assert!(p.contains("dynaprec_latency_us{quantile=\"0.99\"}"));
         assert!(p.contains("dynaprec_scale{model=\"m\"} 0.5"));
         assert!(p.contains("dynaprec_latency_us_count 100"));
+        assert!(p.contains("dynaprec_phase_us{phase=\"queue\",quantile=\"0.99\"}"));
+        assert!(p.contains("dynaprec_phase_us_count{phase=\"execute\"}"));
+    }
+
+    /// Format-conformance checker for the Prometheus text exposition
+    /// format: every line must be a well-formed HELP/TYPE comment or a
+    /// sample whose name, labels (with escapes) and value parse, and
+    /// every sample's metric family must have been announced.
+    fn assert_prometheus_parses(p: &str) {
+        use std::collections::BTreeSet;
+        let name_ok = |n: &str| {
+            !n.is_empty()
+                && n.starts_with(|c: char| c.is_ascii_alphabetic() || c == '_')
+                && n.chars().all(|c| {
+                    c.is_ascii_alphanumeric() || c == '_' || c == ':'
+                })
+        };
+        let mut types: BTreeMap<String, String> = BTreeMap::new();
+        let mut helps: BTreeSet<String> = BTreeSet::new();
+        for line in p.lines() {
+            assert!(!line.is_empty(), "blank line in exposition");
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let (name, help) =
+                    rest.split_once(' ').expect("HELP has text");
+                assert!(name_ok(name), "bad HELP name: {line}");
+                assert!(!help.is_empty());
+                helps.insert(name.to_string());
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let (name, ty) =
+                    rest.split_once(' ').expect("TYPE has a type");
+                assert!(name_ok(name), "bad TYPE name: {line}");
+                assert!(
+                    ["counter", "gauge", "summary"].contains(&ty),
+                    "unknown type: {line}"
+                );
+                types.insert(name.to_string(), ty.to_string());
+                continue;
+            }
+            assert!(!line.starts_with('#'), "unknown comment: {line}");
+            let (series, value) =
+                line.rsplit_once(' ').expect("sample has a value");
+            assert!(
+                value.parse::<f64>().is_ok(),
+                "unparseable value: {line}"
+            );
+            let (name, labels) = match series.split_once('{') {
+                Some((n, l)) => (
+                    n,
+                    Some(
+                        l.strip_suffix('}')
+                            .unwrap_or_else(|| panic!("open braces: {line}")),
+                    ),
+                ),
+                None => (series, None),
+            };
+            assert!(name_ok(name), "bad sample name: {line}");
+            if let Some(labels) = labels {
+                let bytes = labels.as_bytes();
+                let mut i = 0;
+                while i < bytes.len() {
+                    let eq = labels[i..]
+                        .find('=')
+                        .unwrap_or_else(|| panic!("label without =: {line}"))
+                        + i;
+                    assert!(name_ok(&labels[i..eq]), "bad label: {line}");
+                    assert_eq!(bytes[eq + 1], b'"', "unquoted: {line}");
+                    let mut j = eq + 2;
+                    while j < bytes.len() && bytes[j] != b'"' {
+                        // Escaped byte: skip the pair. Raw newlines
+                        // can't appear (we iterate lines), so the only
+                        // legal escapes are \\ \" \n.
+                        if bytes[j] == b'\\' {
+                            assert!(
+                                matches!(
+                                    bytes[j + 1],
+                                    b'\\' | b'"' | b'n'
+                                ),
+                                "bad escape: {line}"
+                            );
+                            j += 2;
+                        } else {
+                            j += 1;
+                        }
+                    }
+                    assert!(j < bytes.len(), "unterminated value: {line}");
+                    i = j + 1;
+                    if i < bytes.len() {
+                        assert_eq!(bytes[i], b',', "bad separator: {line}");
+                        i += 1;
+                    }
+                }
+            }
+            let family = name
+                .strip_suffix("_count")
+                .filter(|f| types.get(*f).map(String::as_str) == Some("summary"))
+                .unwrap_or(name);
+            assert!(types.contains_key(family), "no TYPE before: {line}");
+            assert!(helps.contains(family), "no HELP before: {line}");
+        }
+    }
+
+    #[test]
+    fn prometheus_format_conformance_and_label_escaping() {
+        let mut m = snapshot_with_data();
+        // A model name exercising every escaped character class.
+        m.stats.scales.insert("we\"ird\\mo\ndel".to_string(), 0.25);
+        let p = m.to_prometheus();
+        assert!(
+            p.contains(r#"dynaprec_scale{model="we\"ird\\mo\ndel"} 0.25"#),
+            "label value must be escaped"
+        );
+        assert_prometheus_parses(&p);
     }
 
     #[test]

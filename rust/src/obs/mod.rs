@@ -1,7 +1,9 @@
 //! Fleet-wide observability: lock-free tail-latency/error histograms,
-//! structured decision tracing, and metric export.
+//! structured decision tracing, request-lifecycle span tracing,
+//! burn-rate alerting, and metric export.
 //!
-//! Three pillars (see `docs/ARCHITECTURE.md`, "Observability"):
+//! Five pillars (see `docs/ARCHITECTURE.md`, "Observability" and
+//! "Request lifecycle tracing & alerting"):
 //!
 //! - [`histogram`] — HdrHistogram-style log-linear histograms with
 //!   atomic buckets and a bounded relative error, recorded by device
@@ -11,8 +13,15 @@
 //! - [`trace`] — a fixed-capacity seqlock event ring recording *why*
 //!   the control plane acted (scale steps with their triggering
 //!   observation, budget fits, shed transitions, policy swaps, fault
-//!   injections, device deaths, re-routes), clock-stamped so traces
-//!   replay bit-identically under `sim::VirtualClock`.
+//!   injections, device deaths, re-routes, alert transitions),
+//!   clock-stamped so traces replay bit-identically under
+//!   `sim::VirtualClock`.
+//! - [`span`] — sampled per-request lifecycle spans attributing time
+//!   and aJ energy to each serving phase and to the digital vs analog
+//!   execution planes, exported as Chrome trace-event JSON.
+//! - [`alert`] — a multi-window burn-rate alert engine over the
+//!   serving telemetry (p99 latency, p95 out-err, shed rate,
+//!   fault-mask rate), recording fire/clear into the decision trace.
 //! - [`metrics`] — the snapshot/export layer: one
 //!   [`MetricsSnapshot`] rendered as human text (the single path
 //!   behind `ServerStats::report`), Prometheus text format, and
@@ -22,15 +31,23 @@
 //! thread that already holds the control state (router, dispatcher,
 //! device workers, control thread) records without extra plumbing.
 
+pub mod alert;
 pub mod histogram;
 pub mod metrics;
+pub mod span;
 pub mod trace;
 
+pub use alert::{
+    AlertConfig, AlertEngine, AlertEvent, AlertSample, AlertSignal,
+};
 pub use histogram::{HistSnapshot, Histogram};
 pub use metrics::{
     DeviceObsSnapshot, MetricsSnapshot, ObsSnapshot,
 };
+pub use span::{Phase, RequestSpan, SpanConfig, SpanRecord, SpanRing};
 pub use trace::{DecisionTrace, TraceEvent, TraceKind};
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::sim::clock::ClockRef;
 
@@ -54,13 +71,28 @@ pub struct DeviceObs {
     pub queue_depth: Histogram,
 }
 
-/// The fleet's observability state: one decision trace, one
-/// dispatcher-side batch-fill histogram, and a [`DeviceObs`] per
-/// device. Shared via `ControlShared`.
+/// The fleet's observability state: one decision trace, one span ring,
+/// one dispatcher-side batch-fill histogram, per-phase histograms fed
+/// by completed spans, and a [`DeviceObs`] per device. Shared via
+/// `ControlShared`.
 pub struct ObsHub {
     pub trace: DecisionTrace,
+    /// Completed request-lifecycle spans (sampled; see
+    /// [`ObsHub::span_cfg`]).
+    pub spans: SpanRing,
     /// Real samples per dispatched batch (batcher effectiveness).
     pub batch_fill: Histogram,
+    /// Per-phase durations (us) from completed sampled spans, indexed
+    /// by [`Phase`] discriminant — the fleet p99 decomposition.
+    pub phase_us: [Histogram; 7],
+    /// Per-sample aJ attributed to the digital plane (sampled spans).
+    pub plane_digital_aj: Histogram,
+    /// Per-sample aJ attributed to the analog plane (sampled spans).
+    pub plane_analog_aj: Histogram,
+    /// Cumulative masked tile-fault hits across the fleet (the alert
+    /// engine's fault-mask-rate numerator).
+    faults_masked: AtomicU64,
+    span_cfg: SpanConfig,
     models: Vec<String>,
     devices: Vec<DeviceObs>,
 }
@@ -68,20 +100,74 @@ pub struct ObsHub {
 impl ObsHub {
     /// `models` must be the coordinator's model names in a stable
     /// order (they intern to the `u32` ids carried by trace events).
+    /// Span tracing is disabled; use [`ObsHub::with_spans`] to enable.
     pub fn new(
         models: Vec<String>,
         n_devices: usize,
         trace_cap: usize,
         clock: ClockRef,
     ) -> ObsHub {
+        Self::with_spans(
+            models,
+            n_devices,
+            trace_cap,
+            trace_cap,
+            SpanConfig::default(),
+            clock,
+        )
+    }
+
+    /// Full constructor: `span_cap` bounds the retained spans,
+    /// `span_cfg` sets the deterministic sampling policy.
+    pub fn with_spans(
+        models: Vec<String>,
+        n_devices: usize,
+        trace_cap: usize,
+        span_cap: usize,
+        span_cfg: SpanConfig,
+        clock: ClockRef,
+    ) -> ObsHub {
         ObsHub {
             trace: DecisionTrace::with_clock(trace_cap, clock),
+            spans: SpanRing::new(span_cap),
             batch_fill: Histogram::new(),
+            phase_us: std::array::from_fn(|_| Histogram::new()),
+            plane_digital_aj: Histogram::new(),
+            plane_analog_aj: Histogram::new(),
+            faults_masked: AtomicU64::new(0),
+            span_cfg,
             models,
             devices: (0..n_devices.max(1))
                 .map(|_| DeviceObs::default())
                 .collect(),
         }
+    }
+
+    /// The span-sampling policy (immutable for the hub's lifetime, so
+    /// the sampled set is a pure function of request ids).
+    pub fn span_cfg(&self) -> SpanConfig {
+        self.span_cfg
+    }
+
+    /// Finalize one completed span: fold its phase durations and plane
+    /// energies into the hub histograms, then retain it in the ring.
+    pub fn record_span(&self, s: RequestSpan) {
+        for p in Phase::ALL {
+            self.phase_us[p as usize].record(s.phase_ns(p) / 1_000);
+        }
+        self.plane_digital_aj.record(s.digital_aj as u64);
+        self.plane_analog_aj.record(s.analog_aj as u64);
+        self.spans.push(s);
+    }
+
+    /// Count masked tile-fault hits (called by device workers).
+    pub fn add_faults_masked(&self, n: u64) {
+        self.faults_masked.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Cumulative masked-fault hits across the fleet.
+    pub fn faults_masked(&self) -> u64 {
+        self.faults_masked.load(Ordering::Relaxed)
     }
 
     /// Interned id for a model name (for trace-event payloads).
@@ -122,9 +208,16 @@ impl ObsHub {
             .collect();
         let mut merged = ObsSnapshot {
             batch_fill: self.batch_fill.snapshot(),
+            phase_us: std::array::from_fn(|i| self.phase_us[i].snapshot()),
+            plane_digital_aj: self.plane_digital_aj.snapshot(),
+            plane_analog_aj: self.plane_analog_aj.snapshot(),
             trace_events: self.trace.pushed(),
             trace_digest: self.trace.digest(),
             trace_dropped_reads: self.trace.dropped_reads(),
+            span_events: self.spans.pushed(),
+            span_digest: self.spans.digest(),
+            span_dropped_reads: self.spans.dropped_reads(),
+            faults_masked: self.faults_masked(),
             ..Default::default()
         };
         for d in &per_device {
@@ -178,6 +271,60 @@ mod tests {
         // Out-of-range device ids clamp instead of panicking.
         h.device(99).latency_us.record(1);
         assert_eq!(h.snapshot().per_device[1].latency_us.count(), 2);
+    }
+
+    #[test]
+    fn spans_feed_phase_histograms_and_digest() {
+        let h = ObsHub::with_spans(
+            vec!["a".into()],
+            1,
+            64,
+            64,
+            SpanConfig::every(1),
+            Arc::new(WallClock::new()),
+        );
+        assert!(h.span_cfg().enabled());
+        let s = RequestSpan {
+            id: 7,
+            t_submit: 0,
+            t_enqueue: 1_000,
+            t_assemble: 5_000,
+            t_dispatch: 9_000,
+            t_execute: 11_000,
+            t_kernel: 41_000,
+            t_decode: 42_000,
+            t_respond: 43_000,
+            digital_ns: 10_000,
+            digital_aj: 64.0,
+            analog_aj: 8.0,
+            ..Default::default()
+        };
+        h.record_span(s);
+        h.add_faults_masked(3);
+        let snap = h.snapshot();
+        assert_eq!(snap.span_events, 1);
+        assert_ne!(snap.span_digest, SpanRing::new(8).digest());
+        assert_eq!(snap.span_dropped_reads, 0);
+        assert_eq!(snap.faults_masked, 3);
+        for p in Phase::ALL {
+            assert_eq!(snap.phase_us[p as usize].count(), 1);
+        }
+        // Queue phase was 4 us; execute 30 us.
+        assert_eq!(snap.phase_us[Phase::Queue as usize].quantile(1.0), 4.0);
+        assert_eq!(
+            snap.phase_us[Phase::Execute as usize].quantile(1.0),
+            30.0
+        );
+        assert_eq!(snap.plane_digital_aj.count(), 1);
+        assert_eq!(snap.plane_analog_aj.count(), 1);
+    }
+
+    #[test]
+    fn default_hub_has_spans_disabled() {
+        let h = hub();
+        assert!(!h.span_cfg().enabled());
+        assert!(!h.span_cfg().sampled(0));
+        assert_eq!(h.snapshot().span_events, 0);
     }
 
     #[test]

@@ -1,0 +1,621 @@
+//! Request-lifecycle span tracing: the second observability rung.
+//!
+//! PR 6's histograms answer *what* the latency tails are; spans answer
+//! *where* a sampled request spent its time and energy. Each sampled
+//! request carries a [`RequestSpan`] through the whole lifecycle
+//! (`admission -> queue -> batch-assembly -> dispatch -> kernel
+//! execute -> redundancy decode -> respond`), stamped at every phase
+//! boundary with the coordinator's `ClockRef` — so under a
+//! `VirtualClock` every stamp, and therefore the whole exported trace,
+//! replays bit-identically. The execute phase additionally attributes
+//! time *and* aJ energy to the digital vs analog planes of the hybrid
+//! backend, and counts the per-site K-repetition work of the native
+//! analog backend.
+//!
+//! Completed spans land in a [`SpanRing`] — the same multi-writer
+//! seqlock protocol as [`super::trace::DecisionTrace`] (slot claimed
+//! with one `fetch_add`, even/odd slot versions, bounded reader retries
+//! with counted drops) — and export as Chrome trace-event JSON
+//! ([`chrome_trace_json`]) loadable in Perfetto / `chrome://tracing`.
+//!
+//! Sampling is a pure function of the request id and a seed
+//! ([`SpanConfig::sampled`]): request ids are issued sequentially by
+//! the coordinator, so the same scenario samples the same request set
+//! on every replay. `sample_every == 0` disables tracing entirely; the
+//! hot path then reduces to one branch on an immutable config.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+use crate::util::rng::{fnv1a_word, FNV_OFFSET};
+
+/// One phase of the request lifecycle, in causal order. Each phase's
+/// duration is the difference of two adjacent [`RequestSpan`] stamps,
+/// so the seven durations telescope: they sum *exactly* to the
+/// end-to-end span duration (no rounding, no double counting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Phase {
+    /// Coordinator `submit`: admission-gate verdict and handoff to the
+    /// dispatcher channel.
+    Admission = 0,
+    /// Waiting in the dispatcher channel for the batcher to pick the
+    /// request up.
+    Queue = 1,
+    /// Sitting in a partial batch until size or deadline flushes it.
+    Assembly = 2,
+    /// Flushed batch in the fleet: device pick and worker queue.
+    Dispatch = 3,
+    /// Backend kernel execution (digital + analog planes).
+    Execute = 4,
+    /// Redundancy decode, classification and ledger accounting.
+    Decode = 5,
+    /// Response channel send back to the caller.
+    Respond = 6,
+}
+
+impl Phase {
+    /// Every phase, lifecycle order.
+    pub const ALL: [Phase; 7] = [
+        Phase::Admission,
+        Phase::Queue,
+        Phase::Assembly,
+        Phase::Dispatch,
+        Phase::Execute,
+        Phase::Decode,
+        Phase::Respond,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::Admission => "admission",
+            Phase::Queue => "queue",
+            Phase::Assembly => "assembly",
+            Phase::Dispatch => "dispatch",
+            Phase::Execute => "execute",
+            Phase::Decode => "decode",
+            Phase::Respond => "respond",
+        }
+    }
+}
+
+/// Per-request lifecycle record: eight nanosecond stamps (one per
+/// phase boundary) plus the execute phase's digital/analog plane
+/// attribution. Created at `submit` for sampled requests, stamped
+/// progressively as the request moves through the stack, finalized and
+/// pushed into the [`SpanRing`] when the response is sent.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RequestSpan {
+    /// Coordinator-issued request id (sequential — the sampling key).
+    pub id: u64,
+    /// Interned model id (see `ObsHub::model_name`).
+    pub model: u32,
+    /// Fleet device id that executed the batch.
+    pub device: u32,
+    /// `submit` entry (ns since the clock epoch).
+    pub t_submit: u64,
+    /// Admitted and handed to the dispatcher channel.
+    pub t_enqueue: u64,
+    /// Picked up by the batcher (`Queue` ends, `Assembly` begins).
+    pub t_assemble: u64,
+    /// Batch flushed toward the fleet (`Dispatch` begins).
+    pub t_dispatch: u64,
+    /// Worker began backend execution (`Execute` begins).
+    pub t_execute: u64,
+    /// Kernel time fully elapsed (`Decode` begins).
+    pub t_kernel: u64,
+    /// Decode + accounting done (`Respond` begins). This is the same
+    /// stamp the fleet derives `latency_us` from, so phase durations
+    /// reconcile exactly with the reported latency histogram.
+    pub t_decode: u64,
+    /// Response delivered (span end).
+    pub t_respond: u64,
+    /// Execute-phase ns attributed to the digital plane; the analog
+    /// plane gets the exact remainder, so the split sums to `Execute`.
+    pub digital_ns: u64,
+    /// Per-sample aJ spent on the digital plane this batch.
+    pub digital_aj: f64,
+    /// Per-sample aJ spent on the analog plane this batch.
+    pub analog_aj: f64,
+    /// Total quantized K repetitions over the batch's analog
+    /// sites/channels (0 on all-digital paths).
+    pub k_total: f64,
+}
+
+impl RequestSpan {
+    /// The stamp that opens `phase`.
+    fn start_of(&self, phase: Phase) -> u64 {
+        match phase {
+            Phase::Admission => self.t_submit,
+            Phase::Queue => self.t_enqueue,
+            Phase::Assembly => self.t_assemble,
+            Phase::Dispatch => self.t_dispatch,
+            Phase::Execute => self.t_execute,
+            Phase::Decode => self.t_kernel,
+            Phase::Respond => self.t_decode,
+        }
+    }
+
+    /// The stamp that closes `phase`.
+    fn end_of(&self, phase: Phase) -> u64 {
+        match phase {
+            Phase::Admission => self.t_enqueue,
+            Phase::Queue => self.t_assemble,
+            Phase::Assembly => self.t_dispatch,
+            Phase::Dispatch => self.t_execute,
+            Phase::Execute => self.t_kernel,
+            Phase::Decode => self.t_decode,
+            Phase::Respond => self.t_respond,
+        }
+    }
+
+    /// Duration of one phase in ns. Saturating: a phase whose later
+    /// stamp was never reached reads as 0, never underflows.
+    pub fn phase_ns(&self, phase: Phase) -> u64 {
+        self.end_of(phase).saturating_sub(self.start_of(phase))
+    }
+
+    /// End-to-end span duration in ns. Because adjacent phases share
+    /// their boundary stamp, this *equals* the sum of the seven
+    /// [`Self::phase_ns`] values exactly.
+    pub fn total_ns(&self) -> u64 {
+        self.t_respond.saturating_sub(self.t_submit)
+    }
+
+    /// Execute-phase ns attributed to the analog plane (the exact
+    /// complement of [`Self::digital_ns`]).
+    pub fn analog_ns(&self) -> u64 {
+        self.phase_ns(Phase::Execute).saturating_sub(self.digital_ns)
+    }
+}
+
+/// Span-sampling policy: deterministic 1-in-N by hashed request id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanConfig {
+    /// Sample one request in `sample_every` (0 disables span tracing;
+    /// 1 samples everything).
+    pub sample_every: u64,
+    /// Seed mixed into the sampling hash, so two deployments can
+    /// sample disjoint request sets at the same rate.
+    pub seed: u64,
+}
+
+impl Default for SpanConfig {
+    fn default() -> SpanConfig {
+        SpanConfig { sample_every: 0, seed: 0x5eed }
+    }
+}
+
+impl SpanConfig {
+    /// A config sampling 1-in-`n` with the default seed.
+    pub fn every(n: u64) -> SpanConfig {
+        SpanConfig { sample_every: n, ..Default::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sample_every > 0
+    }
+
+    /// Whether request `id` is traced. Pure function of `(seed, id)`:
+    /// ids are issued sequentially, so one scenario samples the same
+    /// request set on every replay.
+    pub fn sampled(&self, id: u64) -> bool {
+        match self.sample_every {
+            0 => false,
+            1 => true,
+            n => {
+                let h = fnv1a_word(fnv1a_word(FNV_OFFSET, self.seed), id);
+                h % n == 0
+            }
+        }
+    }
+}
+
+/// One retained span plus its global sequence number (push order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanRecord {
+    /// Global push sequence (total order of span completions).
+    pub seq: u64,
+    pub span: RequestSpan,
+}
+
+/// Packed span width: id, seq, ids word, eight stamps, digital_ns and
+/// three f64 payloads.
+const WORDS: usize = 15;
+
+fn pack(r: &SpanRecord) -> [u64; WORDS] {
+    let s = &r.span;
+    [
+        s.id,
+        r.seq,
+        ((s.model as u64) << 32) | s.device as u64,
+        s.t_submit,
+        s.t_enqueue,
+        s.t_assemble,
+        s.t_dispatch,
+        s.t_execute,
+        s.t_kernel,
+        s.t_decode,
+        s.t_respond,
+        s.digital_ns,
+        s.digital_aj.to_bits(),
+        s.analog_aj.to_bits(),
+        s.k_total.to_bits(),
+    ]
+}
+
+fn unpack(w: &[u64; WORDS]) -> SpanRecord {
+    SpanRecord {
+        seq: w[1],
+        span: RequestSpan {
+            id: w[0],
+            model: (w[2] >> 32) as u32,
+            device: w[2] as u32,
+            t_submit: w[3],
+            t_enqueue: w[4],
+            t_assemble: w[5],
+            t_dispatch: w[6],
+            t_execute: w[7],
+            t_kernel: w[8],
+            t_decode: w[9],
+            t_respond: w[10],
+            digital_ns: w[11],
+            digital_aj: f64::from_bits(w[12]),
+            analog_aj: f64::from_bits(w[13]),
+            k_total: f64::from_bits(w[14]),
+        },
+    }
+}
+
+struct Slot {
+    /// Even = stable, odd = write in progress.
+    version: AtomicU64,
+    words: [AtomicU64; WORDS],
+}
+
+/// Fixed-capacity multi-writer ring of completed spans — the
+/// [`super::trace::DecisionTrace`] seqlock protocol with a wider slot.
+pub struct SpanRing {
+    cap: usize,
+    /// Total spans ever pushed (claimed index = sequence number).
+    head: AtomicU64,
+    /// Reader-side data loss, counted not silent.
+    dropped: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl SpanRing {
+    pub fn new(cap: usize) -> SpanRing {
+        let cap = cap.max(8);
+        let slots: Vec<Slot> = (0..cap)
+            .map(|_| Slot {
+                version: AtomicU64::new(0),
+                words: std::array::from_fn(|_| AtomicU64::new(0)),
+            })
+            .collect();
+        SpanRing {
+            cap,
+            head: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            slots: slots.into_boxed_slice(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Total spans ever pushed (the ring keeps the last `capacity`).
+    pub fn pushed(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Slots a reader skipped after exhausting seqlock retries.
+    pub fn dropped_reads(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Record one completed span. Any worker thread may push.
+    pub fn push(&self, span: RequestSpan) {
+        let seq = self.head.fetch_add(1, Ordering::SeqCst);
+        let rec = SpanRecord { seq, span };
+        let slot = &self.slots[(seq % self.cap as u64) as usize];
+        let v = loop {
+            let v = slot.version.load(Ordering::Relaxed);
+            if v & 1 == 0
+                && slot
+                    .version
+                    .compare_exchange_weak(
+                        v,
+                        v.wrapping_add(1),
+                        Ordering::SeqCst,
+                        Ordering::Relaxed,
+                    )
+                    .is_ok()
+            {
+                break v;
+            }
+            std::hint::spin_loop();
+        };
+        for (word, value) in slot.words.iter().zip(pack(&rec)) {
+            word.store(value, Ordering::SeqCst);
+        }
+        slot.version.store(v.wrapping_add(2), Ordering::SeqCst);
+    }
+
+    fn read_slot(&self, idx: usize) -> Option<SpanRecord> {
+        let slot = &self.slots[idx];
+        for _ in 0..4 {
+            let v1 = slot.version.load(Ordering::SeqCst);
+            if v1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let mut words = [0u64; WORDS];
+            for (out, word) in words.iter_mut().zip(slot.words.iter()) {
+                *out = word.load(Ordering::SeqCst);
+            }
+            let v2 = slot.version.load(Ordering::SeqCst);
+            if v1 == v2 {
+                return Some(unpack(&words));
+            }
+        }
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// The retained spans, oldest first (sorted by sequence number).
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let head = self.head.load(Ordering::Acquire);
+        let n = (self.cap as u64).min(head);
+        let mut out = Vec::with_capacity(n as usize);
+        for i in (head - n)..head {
+            if let Some(r) = self.read_slot((i % self.cap as u64) as usize)
+            {
+                out.push(r);
+            }
+        }
+        out.sort_by_key(|r| r.seq);
+        out
+    }
+
+    /// FNV-1a fold over every retained span, sequence order. Under a
+    /// virtual clock two replays of one scenario digest identically —
+    /// the span half of the determinism acceptance test.
+    pub fn digest(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for r in self.snapshot() {
+            for w in pack(&r) {
+                h = fnv1a_word(h, w);
+            }
+        }
+        h
+    }
+}
+
+/// Render spans as Chrome trace-event JSON (the `traceEvents` array of
+/// complete `"ph": "X"` events), loadable in Perfetto or
+/// `chrome://tracing`. Each span emits one event per non-degenerate
+/// phase (zero-length phases are skipped — under a virtual clock the
+/// non-sleeping phases are exactly 0 ns) plus `execute.digital` /
+/// `execute.analog` sub-events carrying the plane energy attribution.
+/// `pid` is the model id, `tid` the device id; the request id rides in
+/// `args`, so one device lane shows its batches in submission order.
+pub fn chrome_trace_json<F>(spans: &[SpanRecord], model_name: F) -> Json
+where
+    F: Fn(u32) -> String,
+{
+    let us = |ns: u64| ns as f64 / 1_000.0;
+    let mut events = Vec::new();
+    let mut event = |name: String,
+                     model: u32,
+                     device: u32,
+                     ts_ns: u64,
+                     dur_ns: u64,
+                     args: Json| {
+        events.push(Json::Obj(BTreeMap::from([
+            ("name".to_string(), Json::Str(name)),
+            ("cat".to_string(), Json::Str(model_name(model))),
+            ("ph".to_string(), Json::Str("X".to_string())),
+            ("ts".to_string(), Json::Num(us(ts_ns))),
+            ("dur".to_string(), Json::Num(us(dur_ns))),
+            ("pid".to_string(), Json::Num(model as f64)),
+            ("tid".to_string(), Json::Num(device as f64)),
+            ("args".to_string(), args),
+        ])));
+    };
+    for r in spans {
+        let s = &r.span;
+        let req = Json::Obj(BTreeMap::from([(
+            "req".to_string(),
+            Json::Num(s.id as f64),
+        )]));
+        for p in Phase::ALL {
+            let dur = s.phase_ns(p);
+            if dur == 0 {
+                continue;
+            }
+            event(
+                p.label().to_string(),
+                s.model,
+                s.device,
+                s.start_of(p),
+                dur,
+                req.clone(),
+            );
+        }
+        // Execute sub-spans: the plane split, with energy in args.
+        let exec = s.phase_ns(Phase::Execute);
+        if exec > 0 {
+            let plane = |aj: f64, k: f64| {
+                Json::Obj(BTreeMap::from([
+                    ("req".to_string(), Json::Num(s.id as f64)),
+                    ("aj_per_sample".to_string(), Json::Num(aj)),
+                    ("k_total".to_string(), Json::Num(k)),
+                ]))
+            };
+            if s.digital_ns > 0 {
+                event(
+                    "execute.digital".to_string(),
+                    s.model,
+                    s.device,
+                    s.t_execute,
+                    s.digital_ns,
+                    plane(s.digital_aj, 0.0),
+                );
+            }
+            if s.analog_ns() > 0 {
+                event(
+                    "execute.analog".to_string(),
+                    s.model,
+                    s.device,
+                    s.t_execute + s.digital_ns,
+                    s.analog_ns(),
+                    plane(s.analog_aj, s.k_total),
+                );
+            }
+        }
+    }
+    Json::Obj(BTreeMap::from([
+        ("displayTimeUnit".to_string(), Json::Str("ms".to_string())),
+        ("traceEvents".to_string(), Json::Arr(events)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: u64) -> RequestSpan {
+        RequestSpan {
+            id,
+            model: 0,
+            device: 1,
+            t_submit: 1_000,
+            t_enqueue: 1_000,
+            t_assemble: 3_000,
+            t_dispatch: 10_000,
+            t_execute: 12_000,
+            t_kernel: 52_000,
+            t_decode: 52_000,
+            t_respond: 52_000,
+            digital_ns: 8_000,
+            digital_aj: 64.0,
+            analog_aj: 12.5,
+            k_total: 96.0,
+        }
+    }
+
+    #[test]
+    fn phases_telescope_to_total() {
+        let s = span(7);
+        let sum: u64 = Phase::ALL.iter().map(|&p| s.phase_ns(p)).sum();
+        assert_eq!(sum, s.total_ns());
+        assert_eq!(s.phase_ns(Phase::Queue), 2_000);
+        assert_eq!(s.phase_ns(Phase::Execute), 40_000);
+        assert_eq!(s.analog_ns(), 32_000);
+        assert_eq!(s.analog_ns() + s.digital_ns, s.phase_ns(Phase::Execute));
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_rate_shaped() {
+        let cfg = SpanConfig { sample_every: 64, seed: 9 };
+        let a: Vec<u64> = (0..100_000).filter(|&i| cfg.sampled(i)).collect();
+        let b: Vec<u64> = (0..100_000).filter(|&i| cfg.sampled(i)).collect();
+        assert_eq!(a, b, "same seed, same sampled set");
+        // Roughly 1-in-64 of 100k ids: the hash is not a permutation,
+        // so allow a generous band around 1562.
+        assert!((1_000..2_300).contains(&a.len()), "{}", a.len());
+        let other = SpanConfig { sample_every: 64, seed: 10 };
+        let c: Vec<u64> = (0..100_000).filter(|&i| other.sampled(i)).collect();
+        assert_ne!(a, c, "different seed, different sampled set");
+        assert!(!SpanConfig::default().sampled(0), "disabled samples nothing");
+        assert!(SpanConfig::every(1).sampled(12345), "1 samples everything");
+    }
+
+    #[test]
+    fn ring_roundtrip_and_wraparound() {
+        let ring = SpanRing::new(8);
+        for i in 0..20 {
+            ring.push(span(i));
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 8);
+        assert_eq!(snap[0].seq, 12);
+        assert_eq!(snap[0].span.id, 12);
+        assert_eq!(snap[7].span, span(19));
+        assert_eq!(ring.pushed(), 20);
+        assert_eq!(ring.dropped_reads(), 0);
+    }
+
+    #[test]
+    fn digest_is_stable_and_content_sensitive() {
+        let a = SpanRing::new(32);
+        let b = SpanRing::new(32);
+        for i in 0..5 {
+            a.push(span(i));
+            b.push(span(i));
+        }
+        assert_eq!(a.digest(), b.digest());
+        b.push(span(99));
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_plane_subspans() {
+        let ring = SpanRing::new(8);
+        ring.push(span(3));
+        let j = chrome_trace_json(&ring.snapshot(), |_| "m".to_string());
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("valid json");
+        let events = match back.field("traceEvents").unwrap() {
+            Json::Arr(v) => v.clone(),
+            other => panic!("traceEvents not an array: {other:?}"),
+        };
+        // Non-zero phases: queue, assembly, dispatch, execute — plus
+        // the two plane sub-spans (admission/decode/respond are 0 ns).
+        assert_eq!(events.len(), 6);
+        let named = |n: &str| {
+            events
+                .iter()
+                .find(|e| e.str_field("name").unwrap() == n)
+                .unwrap_or_else(|| panic!("missing event {n}"))
+        };
+        let analog = named("execute.analog");
+        assert_eq!(
+            analog.field("args").unwrap().f64_field("k_total").unwrap(),
+            96.0
+        );
+        // Sub-spans nest exactly inside execute.
+        let dur = |e: &Json| e.f64_field("dur").unwrap();
+        assert_eq!(
+            dur(named("execute.digital")) + dur(analog),
+            dur(named("execute"))
+        );
+    }
+
+    #[test]
+    fn concurrent_pushes_all_land() {
+        let ring = std::sync::Arc::new(SpanRing::new(4096));
+        let threads: Vec<_> = (0..4)
+            .map(|k| {
+                let ring = ring.clone();
+                std::thread::spawn(move || {
+                    for i in 0..500 {
+                        ring.push(span(k * 1_000 + i));
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        assert_eq!(ring.pushed(), 2_000);
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 2_000);
+        for (i, r) in snap.iter().enumerate() {
+            assert_eq!(r.seq, i as u64);
+        }
+    }
+}

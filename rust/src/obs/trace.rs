@@ -64,6 +64,14 @@ pub enum TraceKind {
     /// `device`'s redundant decode masked injected tile faults for a
     /// served batch: `a` = masked site-replica hits.
     FaultMasked = 9,
+    /// A burn-rate alert fired for `model` (see `obs::alert`): `a` =
+    /// signal code (0 p99 latency, 1 p95 out-err, 2 shed rate, 3
+    /// fault-mask rate), `b` = fast-window burn, `c` = slow-window
+    /// burn, `d` = fire threshold.
+    AlertFire = 10,
+    /// A previously fired burn-rate alert cleared: same payload, with
+    /// `d` = clear threshold.
+    AlertClear = 11,
 }
 
 impl TraceKind {
@@ -79,6 +87,8 @@ impl TraceKind {
             7 => TraceKind::Reroute,
             8 => TraceKind::SplitShift,
             9 => TraceKind::FaultMasked,
+            10 => TraceKind::AlertFire,
+            11 => TraceKind::AlertClear,
             _ => return None,
         })
     }
@@ -95,6 +105,8 @@ impl TraceKind {
             TraceKind::Reroute => "reroute",
             TraceKind::SplitShift => "split_shift",
             TraceKind::FaultMasked => "fault_masked",
+            TraceKind::AlertFire => "alert_fire",
+            TraceKind::AlertClear => "alert_clear",
         }
     }
 }
@@ -358,6 +370,26 @@ mod tests {
         }
         assert_eq!(TraceKind::SplitShift.label(), "split_shift");
         assert_eq!(TraceKind::FaultMasked.label(), "fault_masked");
+    }
+
+    #[test]
+    fn alert_kinds_roundtrip() {
+        for kind in [TraceKind::AlertFire, TraceKind::AlertClear] {
+            let e = TraceEvent {
+                t_us: 77,
+                seq: 3,
+                kind,
+                model: Some(1),
+                device: None,
+                a: 0.0,
+                b: 2.5,
+                c: 1.4,
+                d: 1.0,
+            };
+            assert_eq!(unpack(&pack(&e)), Some(e.clone()));
+        }
+        assert_eq!(TraceKind::AlertFire.label(), "alert_fire");
+        assert_eq!(TraceKind::AlertClear.label(), "alert_clear");
     }
 
     #[test]

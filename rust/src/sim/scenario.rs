@@ -168,6 +168,12 @@ pub struct SimReport {
     pub trace: Vec<crate::obs::TraceEvent>,
     /// FNV digest of the decision trace — replay-stable.
     pub trace_digest: u64,
+    /// Sampled request-lifecycle spans captured before shutdown
+    /// (empty unless `control.spans` sampling is enabled).
+    pub spans: Vec<crate::obs::SpanRecord>,
+    /// FNV digest of the span ring — replay-stable under the virtual
+    /// clock (same scenario + same sampling seed → equal digests).
+    pub span_digest: u64,
     /// FNV digest of the full metrics snapshot JSON — replay-stable.
     pub metrics_digest: u64,
     pub virtual_ms: f64,
@@ -341,6 +347,8 @@ pub fn run_scenario(
     let metrics_digest = metrics.digest();
     let trace = coord.trace();
     let trace_digest = metrics.stats.obs.trace_digest;
+    let spans = coord.spans();
+    let span_digest = metrics.stats.obs.span_digest;
     let p99_lat_us = metrics.stats.obs.latency_us.quantile(0.99);
     let p95_out_err = metrics.stats.obs.out_err_quantile(0.95);
     let stats = coord.shutdown();
@@ -396,6 +404,8 @@ pub fn run_scenario(
         p95_out_err,
         trace,
         trace_digest,
+        spans,
+        span_digest,
         metrics_digest,
         virtual_ms,
         wall_ms: wall0.elapsed().as_secs_f64() * 1e3,
