@@ -82,27 +82,42 @@ fn time_to_serve(coord: &Coordinator, target: u64) -> Instant {
     }
 }
 
-/// Steady-state samples/s over the middle of a fixed backlog.
-fn throughput(n_devices: usize, backlog: u64) -> f64 {
+/// Steady-state samples/s over the middle of a fixed backlog, timed
+/// segment by segment so the emitted percentiles summarize a real
+/// distribution. Returns (samples/s, per-sample seconds per segment).
+fn throughput(n_devices: usize, backlog: u64) -> (f64, Vec<f64>) {
     let coord = coordinator(n_devices);
     for _ in 0..backlog {
         drop(coord.submit(MODEL, Features::F32(vec![0.0; 4])));
     }
+    // 8 serve marks across the steady middle -> 7 timing segments.
     let lo = backlog / 6;
     let hi = backlog * 5 / 6;
-    let t_lo = time_to_serve(&coord, lo);
-    let t_hi = time_to_serve(&coord, hi);
+    let segments = 7u64;
+    let mut marks = Vec::with_capacity(segments as usize + 1);
+    for i in 0..=segments {
+        let target = lo + (hi - lo) * i / segments;
+        marks.push((target, time_to_serve(&coord, target)));
+    }
     let stats = coord.shutdown();
     assert_eq!(stats.shed, 0, "unbounded queues must not shed");
     assert_eq!(stats.scales[MODEL], 1.0, "equal precision scale");
-    (hi - lo) as f64 / (t_hi - t_lo).as_secs_f64()
+    let samples: Vec<f64> = marks
+        .windows(2)
+        .map(|w| {
+            let served = (w[1].0 - w[0].0).max(1) as f64;
+            (w[1].1 - w[0].1).as_secs_f64() / served
+        })
+        .collect();
+    let (t_lo, t_hi) = (marks[0].1, marks[segments as usize].1);
+    ((hi - lo) as f64 / (t_hi - t_lo).as_secs_f64(), samples)
 }
 
 fn main() {
     // At full precision a sample costs 32 cycles x 4us = 128us of
     // device time; one device sustains ~7.8k samples/s.
-    let single = throughput(1, 12_000);
-    let quad = throughput(4, 24_000);
+    let (single, single_s) = throughput(1, 12_000);
+    let (quad, quad_s) = throughput(4, 24_000);
     let speedup = quad / single;
     println!(
         "single-device: {single:.0} samples/s\n\
@@ -111,22 +126,15 @@ fn main() {
     );
     // Perf trajectory: the checked-in BENCH_fleet.json is regenerated
     // by the CI bench job, so dispatch-rate changes show up in review.
-    // Throughput summaries carry the steady-state per-sample time in
-    // every percentile field (a rate has no per-iteration spread).
-    let per_sample = |name: &str, rate: f64, iters: usize| {
-        let d = Duration::from_secs_f64(1.0 / rate);
-        BenchResult {
-            name: name.to_string(),
-            iters,
-            mean: d,
-            p50: d,
-            p95: d,
-            min: d,
-        }
-    };
+    // Each result carries its real per-segment timing distribution; the
+    // emitter rejects single-sample (fabricated) percentiles.
     let results = [
-        per_sample("single_device_per_sample", single, 8_000),
-        per_sample("quad_fleet_per_sample", quad, 16_000),
+        BenchResult::from_samples(
+            "single_device_per_sample",
+            8_000,
+            &single_s,
+        ),
+        BenchResult::from_samples("quad_fleet_per_sample", 16_000, &quad_s),
     ];
     let path = Path::new(concat!(
         env!("CARGO_MANIFEST_DIR"),

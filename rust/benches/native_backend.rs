@@ -1,16 +1,20 @@
-//! Native-backend throughput (acceptance: a 4-device native fleet
-//! sustains >= 2x single native-device throughput at equal precision,
-//! matching the `fleet_dispatch` pattern).
+//! Native-backend throughput.
 //!
-//! Two measurements:
+//! Two measurements, two enforced bars:
 //!
 //! 1. Raw kernel rate: single-thread noisy-GEMM samples/s with the
-//!   K-repetition noise folded in (informational — shows the numerics
-//!   are far cheaper than the modeled analog device time, so the
-//!   fleet's scaling is bounded by the modeled hardware, not the host).
+//!   K-repetition noise folded in. Enforced >= 4x the checked-in
+//!   pre-fusion baseline (`KERNEL_BASELINE_SAMPLES_PER_S`, measured
+//!   before the fused kernel + batched sampling landed), and it must
+//!   exceed the *modeled analog device* rate — host numerics, not the
+//!   simulated hardware, must never bound a simulated fleet.
 //! 2. Fleet bar: full coordinator stack over native devices with
 //!   simulated analog time (32 cycles/sample x 4us = 128us/sample at
 //!   full precision), single device vs 4 devices, >= 2x enforced.
+//!
+//! Timing is recorded per chunk of iterations (kernel) and per backlog
+//! segment (fleet), so the emitted percentiles summarize a real
+//! distribution — `write_bench_json` rejects single-sample results.
 //!
 //! Run: `cargo bench --bench native_backend`
 
@@ -20,8 +24,8 @@ use std::time::{Duration, Instant};
 
 use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
 use dynaprec::backend::{
-    BackendKind, BatchJob, ExecutionBackend, NativeAnalogBackend,
-    NativeModelSet,
+    kernel_flavor, BackendKind, BatchJob, ExecutionBackend,
+    NativeAnalogBackend, NativeModelSet,
 };
 use dynaprec::coordinator::scheduler::ModelPrecision;
 use dynaprec::coordinator::{
@@ -49,9 +53,16 @@ fn hw() -> HardwareConfig {
     }
 }
 
+/// Measured single-thread kernel rate of the pre-fusion kernel
+/// (separate GEMM / weight-noise / additive-noise sweeps, per-element
+/// polar Gaussian, per-batch dW allocation), checked in when the fused
+/// kernel landed. The current kernel must clear 4x this.
+const KERNEL_BASELINE_SAMPLES_PER_S: f64 = 412_387.2;
+
 /// Single-thread native kernel rate: noisy batches/s through the
-/// backend alone, no serving stack.
-fn kernel_rate() -> (f64, f64) {
+/// backend alone, no serving stack. Returns (samples/s, mean out_err,
+/// per-sample seconds per timed chunk).
+fn kernel_rate() -> (f64, f64, Vec<f64>) {
     let m = meta();
     let natives = Arc::new(NativeModelSet::build([&m]));
     let bundle = ModelBundle::synthetic(meta());
@@ -59,23 +70,32 @@ fn kernel_rate() -> (f64, f64) {
     let mut backend =
         NativeAnalogBackend::new(hw(), AveragingMode::Time, natives);
     let x = Features::F32(vec![0.25; BATCH * 4]);
-    let iters = 2_000u32;
-    let t0 = Instant::now();
+    let (chunks, per_chunk) = (100u32, 20u32);
     let mut err_sum = 0.0f64;
-    for i in 0..iters {
-        let out = backend.execute(&BatchJob {
-            bundle: &bundle,
-            x: &x,
-            n_real: BATCH,
-            seed: i,
-            e: Some(&e),
-            tag: "shot.fwd",
-        });
-        assert!(out.logits.is_ok());
-        err_sum += out.out_err as f64;
+    let mut seed = 0u32;
+    let mut samples = Vec::with_capacity(chunks as usize);
+    let mut total_secs = 0.0f64;
+    for _ in 0..chunks {
+        let t0 = Instant::now();
+        for _ in 0..per_chunk {
+            let out = backend.execute(&BatchJob {
+                bundle: &bundle,
+                x: &x,
+                n_real: BATCH,
+                seed,
+                e: Some(&e),
+                tag: "shot.fwd",
+            });
+            assert!(out.logits.is_ok());
+            err_sum += out.out_err as f64;
+            seed += 1;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        total_secs += secs;
+        samples.push(secs / (per_chunk as f64 * BATCH as f64));
     }
-    let secs = t0.elapsed().as_secs_f64();
-    (iters as f64 * BATCH as f64 / secs, err_sum / iters as f64)
+    let n = (chunks * per_chunk) as f64;
+    (n * BATCH as f64 / total_secs, err_sum / n, samples)
 }
 
 fn coordinator(n_devices: usize) -> Coordinator {
@@ -120,16 +140,23 @@ fn time_to_serve(coord: &Coordinator, target: u64) -> Instant {
     }
 }
 
-/// Steady-state samples/s over the middle of a fixed backlog.
-fn throughput(n_devices: usize, backlog: u64) -> f64 {
+/// Steady-state samples/s over the middle of a fixed backlog, timed
+/// segment by segment. Returns (samples/s, per-sample seconds per
+/// segment).
+fn throughput(n_devices: usize, backlog: u64) -> (f64, Vec<f64>) {
     let coord = coordinator(n_devices);
     for _ in 0..backlog {
         drop(coord.submit(MODEL, Features::F32(vec![0.25; 4])));
     }
+    // 8 serve marks across the steady middle -> 7 timing segments.
     let lo = backlog / 6;
     let hi = backlog * 5 / 6;
-    let t_lo = time_to_serve(&coord, lo);
-    let t_hi = time_to_serve(&coord, hi);
+    let segments = 7u64;
+    let mut marks = Vec::with_capacity(segments as usize + 1);
+    for i in 0..=segments {
+        let target = lo + (hi - lo) * i / segments;
+        marks.push((target, time_to_serve(&coord, target)));
+    }
     let stats = coord.shutdown();
     assert_eq!(stats.shed, 0, "unbounded queues must not shed");
     assert_eq!(stats.scales[MODEL], 1.0, "equal precision scale");
@@ -137,25 +164,40 @@ fn throughput(n_devices: usize, backlog: u64) -> f64 {
         stats.window.mean_out_err.is_some(),
         "native fleet must measure output error"
     );
-    (hi - lo) as f64 / (t_hi - t_lo).as_secs_f64()
+    let samples: Vec<f64> = marks
+        .windows(2)
+        .map(|w| {
+            let served = (w[1].0 - w[0].0).max(1) as f64;
+            (w[1].1 - w[0].1).as_secs_f64() / served
+        })
+        .collect();
+    let (t_lo, t_hi) = (marks[0].1, marks[segments as usize].1);
+    ((hi - lo) as f64 / (t_hi - t_lo).as_secs_f64(), samples)
 }
 
 fn main() {
-    let (kernel, mean_err) = kernel_rate();
+    let (kernel, mean_err, kernel_samples) = kernel_rate();
+    let kernel_speedup = kernel / KERNEL_BASELINE_SAMPLES_PER_S;
     println!(
-        "native kernel (1 thread): {kernel:.0} noisy samples/s \
-         (mean out_err {mean_err:.4})"
+        "native kernel (1 thread, {} flavor): {kernel:.0} noisy \
+         samples/s (mean out_err {mean_err:.4}, {kernel_speedup:.2}x \
+         the pre-fusion baseline, acceptance >= 4x)",
+        kernel_flavor()
     );
-    // 128us of modeled device time per sample at full precision: the
-    // kernel above must outrun that by a wide margin for the modeled
-    // hardware (not host compute) to bound fleet throughput.
-    let modeled_per_dev = 1e9 / (32.0 * 4000.0);
+    // The *simulated analog device* serves 128us of modeled device
+    // time per sample at full precision (32 cycles x 4us). That is a
+    // model of the accelerator being simulated, NOT a bound on the
+    // host kernel: the host numerics must outrun it by a wide margin
+    // so that simulated-fleet throughput is bounded by the modeled
+    // hardware, never by host compute.
+    let modeled_device = 1e9 / (32.0 * 4000.0);
     println!(
-        "modeled device ceiling: {modeled_per_dev:.0} samples/s per device"
+        "modeled analog device rate: {modeled_device:.0} samples/s \
+         per device (simulated-time pacing, not a host ceiling)"
     );
 
-    let single = throughput(1, 12_000);
-    let quad = throughput(4, 24_000);
+    let (single, single_samples) = throughput(1, 12_000);
+    let (quad, quad_samples) = throughput(4, 24_000);
     let speedup = quad / single;
     println!(
         "single native device: {single:.0} samples/s\n\
@@ -165,23 +207,24 @@ fn main() {
 
     // Perf trajectory: the checked-in BENCH_kernel.json is regenerated
     // by the CI bench job, so kernel-rate changes show up in review.
-    // Throughput summaries carry the steady-state per-sample time in
-    // every percentile field (a rate has no per-iteration spread).
-    let per_sample = |name: &str, rate: f64, iters: usize| {
-        let d = Duration::from_secs_f64(1.0 / rate);
-        BenchResult {
-            name: name.to_string(),
-            iters,
-            mean: d,
-            p50: d,
-            p95: d,
-            min: d,
-        }
-    };
+    // Every result carries its real per-chunk/per-segment timing
+    // distribution; the emitter rejects fabricated percentiles.
     let results = [
-        per_sample("native_kernel_per_sample", kernel, 2_000 * BATCH),
-        per_sample("single_device_per_sample", single, 8_000),
-        per_sample("quad_fleet_per_sample", quad, 16_000),
+        BenchResult::from_samples(
+            "native_kernel_per_sample",
+            2_000 * BATCH,
+            &kernel_samples,
+        ),
+        BenchResult::from_samples(
+            "single_device_per_sample",
+            8_000,
+            &single_samples,
+        ),
+        BenchResult::from_samples(
+            "quad_fleet_per_sample",
+            16_000,
+            &quad_samples,
+        ),
     ];
     let path = Path::new(concat!(
         env!("CARGO_MANIFEST_DIR"),
@@ -194,7 +237,12 @@ fn main() {
         &[
             ("kernel_samples_per_s", kernel),
             ("kernel_mean_out_err", mean_err),
-            ("modeled_ceiling_samples_per_s", modeled_per_dev),
+            (
+                "kernel_baseline_samples_per_s",
+                KERNEL_BASELINE_SAMPLES_PER_S,
+            ),
+            ("kernel_speedup_vs_baseline", kernel_speedup),
+            ("modeled_analog_device_samples_per_s", modeled_device),
             ("single_device_samples_per_s", single),
             ("quad_fleet_samples_per_s", quad),
             ("speedup", speedup),
@@ -203,10 +251,31 @@ fn main() {
     .expect("write BENCH_kernel.json");
     println!("wrote {}", path.display());
 
-    if speedup >= 2.0 {
-        println!("PASS: native fleet scales past the 2x bar");
-    } else {
+    let mut pass = true;
+    if kernel <= modeled_device {
+        println!(
+            "FAIL: host kernel ({kernel:.0}/s) does not outrun the \
+             modeled analog device ({modeled_device:.0}/s) — host \
+             compute would bound the simulated fleet"
+        );
+        pass = false;
+    }
+    if kernel_speedup < 4.0 {
+        println!(
+            "FAIL: kernel at {kernel_speedup:.2}x the pre-fusion \
+             baseline, bar is 4x"
+        );
+        pass = false;
+    }
+    if speedup < 2.0 {
         println!("FAIL: native fleet under the 2x bar");
+        pass = false;
+    }
+    if !pass {
         std::process::exit(1);
     }
+    println!(
+        "PASS: kernel {kernel_speedup:.2}x baseline, fleet \
+         {speedup:.2}x single device"
+    );
 }

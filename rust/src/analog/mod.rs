@@ -25,6 +25,7 @@ pub mod redundancy;
 pub use device::{DeviceModel, HardwareConfig, NoiseKind};
 pub use ledger::EnergyLedger;
 pub use redundancy::{
-    decode_replicas, decode_replicas_into, encode_replicas, fault_budget,
+    decode_replica_buffers_into, decode_replicas, decode_replicas_into,
+    encode_replicas, fault_budget,
     plan_layer, plan_model, AveragingMode, DecodeMode, LayerPlan,
 };

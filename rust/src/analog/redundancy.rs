@@ -125,42 +125,78 @@ pub fn encode_replicas(tile: &[f32], n: usize) -> Vec<Vec<f32>> {
     (0..n).map(|_| tile.to_vec()).collect()
 }
 
-/// Decode replicas element-wise into `out` (all lengths must match).
-/// The hot-path form used by the native kernel: `out` is reused across
-/// batches, `scratch` avoids a per-element allocation.
+/// Replica counts up to this many decode with a stack-resident order
+/// buffer — no allocation at all. Real deployments replicate 3–5-way;
+/// anything beyond the stack bound falls back to one heap buffer per
+/// call.
+const STACK_REPLICAS: usize = 16;
+
+fn combine(vals: &mut [f32], mode: DecodeMode) -> f32 {
+    match mode {
+        DecodeMode::Median => median_of(vals),
+        DecodeMode::Average => {
+            let sum: f64 = vals.iter().map(|&v| v as f64).sum();
+            (sum / vals.len() as f64) as f32
+        }
+    }
+}
+
+fn decode_impl<R: AsRef<[f32]>>(
+    out: &mut [f32],
+    replicas: &[R],
+    mode: DecodeMode,
+) {
+    assert!(!replicas.is_empty());
+    for r in replicas {
+        assert_eq!(r.as_ref().len(), out.len(), "replica length mismatch");
+    }
+    let n = replicas.len();
+    if n == 1 {
+        out.copy_from_slice(replicas[0].as_ref());
+        return;
+    }
+    let mut stack = [0.0f32; STACK_REPLICAS];
+    let mut heap: Vec<f32>;
+    let scratch: &mut [f32] = if n <= STACK_REPLICAS {
+        &mut stack[..n]
+    } else {
+        heap = vec![0.0f32; n];
+        &mut heap
+    };
+    for (i, o) in out.iter_mut().enumerate() {
+        for (s, r) in scratch.iter_mut().zip(replicas) {
+            *s = r.as_ref()[i];
+        }
+        *o = combine(scratch, mode);
+    }
+}
+
+/// Decode replica views element-wise into `out` (all lengths must
+/// match). `out` is reused across batches; up to [`STACK_REPLICAS`]
+/// replicas decode with zero allocation.
 pub fn decode_replicas_into(
     out: &mut [f32],
     replicas: &[&[f32]],
     mode: DecodeMode,
 ) {
-    assert!(!replicas.is_empty());
-    for r in replicas {
-        assert_eq!(r.len(), out.len(), "replica length mismatch");
-    }
-    if replicas.len() == 1 {
-        out.copy_from_slice(replicas[0]);
-        return;
-    }
-    let mut scratch = vec![0.0f32; replicas.len()];
-    for (i, o) in out.iter_mut().enumerate() {
-        for (s, r) in scratch.iter_mut().zip(replicas) {
-            *s = r[i];
-        }
-        *o = match mode {
-            DecodeMode::Median => median_of(&mut scratch),
-            DecodeMode::Average => {
-                let sum: f64 = scratch.iter().map(|&v| v as f64).sum();
-                (sum / scratch.len() as f64) as f32
-            }
-        };
-    }
+    decode_impl(out, replicas, mode);
+}
+
+/// [`decode_replicas_into`] over owned replica buffers — the hot-path
+/// form the native kernel feeds its per-site scratch replicas to, with
+/// no per-call view vector.
+pub fn decode_replica_buffers_into(
+    out: &mut [f32],
+    replicas: &[Vec<f32>],
+    mode: DecodeMode,
+) {
+    decode_impl(out, replicas, mode);
 }
 
 /// Decode replicas element-wise, returning a fresh buffer.
 pub fn decode_replicas(replicas: &[Vec<f32>], mode: DecodeMode) -> Vec<f32> {
-    let views: Vec<&[f32]> = replicas.iter().map(|r| r.as_slice()).collect();
     let mut out = vec![0.0f32; replicas[0].len()];
-    decode_replicas_into(&mut out, &views, mode);
+    decode_impl(&mut out, replicas, mode);
     out
 }
 

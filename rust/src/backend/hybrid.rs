@@ -13,6 +13,7 @@
 //! more analog buys energy at the scheduled noise level — the tradeoff
 //! the control plane's governor prices via `hybrid_charged_cost`.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
@@ -21,13 +22,29 @@ use crate::analog::{plan_layer, AveragingMode, HardwareConfig, NoiseKind};
 use crate::backend::kernel::{site_noise, TileFaults};
 use crate::backend::native::{
     masked_faults, name_seed, rms_error, NativeModel, NativeModelSet,
-    SitePlan,
+    RunScratch, SitePlan,
 };
 use crate::backend::{
-    front_rows, hybrid_split, BatchJob, BatchOutput, ExecutionBackend,
-    PlaneBreakdown, DIGITAL_MAC_ENERGY_AJ,
+    hybrid_split, BatchJob, BatchOutput, ExecutionBackend, PlaneBreakdown,
+    DIGITAL_MAC_ENERGY_AJ,
 };
 use crate::util::rng::Rng;
+
+/// Cached per-model split plan: `hybrid_split` + `plan_layer` +
+/// `site_noise` are pure in (model, e-vector, fraction, drift), and
+/// serving traffic re-dispatches the same e-vector batch after batch,
+/// so the routing and its cost totals are rebuilt only when an input
+/// actually changes.
+struct SplitEntry {
+    e: Vec<f32>,
+    fraction: f64,
+    drift: f64,
+    plans: Vec<SitePlan>,
+    energy: f64,
+    cycles: f64,
+    planes: PlaneBreakdown,
+    energy_per_layer: Vec<f64>,
+}
 
 /// Digital–analog split engine over the shared native weight set.
 pub struct HybridBackend {
@@ -44,6 +61,11 @@ pub struct HybridBackend {
     drift: f64,
     /// Injected stuck/dead physical tiles (analog sites only).
     faults: TileFaults,
+    /// Reusable forward-pass buffers (one worker thread per backend).
+    scratch: RunScratch,
+    /// Per-model split cache keyed by model name, invalidated when the
+    /// e-vector, digital fraction, or drift changes.
+    plan_cache: BTreeMap<String, SplitEntry>,
 }
 
 impl HybridBackend {
@@ -64,6 +86,8 @@ impl HybridBackend {
             redundancy: redundancy.max(1),
             drift: 1.0,
             faults: TileFaults::default(),
+            scratch: RunScratch::new(),
+            plan_cache: BTreeMap::new(),
         }
     }
 
@@ -76,6 +100,86 @@ impl HybridBackend {
         self.models
             .get(name)
             .ok_or_else(|| anyhow!("no native model built for {name}"))
+    }
+
+    /// Rebuild this model's cached routing iff the e-vector, digital
+    /// fraction, or drift changed since the last batch.
+    fn refresh_split(
+        &mut self,
+        model: &NativeModel,
+        meta: &crate::runtime::artifact::ModelMeta,
+        e: &[f32],
+    ) {
+        if let Some(c) = self.plan_cache.get(&meta.name) {
+            if c.e.as_slice() == e
+                && c.fraction == self.fraction
+                && c.drift == self.drift
+            {
+                return;
+            }
+        }
+        let digital = hybrid_split(meta, e, self.fraction);
+        let mut entry = SplitEntry {
+            e: e.to_vec(),
+            fraction: self.fraction,
+            drift: self.drift,
+            plans: Vec::with_capacity(model.sites.len()),
+            energy: 0.0,
+            cycles: 0.0,
+            planes: PlaneBreakdown::default(),
+            energy_per_layer: Vec::with_capacity(model.sites.len()),
+        };
+        for (si, ns) in model.sites.iter().enumerate() {
+            let s = &ns.site;
+            if digital[si] {
+                // Exact plane: per-MAC digital energy, one pipelined
+                // cycle, immune to analog noise and tile faults.
+                let site_energy = s.macs_per_channel
+                    * s.n_channels as f64
+                    * DIGITAL_MAC_ENERGY_AJ;
+                entry.energy += site_energy;
+                entry.cycles += 1.0;
+                entry.planes.digital_energy += site_energy;
+                entry.planes.digital_cycles += 1.0;
+                entry.energy_per_layer.push(site_energy);
+                entry.plans.push(SitePlan {
+                    ks: Vec::new(),
+                    noise: site_noise(self.kind, s, meta, &self.hw),
+                    digital: true,
+                    groups: 1,
+                });
+                continue;
+            }
+            let es: Vec<f64> = e[s.e_offset..s.e_offset + s.n_channels]
+                .iter()
+                .map(|&v| v as f64)
+                .collect();
+            let plan = plan_layer(
+                &self.hw,
+                self.averaging,
+                &es,
+                s.n_dot,
+                s.macs_per_channel,
+                true,
+            );
+            entry.energy += plan.energy;
+            entry.cycles += plan.cycles;
+            entry.planes.analog_energy += plan.energy;
+            entry.planes.analog_cycles += plan.cycles;
+            entry.planes.k_total +=
+                plan.k_per_channel.iter().sum::<f64>();
+            entry.energy_per_layer.push(plan.energy);
+            let mut noise = site_noise(self.kind, s, meta, &self.hw);
+            noise.additive_std *= self.drift;
+            noise.weight_std *= self.drift;
+            entry.plans.push(SitePlan {
+                ks: plan.k_per_channel,
+                noise,
+                digital: false,
+                groups: self.redundancy,
+            });
+        }
+        self.plan_cache.insert(meta.name.clone(), entry);
     }
 }
 
@@ -90,14 +194,22 @@ impl ExecutionBackend for HybridBackend {
             Ok(m) => m.clone(),
             Err(e) => return BatchOutput::failed(e),
         };
-        let rows = job.n_real.max(1).min(meta.batch.max(1));
-        let x = front_rows(job.x, meta.batch, rows);
+        let total_rows = meta.batch.max(1);
+        let rows = job.n_real.max(1).min(total_rows);
         // Same seeding as the native engine, so a hybrid device at
         // digital fraction 0 serves bit-identical logits to a native
         // device given the same batch.
         let mut rng = Rng::new(job.seed as u64 ^ name_seed(&meta.name));
         let Some(e) = job.e else {
-            let logits = model.run(&x, rows, None, &mut rng);
+            let logits = model.run_scratch(
+                job.x,
+                total_rows,
+                rows,
+                None,
+                TileFaults::default(),
+                &mut rng,
+                &mut self.scratch,
+            );
             return BatchOutput {
                 logits: Ok(logits),
                 rows,
@@ -120,64 +232,26 @@ impl ExecutionBackend for HybridBackend {
                 meta.name
             ));
         }
-        let digital = hybrid_split(meta, e, self.fraction);
-        let mut plans = Vec::with_capacity(model.sites.len());
-        let mut energy = 0.0f64;
-        let mut cycles = 0.0f64;
-        let mut planes = PlaneBreakdown::default();
-        let mut energy_per_layer = Vec::with_capacity(model.sites.len());
-        for (si, ns) in model.sites.iter().enumerate() {
-            let s = &ns.site;
-            if digital[si] {
-                // Exact plane: per-MAC digital energy, one pipelined
-                // cycle, immune to analog noise and tile faults.
-                let site_energy = s.macs_per_channel
-                    * s.n_channels as f64
-                    * DIGITAL_MAC_ENERGY_AJ;
-                energy += site_energy;
-                cycles += 1.0;
-                planes.digital_energy += site_energy;
-                planes.digital_cycles += 1.0;
-                energy_per_layer.push(site_energy);
-                plans.push(SitePlan {
-                    ks: Vec::new(),
-                    noise: site_noise(self.kind, s, meta, &self.hw),
-                    digital: true,
-                    groups: 1,
-                });
-                continue;
-            }
-            let es: Vec<f64> = e[s.e_offset..s.e_offset + s.n_channels]
-                .iter()
-                .map(|&v| v as f64)
-                .collect();
-            let plan = plan_layer(
-                &self.hw,
-                self.averaging,
-                &es,
-                s.n_dot,
-                s.macs_per_channel,
-                true,
-            );
-            energy += plan.energy;
-            cycles += plan.cycles;
-            planes.analog_energy += plan.energy;
-            planes.analog_cycles += plan.cycles;
-            planes.k_total += plan.k_per_channel.iter().sum::<f64>();
-            energy_per_layer.push(plan.energy);
-            let mut noise = site_noise(self.kind, s, meta, &self.hw);
-            noise.additive_std *= self.drift;
-            noise.weight_std *= self.drift;
-            plans.push(SitePlan {
-                ks: plan.k_per_channel,
-                noise,
-                digital: false,
-                groups: self.redundancy,
-            });
-        }
-        let clean = model.run(&x, rows, None, &mut rng);
-        let noisy =
-            model.run_faulted(&x, rows, Some(&plans), self.faults, &mut rng);
+        self.refresh_split(&model, meta, e);
+        let clean = model.run_scratch(
+            job.x,
+            total_rows,
+            rows,
+            None,
+            TileFaults::default(),
+            &mut rng,
+            &mut self.scratch,
+        );
+        let entry = &self.plan_cache[&meta.name];
+        let noisy = model.run_scratch(
+            job.x,
+            total_rows,
+            rows,
+            Some(&entry.plans),
+            self.faults,
+            &mut rng,
+            &mut self.scratch,
+        );
         let out_err = rms_error(
             &noisy,
             &clean,
@@ -188,11 +262,11 @@ impl ExecutionBackend for HybridBackend {
             logits: Ok(noisy),
             rows,
             out_err: out_err as f32,
-            energy_per_sample: energy,
-            cycles_per_sample: cycles,
-            energy_per_layer,
-            faults_masked: masked_faults(&plans, self.faults),
-            planes,
+            energy_per_sample: entry.energy,
+            cycles_per_sample: entry.cycles,
+            energy_per_layer: entry.energy_per_layer.clone(),
+            faults_masked: masked_faults(&entry.plans, self.faults),
+            planes: entry.planes,
         }
     }
 

@@ -1,29 +1,129 @@
-//! Vectorizable noisy-GEMM kernels for the native analog backend.
+//! SIMD-fused noisy-GEMM kernels for the native analog backend.
 //!
-//! The clean matmul is a cache-blocked `ikj` loop (row-major weights,
-//! contiguous channel-axis inner loop, so the compiler auto-vectorizes
-//! the accumulation); noise is applied on top per the paper's models:
+//! The matmul is a cache-blocked `ikj` loop (row-major weights,
+//! contiguous channel-axis inner loop) whose innermost accumulation is
+//! dispatched at build time to one of two flavors (see
+//! [`kernel_flavor`]): explicit portable SIMD (`std::simd`, behind the
+//! nightly-only `simd` cargo feature) or the scalar fallback every
+//! stable toolchain compiles. Noise follows the paper's models:
 //!
 //! - every output channel `c` carries additive Gaussian noise whose
 //!   one-repetition variance follows Eq. 9 (thermal form, with the shot
 //!   sigma folded to `1/sqrt(photons_per_aj)` for homodyne devices);
 //! - crossbar devices add weight read noise: a per-entry Gaussian
-//!   perturbation `dW` applied through a second GEMM (Eq. 10);
+//!   perturbation `dW` accumulated through the dot product (Eq. 10);
 //! - K-repetition averaging (paper Fig. 3) divides every noise variance
 //!   by the channel's redundancy `K_c`. Averaging K i.i.d. Gaussian
 //!   executions is *in distribution* identical to a single execution
 //!   with every noise std scaled by `1/sqrt(K_c)`, so the kernel folds
 //!   the repetitions into one pass instead of paying K x the FLOPs —
 //!   the cycles/energy ledger still charges the full K repetitions.
+//!
+//! [`fused_noisy_gemm`] is the hot path: instead of three sweeps over
+//! the output tile (clean GEMM, `x * dW` GEMM, per-element additive
+//! noise), it seeds each output row with its pre-scaled additive-noise
+//! block, then accumulates `x * (W + dW)` in a single pass, with all
+//! Gaussians drawn up front by batched Box–Muller
+//! (`Rng::fill_gaussian_f32`) into reusable [`ScratchBuf`]s.
+//!
+//! Determinism contract: every noise draw consumes a fixed,
+//! data-independent number of stream words, so a given binary replays
+//! bit-identically. The two kernel flavors sum in different orders and
+//! are therefore *statistically* (not bit-) identical to each other;
+//! replay digests are pinned per flavor.
 
 use crate::analog::{HardwareConfig, NoiseKind};
 use crate::quant::noise_bits::thermal_var;
 use crate::runtime::artifact::{ModelMeta, SiteMeta};
+use crate::util::pool::ScratchBuf;
 use crate::util::rng::Rng;
 
 /// k-dimension block size for the clean GEMM: 64 f32 rows of a
 /// 256-channel layer keep the working set comfortably inside L1.
 const K_BLOCK: usize = 64;
+
+/// The innermost accumulation loops, selected at build time. Portable
+/// SIMD needs the nightly `portable_simd` feature, so the `simd` cargo
+/// feature is off by default and stable builds take the scalar module.
+#[cfg(feature = "simd")]
+mod lanes {
+    use std::simd::f32x8;
+
+    pub const FLAVOR: &str = "simd";
+    const LANES: usize = 8;
+
+    /// `o += a * w`, 8 lanes at a time with a scalar tail.
+    #[inline]
+    pub fn axpy(o: &mut [f32], w: &[f32], a: f32) {
+        debug_assert_eq!(o.len(), w.len());
+        let head = o.len() - o.len() % LANES;
+        let av = f32x8::splat(a);
+        for (oc, wc) in o[..head]
+            .chunks_exact_mut(LANES)
+            .zip(w[..head].chunks_exact(LANES))
+        {
+            (f32x8::from_slice(oc) + av * f32x8::from_slice(wc))
+                .copy_to_slice(oc);
+        }
+        for (ov, &wv) in o[head..].iter_mut().zip(&w[head..]) {
+            *ov += a * wv;
+        }
+    }
+
+    /// `o += a * (w + d)` — the fused weight-noise accumulation.
+    #[inline]
+    pub fn axpy2(o: &mut [f32], w: &[f32], d: &[f32], a: f32) {
+        debug_assert_eq!(o.len(), w.len());
+        debug_assert_eq!(o.len(), d.len());
+        let head = o.len() - o.len() % LANES;
+        let av = f32x8::splat(a);
+        for ((oc, wc), dc) in o[..head]
+            .chunks_exact_mut(LANES)
+            .zip(w[..head].chunks_exact(LANES))
+            .zip(d[..head].chunks_exact(LANES))
+        {
+            (f32x8::from_slice(oc)
+                + av * (f32x8::from_slice(wc) + f32x8::from_slice(dc)))
+                .copy_to_slice(oc);
+        }
+        for ((ov, &wv), &dv) in
+            o[head..].iter_mut().zip(&w[head..]).zip(&d[head..])
+        {
+            *ov += a * (wv + dv);
+        }
+    }
+}
+
+#[cfg(not(feature = "simd"))]
+mod lanes {
+    pub const FLAVOR: &str = "scalar";
+
+    /// `o += a * w`; the zipped form auto-vectorizes on most targets.
+    #[inline]
+    pub fn axpy(o: &mut [f32], w: &[f32], a: f32) {
+        debug_assert_eq!(o.len(), w.len());
+        for (ov, &wv) in o.iter_mut().zip(w) {
+            *ov += a * wv;
+        }
+    }
+
+    /// `o += a * (w + d)` — the fused weight-noise accumulation.
+    #[inline]
+    pub fn axpy2(o: &mut [f32], w: &[f32], d: &[f32], a: f32) {
+        debug_assert_eq!(o.len(), w.len());
+        debug_assert_eq!(o.len(), d.len());
+        for ((ov, &wv), &dv) in o.iter_mut().zip(w).zip(d) {
+            *ov += a * (wv + dv);
+        }
+    }
+}
+
+/// Which inner-loop flavor this binary was built with: `"simd"`
+/// (portable `std::simd`, nightly `--features simd`) or `"scalar"`
+/// (stable fallback). Replay digests are stable within one flavor.
+pub fn kernel_flavor() -> &'static str {
+    lanes::FLAVOR
+}
 
 /// `out[b, j] += sum_k x[b, k] * w[k, j]` for row-major
 /// `x: [batch, n_dot]`, `w: [n_dot, n_channels]`,
@@ -46,11 +146,11 @@ pub fn gemm_blocked(
         while kk < n_dot {
             let kend = (kk + K_BLOCK).min(n_dot);
             for k in kk..kend {
-                let xv = xrow[k];
-                let wrow = &w[k * n_channels..(k + 1) * n_channels];
-                for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
-                    *o += xv * wv;
-                }
+                lanes::axpy(
+                    orow,
+                    &w[k * n_channels..(k + 1) * n_channels],
+                    xrow[k],
+                );
             }
             kk = kend;
         }
@@ -109,33 +209,56 @@ pub fn site_noise(
     }
 }
 
+/// Scale a freshly drawn N(0, 1) block (any `[rows, n_channels]`
+/// row-major layout, channel as the fast axis) by `std / sqrt(K_c)`.
+/// `ks` is either one uniform K (time/spatial averaging) or one K per
+/// channel (per-row spatial averaging).
+fn scale_noise(buf: &mut [f32], n_channels: usize, ks: &[f64], std: f64) {
+    debug_assert!(ks.len() == 1 || ks.len() == n_channels);
+    if ks.len() == 1 {
+        let s = (std / ks[0].max(1.0).sqrt()) as f32;
+        for v in buf.iter_mut() {
+            *v *= s;
+        }
+    } else {
+        for row in buf.chunks_exact_mut(n_channels) {
+            for (v, k) in row.iter_mut().zip(ks) {
+                *v *= (std / k.max(1.0).sqrt()) as f32;
+            }
+        }
+    }
+}
+
 /// Add i.i.d. Gaussian noise of std `additive_std / sqrt(K_c)` to every
-/// output channel. `ks` is either one uniform K (time/spatial
-/// averaging) or one K per channel (per-row spatial averaging).
+/// output channel. The whole block is drawn up front by batched
+/// Box–Muller into `gauss` (a reusable per-worker scratch — no
+/// steady-state allocation), then scaled per channel and added in one
+/// sweep.
 pub fn apply_additive_noise(
     out: &mut [f32],
     n_channels: usize,
     ks: &[f64],
     additive_std: f64,
     rng: &mut Rng,
+    gauss: &mut ScratchBuf,
 ) {
     if additive_std <= 0.0 {
         return;
     }
-    debug_assert!(ks.len() == 1 || ks.len() == n_channels);
-    for row in out.chunks_exact_mut(n_channels) {
-        for (j, o) in row.iter_mut().enumerate() {
-            let k = ks[if ks.len() == 1 { 0 } else { j }].max(1.0);
-            *o += (rng.gaussian() * additive_std / k.sqrt()) as f32;
-        }
+    let g = gauss.take(out.len());
+    rng.fill_gaussian_f32(g);
+    scale_noise(g, n_channels, ks, additive_std);
+    for (o, &n) in out.iter_mut().zip(g.iter()) {
+        *o += n;
     }
 }
 
 /// Apply weight read noise: draw a per-entry perturbation `dW` with
-/// std `weight_std / sqrt(K_c)` (column c folds its own redundancy) and
-/// accumulate `x * dW` into `out` through the blocked GEMM. The draw is
-/// per dispatched batch — each repetition re-reads the array, and the
-/// K-fold average is folded into the std exactly as for additive noise.
+/// std `weight_std / sqrt(K_c)` (column c folds its own redundancy)
+/// into the reusable `dw` scratch and accumulate `x * dW` into `out`
+/// through the blocked GEMM. The draw is per dispatched batch — each
+/// repetition re-reads the array, and the K-fold average is folded
+/// into the std exactly as for additive noise.
 #[allow(clippy::too_many_arguments)]
 pub fn apply_weight_noise(
     x: &[f32],
@@ -146,17 +269,96 @@ pub fn apply_weight_noise(
     ks: &[f64],
     weight_std: f64,
     rng: &mut Rng,
+    dw: &mut ScratchBuf,
 ) {
     if weight_std <= 0.0 {
         return;
     }
-    debug_assert!(ks.len() == 1 || ks.len() == n_channels);
-    let mut dw = vec![0.0f32; n_dot * n_channels];
-    for (i, d) in dw.iter_mut().enumerate() {
-        let k = ks[if ks.len() == 1 { 0 } else { i % n_channels }].max(1.0);
-        *d = (rng.gaussian() * weight_std / k.sqrt()) as f32;
+    let d = dw.take(n_dot * n_channels);
+    rng.fill_gaussian_f32(d);
+    scale_noise(d, n_channels, ks, weight_std);
+    gemm_blocked(x, d, out, batch, n_dot, n_channels);
+}
+
+/// The fused hot path: quantized inputs -> GEMM -> weight + additive
+/// noise -> K-fold averaging, in ONE sweep over each output row.
+///
+/// Per batch: `dW` (if `weight_std > 0`) and the additive block (if
+/// `additive_std > 0`) are drawn up front by batched Box–Muller, with
+/// the `1/sqrt(K_c)` averaging fold pre-applied to both. Each output
+/// row is then *seeded* with its additive-noise block (replacing the
+/// zeroing sweep — `out` is fully overwritten, whatever it held) and
+/// accumulates `x * (W + dW)` via the flavor-dispatched inner loop, so
+/// the tile is touched once while hot in cache.
+///
+/// RNG stream order is fixed (`dW` block first, additive block second)
+/// and each block consumes a data-independent number of stream words,
+/// which is what keeps replays bit-identical per kernel flavor.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_noisy_gemm(
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    batch: usize,
+    n_dot: usize,
+    n_channels: usize,
+    ks: &[f64],
+    additive_std: f64,
+    weight_std: f64,
+    rng: &mut Rng,
+    dw: &mut ScratchBuf,
+    gauss: &mut ScratchBuf,
+) {
+    debug_assert_eq!(x.len(), batch * n_dot);
+    debug_assert_eq!(w.len(), n_dot * n_channels);
+    debug_assert_eq!(out.len(), batch * n_channels);
+    let d: Option<&[f32]> = if weight_std > 0.0 {
+        let d = dw.take(n_dot * n_channels);
+        rng.fill_gaussian_f32(d);
+        scale_noise(d, n_channels, ks, weight_std);
+        Some(d)
+    } else {
+        None
+    };
+    let g: Option<&[f32]> = if additive_std > 0.0 {
+        let g = gauss.take(batch * n_channels);
+        rng.fill_gaussian_f32(g);
+        scale_noise(g, n_channels, ks, additive_std);
+        Some(g)
+    } else {
+        None
+    };
+    for b in 0..batch {
+        let xrow = &x[b * n_dot..(b + 1) * n_dot];
+        let orow = &mut out[b * n_channels..(b + 1) * n_channels];
+        match g {
+            Some(g) => orow
+                .copy_from_slice(&g[b * n_channels..(b + 1) * n_channels]),
+            None => orow.fill(0.0),
+        }
+        let mut kk = 0;
+        while kk < n_dot {
+            let kend = (kk + K_BLOCK).min(n_dot);
+            match d {
+                Some(d) => {
+                    for k in kk..kend {
+                        let row = k * n_channels..(k + 1) * n_channels;
+                        lanes::axpy2(orow, &w[row.clone()], &d[row], xrow[k]);
+                    }
+                }
+                None => {
+                    for k in kk..kend {
+                        lanes::axpy(
+                            orow,
+                            &w[k * n_channels..(k + 1) * n_channels],
+                            xrow[k],
+                        );
+                    }
+                }
+            }
+            kk = kend;
+        }
     }
-    gemm_blocked(x, &dw, out, batch, n_dot, n_channels);
 }
 
 /// Stuck/dead physical-tile faults an analog engine must suffer, as
@@ -282,8 +484,9 @@ mod tests {
         let n = 20_000;
         let std_at = |k: f64, seed: u64| -> f64 {
             let mut rng = Rng::new(seed);
+            let mut gauss = ScratchBuf::new();
             let mut buf = vec![0.0f32; n];
-            apply_additive_noise(&mut buf, 1, &[k], 1.0, &mut rng);
+            apply_additive_noise(&mut buf, 1, &[k], 1.0, &mut rng, &mut gauss);
             (buf.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
                 / n as f64)
                 .sqrt()
@@ -301,8 +504,16 @@ mod tests {
         // be ~10x smaller.
         let rows = 8_000;
         let mut rng = Rng::new(3);
+        let mut gauss = ScratchBuf::new();
         let mut buf = vec![0.0f32; rows * 2];
-        apply_additive_noise(&mut buf, 2, &[1.0, 100.0], 1.0, &mut rng);
+        apply_additive_noise(
+            &mut buf,
+            2,
+            &[1.0, 100.0],
+            1.0,
+            &mut rng,
+            &mut gauss,
+        );
         let mut v = [0.0f64; 2];
         for row in buf.chunks_exact(2) {
             v[0] += (row[0] as f64).powi(2);
@@ -320,15 +531,17 @@ mod tests {
         // draws come from separate calls, not separate batch lanes.
         let (draws, n_dot) = (4_000u64, 16);
         let x = vec![1.0f32; n_dot];
+        let mut dw = ScratchBuf::new();
         let mut sum2 = 0.0f64;
         for d in 0..draws {
             let mut rng = Rng::new(1000 + d);
             let mut out = vec![0.0f32; 1];
             apply_weight_noise(
-                &x, &mut out, 1, n_dot, 1, &[4.0], 0.5, &mut rng,
+                &x, &mut out, 1, n_dot, 1, &[4.0], 0.5, &mut rng, &mut dw,
             );
             sum2 += (out[0] as f64).powi(2);
         }
+        assert_eq!(dw.grows(), 1, "scratch reused across all draws");
         let std = (sum2 / draws as f64).sqrt();
         let want = (n_dot as f64).sqrt() * 0.5 / 2.0;
         assert!((std / want - 1.0).abs() < 0.1, "std {std} want {want}");
@@ -339,13 +552,103 @@ mod tests {
         // Every lane of one dispatched batch sees the same dW draw.
         let (batch, n_dot) = (4, 8);
         let mut rng = Rng::new(5);
+        let mut dw = ScratchBuf::new();
         let x = vec![1.0f32; batch * n_dot];
         let mut out = vec![0.0f32; batch];
         apply_weight_noise(
-            &x, &mut out, batch, n_dot, 1, &[1.0], 0.5, &mut rng,
+            &x, &mut out, batch, n_dot, 1, &[1.0], 0.5, &mut rng, &mut dw,
         );
         assert!(out.iter().all(|&v| v == out[0]));
         assert_ne!(out[0], 0.0);
+    }
+
+    #[test]
+    fn fused_with_zero_noise_is_the_exact_gemm() {
+        // Both paths accumulate through the same lanes::axpy loop, so
+        // the zero-noise fused pass must be bit-identical to the clean
+        // GEMM — and must fully overwrite stale data in `out`.
+        let (batch, n_dot, n_channels) = (5, 70, 9);
+        let mut rng = Rng::new(21);
+        let x: Vec<f32> =
+            (0..batch * n_dot).map(|_| rng.gaussian() as f32).collect();
+        let w: Vec<f32> = (0..n_dot * n_channels)
+            .map(|_| rng.gaussian() as f32)
+            .collect();
+        let mut clean = vec![0.0f32; batch * n_channels];
+        gemm_blocked(&x, &w, &mut clean, batch, n_dot, n_channels);
+        let mut fused = vec![7.0f32; batch * n_channels]; // stale garbage
+        let (mut dw, mut gauss) = (ScratchBuf::new(), ScratchBuf::new());
+        fused_noisy_gemm(
+            &x, &w, &mut fused, batch, n_dot, n_channels, &[1.0], 0.0,
+            0.0, &mut rng, &mut dw, &mut gauss,
+        );
+        assert_eq!(fused, clean);
+        assert_eq!(dw.grows() + gauss.grows(), 0, "no noise, no draws");
+    }
+
+    #[test]
+    fn fused_matches_the_decomposed_sweeps_bitwise() {
+        // One fused sweep == gemm + apply_weight_noise +
+        // apply_additive_noise when replayed on the same stream? Not
+        // bit-for-bit (the fused pass accumulates x*(W+dW) in one go),
+        // but with W = 0 the GEMM term vanishes and the two orderings
+        // must agree exactly; with W != 0 they agree to fp tolerance.
+        let (batch, n_dot, n_channels) = (4, 32, 3);
+        let mut rng = Rng::new(91);
+        let x: Vec<f32> =
+            (0..batch * n_dot).map(|_| rng.gaussian() as f32).collect();
+        let w: Vec<f32> = (0..n_dot * n_channels)
+            .map(|_| rng.gaussian() as f32)
+            .collect();
+        let ks = [4.0f64];
+        let (mut dw, mut gauss) = (ScratchBuf::new(), ScratchBuf::new());
+
+        let mut fused = vec![0.0f32; batch * n_channels];
+        let mut r1 = Rng::new(777);
+        fused_noisy_gemm(
+            &x, &w, &mut fused, batch, n_dot, n_channels, &ks, 0.3, 0.2,
+            &mut r1, &mut dw, &mut gauss,
+        );
+
+        // Decomposed replay of the identical stream: dW block first,
+        // additive block second (the documented order).
+        let mut split = vec![0.0f32; batch * n_channels];
+        let mut r2 = Rng::new(777);
+        gemm_blocked(&x, &w, &mut split, batch, n_dot, n_channels);
+        apply_weight_noise(
+            &x, &mut split, batch, n_dot, n_channels, &ks, 0.2, &mut r2,
+            &mut dw,
+        );
+        apply_additive_noise(
+            &mut split, n_channels, &ks, 0.3, &mut r2, &mut gauss,
+        );
+        for (f, s) in fused.iter().zip(&split) {
+            assert!(
+                (f - s).abs() <= 1e-4 * s.abs().max(1.0),
+                "fused {f} vs decomposed {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_is_deterministic_per_seed_and_flavor() {
+        let (batch, n_dot, n_channels) = (3, 16, 4);
+        let x = vec![0.25f32; batch * n_dot];
+        let w = vec![0.1f32; n_dot * n_channels];
+        let run = |seed: u64| {
+            let mut out = vec![0.0f32; batch * n_channels];
+            let (mut dw, mut gauss) =
+                (ScratchBuf::new(), ScratchBuf::new());
+            let mut rng = Rng::new(seed);
+            fused_noisy_gemm(
+                &x, &w, &mut out, batch, n_dot, n_channels, &[2.0], 0.5,
+                0.1, &mut rng, &mut dw, &mut gauss,
+            );
+            out
+        };
+        assert_eq!(run(3), run(3), "same seed replays bit-identically");
+        assert_ne!(run(3), run(4), "noise must depend on the seed");
+        assert!(matches!(kernel_flavor(), "scalar" | "simd"));
     }
 
     #[test]

@@ -28,11 +28,12 @@ pub mod pjrt;
 pub use hybrid::HybridBackend;
 pub use kernel::{
     apply_additive_noise, apply_stuck_cells, apply_weight_noise,
-    gemm_blocked, phys_tile, site_noise, SiteNoise, TileFaults,
+    fused_noisy_gemm, gemm_blocked, kernel_flavor, phys_tile, site_noise,
+    SiteNoise, TileFaults,
 };
 pub use native::{
     masked_faults, DigitalReferenceBackend, NativeAnalogBackend,
-    NativeModel, NativeModelSet, SitePlan,
+    NativeModel, NativeModelSet, RunScratch, SitePlan,
 };
 pub use pjrt::PjrtBackend;
 

@@ -15,19 +15,20 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::analog::{
-    decode_replicas_into, fault_budget, plan_layer, AveragingMode,
+    decode_replica_buffers_into, fault_budget, plan_layer, AveragingMode,
     DecodeMode, HardwareConfig, NoiseKind,
 };
 use crate::backend::kernel::{
     apply_additive_noise, apply_stuck_cells, apply_weight_noise,
-    embed_row_f32, embed_token, gemm_blocked, phys_tile, site_noise,
-    SiteNoise, TileFaults,
+    embed_row_f32, embed_token, fused_noisy_gemm, gemm_blocked, phys_tile,
+    site_noise, SiteNoise, TileFaults,
 };
 use crate::backend::{
-    front_rows, BatchJob, BatchOutput, ExecutionBackend, PlaneBreakdown,
+    BatchJob, BatchOutput, ExecutionBackend, PlaneBreakdown,
 };
 use crate::data::Features;
 use crate::runtime::artifact::{ModelMeta, SiteMeta};
+use crate::util::pool::ScratchBuf;
 use crate::util::rng::Rng;
 
 /// One GEMM site of a native model: the noise-site metadata plus the
@@ -102,6 +103,35 @@ pub fn masked_faults(plans: &[SitePlan], faults: TileFaults) -> u32 {
     masked
 }
 
+/// Reusable buffers for the native forward hot path. Each backend (==
+/// one device worker thread) owns one, so after the first batch of a
+/// given model shape every later batch runs without touching the
+/// allocator: the growth counters on the kernel-facing [`ScratchBuf`]s
+/// let tests assert exactly that.
+#[derive(Default)]
+pub struct RunScratch {
+    /// Current layer input, embedded/clipped to `[rows, n_dot]`.
+    xin: Vec<f32>,
+    /// Previous site's output (the next site's source rows).
+    cur: Vec<f32>,
+    /// Current site's output tile, `[rows, n_channels]`.
+    out: Vec<f32>,
+    /// Token-id features embedded to f32 (I32 requests only).
+    tokens: Vec<f32>,
+    /// One buffer per replica group for redundant sites.
+    reps: Vec<Vec<f32>>,
+    /// Per-batch `dW` draw (weight read noise), reused every batch.
+    pub dw: ScratchBuf,
+    /// Batched additive-noise Gaussian block, reused every batch.
+    pub gauss: ScratchBuf,
+}
+
+impl RunScratch {
+    pub fn new() -> RunScratch {
+        RunScratch::default()
+    }
+}
+
 impl NativeModel {
     pub fn from_meta(meta: &ModelMeta) -> NativeModel {
         let base = name_seed(&meta.name);
@@ -146,92 +176,164 @@ impl NativeModel {
         faults: TileFaults,
         rng: &mut Rng,
     ) -> Vec<f32> {
-        if self.sites.is_empty() || batch == 0 {
+        let mut scratch = RunScratch::new();
+        self.run_scratch(x, batch, batch, plans, faults, rng, &mut scratch)
+    }
+
+    /// The hot-path form of [`run_faulted`](NativeModel::run_faulted):
+    /// executes the front `rows` lanes of a padded `[total_rows,
+    /// sample]` feature buffer in place (no front-rows clone), drawing
+    /// every working buffer from the caller's [`RunScratch`]. Sites
+    /// planned with a single replica group ride the fully fused kernel
+    /// ([`fused_noisy_gemm`]); redundant sites compute the clean GEMM
+    /// once, run each replica's noise pass over a scratch copy, and
+    /// median-decode — the replica sub-averages ride the same batched
+    /// noise draws. Only the returned logits allocate.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_scratch(
+        &self,
+        x: &Features,
+        total_rows: usize,
+        rows: usize,
+        plans: Option<&[SitePlan]>,
+        faults: TileFaults,
+        rng: &mut Rng,
+        scratch: &mut RunScratch,
+    ) -> Vec<f32> {
+        if self.sites.is_empty() || rows == 0 {
             return Vec::new();
         }
         // Token ids enter the same f32 GEMM path via a fixed embedding.
-        let feats: Vec<f32> = match x {
-            Features::F32(v) => v.clone(),
-            Features::I32(v) => v.iter().map(|&t| embed_token(t)).collect(),
+        let feats: &[f32] = match x {
+            Features::F32(v) => v,
+            Features::I32(v) => {
+                scratch.tokens.clear();
+                scratch.tokens.extend(v.iter().map(|&t| embed_token(t)));
+                &scratch.tokens
+            }
         };
-        let sample = feats.len() / batch;
-        let mut cur = feats;
+        let sample = feats.len() / total_rows.max(1);
         let mut width = sample;
         for (si, ns) in self.sites.iter().enumerate() {
             let s = &ns.site;
-            let mut xin = vec![0.0f32; batch * s.n_dot];
-            for b in 0..batch {
+            // Site 0 reads the request features; later sites read the
+            // previous site's output out of `cur`.
+            let src: &[f32] = if si == 0 { feats } else { &scratch.cur };
+            scratch.xin.clear();
+            scratch.xin.resize(rows * s.n_dot, 0.0);
+            for b in 0..rows {
                 embed_row_f32(
-                    &cur[b * width..(b + 1) * width],
-                    &mut xin[b * s.n_dot..(b + 1) * s.n_dot],
+                    &src[b * width..(b + 1) * width],
+                    &mut scratch.xin[b * s.n_dot..(b + 1) * s.n_dot],
                     s.in_lo_clip as f32,
                     s.in_hi_clip as f32,
                 );
             }
-            let mut out = vec![0.0f32; batch * s.n_channels];
-            gemm_blocked(&xin, &ns.w, &mut out, batch, s.n_dot, s.n_channels);
-            match plans {
-                Some(plans) if !plans[si].digital => {
-                    let p = &plans[si];
+            scratch.out.resize(rows * s.n_channels, 0.0);
+            match plans.map(|p| &p[si]).filter(|p| !p.digital) {
+                Some(p) if p.groups.max(1) == 1 => {
+                    // Unprotected site: the fused kernel seeds the tile
+                    // with additive noise and accumulates x * (W + dW)
+                    // in one sweep (out is fully overwritten).
+                    fused_noisy_gemm(
+                        &scratch.xin,
+                        &ns.w,
+                        &mut scratch.out,
+                        rows,
+                        s.n_dot,
+                        s.n_channels,
+                        &p.ks,
+                        p.noise.additive_std,
+                        p.noise.weight_std,
+                        rng,
+                        &mut scratch.dw,
+                        &mut scratch.gauss,
+                    );
+                    fault_tile(
+                        ns,
+                        &scratch.xin,
+                        &mut scratch.out,
+                        rows,
+                        phys_tile(si, 0, 1),
+                        faults,
+                    );
+                }
+                Some(p) => {
+                    // Redundant site: each replica sub-averages
+                    // K/groups repetitions on its own physical tile, so
+                    // its one-shot noise std grows by sqrt(groups); the
+                    // median decode restores the 1/sqrt(K) scaling at
+                    // unchanged total energy.
                     let groups = p.groups.max(1);
-                    // Each replica sub-averages K/groups repetitions on
-                    // its own physical tile, so its one-shot noise std
-                    // grows by sqrt(groups); the median decode restores
-                    // the 1/sqrt(K) scaling at unchanged total energy.
                     let sg = (groups as f64).sqrt();
-                    let mut reps: Vec<Vec<f32>> =
-                        Vec::with_capacity(groups);
+                    scratch.out.fill(0.0);
+                    gemm_blocked(
+                        &scratch.xin,
+                        &ns.w,
+                        &mut scratch.out,
+                        rows,
+                        s.n_dot,
+                        s.n_channels,
+                    );
+                    if scratch.reps.len() < groups {
+                        scratch.reps.resize(groups, Vec::new());
+                    }
                     for g in 0..groups {
-                        let mut rep = if groups == 1 {
-                            std::mem::take(&mut out)
-                        } else {
-                            out.clone()
-                        };
+                        let rep = &mut scratch.reps[g];
+                        rep.clear();
+                        rep.extend_from_slice(&scratch.out);
                         apply_weight_noise(
-                            &xin,
-                            &mut rep,
-                            batch,
+                            &scratch.xin,
+                            rep,
+                            rows,
                             s.n_dot,
                             s.n_channels,
                             &p.ks,
                             p.noise.weight_std * sg,
                             rng,
+                            &mut scratch.dw,
                         );
                         apply_additive_noise(
-                            &mut rep,
+                            rep,
                             s.n_channels,
                             &p.ks,
                             p.noise.additive_std * sg,
                             rng,
+                            &mut scratch.gauss,
                         );
                         fault_tile(
                             ns,
-                            &xin,
-                            &mut rep,
-                            batch,
+                            &scratch.xin,
+                            rep,
+                            rows,
                             phys_tile(si, g, groups),
                             faults,
                         );
-                        reps.push(rep);
                     }
-                    if groups == 1 {
-                        out = reps.pop().unwrap();
-                    } else {
-                        let views: Vec<&[f32]> =
-                            reps.iter().map(|r| r.as_slice()).collect();
-                        decode_replicas_into(
-                            &mut out,
-                            &views,
-                            DecodeMode::Median,
-                        );
-                    }
+                    decode_replica_buffers_into(
+                        &mut scratch.out,
+                        &scratch.reps[..groups],
+                        DecodeMode::Median,
+                    );
                 }
-                _ => {}
+                None => {
+                    // Digital site or clean forward: exact GEMM, no
+                    // randomness consumed.
+                    scratch.out.fill(0.0);
+                    gemm_blocked(
+                        &scratch.xin,
+                        &ns.w,
+                        &mut scratch.out,
+                        rows,
+                        s.n_dot,
+                        s.n_channels,
+                    );
+                }
             }
             width = s.n_channels;
-            cur = out;
+            std::mem::swap(&mut scratch.cur, &mut scratch.out);
         }
-        cur
+        scratch.cur.clone()
     }
 
     /// Output range of the final site (clip bounds), the normalizer for
@@ -304,6 +406,21 @@ fn fault_tile(
     }
 }
 
+/// Cached per-model redundancy plan: `plan_layer` + `site_noise` are
+/// pure functions of (model, e-vector, drift, redundancy), and serving
+/// traffic re-dispatches the same e-vector batch after batch, so the
+/// plans and their cost totals are rebuilt only when an input actually
+/// changes instead of being reallocated on every batch.
+struct PlanEntry {
+    e: Vec<f32>,
+    drift: f64,
+    plans: Vec<SitePlan>,
+    energy: f64,
+    cycles: f64,
+    k_total: f64,
+    energy_per_layer: Vec<f64>,
+}
+
 /// RMS distance between two logit buffers over the first `n` elements,
 /// normalized by `range`.
 pub(crate) fn rms_error(a: &[f32], b: &[f32], n: usize, range: f64) -> f64 {
@@ -347,6 +464,11 @@ pub struct NativeAnalogBackend {
     faults: TileFaults,
     /// Replica groups per site for fault masking (1 = unprotected).
     redundancy: usize,
+    /// Reusable forward-pass buffers (one worker thread per backend).
+    scratch: RunScratch,
+    /// Per-model plan cache keyed by model name, invalidated when the
+    /// scheduled e-vector or the injected drift changes.
+    plan_cache: BTreeMap<String, PlanEntry>,
 }
 
 impl NativeAnalogBackend {
@@ -365,6 +487,8 @@ impl NativeAnalogBackend {
             drift: 1.0,
             faults: TileFaults::default(),
             redundancy: 1,
+            scratch: RunScratch::new(),
+            plan_cache: BTreeMap::new(),
         }
     }
 
@@ -373,6 +497,7 @@ impl NativeAnalogBackend {
     /// at unchanged energy.
     pub fn with_redundancy(mut self, n: usize) -> NativeAnalogBackend {
         self.redundancy = n.max(1);
+        self.plan_cache.clear();
         self
     }
 
@@ -380,6 +505,65 @@ impl NativeAnalogBackend {
         self.models
             .get(name)
             .ok_or_else(|| anyhow!("no native model built for {name}"))
+    }
+
+    /// Rebuild this model's cached plan iff the scheduled e-vector or
+    /// the drift multiplier changed since the last batch.
+    fn refresh_plans(
+        &mut self,
+        model: &NativeModel,
+        meta: &ModelMeta,
+        e: &[f32],
+    ) {
+        if let Some(c) = self.plan_cache.get(&meta.name) {
+            if c.e.as_slice() == e && c.drift == self.drift {
+                return;
+            }
+        }
+        // Redundancy plan + noise parameters per site: cost and noise
+        // derive from the same quantized K, closing the loop between
+        // what the ledger charges and what the numerics suffer.
+        let mut entry = PlanEntry {
+            e: e.to_vec(),
+            drift: self.drift,
+            plans: Vec::with_capacity(model.sites.len()),
+            energy: 0.0,
+            cycles: 0.0,
+            k_total: 0.0,
+            energy_per_layer: Vec::with_capacity(model.sites.len()),
+        };
+        for ns in &model.sites {
+            let s = &ns.site;
+            let es: Vec<f64> = e[s.e_offset..s.e_offset + s.n_channels]
+                .iter()
+                .map(|&v| v as f64)
+                .collect();
+            let plan = plan_layer(
+                &self.hw,
+                self.averaging,
+                &es,
+                s.n_dot,
+                s.macs_per_channel,
+                true,
+            );
+            entry.energy += plan.energy;
+            entry.cycles += plan.cycles;
+            entry.k_total += plan.k_per_channel.iter().sum::<f64>();
+            entry.energy_per_layer.push(plan.energy);
+            // A drifted device still *charges* the scheduled plan — it
+            // believes its calibration — but suffers scaled noise; the
+            // gap shows up in the measured error, which is the point.
+            let mut noise = site_noise(self.kind, s, meta, &self.hw);
+            noise.additive_std *= self.drift;
+            noise.weight_std *= self.drift;
+            entry.plans.push(SitePlan {
+                ks: plan.k_per_channel,
+                noise,
+                digital: false,
+                groups: self.redundancy,
+            });
+        }
+        self.plan_cache.insert(meta.name.clone(), entry);
     }
 
     /// Warn (once) when the scheduled artifact tag names a different
@@ -419,14 +603,24 @@ impl ExecutionBackend for NativeAnalogBackend {
             Err(e) => return BatchOutput::failed(e),
         };
         // Unlike an AOT artifact, the native engine is not lowered for
-        // a fixed batch: execute only the served lanes, not the padding.
-        let rows = job.n_real.max(1).min(meta.batch.max(1));
-        let x = front_rows(job.x, meta.batch, rows);
+        // a fixed batch: execute only the served lanes, not the
+        // padding (`run_scratch` strides over the padded buffer — no
+        // front-rows clone on the hot path).
+        let total_rows = meta.batch.max(1);
+        let rows = job.n_real.max(1).min(total_rows);
         let mut rng = Rng::new(job.seed as u64 ^ name_seed(&meta.name));
         let Some(e) = job.e else {
             // No precision scheduled: exact digital forward, no analog
             // cost (one pass per site).
-            let logits = model.run(&x, rows, None, &mut rng);
+            let logits = model.run_scratch(
+                job.x,
+                total_rows,
+                rows,
+                None,
+                TileFaults::default(),
+                &mut rng,
+                &mut self.scratch,
+            );
             return BatchOutput {
                 logits: Ok(logits),
                 rows,
@@ -450,54 +644,32 @@ impl ExecutionBackend for NativeAnalogBackend {
             ));
         }
         self.check_family(job.tag, &meta.name);
-        // Redundancy plan + noise parameters per site: cost and noise
-        // derive from the same quantized K, closing the loop between
-        // what the ledger charges and what the numerics suffer.
-        let mut plans = Vec::with_capacity(model.sites.len());
-        let mut energy = 0.0f64;
-        let mut cycles = 0.0f64;
-        let mut k_total = 0.0f64;
-        let mut energy_per_layer = Vec::with_capacity(model.sites.len());
-        for ns in &model.sites {
-            let s = &ns.site;
-            let es: Vec<f64> = e[s.e_offset..s.e_offset + s.n_channels]
-                .iter()
-                .map(|&v| v as f64)
-                .collect();
-            let plan = plan_layer(
-                &self.hw,
-                self.averaging,
-                &es,
-                s.n_dot,
-                s.macs_per_channel,
-                true,
-            );
-            energy += plan.energy;
-            cycles += plan.cycles;
-            k_total += plan.k_per_channel.iter().sum::<f64>();
-            energy_per_layer.push(plan.energy);
-            // A drifted device still *charges* the scheduled plan — it
-            // believes its calibration — but suffers scaled noise; the
-            // gap shows up in the measured error, which is the point.
-            let mut noise = site_noise(self.kind, s, meta, &self.hw);
-            noise.additive_std *= self.drift;
-            noise.weight_std *= self.drift;
-            plans.push(SitePlan {
-                ks: plan.k_per_channel,
-                noise,
-                digital: false,
-                groups: self.redundancy,
-            });
-        }
+        self.refresh_plans(&model, meta, e);
         // Per-batch golden pass: measuring the served error costs one
         // extra digital forward per batch — a deliberate tradeoff
         // (the control plane steers on a fresh signal every batch; the
         // modeled analog device time, not host GEMM time, bounds
         // simulated-fleet throughput). Sample batches here if a
         // host-bound native deployment ever needs the compute back.
-        let clean = model.run(&x, rows, None, &mut rng);
-        let noisy =
-            model.run_faulted(&x, rows, Some(&plans), self.faults, &mut rng);
+        let clean = model.run_scratch(
+            job.x,
+            total_rows,
+            rows,
+            None,
+            TileFaults::default(),
+            &mut rng,
+            &mut self.scratch,
+        );
+        let entry = &self.plan_cache[&meta.name];
+        let noisy = model.run_scratch(
+            job.x,
+            total_rows,
+            rows,
+            Some(&entry.plans),
+            self.faults,
+            &mut rng,
+            &mut self.scratch,
+        );
         let classes = model.classes;
         let out_err = rms_error(
             &noisy,
@@ -509,14 +681,14 @@ impl ExecutionBackend for NativeAnalogBackend {
             logits: Ok(noisy),
             rows,
             out_err: out_err as f32,
-            energy_per_sample: energy,
-            cycles_per_sample: cycles,
-            energy_per_layer,
-            faults_masked: masked_faults(&plans, self.faults),
+            energy_per_sample: entry.energy,
+            cycles_per_sample: entry.cycles,
+            energy_per_layer: entry.energy_per_layer.clone(),
+            faults_masked: masked_faults(&entry.plans, self.faults),
             planes: PlaneBreakdown {
-                analog_energy: energy,
-                analog_cycles: cycles,
-                k_total,
+                analog_energy: entry.energy,
+                analog_cycles: entry.cycles,
+                k_total: entry.k_total,
                 ..Default::default()
             },
         }
@@ -538,11 +710,12 @@ impl ExecutionBackend for NativeAnalogBackend {
 /// infinitely fast one.
 pub struct DigitalReferenceBackend {
     models: Arc<NativeModelSet>,
+    scratch: RunScratch,
 }
 
 impl DigitalReferenceBackend {
     pub fn new(models: Arc<NativeModelSet>) -> DigitalReferenceBackend {
-        DigitalReferenceBackend { models }
+        DigitalReferenceBackend { models, scratch: RunScratch::new() }
     }
 }
 
@@ -559,10 +732,18 @@ impl ExecutionBackend for DigitalReferenceBackend {
                 meta.name
             ));
         };
-        let rows = job.n_real.max(1).min(meta.batch.max(1));
-        let x = front_rows(job.x, meta.batch, rows);
+        let total_rows = meta.batch.max(1);
+        let rows = job.n_real.max(1).min(total_rows);
         let mut rng = Rng::new(job.seed as u64);
-        let logits = model.run(&x, rows, None, &mut rng);
+        let logits = model.run_scratch(
+            job.x,
+            total_rows,
+            rows,
+            None,
+            TileFaults::default(),
+            &mut rng,
+            &mut self.scratch,
+        );
         BatchOutput {
             logits: Ok(logits),
             rows,

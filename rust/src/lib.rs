@@ -1,3 +1,9 @@
+// `std::simd` is nightly-only; the `simd` cargo feature (off by
+// default) swaps the noisy-GEMM kernel's lane module onto portable
+// SIMD while the stable default builds the scalar fallback — see
+// `backend::kernel`.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 //! dynaprec — Dynamic Precision Analog Computing for Neural Networks.
 //!
 //! Rust coordinator (L3) over AOT-compiled JAX/Pallas artifacts (L2/L1),

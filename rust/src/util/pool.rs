@@ -1,6 +1,8 @@
 //! Fixed-size thread pool with a shared injector queue (offline build:
-//! no tokio/rayon). Used by the coordinator for worker execution and by
-//! the benchmark harness for client load generation.
+//! no tokio/rayon), plus [`ScratchBuf`], the reusable hot-path buffer
+//! the noisy-GEMM kernel draws its per-batch `dW` and Gaussian blocks
+//! from. Used by the coordinator for worker execution and by the
+//! benchmark harness for client load generation.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -80,6 +82,41 @@ impl Drop for ThreadPool {
     }
 }
 
+/// A reusable f32 scratch buffer for hot-path kernels. `take(len)`
+/// hands back the buffer resized to `len`, reusing its capacity; only
+/// a capacity *growth* allocates, and those are counted so tests can
+/// assert the steady state allocates nothing (each worker backend owns
+/// its scratch, so after the first batch of a given shape every later
+/// batch runs allocation-free).
+#[derive(Debug, Default)]
+pub struct ScratchBuf {
+    buf: Vec<f32>,
+    grows: u64,
+}
+
+impl ScratchBuf {
+    pub fn new() -> ScratchBuf {
+        ScratchBuf::default()
+    }
+
+    /// Borrow the buffer resized to exactly `len` elements. Newly
+    /// exposed elements are zero; previously used elements keep their
+    /// stale values — callers must fully overwrite the slice.
+    pub fn take(&mut self, len: usize) -> &mut [f32] {
+        if len > self.buf.capacity() {
+            self.grows += 1;
+        }
+        self.buf.resize(len, 0.0);
+        &mut self.buf[..len]
+    }
+
+    /// How many times `take` had to grow the allocation. Flat across
+    /// repeated same-shape batches == the hot path allocates nothing.
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+}
+
 fn worker_loop(s: Arc<Shared>) {
     loop {
         let job = {
@@ -154,6 +191,34 @@ mod tests {
         }
         pool.wait_idle();
         assert!(peak.load(Ordering::SeqCst) >= 2, "no observed concurrency");
+    }
+
+    #[test]
+    fn scratch_reuses_capacity_in_steady_state() {
+        let mut s = ScratchBuf::new();
+        assert_eq!(s.grows(), 0);
+        s.take(64).fill(1.0);
+        let after_first = s.grows();
+        assert!(after_first >= 1, "first take must allocate");
+        // Same or smaller shapes: no further growth, stale data kept.
+        for _ in 0..100 {
+            let b = s.take(64);
+            assert_eq!(b.len(), 64);
+            s.take(16);
+        }
+        assert_eq!(s.grows(), after_first, "steady state allocates nothing");
+        // A bigger shape grows exactly once more.
+        s.take(1024);
+        assert_eq!(s.grows(), after_first + 1);
+    }
+
+    #[test]
+    fn scratch_zeroes_newly_exposed_elements() {
+        let mut s = ScratchBuf::new();
+        s.take(4).fill(9.0);
+        s.take(2);
+        let b = s.take(8);
+        assert_eq!(&b[4..], &[0.0; 4], "grown region must be zero");
     }
 
     #[test]

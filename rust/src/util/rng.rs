@@ -124,10 +124,35 @@ impl Rng {
         }
     }
 
-    /// Fill a slice with i.i.d. N(0, 1) f32 samples.
+    /// One Box–Muller pair from exactly two uniforms. Unlike the polar
+    /// method there is no rejection loop, so batched fills consume a
+    /// fixed, data-independent number of stream words — the property
+    /// the kernel's replay-determinism contract rests on.
+    #[inline]
+    fn box_muller(&mut self) -> (f64, f64) {
+        // u in (0, 1]: flip the [0, 1) uniform so ln(u) stays finite.
+        let u = 1.0 - self.uniform();
+        let v = self.uniform();
+        let r = (-2.0 * u.ln()).sqrt();
+        let (s, c) = (std::f64::consts::TAU * v).sin_cos();
+        (r * c, r * s)
+    }
+
+    /// Fill a slice with i.i.d. N(0, 1) f32 samples via batched
+    /// Box–Muller: two outputs per two uniform draws, an odd tail
+    /// discards its spare. Exact cost: `ceil(len / 2)` pairs of
+    /// `next_u64` calls, independent of the sampled values (the polar
+    /// `gaussian()` rejects ~21% of draws, so its stream consumption is
+    /// data-dependent and its inner loop cannot be batched).
     pub fn fill_gaussian_f32(&mut self, out: &mut [f32]) {
-        for x in out.iter_mut() {
-            *x = self.gaussian() as f32;
+        let mut chunks = out.chunks_exact_mut(2);
+        for pair in &mut chunks {
+            let (a, b) = self.box_muller();
+            pair[0] = a as f32;
+            pair[1] = b as f32;
+        }
+        if let [last] = chunks.into_remainder() {
+            *last = self.box_muller().0 as f32;
         }
     }
 
@@ -210,6 +235,44 @@ mod tests {
         let var = sum2 / n as f64 - mean * mean;
         assert!(mean.abs() < 0.01, "mean {mean}");
         assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn batched_gaussian_moments_and_determinism() {
+        let mut r = Rng::new(77);
+        let mut buf = vec![0.0f32; 200_001]; // odd: exercises the tail
+        r.fill_gaussian_f32(&mut buf);
+        let n = buf.len() as f64;
+        let mean = buf.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var = buf
+            .iter()
+            .map(|&v| (v as f64 - mean).powi(2))
+            .sum::<f64>()
+            / n;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+        // Same seed -> bit-identical fill (the replay contract).
+        let mut r2 = Rng::new(77);
+        let mut buf2 = vec![0.0f32; 200_001];
+        r2.fill_gaussian_f32(&mut buf2);
+        assert_eq!(buf, buf2);
+    }
+
+    #[test]
+    fn batched_gaussian_consumes_a_fixed_stream_budget() {
+        // ceil(len/2) Box-Muller pairs x 2 uniforms each: after filling
+        // `len` samples the stream must sit exactly 2*ceil(len/2) words
+        // ahead, no matter what values were drawn.
+        for len in [0usize, 1, 2, 7, 64, 129] {
+            let mut a = Rng::new(5150);
+            let mut buf = vec![0.0f32; len];
+            a.fill_gaussian_f32(&mut buf);
+            let mut b = Rng::new(5150);
+            for _ in 0..len.div_ceil(2) * 2 {
+                b.next_u64();
+            }
+            assert_eq!(a.next_u64(), b.next_u64(), "len {len}");
+        }
     }
 
     #[test]

@@ -1,0 +1,262 @@
+//! Flavor-equivalence suite for the noisy-GEMM kernel.
+//!
+//! Runs identically against both inner-loop flavors — the scalar
+//! fallback (stable default) and portable SIMD (nightly `--features
+//! simd`) — asserting the *statistical contract* the two flavors share:
+//! exactness at zero noise, correct noise moments, the paper's
+//! 1/sqrt(K) averaging law, K -> infinity convergence to the clean
+//! GEMM, and zero steady-state allocation on the scratch-threaded hot
+//! path. CI runs this file under both flavors; a flavor that drifts
+//! from the contract fails here before it can skew any experiment.
+
+use dynaprec::backend::{
+    fused_noisy_gemm, gemm_blocked, kernel_flavor, BatchJob,
+    ExecutionBackend, NativeAnalogBackend, NativeModel, NativeModelSet,
+    RunScratch, TileFaults,
+};
+use dynaprec::analog::{AveragingMode, HardwareConfig};
+use dynaprec::data::Features;
+use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+use dynaprec::util::pool::ScratchBuf;
+use dynaprec::util::rng::Rng;
+use std::sync::Arc;
+
+#[test]
+fn flavor_is_one_of_the_two_contracted_kernels() {
+    assert!(
+        matches!(kernel_flavor(), "scalar" | "simd"),
+        "unknown kernel flavor {}",
+        kernel_flavor()
+    );
+    #[cfg(feature = "simd")]
+    assert_eq!(kernel_flavor(), "simd");
+    #[cfg(not(feature = "simd"))]
+    assert_eq!(kernel_flavor(), "scalar");
+}
+
+#[test]
+fn gemm_matches_naive_on_simd_unfriendly_shapes() {
+    // Odd channel counts exercise the SIMD tail loop; n_dot crosses the
+    // K_BLOCK boundary.
+    for &(batch, n_dot, n_channels) in
+        &[(1usize, 3usize, 1usize), (4, 70, 7), (3, 64, 8), (2, 65, 13)]
+    {
+        let mut rng = Rng::new(42 + n_channels as u64);
+        let x: Vec<f32> =
+            (0..batch * n_dot).map(|_| rng.gaussian() as f32).collect();
+        let w: Vec<f32> = (0..n_dot * n_channels)
+            .map(|_| rng.gaussian() as f32)
+            .collect();
+        let mut out = vec![0.0f32; batch * n_channels];
+        gemm_blocked(&x, &w, &mut out, batch, n_dot, n_channels);
+        for b in 0..batch {
+            for j in 0..n_channels {
+                let want: f64 = (0..n_dot)
+                    .map(|k| {
+                        x[b * n_dot + k] as f64
+                            * w[k * n_channels + j] as f64
+                    })
+                    .sum();
+                let got = out[b * n_channels + j] as f64;
+                assert!(
+                    (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                    "[{batch}x{n_dot}x{n_channels}] [{b},{j}] \
+                     {got} vs {want} ({} flavor)",
+                    kernel_flavor()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_zero_noise_is_bit_exact_on_both_flavors() {
+    // Zero noise routes the fused kernel through the same axpy loop as
+    // the clean GEMM, so equality is exact, not approximate — per
+    // flavor (the two flavors may differ from each other in summation
+    // order, but each must agree with its own clean GEMM).
+    let (batch, n_dot, n_channels) = (6, 130, 11);
+    let mut rng = Rng::new(9);
+    let x: Vec<f32> =
+        (0..batch * n_dot).map(|_| rng.gaussian() as f32).collect();
+    let w: Vec<f32> = (0..n_dot * n_channels)
+        .map(|_| rng.gaussian() as f32)
+        .collect();
+    let mut clean = vec![0.0f32; batch * n_channels];
+    gemm_blocked(&x, &w, &mut clean, batch, n_dot, n_channels);
+    let mut fused = vec![f32::NAN; batch * n_channels];
+    let (mut dw, mut gauss) = (ScratchBuf::new(), ScratchBuf::new());
+    fused_noisy_gemm(
+        &x, &w, &mut fused, batch, n_dot, n_channels, &[1.0], 0.0, 0.0,
+        &mut rng, &mut dw, &mut gauss,
+    );
+    assert_eq!(fused, clean, "{} flavor", kernel_flavor());
+}
+
+#[test]
+fn fused_additive_noise_has_the_contracted_moments() {
+    // W = 0 isolates the additive block: outputs are pure noise with
+    // std = additive_std / sqrt(K). Checked at K = 1 and K = 9.
+    let (batch, n_dot, n_channels) = (500, 4, 8);
+    let x = vec![0.0f32; batch * n_dot];
+    let w = vec![0.0f32; n_dot * n_channels];
+    for &(k, want_std) in &[(1.0f64, 0.5f64), (9.0, 0.5 / 3.0)] {
+        let mut out = vec![0.0f32; batch * n_channels];
+        let (mut dw, mut gauss) = (ScratchBuf::new(), ScratchBuf::new());
+        let mut rng = Rng::new(31337);
+        fused_noisy_gemm(
+            &x, &w, &mut out, batch, n_dot, n_channels, &[k], 0.5, 0.0,
+            &mut rng, &mut dw, &mut gauss,
+        );
+        let n = out.len() as f64;
+        let mean = out.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var = out
+            .iter()
+            .map(|&v| (v as f64 - mean).powi(2))
+            .sum::<f64>()
+            / n;
+        let std = var.sqrt();
+        assert!(mean.abs() < 0.02, "K={k}: mean {mean}");
+        assert!(
+            (std / want_std - 1.0).abs() < 0.05,
+            "K={k}: std {std} want {want_std} ({} flavor)",
+            kernel_flavor()
+        );
+    }
+}
+
+/// Measured backend output error at uniform per-layer energy `e`,
+/// averaged over independent noise draws.
+fn mean_backend_err(e_layer: f64, reps: u32) -> f64 {
+    let m = ModelMeta::synthetic("kf", 16, 2, 4, 64, 250.0);
+    let natives = Arc::new(NativeModelSet::build([&m]));
+    let bundle = ModelBundle::synthetic(m.clone());
+    let e = m
+        .broadcast_per_layer(&[e_layer, e_layer])
+        .expect("2 noise sites");
+    let mut backend = NativeAnalogBackend::new(
+        HardwareConfig::broadcast_weight(),
+        AveragingMode::Time,
+        natives,
+    );
+    let x = Features::F32(vec![0.25; 16 * 4]);
+    (0..reps)
+        .map(|s| {
+            let out = backend.execute(&BatchJob {
+                bundle: &bundle,
+                x: &x,
+                n_real: 16,
+                seed: 4000 + s,
+                e: Some(&e),
+                tag: "thermal.fwd",
+            });
+            out.out_err as f64
+        })
+        .sum::<f64>()
+        / reps as f64
+}
+
+#[test]
+fn error_shrinks_like_inv_sqrt_k_through_the_fused_path() {
+    // The paper's averaging law, end to end through the fused kernel:
+    // 16x the energy (K) shrinks the measured error ~4x.
+    let e1 = mean_backend_err(1.0, 16);
+    let e16 = mean_backend_err(16.0, 16);
+    assert!(e1 > 0.02, "K=1 error should be visible: {e1}");
+    let ratio = e1 / e16;
+    assert!(
+        (3.2..=5.0).contains(&ratio),
+        "err(K=1)/err(K=16) = {ratio} (want ~4, {} flavor)",
+        kernel_flavor()
+    );
+}
+
+#[test]
+fn fused_path_converges_to_the_clean_gemm_at_large_k() {
+    let err = mean_backend_err(1e6, 4);
+    assert!(
+        err < 2e-3,
+        "residual err {err} at K=1e6 ({} flavor)",
+        kernel_flavor()
+    );
+}
+
+#[test]
+fn weight_noise_is_quasi_static_through_the_fused_kernel() {
+    // Identical input rows in one batch must see the identical dW draw:
+    // with x = all-ones rows, every output row is the same.
+    let (batch, n_dot, n_channels) = (4, 16, 3);
+    let x = vec![1.0f32; batch * n_dot];
+    let w = vec![0.1f32; n_dot * n_channels];
+    let mut out = vec![0.0f32; batch * n_channels];
+    let (mut dw, mut gauss) = (ScratchBuf::new(), ScratchBuf::new());
+    let mut rng = Rng::new(55);
+    fused_noisy_gemm(
+        &x, &w, &mut out, batch, n_dot, n_channels, &[1.0], 0.0, 0.3,
+        &mut rng, &mut dw, &mut gauss,
+    );
+    let first = out[..n_channels].to_vec();
+    for b in 1..batch {
+        assert_eq!(
+            &out[b * n_channels..(b + 1) * n_channels],
+            &first[..],
+            "row {b} saw a different dW draw"
+        );
+    }
+    // And the draw actually perturbed the clean product.
+    let clean = 0.1f32 * n_dot as f32;
+    assert!(out.iter().any(|&v| (v - clean).abs() > 1e-6));
+}
+
+#[test]
+fn hot_path_allocates_nothing_in_steady_state() {
+    // After the first batch of a given shape, repeated forwards through
+    // run_scratch must never grow the dW/Gaussian scratch buffers —
+    // the per-batch-allocation bug this suite pins down.
+    let m = ModelMeta::synthetic("kf-alloc", 8, 2, 4, 64, 250.0);
+    let model = NativeModel::from_meta(&m);
+    let plans: Vec<_> = model
+        .sites
+        .iter()
+        .map(|_| {
+            dynaprec::backend::SitePlan::analog(
+                vec![4.0],
+                dynaprec::backend::SiteNoise {
+                    additive_std: 0.1,
+                    weight_std: 0.05,
+                },
+            )
+        })
+        .collect();
+    let x = Features::F32(vec![0.25; 8 * 4]);
+    let mut rng = Rng::new(1);
+    let mut scratch = RunScratch::new();
+    let out = model.run_scratch(
+        &x,
+        8,
+        8,
+        Some(&plans),
+        TileFaults::default(),
+        &mut rng,
+        &mut scratch,
+    );
+    assert_eq!(out.len(), 8 * 4);
+    let (dw0, g0) = (scratch.dw.grows(), scratch.gauss.grows());
+    assert!(g0 >= 1, "additive noise must have drawn a block");
+    for _ in 0..50 {
+        model.run_scratch(
+            &x,
+            8,
+            8,
+            Some(&plans),
+            TileFaults::default(),
+            &mut rng,
+            &mut scratch,
+        );
+    }
+    assert_eq!(
+        (scratch.dw.grows(), scratch.gauss.grows()),
+        (dw0, g0),
+        "steady-state forwards must not grow the noise scratch"
+    );
+}

@@ -547,6 +547,47 @@ fn different_seeds_produce_different_digests() {
     );
 }
 
+/// Replay digests are pinned *per kernel flavor*: within one binary —
+/// whichever of the scalar/SIMD inner loops it was built with — a
+/// seeded scenario must digest identically on every run. (The two
+/// flavors sum in different orders, so digests are NOT comparable
+/// across flavors; the statistical equivalence of the flavors is
+/// covered by tests/kernel_flavors.rs.)
+#[test]
+fn replay_digest_is_stable_for_the_built_kernel_flavor() {
+    use dynaprec::backend::kernel_flavor;
+    let run = || {
+        let spec = TrafficSpec::new(MODEL, Duration::from_secs(8))
+            .with_bucket(Duration::from_millis(50))
+            .with_seed(4242);
+        let cfg = fleet_cfg(
+            vec![dev("d0", 4000.0), dev("d1", 4000.0)],
+            DispatchPolicy::LeastQueueDepth,
+            16,
+        );
+        let scenario = Scenario::new(steady(&spec, 150.0))
+            .with_tail(Duration::from_secs(3));
+        run_scenario(vec![bundle(16)], sched(), cfg, &scenario).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert!(a.ok(), "invariants violated:\n{}", a.violations.join("\n"));
+    assert!(a.served > 0, "scenario must actually serve");
+    assert_eq!(
+        a.digest,
+        b.digest,
+        "the {} kernel flavor must replay bit-identically \
+         (batched noise draws desynced from the RNG stream?)",
+        kernel_flavor()
+    );
+    assert_eq!(
+        a.stats.ledger.total_energy.to_bits(),
+        b.stats.ledger.total_energy.to_bits(),
+        "{} flavor: energy ledger must replay exactly",
+        kernel_flavor()
+    );
+}
+
 /// 4 noise sites x 4 channels, 4000 MACs/sample — the hybrid-split
 /// testbed. On the thermal broadcast-and-weight device a per-layer
 /// energy of 16 buys each analog site a K=16 averaging schedule.
