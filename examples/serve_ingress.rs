@@ -1,0 +1,311 @@
+//! serve_ingress — closed-loop socket serving smoke.
+//!
+//! Boots the full socket path — epoll ingress in front of a native
+//! analog coordinator with the precision control plane on — then
+//! drives it over real loopback TCP with the seeded `sim::traffic`
+//! generators and reports what the *client* observed: p50/p95/p99
+//! round-trip latency, shed rate (typed, by reason), and
+//! energy/request, next to the server's own `MetricsSnapshot` with the
+//! ingress counters stamped in.
+//!
+//!   cargo run --release --example serve_ingress
+//!   cargo run --release --example serve_ingress -- \
+//!       --profile heavy_tail --conns 64 --outstanding 16
+//!
+//! Flags: `--profile steady|diurnal|heavy_tail`, `--conns N`,
+//! `--outstanding N` (closed-loop window per connection), `--secs N`
+//! (schedule length), `--json` for one machine-readable report.
+//!
+//! Exits non-zero on a per-connection conservation violation
+//! (`responses + typed_sheds != frames_sent`), an ingress/client
+//! ledger mismatch, or a blown latency SLO — wired into CI as the
+//! ingress smoke.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
+use dynaprec::backend::BackendKind;
+use dynaprec::control::{
+    AdmissionConfig, AutotunerConfig, ControlConfig,
+};
+use dynaprec::coordinator::scheduler::ModelPrecision;
+use dynaprec::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, EnergyPolicy,
+    PrecisionScheduler, ShedReason,
+};
+use dynaprec::ingress::{
+    run_load, IngressConfig, IngressServer, LoadgenConfig,
+};
+use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+use dynaprec::sim::{
+    check_connection_conservation, diurnal, heavy_tail, steady,
+    SimEvent, TrafficSpec,
+};
+use dynaprec::util::cli::Args;
+use dynaprec::util::json::Json;
+
+const MODEL: &str = "synth";
+/// Client-observed p99 bar for the smoke (closed loop on loopback,
+/// simulated device time).
+const SLO_P99_US: u64 = 2_000_000;
+
+fn main() {
+    let args = Args::parse_env();
+    let profile = args.str_or("profile", "heavy_tail");
+    let conns = args.usize_or("conns", 32);
+    let outstanding = args.u64_or("outstanding", 8) as u32;
+    let secs = args.u64_or("secs", 4);
+    let json = args.bool("json");
+
+    // One native device at 1us/cycle (32us of device time per
+    // full-precision sample), control plane on with a small soft
+    // queue: overload lowers precision first, pauses reads, and sheds
+    // typed PrecisionFloor frames — never the hard limit.
+    let control = ControlConfig {
+        enabled: true,
+        tick: Duration::from_millis(5),
+        autotuner: AutotunerConfig {
+            slo_p95_us: 10_000.0,
+            floor_scale: 0.25,
+            step_down: 0.5,
+            step_up: 1.2,
+            headroom: 0.5,
+            cooldown_ticks: 1,
+            min_batches: 2,
+            ..Default::default()
+        },
+        admission: AdmissionConfig {
+            queue_soft_limit: 64,
+            queue_hard_limit: 1_000_000,
+        },
+        ..Default::default()
+    };
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: 8,
+            max_wait: Duration::from_millis(1),
+        },
+        hw: HardwareConfig {
+            array_rows: 256,
+            array_cols: 256,
+            cycle_ns: 1_000.0,
+            base_energy_aj: 1.0,
+            model: DeviceModel::Homodyne,
+        },
+        averaging: AveragingMode::Time,
+        seed: 17,
+        control,
+        backend: BackendKind::NativeAnalog { simulate_time: true },
+        ..Default::default()
+    };
+    let mut sched = PrecisionScheduler::new();
+    sched.set(
+        MODEL,
+        ModelPrecision {
+            noise: "shot".into(),
+            policy: EnergyPolicy::PerLayer(vec![16.0, 16.0]),
+        },
+    );
+    let coord = Arc::new(
+        Coordinator::start(
+            vec![ModelBundle::synthetic(ModelMeta::synthetic(
+                MODEL, 8, 2, 4, 64, 250.0,
+            ))],
+            sched,
+            cfg,
+        )
+        .unwrap(),
+    );
+    let ingress =
+        IngressServer::start(coord.clone(), IngressConfig::default())
+            .expect("bind ingress");
+
+    // Seeded arrival schedule, replayed closed-loop (collapsed time
+    // scale): the schedule fixes *how many* and in what bursts; the
+    // loop replays as fast as the server completes.
+    let spec = TrafficSpec::new(MODEL, Duration::from_secs(secs))
+        .with_seed(23);
+    let events = match profile.as_str() {
+        "steady" => steady(&spec, 800.0),
+        "diurnal" => {
+            diurnal(&spec, 200.0, 1_500.0, Duration::from_secs(2))
+        }
+        _ => heavy_tail(
+            &spec,
+            400.0,
+            4_000.0,
+            Duration::from_millis(500),
+            1.3,
+        ),
+    };
+    let total: u64 = events
+        .iter()
+        .map(|e| match e {
+            SimEvent::Submit { n, .. } => *n as u64,
+            _ => 0,
+        })
+        .sum();
+
+    let report = run_load(
+        ingress.local_addr(),
+        &events,
+        &LoadgenConfig {
+            conns,
+            max_outstanding_per_conn: outstanding,
+            time_scale: 1e12,
+            feature_len: 4,
+            timeout: Duration::from_secs(120),
+        },
+    )
+    .expect("load run");
+
+    let snapshot = ingress.metrics_snapshot(&coord);
+    let ic = snapshot.ingress.expect("ingress counters stamped");
+
+    // ---- verdicts ---------------------------------------------------
+    let mut failures: Vec<String> = Vec::new();
+    if report.timed_out {
+        failures.push("load run timed out before draining".into());
+    }
+    for v in check_connection_conservation(&report.per_conn) {
+        failures.push(format!("conservation: {v}"));
+    }
+    if report.served + report.shed != report.sent {
+        failures.push(format!(
+            "client ledger: served {} + shed {} != sent {}",
+            report.served, report.shed, report.sent
+        ));
+    }
+    if ic.frames_in != ic.responses_out + ic.sheds_out {
+        failures.push(format!(
+            "server ledger: frames_in {} != responses {} + sheds {}",
+            ic.frames_in, ic.responses_out, ic.sheds_out
+        ));
+    }
+    if ic.protocol_errors != 0 {
+        failures.push(format!(
+            "{} protocol errors from a clean client",
+            ic.protocol_errors
+        ));
+    }
+    let hard = report.sheds_by_reason
+        [ShedReason::QueueHardLimit.wire_code() as usize];
+    if hard != 0 {
+        failures.push(format!(
+            "{hard} hard-limit sheds: overload must degrade \
+             precision and pause reads before the hard limit"
+        ));
+    }
+    if report.p99_us() > SLO_P99_US {
+        failures.push(format!(
+            "p99 {}us over the {}us smoke SLO",
+            report.p99_us(),
+            SLO_P99_US
+        ));
+    }
+
+    if json {
+        let sheds: Vec<Json> = ShedReason::ALL
+            .iter()
+            .filter(|r| r.is_shed())
+            .map(|r| {
+                Json::Obj(std::collections::BTreeMap::from([
+                    (
+                        "reason".to_string(),
+                        Json::Str(r.label().to_string()),
+                    ),
+                    (
+                        "count".to_string(),
+                        Json::Num(
+                            report.sheds_by_reason
+                                [r.wire_code() as usize]
+                                as f64,
+                        ),
+                    ),
+                ]))
+            })
+            .collect();
+        let doc = Json::Obj(std::collections::BTreeMap::from([
+            ("profile".to_string(), Json::Str(profile.clone())),
+            ("scheduled".to_string(), Json::Num(total as f64)),
+            ("sent".to_string(), Json::Num(report.sent as f64)),
+            ("served".to_string(), Json::Num(report.served as f64)),
+            ("shed".to_string(), Json::Num(report.shed as f64)),
+            ("shed_rate".to_string(), Json::Num(report.shed_rate())),
+            ("sheds".to_string(), Json::Arr(sheds)),
+            (
+                "p50_us".to_string(),
+                Json::Num(report.p50_us() as f64),
+            ),
+            (
+                "p95_us".to_string(),
+                Json::Num(report.p95_us() as f64),
+            ),
+            (
+                "p99_us".to_string(),
+                Json::Num(report.p99_us() as f64),
+            ),
+            (
+                "energy_per_request_aj".to_string(),
+                Json::Num(report.energy_per_request_aj()),
+            ),
+            (
+                "paused_peak_seen".to_string(),
+                Json::Num(ic.paused as f64),
+            ),
+            (
+                "failures".to_string(),
+                Json::Arr(
+                    failures
+                        .iter()
+                        .map(|f| Json::Str(f.clone()))
+                        .collect(),
+                ),
+            ),
+        ]));
+        println!("{doc}");
+    } else {
+        println!(
+            "profile {profile}: {total} scheduled, {} sent over {} \
+             conns (window {outstanding})",
+            report.sent, conns
+        );
+        println!(
+            "client: {} served, {} shed ({:.4} shed rate), p50 {}us \
+             p95 {}us p99 {}us, {:.0} aJ/request",
+            report.served,
+            report.shed,
+            report.shed_rate(),
+            report.p50_us(),
+            report.p95_us(),
+            report.p99_us(),
+            report.energy_per_request_aj(),
+        );
+        for r in ShedReason::ALL {
+            let n = report.sheds_by_reason[r.wire_code() as usize];
+            if r.is_shed() && n > 0 {
+                println!("  shed[{}] = {n}", r.label());
+            }
+        }
+        println!(
+            "server: accepted {} conns, {} frames in, {} responses + \
+             {} sheds out, {} bytes in / {} bytes out",
+            ic.accepted,
+            ic.frames_in,
+            ic.responses_out,
+            ic.sheds_out,
+            ic.bytes_in,
+            ic.bytes_out
+        );
+        println!("{}", snapshot.to_prometheus());
+    }
+
+    drop(ingress);
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+}

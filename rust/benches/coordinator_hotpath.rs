@@ -5,7 +5,7 @@ use std::time::Duration;
 
 use dynaprec::analog::{plan_layer, AveragingMode, HardwareConfig};
 use dynaprec::coordinator::{BatcherConfig, DynamicBatcher, EnergyPolicy};
-use dynaprec::coordinator::request::InferRequest;
+use dynaprec::coordinator::request::{InferRequest, Responder};
 use dynaprec::data::Features;
 use dynaprec::runtime::artifact::ModelMeta;
 use dynaprec::util::rng::Rng;
@@ -35,7 +35,7 @@ fn main() {
                 model: "m".into(),
                 x: Features::F32(vec![0.0; 4]),
                 enqueued: now_ns,
-                resp: tx,
+                resp: Responder::Channel(tx),
                 span: None,
             });
         }

@@ -52,6 +52,7 @@ fn span(id: u64) -> RequestSpan {
         id,
         model: 0,
         device: 1,
+        t_ingress: 1_000,
         t_submit: 1_000,
         t_enqueue: 1_000,
         t_assemble: 3_000,
@@ -138,7 +139,7 @@ fn main() {
     });
     r_off.report();
 
-    // 5. Device worker: one full span finalization — seven phase
+    // 5. Device worker: one full span finalization — eight phase
     // histogram folds, two plane folds, one seqlock ring push. Paid by
     // 1-in-64 requests; amortized per batch below.
     let mut sid = 0u64;

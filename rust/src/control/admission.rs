@@ -9,6 +9,8 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
+use crate::coordinator::request::ShedReason;
+
 #[derive(Clone, Debug)]
 pub struct AdmissionConfig {
     /// Shed beyond this queue depth once precision is at its floor.
@@ -47,6 +49,9 @@ pub struct AdmissionGate {
     /// Whether the most recent verdict was a shed — edge detection for
     /// the decision trace (record transitions, not every request).
     shedding: AtomicBool,
+    /// Whether the ingress read-interest hook currently holds socket
+    /// readers paused (hysteresis state for `reads_allowed`).
+    paused_reads: AtomicBool,
 }
 
 impl AdmissionGate {
@@ -59,6 +64,7 @@ impl AdmissionGate {
             shed: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             shedding: AtomicBool::new(false),
+            paused_reads: AtomicBool::new(false),
         }
     }
 
@@ -95,17 +101,54 @@ impl AdmissionGate {
     /// disabled) every request is admitted; depth is still tracked for
     /// telemetry.
     pub fn on_submit(&self, gated: bool) -> Verdict {
+        self.on_submit_classified(gated).0
+    }
+
+    /// Router-side decision plus its typed cause: `ShedReason::None`
+    /// when admitted, otherwise which limit shed the request. The
+    /// reason rides on `InferResponse::reason` (and, for remote
+    /// callers, the ingress wire) so clients learn *why* they were
+    /// shed instead of a stringly error.
+    pub fn on_submit_classified(&self, gated: bool) -> (Verdict, ShedReason) {
         if gated {
             let d = self.depth.load(Ordering::Relaxed);
-            if d >= self.cfg.queue_hard_limit
-                || (d >= self.cfg.queue_soft_limit && self.at_floor())
-            {
+            if d >= self.cfg.queue_hard_limit {
                 self.shed.fetch_add(1, Ordering::Relaxed);
-                return Verdict::Shed;
+                return (Verdict::Shed, ShedReason::QueueHardLimit);
+            }
+            if d >= self.cfg.queue_soft_limit && self.at_floor() {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                return (Verdict::Shed, ShedReason::PrecisionFloor);
             }
         }
         self.depth.fetch_add(1, Ordering::Relaxed);
-        Verdict::Admit
+        (Verdict::Admit, ShedReason::None)
+    }
+
+    /// Ingress read-interest hook, with hysteresis. Socket front-ends
+    /// call this before (re)arming read interest: reads pause once
+    /// depth reaches the soft limit — past that point precision is
+    /// already degrading, and buffering more frames only converts
+    /// overload into memory growth — and resume only after depth
+    /// drains to half the soft limit, so interest does not flap at the
+    /// boundary. Always true when no soft limit is configured.
+    pub fn reads_allowed(&self) -> bool {
+        if self.cfg.queue_soft_limit == 0 {
+            return true;
+        }
+        let d = self.depth.load(Ordering::Relaxed);
+        if d >= self.cfg.queue_soft_limit {
+            self.paused_reads.store(true, Ordering::Relaxed);
+        } else if d * 2 <= self.cfg.queue_soft_limit {
+            self.paused_reads.store(false, Ordering::Relaxed);
+        }
+        !self.paused_reads.load(Ordering::Relaxed)
+    }
+
+    /// Whether the read-interest hook currently holds readers paused
+    /// (observability; updated by `reads_allowed` polls).
+    pub fn reads_paused(&self) -> bool {
+        self.paused_reads.load(Ordering::Relaxed)
     }
 
     /// Device-side completion of `n` admitted requests.
@@ -203,5 +246,64 @@ mod tests {
         assert_eq!(g.on_submit(false), Verdict::Admit);
         assert_eq!(g.depth(), 1);
         assert_eq!(g.shed_total(), 0);
+    }
+
+    #[test]
+    fn shed_classification_matches_the_limit_that_fired() {
+        let g = gate(2, 4, 0.25);
+        for _ in 0..2 {
+            assert_eq!(
+                g.on_submit_classified(true),
+                (Verdict::Admit, ShedReason::None)
+            );
+        }
+        // Past the soft limit with precision headroom: still admitted.
+        assert_eq!(
+            g.on_submit_classified(true),
+            (Verdict::Admit, ShedReason::None)
+        );
+        g.set_scale(0.25); // precision floor reached
+        assert_eq!(
+            g.on_submit_classified(true),
+            (Verdict::Shed, ShedReason::PrecisionFloor)
+        );
+        g.set_scale(1.0); // precision recovers...
+        assert_eq!(g.on_submit(true), Verdict::Admit); // depth -> 4
+        // ...but the hard backstop sheds regardless of precision.
+        assert_eq!(
+            g.on_submit_classified(true),
+            (Verdict::Shed, ShedReason::QueueHardLimit)
+        );
+        assert_eq!(g.shed_total(), 2);
+        assert_eq!(g.depth(), 4);
+    }
+
+    #[test]
+    fn read_interest_pauses_at_soft_limit_with_hysteresis() {
+        let g = gate(4, 100, 0.25);
+        assert!(g.reads_allowed());
+        for _ in 0..4 {
+            g.on_submit(true);
+        }
+        // Depth hit the soft limit: pause socket reads (queued work
+        // keeps degrading precision; we just stop buffering frames).
+        assert!(!g.reads_allowed());
+        assert!(g.reads_paused());
+        // One completion is not enough — hysteresis waits for half.
+        g.on_complete(1);
+        assert!(!g.reads_allowed());
+        assert!(g.reads_paused());
+        g.on_complete(1);
+        // Depth 2 == soft/2: resume reads.
+        assert!(g.reads_allowed());
+        assert!(!g.reads_paused());
+    }
+
+    #[test]
+    fn zero_soft_limit_never_pauses_reads() {
+        let g = gate(0, 0, 1.0);
+        g.on_submit(false);
+        assert!(g.reads_allowed());
+        assert!(!g.reads_paused());
     }
 }

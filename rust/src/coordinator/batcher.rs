@@ -108,7 +108,7 @@ mod tests {
             model: "m".into(),
             x: Features::F32(vec![0.0; 4]),
             enqueued: at_ns,
-            resp: tx,
+            resp: crate::coordinator::request::Responder::Channel(tx),
             span: None,
         }
     }

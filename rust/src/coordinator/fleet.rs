@@ -77,7 +77,7 @@ use crate::backend::{
 use crate::control::{
     AdmissionGate, BatchSample, ControlShared, ModelControl, WindowStats,
 };
-use crate::coordinator::request::{InferRequest, InferResponse};
+use crate::coordinator::request::{InferRequest, InferResponse, ShedReason};
 use crate::coordinator::scheduler::PrecisionScheduler;
 use crate::obs::{TraceKind, ERR_TICKS_PER_UNIT};
 use crate::data::Features;
@@ -590,7 +590,7 @@ impl DeviceFleet {
         loop {
             let Some(i) = pick_device(self.policy, rr, &pending, &caps, &energy)
             else {
-                return self.reject(batch, mc);
+                return self.reject(batch, mc, ShedReason::NoCapacity);
             };
             let w = &self.workers[i];
             w.pending.fetch_add(1, Ordering::AcqRel);
@@ -751,18 +751,20 @@ impl DeviceFleet {
     /// still holds.
     pub(crate) fn reject_request(&self, r: InferRequest) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
-        let _ = r.resp.send(InferResponse::rejected(r.id));
+        r.resp
+            .send(InferResponse::rejected_for(r.id, ShedReason::UnknownModel));
     }
 
     fn reject(
         &self,
         batch: Vec<InferRequest>,
         mc: Option<&Arc<ModelControl>>,
+        reason: ShedReason,
     ) {
         let n = batch.len();
         self.rejected.fetch_add(n as u64, Ordering::Relaxed);
         for r in batch {
-            let _ = r.resp.send(InferResponse::rejected(r.id));
+            r.resp.send(InferResponse::rejected_for(r.id, reason));
         }
         if let Some(mc) = mc {
             mc.gate.on_complete(n);
@@ -900,7 +902,7 @@ impl DeviceFleet {
     fn shed_strays(&self) {
         for b in self.collect_strays() {
             let mc = self.shared.get(&b.model).cloned();
-            self.reject(b.batch, mc.as_ref());
+            self.reject(b.batch, mc.as_ref(), ShedReason::Shutdown);
         }
     }
 }
@@ -1101,7 +1103,10 @@ fn worker_loop(ctx: WorkerCtx) {
                     // The dispatcher only routes models it has bundles
                     // for; answer defensively instead of hanging clients.
                     for r in b.batch {
-                        let _ = r.resp.send(InferResponse::rejected(r.id));
+                        r.resp.send(InferResponse::rejected_for(
+                            r.id,
+                            ShedReason::UnknownModel,
+                        ));
                     }
                 }
             }
@@ -1180,7 +1185,10 @@ fn execute_batch(
                 .unwrap_or_else(PoisonError::into_inner)
                 .policy_rejected += n as u64;
             for r in batch {
-                let _ = r.resp.send(InferResponse::rejected(r.id));
+                r.resp.send(InferResponse::rejected_for(
+                    r.id,
+                    ShedReason::BadPolicy,
+                ));
             }
             return; // gate_guard releases the admitted depth
         }
@@ -1304,7 +1312,7 @@ fn execute_batch(
                 Err(_) => vec![],
             };
             let span = r.span.take();
-            let _ = r.resp.send(InferResponse::from_logits(
+            r.resp.send(InferResponse::from_logits(
                 r.id,
                 row,
                 latency,

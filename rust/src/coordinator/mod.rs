@@ -42,6 +42,8 @@ pub use fleet::{
     DeviceFleet, DeviceSpec, DeviceStats, DispatchPolicy, Fault,
     FleetConfig, FleetStats,
 };
-pub use request::{InferRequest, InferResponse};
+pub use request::{
+    CompletionSink, InferRequest, InferResponse, Responder, ShedReason,
+};
 pub use scheduler::{EnergyPolicy, PrecisionScheduler};
 pub use server::{Coordinator, CoordinatorConfig, ServerStats};

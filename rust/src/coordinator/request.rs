@@ -1,9 +1,115 @@
 //! Request/response types for the serving path.
 
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 
 use crate::data::Features;
 use crate::obs::RequestSpan;
+
+/// Why a response carries no inference result — the typed shed status
+/// that admission `Verdict`s map onto, carried on [`InferResponse`]
+/// and (as a one-byte code) in ingress response frames. `None` marks a
+/// served response; every other variant is a shed with its cause. Wire
+/// codes are pinned by tests: remote clients match on the number, not
+/// the Rust name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ShedReason {
+    /// Not shed: a device executed the request.
+    None = 0,
+    /// Queue depth crossed the hard backstop (shed regardless of
+    /// precision headroom).
+    QueueHardLimit = 1,
+    /// Queue past the soft limit with precision already at its floor —
+    /// nothing left to trade, so the gate sheds.
+    PrecisionFloor = 2,
+    /// No bundle is loaded for the requested model name.
+    UnknownModel = 3,
+    /// Dispatch found no live device with queue room.
+    NoCapacity = 4,
+    /// The scheduled precision policy failed to materialize.
+    BadPolicy = 5,
+    /// Fleet shutdown drained this request before it could execute.
+    Shutdown = 6,
+}
+
+impl ShedReason {
+    pub const ALL: [ShedReason; 7] = [
+        ShedReason::None,
+        ShedReason::QueueHardLimit,
+        ShedReason::PrecisionFloor,
+        ShedReason::UnknownModel,
+        ShedReason::NoCapacity,
+        ShedReason::BadPolicy,
+        ShedReason::Shutdown,
+    ];
+
+    /// Stable one-byte status code carried in response frames.
+    pub fn wire_code(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`ShedReason::wire_code`]; `None` for codes no
+    /// variant claims, so an unknown status byte is a typed protocol
+    /// error at the decoder, never a panic.
+    pub fn from_wire(code: u8) -> Option<ShedReason> {
+        ShedReason::ALL.into_iter().find(|r| r.wire_code() == code)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ShedReason::None => "none",
+            ShedReason::QueueHardLimit => "queue_hard_limit",
+            ShedReason::PrecisionFloor => "precision_floor",
+            ShedReason::UnknownModel => "unknown_model",
+            ShedReason::NoCapacity => "no_capacity",
+            ShedReason::BadPolicy => "bad_policy",
+            ShedReason::Shutdown => "shutdown",
+        }
+    }
+
+    /// True for every variant except `None`.
+    pub fn is_shed(self) -> bool {
+        self != ShedReason::None
+    }
+}
+
+/// Asynchronous completion delivery for requests that did not come
+/// from an in-process [`Coordinator::submit`] call. The socket ingress
+/// implements this to push finished responses back onto its event
+/// loop; device workers invoke it directly, so no thread ever parks on
+/// a per-request receiver.
+///
+/// [`Coordinator::submit`]: crate::coordinator::Coordinator::submit
+pub trait CompletionSink: Send + Sync {
+    /// Deliver the response for the request identified by `token`.
+    /// Called from router and device-worker threads: implementations
+    /// must be cheap and non-blocking.
+    fn complete(&self, token: u64, resp: InferResponse);
+}
+
+/// Per-request response route: exactly one `send` happens for every
+/// request, whether it is served, shed at admission, or drained at
+/// shutdown — that is the conservation invariant clients rely on.
+pub enum Responder {
+    /// In-process mpsc reply (the `Coordinator::submit` path). A
+    /// dropped receiver is fine — the send result is ignored.
+    Channel(Sender<InferResponse>),
+    /// Hand-off to a [`CompletionSink`] (socket ingress). `token`
+    /// routes the response back to its connection and frame.
+    Sink { sink: Arc<dyn CompletionSink>, token: u64 },
+}
+
+impl Responder {
+    pub fn send(&self, resp: InferResponse) {
+        match self {
+            Responder::Channel(tx) => {
+                let _ = tx.send(resp);
+            }
+            Responder::Sink { sink, token } => sink.complete(*token, resp),
+        }
+    }
+}
 
 /// One inference request (a single sample; the batcher aggregates).
 pub struct InferRequest {
@@ -14,8 +120,8 @@ pub struct InferRequest {
     /// the coordinator's clock — wall or virtual), so batch deadlines
     /// and latency math run on simulated time in scenarios.
     pub enqueued: u64,
-    /// Response channel back to the client.
-    pub resp: Sender<InferResponse>,
+    /// Response route back to the client (channel or completion sink).
+    pub resp: Responder,
     /// Lifecycle span, allocated at submit for sampled requests only
     /// (`None` otherwise — the unsampled fast path carries no tracing
     /// state). Boxed so the common case stays one pointer wide.
@@ -41,6 +147,9 @@ pub struct InferResponse {
     /// True when admission control rejected the request (no inference
     /// ran); overload sheds only after precision has hit its floor.
     pub shed: bool,
+    /// Typed shed cause (`ShedReason::None` iff `shed` is false); this
+    /// is the status byte ingress puts on the wire.
+    pub reason: ShedReason,
 }
 
 impl InferResponse {
@@ -67,12 +176,19 @@ impl InferResponse {
             energy,
             device,
             shed: false,
+            reason: ShedReason::None,
         }
     }
 
     /// Immediate rejection (admission gate, full fleet, or a policy
-    /// that failed to materialize).
+    /// that failed to materialize). Prefer [`InferResponse::rejected_for`]
+    /// where the cause is known; this defaults to `NoCapacity`.
     pub fn rejected(id: u64) -> Self {
+        InferResponse::rejected_for(id, ShedReason::NoCapacity)
+    }
+
+    /// Immediate rejection with its typed cause.
+    pub fn rejected_for(id: u64, reason: ShedReason) -> Self {
         InferResponse {
             id,
             logits: vec![],
@@ -82,6 +198,7 @@ impl InferResponse {
             energy: 0.0,
             device: u32::MAX,
             shed: true,
+            reason,
         }
     }
 }
@@ -89,6 +206,7 @@ impl InferResponse {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
 
     #[test]
     fn argmax_pred() {
@@ -97,6 +215,7 @@ mod tests {
         assert_eq!(r.pred, 1);
         assert_eq!(r.device, 2);
         assert!(!r.shed);
+        assert_eq!(r.reason, ShedReason::None);
         let r = InferResponse::from_logits(2, vec![], 10, 4, 1.0, 0);
         assert_eq!(r.pred, -1);
     }
@@ -109,5 +228,64 @@ mod tests {
         assert_eq!(r.pred, -1);
         assert_eq!(r.device, u32::MAX);
         assert!(r.logits.is_empty());
+        assert_eq!(r.reason, ShedReason::NoCapacity);
+    }
+
+    #[test]
+    fn shed_reason_wire_codes_are_pinned() {
+        // The wire contract: these numbers are what remote clients
+        // match on, so each variant's code is pinned individually.
+        assert_eq!(ShedReason::None.wire_code(), 0);
+        assert_eq!(ShedReason::QueueHardLimit.wire_code(), 1);
+        assert_eq!(ShedReason::PrecisionFloor.wire_code(), 2);
+        assert_eq!(ShedReason::UnknownModel.wire_code(), 3);
+        assert_eq!(ShedReason::NoCapacity.wire_code(), 4);
+        assert_eq!(ShedReason::BadPolicy.wire_code(), 5);
+        assert_eq!(ShedReason::Shutdown.wire_code(), 6);
+        for r in ShedReason::ALL {
+            assert_eq!(ShedReason::from_wire(r.wire_code()), Some(r));
+            assert_eq!(r.is_shed(), r != ShedReason::None);
+            assert!(!r.label().is_empty());
+        }
+        assert_eq!(ShedReason::from_wire(7), None);
+        assert_eq!(ShedReason::from_wire(255), None);
+    }
+
+    #[test]
+    fn rejected_for_carries_each_reason() {
+        for r in ShedReason::ALL {
+            if r == ShedReason::None {
+                continue;
+            }
+            let resp = InferResponse::rejected_for(9, r);
+            assert!(resp.shed);
+            assert_eq!(resp.reason, r);
+            assert_eq!(resp.device, u32::MAX);
+            assert!(resp.logits.is_empty());
+        }
+    }
+
+    #[test]
+    fn responder_sink_routes_by_token() {
+        struct Cap(Mutex<Vec<(u64, u64)>>);
+        impl CompletionSink for Cap {
+            fn complete(&self, token: u64, resp: InferResponse) {
+                self.0.lock().unwrap().push((token, resp.id));
+            }
+        }
+        let cap = Arc::new(Cap(Mutex::new(Vec::new())));
+        let sink: Arc<dyn CompletionSink> = cap.clone();
+        let r = Responder::Sink { sink, token: 42 };
+        r.send(InferResponse::rejected(1));
+        r.send(InferResponse::rejected(2));
+        assert_eq!(*cap.0.lock().unwrap(), vec![(42, 1), (42, 2)]);
+    }
+
+    #[test]
+    fn responder_channel_ignores_dropped_receiver() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        drop(rx);
+        // Must not panic: in-process callers may give up on a reply.
+        Responder::Channel(tx).send(InferResponse::rejected(1));
     }
 }

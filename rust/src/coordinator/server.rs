@@ -39,7 +39,9 @@ use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher};
 use crate::coordinator::fleet::{
     DeviceFleet, DeviceSpec, Fault, FleetConfig, FleetStats,
 };
-use crate::coordinator::request::{InferRequest, InferResponse};
+use crate::coordinator::request::{
+    CompletionSink, InferRequest, InferResponse, Responder, ShedReason,
+};
 use crate::coordinator::scheduler::{ModelPrecision, PrecisionScheduler};
 use crate::data::Features;
 use crate::obs::{
@@ -320,10 +322,46 @@ impl Coordinator {
         x: Features,
     ) -> Receiver<InferResponse> {
         let (rtx, rrx) = channel();
+        // In-process submission has no network leg: the ingress phase
+        // is zero-width (t_ingress == t_submit).
+        let t_ingress = self.clock.now_ns();
+        self.submit_with(model, x, Responder::Channel(rtx), t_ingress);
+        rrx
+    }
+
+    /// Submit one sample through an asynchronous completion sink (the
+    /// socket-ingress path). The sink receives *exactly one*
+    /// completion for this call — immediately with a typed shed
+    /// status, or later from a device worker — so no thread ever
+    /// blocks on a per-request receiver. `token` is echoed to the sink
+    /// to route the response back to its connection and frame;
+    /// `t_ingress` (clock nanoseconds when the frame finished decoding
+    /// on the event loop) stamps the ingress phase on sampled spans.
+    /// Returns the admission decision so the caller can count sheds
+    /// without waiting for the completion.
+    pub fn submit_sink(
+        &self,
+        model: &str,
+        x: Features,
+        sink: Arc<dyn CompletionSink>,
+        token: u64,
+        t_ingress: u64,
+    ) -> ShedReason {
+        self.submit_with(model, x, Responder::Sink { sink, token }, t_ingress)
+    }
+
+    fn submit_with(
+        &self,
+        model: &str,
+        x: Features,
+        resp: Responder,
+        t_ingress: u64,
+    ) -> ShedReason {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let t_submit = self.clock.now_ns();
         if let Some(mc) = self.shared.get(model) {
-            let v = mc.gate.on_submit(self.control_enabled);
+            let (v, reason) =
+                mc.gate.on_submit_classified(self.control_enabled);
             if self.control_enabled {
                 // Trace the *edges* of an overload episode (first shed,
                 // first admit after), not every request.
@@ -345,8 +383,8 @@ impl Coordinator {
                 }
             }
             if v == Verdict::Shed {
-                let _ = rtx.send(InferResponse::rejected(id));
-                return rrx;
+                resp.send(InferResponse::rejected_for(id, reason));
+                return reason;
             }
         }
         let enqueued = self.clock.now_ns();
@@ -356,6 +394,7 @@ impl Coordinator {
             Some(Box::new(RequestSpan {
                 id,
                 model: self.shared.obs.model_id(model).unwrap_or(u32::MAX),
+                t_ingress,
                 t_submit,
                 t_enqueue: enqueued,
                 ..Default::default()
@@ -368,14 +407,14 @@ impl Coordinator {
             model: model.to_string(),
             x,
             enqueued,
-            resp: rtx,
+            resp,
             span,
         };
         let _ = self.tx.send(Msg::Req(req));
         // Wake the dispatcher (wall clock) / record the pending message
         // for the next advance (virtual clock).
         self.clock.notify();
-        rrx
+        ShedReason::None
     }
 
     /// The shared scheduler, for out-of-band policy management (e.g.
@@ -444,6 +483,24 @@ impl Coordinator {
         self.shared.models.values().map(|mc| mc.gate.depth()).sum()
     }
 
+    /// Fleet-wide read-interest for socket ingress: false while any
+    /// model's admission gate holds readers paused (the hysteresis —
+    /// pause at the soft limit, resume at half — lives in the gate,
+    /// see `AdmissionGate::reads_allowed`). Always true with the
+    /// control plane disabled: ungated serving never pauses reads.
+    /// Every gate is polled (no short-circuit) so each one's
+    /// hysteresis state stays fresh.
+    pub fn ingress_reads_allowed(&self) -> bool {
+        if !self.control_enabled {
+            return true;
+        }
+        let mut ok = true;
+        for mc in self.shared.models.values() {
+            ok &= mc.gate.reads_allowed();
+        }
+        ok
+    }
+
     /// Recent-window telemetry for one model (across all devices).
     pub fn telemetry(&self, model: &str) -> Option<WindowStats> {
         self.shared
@@ -489,6 +546,7 @@ impl Coordinator {
             fleet: self.fleet_stats(),
             inflight: self.inflight() as u64,
             t_us: self.clock.now_ns() / 1_000,
+            ingress: None,
         }
     }
 

@@ -1,0 +1,391 @@
+//! Closed-loop socket load generator.
+//!
+//! Drives real TCP connections against an [`IngressServer`] using the
+//! seeded [`crate::sim::traffic`] arrival distributions
+//! (steady/diurnal/heavy-tail), so the same generators that feed the
+//! deterministic simulator also exercise the socket path. One thread,
+//! its own small epoll instance, nonblocking sockets throughout.
+//!
+//! *Closed-loop*: each connection holds at most
+//! `max_outstanding_per_conn` requests in flight; the next request is
+//! written only when a completion frees the window (or its arrival
+//! time has not come yet). Under overload, throughput therefore tracks
+//! what the server actually completes — including typed shed frames —
+//! instead of piling unbounded requests into the kernel.
+//!
+//! The report carries client-observed latency percentiles, shed
+//! counts by typed reason, and a per-connection
+//! [`ConnAccounting`] ledger for the socket conservation invariant
+//! (`responses + typed_sheds == frames_sent`, see
+//! [`crate::sim::check_connection_conservation`]).
+//!
+//! [`IngressServer`]: crate::ingress::IngressServer
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use super::{sys, wire};
+use crate::coordinator::ShedReason;
+use crate::data::Features;
+use crate::sim::{ConnAccounting, SimEvent};
+
+/// Load-generator knobs.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Concurrent client connections.
+    pub conns: usize,
+    /// Closed-loop window per connection.
+    pub max_outstanding_per_conn: u32,
+    /// Divide traffic timestamps by this: `1.0` replays the schedule
+    /// in real time; a large value makes every arrival due at once, so
+    /// pacing degenerates to a pure closed loop.
+    pub time_scale: f64,
+    /// Feature-vector length of the synthetic requests.
+    pub feature_len: usize,
+    /// Wall-clock cap; the run reports `timed_out` when it trips.
+    pub timeout: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            conns: 4,
+            max_outstanding_per_conn: 1,
+            time_scale: 1.0,
+            feature_len: 4,
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What a load run observed, from the client side of the sockets.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    /// Request frames fully written.
+    pub sent: u64,
+    /// Served responses received.
+    pub served: u64,
+    /// Typed shed frames received.
+    pub shed: u64,
+    /// Shed counts by typed reason (indexed by wire code).
+    pub sheds_by_reason: [u64; 7],
+    /// Client-observed round-trip latencies, microseconds, served
+    /// responses only (raw, for percentile math downstream).
+    pub latencies_us: Vec<u64>,
+    /// Summed energy (aJ) reported on served responses.
+    pub energy_aj: f64,
+    /// Per-connection conservation ledgers.
+    pub per_conn: Vec<ConnAccounting>,
+    /// Wall time the run took.
+    pub elapsed: Duration,
+    /// The run hit `LoadgenConfig::timeout` before draining.
+    pub timed_out: bool,
+}
+
+impl LoadReport {
+    fn pct(&self, q: f64) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((v.len() as f64 - 1.0) * q).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    pub fn p50_us(&self) -> u64 {
+        self.pct(0.50)
+    }
+
+    pub fn p95_us(&self) -> u64 {
+        self.pct(0.95)
+    }
+
+    pub fn p99_us(&self) -> u64 {
+        self.pct(0.99)
+    }
+
+    /// Fraction of completed requests answered with a shed status.
+    pub fn shed_rate(&self) -> f64 {
+        let total = self.served + self.shed;
+        if total == 0 {
+            0.0
+        } else {
+            self.shed as f64 / total as f64
+        }
+    }
+
+    /// Mean reported energy per served request (aJ).
+    pub fn energy_per_request_aj(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.energy_aj / self.served as f64
+        }
+    }
+}
+
+struct CConn {
+    sock: TcpStream,
+    dec: wire::Decoder,
+    out: Vec<u8>,
+    out_at: usize,
+    outstanding: u32,
+    next_corr: u32,
+    /// corr -> send timestamp (ns since run start).
+    sent_at: HashMap<u32, u64>,
+    acct: ConnAccounting,
+    dead: bool,
+}
+
+/// Replay `events` (only `SimEvent::Submit` entries matter; `n`-counts
+/// expand to individual requests) against a live ingress listener and
+/// collect a [`LoadReport`]. Returns `Err` only on setup failures
+/// (connect/epoll); mid-run socket errors mark the connection dead and
+/// surface as a conservation violation in `per_conn`.
+pub fn run_load(
+    addr: SocketAddr,
+    events: &[SimEvent],
+    cfg: &LoadgenConfig,
+) -> std::io::Result<LoadReport> {
+    // Flatten the schedule: (due_ns, model) per individual request,
+    // scaled onto the wall clock.
+    let mut schedule: Vec<(u64, String)> = Vec::new();
+    for e in events {
+        if let SimEvent::Submit { t_ns, model, n } = e {
+            let due = (*t_ns as f64 / cfg.time_scale.max(1e-12)) as u64;
+            for _ in 0..*n {
+                schedule.push((due, model.clone()));
+            }
+        }
+    }
+    schedule.sort_by_key(|(t, _)| *t);
+
+    let epoll = sys::Epoll::new()?;
+    let mut conns: Vec<CConn> = Vec::with_capacity(cfg.conns.max(1));
+    for i in 0..cfg.conns.max(1) {
+        let sock = TcpStream::connect(addr)?;
+        sock.set_nonblocking(true)?;
+        let _ = sock.set_nodelay(true);
+        epoll.add(
+            std::os::unix::io::AsRawFd::as_raw_fd(&sock),
+            i as u64,
+            sys::EPOLLIN,
+        )?;
+        conns.push(CConn {
+            sock,
+            dec: wire::Decoder::new(),
+            out: Vec::new(),
+            out_at: 0,
+            outstanding: 0,
+            next_corr: 1,
+            sent_at: HashMap::new(),
+            acct: ConnAccounting { conn: i, ..Default::default() },
+            dead: false,
+        });
+    }
+
+    let t0 = Instant::now();
+    let mut report = LoadReport::default();
+    let x = Features::F32(vec![0.5; cfg.feature_len.max(1)]);
+    let mut next_ev = 0usize;
+    let mut rr = 0usize; // round-robin cursor over connections
+    let mut events_buf =
+        vec![sys::EpollEvent { events: 0, data: 0 }; 256];
+    let mut rbuf = vec![0u8; 64 * 1024];
+
+    loop {
+        let now_ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+
+        // Send phase: everything due, window permitting.
+        while next_ev < schedule.len() && schedule[next_ev].0 <= now_ns {
+            let mut placed = false;
+            for k in 0..conns.len() {
+                let i = (rr + k) % conns.len();
+                let c = &mut conns[i];
+                if c.dead || c.outstanding >= cfg.max_outstanding_per_conn
+                {
+                    continue;
+                }
+                let corr = c.next_corr;
+                c.next_corr = c.next_corr.wrapping_add(1);
+                wire::encode_request(
+                    &mut c.out,
+                    corr,
+                    &schedule[next_ev].1,
+                    &x,
+                );
+                c.outstanding += 1;
+                c.sent_at.insert(corr, now_ns);
+                c.acct.frames_sent += 1;
+                report.sent += 1;
+                rr = (i + 1) % conns.len();
+                placed = true;
+                break;
+            }
+            if !placed {
+                break; // closed loop: wait for completions
+            }
+            next_ev += 1;
+        }
+
+        // Flush pending writes on every connection that has any.
+        for c in conns.iter_mut() {
+            flush_client(c);
+        }
+
+        let inflight: u64 =
+            conns.iter().map(|c| c.outstanding as u64).sum();
+        if next_ev >= schedule.len() && inflight == 0 {
+            break; // drained
+        }
+        if conns.iter().all(|c| c.dead) {
+            break;
+        }
+        if t0.elapsed() > cfg.timeout {
+            report.timed_out = true;
+            break;
+        }
+
+        // Wait for readability (or the next due arrival).
+        let wait_ms = if next_ev < schedule.len() {
+            let due = schedule[next_ev].0;
+            (due.saturating_sub(now_ns) / 1_000_000).clamp(0, 50) as i32
+        } else {
+            10
+        };
+        let n = match epoll.wait(&mut events_buf, wait_ms.max(1)) {
+            Ok(n) => n,
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                0
+            }
+            Err(e) => return Err(e),
+        };
+        for ev in &events_buf[..n] {
+            let idx = ev.data as usize;
+            if idx >= conns.len() {
+                continue;
+            }
+            read_client(
+                &mut conns[idx],
+                &mut rbuf,
+                &mut report,
+                t0,
+            );
+        }
+    }
+
+    report.elapsed = t0.elapsed();
+    report.per_conn = conns.iter().map(|c| c.acct.clone()).collect();
+    Ok(report)
+}
+
+fn flush_client(c: &mut CConn) {
+    if c.dead {
+        return;
+    }
+    while c.out_at < c.out.len() {
+        match c.sock.write(&c.out[c.out_at..]) {
+            Ok(0) => {
+                c.dead = true;
+                return;
+            }
+            Ok(n) => c.out_at += n,
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                break;
+            }
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                continue;
+            }
+            Err(_) => {
+                c.dead = true;
+                return;
+            }
+        }
+    }
+    if c.out_at == c.out.len() {
+        c.out.clear();
+        c.out_at = 0;
+    }
+}
+
+fn read_client(
+    c: &mut CConn,
+    rbuf: &mut [u8],
+    report: &mut LoadReport,
+    t0: Instant,
+) {
+    if c.dead {
+        return;
+    }
+    loop {
+        let n = match c.sock.read(rbuf) {
+            Ok(0) => {
+                c.dead = true;
+                break;
+            }
+            Ok(n) => n,
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                break;
+            }
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                continue;
+            }
+            Err(_) => {
+                c.dead = true;
+                break;
+            }
+        };
+        c.dec.extend(&rbuf[..n]);
+        loop {
+            match c.dec.next() {
+                Ok(Some(wire::Frame::Response(r))) => {
+                    c.outstanding = c.outstanding.saturating_sub(1);
+                    let now_ns = t0
+                        .elapsed()
+                        .as_nanos()
+                        .min(u64::MAX as u128)
+                        as u64;
+                    let rtt_us = c
+                        .sent_at
+                        .remove(&r.corr)
+                        .map(|t| (now_ns - t) / 1_000)
+                        .unwrap_or(0);
+                    if r.status == ShedReason::None {
+                        c.acct.responses += 1;
+                        report.served += 1;
+                        report.energy_aj += r.energy;
+                        report.latencies_us.push(rtt_us);
+                    } else {
+                        c.acct.typed_sheds += 1;
+                        report.shed += 1;
+                        let code = r.status.wire_code() as usize;
+                        if code < report.sheds_by_reason.len() {
+                            report.sheds_by_reason[code] += 1;
+                        }
+                    }
+                }
+                Ok(Some(wire::Frame::Request(_))) | Err(_) => {
+                    // A server must never send requests or garbage;
+                    // count the stream as dead and let conservation
+                    // flag the loss.
+                    c.dead = true;
+                    return;
+                }
+                Ok(None) => break,
+            }
+        }
+    }
+}

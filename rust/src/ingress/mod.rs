@@ -1,0 +1,674 @@
+//! Async socket ingress: thousands of connections, one thread.
+//!
+//! A readiness-driven event loop (epoll via [`sys`], per the vendored-
+//! deps offline-build policy — no `tokio`, no `mio`) multiplexes every
+//! client connection onto the existing [`Coordinator`] without
+//! one-thread-per-connection:
+//!
+//! ```text
+//!                    ┌───────────────── ingress thread ─────────────────┐
+//!  clients ══ TCP ══▶│ epoll ─▶ per-conn state machine ─▶ wire::Decoder │
+//!                    │   ▲                                      │       │
+//!                    │   │ eventfd wake              submit_sink│       │
+//!                    └───┼─────────────────────────────────────┼───────┘
+//!                        │                                      ▼
+//!                   CompletionSink ◀── device workers ◀── Coordinator
+//! ```
+//!
+//! Requests arrive as length-prefixed [`wire`] frames; completions come
+//! back through a [`CompletionSink`] that queues them and signals an
+//! eventfd, so device workers never block on a socket and the loop
+//! never blocks on a device.
+//!
+//! # Backpressure: degrade first, shed second, never OOM
+//!
+//! The loop polls [`Coordinator::ingress_reads_allowed`] every
+//! iteration. When any model's queue depth crosses its soft admission
+//! limit, *read interest is deregistered* (`EPOLLIN` dropped) on every
+//! connection: bytes stay in kernel socket buffers and TCP flow control
+//! pushes back to clients, so overload cannot pile unbounded decoded
+//! requests into process memory. Meanwhile the autotuner is already
+//! lowering precision scale; only past the hard limit do typed shed
+//! frames go out. Reads resume — hysteresis lives in
+//! `AdmissionGate::reads_allowed` — once the queue drains to half the
+//! soft limit. A connection whose own write buffer backs up is paused
+//! individually the same way.
+
+pub mod loadgen;
+pub mod sys;
+pub mod wire;
+
+pub use loadgen::{run_load, LoadReport, LoadgenConfig};
+pub use wire::{
+    Decoder, Frame, ProtoError, WireRequest, WireResponse, MAX_FRAME,
+};
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+use crate::coordinator::request::{CompletionSink, InferResponse};
+use crate::coordinator::Coordinator;
+use crate::obs::metrics::{IngressCounters, MetricsSnapshot};
+use crate::sim::{Clock, ClockRef};
+
+/// Ingress front-end knobs.
+#[derive(Clone, Debug)]
+pub struct IngressConfig {
+    /// Listen address; port 0 picks an ephemeral port (read it back
+    /// with [`IngressServer::local_addr`]).
+    pub addr: String,
+    /// Connection cap; accepts beyond it are dropped immediately.
+    pub max_conns: usize,
+    /// Per-connection pending-write cap: a connection that buffers more
+    /// encoded response bytes than this has its reads paused until the
+    /// client drains half of it.
+    pub write_buf_limit: usize,
+    /// Upper bound between admission-gate polls when no I/O is ready.
+    pub poll_interval: Duration,
+}
+
+impl Default for IngressConfig {
+    fn default() -> Self {
+        IngressConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_conns: 16_384,
+            write_buf_limit: 256 * 1024,
+            poll_interval: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Lock-free ingress counters (the event loop writes, anyone reads).
+#[derive(Default)]
+struct Counters {
+    accepted: AtomicU64,
+    active: AtomicU64,
+    paused: AtomicU64,
+    frames_in: AtomicU64,
+    responses_out: AtomicU64,
+    sheds_out: AtomicU64,
+    protocol_errors: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> IngressCounters {
+        IngressCounters {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            active: self.active.load(Ordering::Relaxed),
+            paused: self.paused.load(Ordering::Relaxed),
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            responses_out: self.responses_out.load(Ordering::Relaxed),
+            sheds_out: self.sheds_out.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The completion side of the sink path: device workers push
+/// `(token, response)` and ring the eventfd; the event loop drains the
+/// queue on wake and routes each response back to its connection.
+struct SinkInner {
+    done: Mutex<Vec<(u64, InferResponse)>>,
+    wake: Arc<sys::EventFd>,
+}
+
+impl CompletionSink for SinkInner {
+    fn complete(&self, token: u64, resp: InferResponse) {
+        self.done
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push((token, resp));
+        self.wake.signal();
+    }
+}
+
+const TOK_LISTENER: u64 = u64::MAX;
+const TOK_WAKE: u64 = u64::MAX - 1;
+
+/// Submit tokens carry the connection slot in the high half and the
+/// client correlation id in the low half, so a completion routes back
+/// to its frame without any lookup table.
+fn submit_token(slot: usize, corr: u32) -> u64 {
+    ((slot as u64) << 32) | corr as u64
+}
+
+struct Conn {
+    sock: TcpStream,
+    fd: std::os::unix::io::RawFd,
+    dec: wire::Decoder,
+    out: Vec<u8>,
+    out_at: usize,
+    /// Requests submitted from this connection, not yet completed.
+    inflight: u32,
+    /// Interest mask currently registered with epoll.
+    interest: u32,
+    /// Peer closed (EOF/RDHUP) or errored: stop reading, finish
+    /// writing what is owed, then close.
+    draining: bool,
+    /// Paused by this connection's own write-buffer cap (as opposed to
+    /// the fleet-wide admission pause).
+    local_paused: bool,
+    /// Whether this connection is currently counted in the `paused`
+    /// gauge (kept exact across both pause causes).
+    counted_paused: bool,
+    acct_frames: u64,
+}
+
+/// A closed connection with completions still in flight. The slot
+/// stays occupied (so a new connection cannot claim the token and
+/// receive a stale response) until the last completion drains.
+enum Slot {
+    Open(Box<Conn>),
+    Zombie { inflight: u32 },
+}
+
+/// Handle to the running ingress thread. Dropping it (or calling
+/// [`IngressServer::shutdown`]) stops the loop and closes every
+/// connection; the coordinator itself keeps running.
+pub struct IngressServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    wake: Arc<sys::EventFd>,
+    counters: Arc<Counters>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl IngressServer {
+    /// Bind, register with epoll, and spawn the event loop.
+    pub fn start(
+        coord: Arc<Coordinator>,
+        cfg: IngressConfig,
+    ) -> std::io::Result<IngressServer> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let wake = Arc::new(sys::EventFd::new()?);
+        let stop = Arc::new(AtomicBool::new(false));
+        let counters = Arc::new(Counters::default());
+        let sink = Arc::new(SinkInner {
+            done: Mutex::new(Vec::new()),
+            wake: wake.clone(),
+        });
+        let epoll = sys::Epoll::new()?;
+        epoll.add(
+            std::os::unix::io::AsRawFd::as_raw_fd(&listener),
+            TOK_LISTENER,
+            sys::EPOLLIN,
+        )?;
+        epoll.add(wake.raw(), TOK_WAKE, sys::EPOLLIN)?;
+        let handle = {
+            let stop = stop.clone();
+            let wake = wake.clone();
+            let counters = counters.clone();
+            std::thread::Builder::new()
+                .name("ingress".to_string())
+                .spawn(move || {
+                    event_loop(
+                        &coord, &listener, &epoll, &cfg, &stop, &wake,
+                        &counters, &sink,
+                    );
+                })?
+        };
+        Ok(IngressServer {
+            addr,
+            stop,
+            wake,
+            counters,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Point-in-time ingress counters.
+    pub fn counters(&self) -> IngressCounters {
+        self.counters.snapshot()
+    }
+
+    /// The coordinator's metrics snapshot with this listener's ingress
+    /// counters stamped in (the bare coordinator snapshot carries
+    /// `ingress: None`).
+    pub fn metrics_snapshot(&self, coord: &Coordinator) -> MetricsSnapshot {
+        let mut m = coord.metrics_snapshot();
+        m.ingress = Some(self.counters.snapshot());
+        m
+    }
+
+    /// Stop the event loop and join the thread.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.wake.signal();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for IngressServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn wouldblock(e: &std::io::Error) -> bool {
+    e.kind() == std::io::ErrorKind::WouldBlock
+}
+
+fn interrupted(e: &std::io::Error) -> bool {
+    e.kind() == std::io::ErrorKind::Interrupted
+}
+
+/// What a per-connection handler decided.
+enum After {
+    Keep,
+    Close,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn event_loop(
+    coord: &Coordinator,
+    listener: &TcpListener,
+    epoll: &sys::Epoll,
+    cfg: &IngressConfig,
+    stop: &AtomicBool,
+    wake: &sys::EventFd,
+    counters: &Counters,
+    sink: &Arc<SinkInner>,
+) {
+    let clock = coord.clock();
+    let mut slab: Vec<Option<Slot>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut events =
+        vec![sys::EpollEvent { events: 0, data: 0 }; 1024];
+    let mut rbuf = vec![0u8; 64 * 1024];
+    let mut global_paused = false;
+    let timeout_ms = cfg.poll_interval.as_millis().max(1) as i32;
+
+    loop {
+        let n = match epoll.wait(&mut events, timeout_ms) {
+            Ok(n) => n,
+            Err(ref e) if interrupted(e) => 0,
+            Err(_) => break,
+        };
+
+        for ev in &events[..n] {
+            // Packed struct: read fields by copy only.
+            let token = ev.data;
+            let flags = ev.events;
+            match token {
+                TOK_WAKE => wake.drain(),
+                TOK_LISTENER => {
+                    accept_ready(
+                        listener,
+                        epoll,
+                        cfg,
+                        counters,
+                        &mut slab,
+                        &mut free,
+                        global_paused,
+                    );
+                }
+                _ => {
+                    let slot = token as usize;
+                    let after = match slab.get_mut(slot) {
+                        Some(Some(Slot::Open(conn))) => conn_ready(
+                            coord, &clock, cfg, counters, sink, conn,
+                            slot, flags, &mut rbuf,
+                        ),
+                        // Stale event for a slot closed earlier in
+                        // this same batch.
+                        _ => After::Keep,
+                    };
+                    if let After::Close = after {
+                        close_slot(epoll, counters, &mut slab, &mut free, slot);
+                    }
+                }
+            }
+        }
+
+        // Route queued completions back to their connections.
+        let done = std::mem::take(
+            &mut *sink.done.lock().unwrap_or_else(PoisonError::into_inner),
+        );
+        for (token, resp) in done {
+            let slot = (token >> 32) as usize;
+            let corr = token as u32;
+            let mut freed = false;
+            let mut closed = false;
+            match slab.get_mut(slot) {
+                Some(Some(Slot::Open(conn))) => {
+                    if resp.shed {
+                        counters.sheds_out.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        counters
+                            .responses_out
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                    wire::encode_response(
+                        &mut conn.out,
+                        &wire::WireResponse::from_infer(corr, &resp),
+                    );
+                    conn.inflight = conn.inflight.saturating_sub(1);
+                    let flushed =
+                        flush(counters, conn, cfg.write_buf_limit);
+                    if let After::Close = flushed {
+                        closed = true;
+                    } else if conn.out.len() - conn.out_at
+                        > cfg.write_buf_limit
+                    {
+                        // Responses are piling up faster than the
+                        // client reads them: stop reading more
+                        // requests from it (lifted by `flush`).
+                        conn.local_paused = true;
+                    }
+                }
+                Some(Some(Slot::Zombie { inflight })) => {
+                    *inflight = inflight.saturating_sub(1);
+                    freed = *inflight == 0;
+                }
+                _ => {}
+            }
+            if closed {
+                close_slot(epoll, counters, &mut slab, &mut free, slot);
+            }
+            if freed {
+                slab[slot] = None;
+                free.push(slot);
+            }
+        }
+
+        // Admission coupling: one poll per iteration; a flip
+        // re-registers (or drops) read interest on every connection in
+        // the sweep below.
+        global_paused = !coord.ingress_reads_allowed();
+
+        // Sweep: reconcile epoll interest and the paused gauge with
+        // each connection's state, and finish drained connections.
+        let mut to_close: Vec<usize> = Vec::new();
+        for (slot, entry) in slab.iter_mut().enumerate() {
+            if let Some(Slot::Open(conn)) = entry {
+                if conn.draining
+                    && conn.out_at == conn.out.len()
+                    && conn.inflight == 0
+                {
+                    to_close.push(slot);
+                    continue;
+                }
+                sync_paused(counters, conn, global_paused);
+                let want = desired_interest(conn, global_paused);
+                if want != conn.interest
+                    && epoll.modify(conn.fd, slot as u64, want).is_ok()
+                {
+                    conn.interest = want;
+                }
+            }
+        }
+        for slot in to_close {
+            close_slot(epoll, counters, &mut slab, &mut free, slot);
+        }
+
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+}
+
+fn desired_interest(conn: &Conn, global_paused: bool) -> u32 {
+    let mut want = sys::EPOLLRDHUP;
+    if !conn.draining && !global_paused && !conn.local_paused {
+        want |= sys::EPOLLIN;
+    }
+    if conn.out_at < conn.out.len() {
+        want |= sys::EPOLLOUT;
+    }
+    want
+}
+
+/// Keep the `paused` gauge exactly equal to the number of open
+/// connections whose reads are currently deregistered.
+fn sync_paused(counters: &Counters, conn: &mut Conn, global_paused: bool) {
+    let now = !conn.draining && (global_paused || conn.local_paused);
+    if now != conn.counted_paused {
+        if now {
+            counters.paused.fetch_add(1, Ordering::Relaxed);
+        } else {
+            counters.paused.fetch_sub(1, Ordering::Relaxed);
+        }
+        conn.counted_paused = now;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_ready(
+    listener: &TcpListener,
+    epoll: &sys::Epoll,
+    cfg: &IngressConfig,
+    counters: &Counters,
+    slab: &mut Vec<Option<Slot>>,
+    free: &mut Vec<usize>,
+    global_paused: bool,
+) {
+    loop {
+        let (sock, _peer) = match listener.accept() {
+            Ok(p) => p,
+            Err(ref e) if wouldblock(e) => break,
+            Err(ref e) if interrupted(e) => continue,
+            Err(_) => break,
+        };
+        let open =
+            counters.active.load(Ordering::Relaxed) as usize;
+        if open >= cfg.max_conns {
+            // At capacity: refuse by immediate close (the kernel RST
+            // tells the client more honestly than a buffered frame
+            // we might never get to write).
+            drop(sock);
+            continue;
+        }
+        if sock.set_nonblocking(true).is_err() {
+            continue;
+        }
+        let _ = sock.set_nodelay(true);
+        let fd = std::os::unix::io::AsRawFd::as_raw_fd(&sock);
+        let slot = match free.pop() {
+            Some(s) => s,
+            None => {
+                slab.push(None);
+                slab.len() - 1
+            }
+        };
+        let mut conn = Box::new(Conn {
+            sock,
+            fd,
+            dec: wire::Decoder::new(),
+            out: Vec::new(),
+            out_at: 0,
+            inflight: 0,
+            interest: 0,
+            draining: false,
+            local_paused: false,
+            counted_paused: false,
+            acct_frames: 0,
+        });
+        let want = desired_interest(&conn, global_paused);
+        if epoll.add(fd, slot as u64, want).is_err() {
+            free.push(slot);
+            continue;
+        }
+        conn.interest = want;
+        counters.accepted.fetch_add(1, Ordering::Relaxed);
+        counters.active.fetch_add(1, Ordering::Relaxed);
+        sync_paused(counters, &mut conn, global_paused);
+        slab[slot] = Some(Slot::Open(conn));
+    }
+}
+
+/// Readiness on one connection: flush pending writes, then read and
+/// decode as long as the socket yields bytes.
+#[allow(clippy::too_many_arguments)]
+fn conn_ready(
+    coord: &Coordinator,
+    clock: &ClockRef,
+    cfg: &IngressConfig,
+    counters: &Counters,
+    sink: &Arc<SinkInner>,
+    conn: &mut Conn,
+    slot: usize,
+    flags: u32,
+    rbuf: &mut [u8],
+) -> After {
+    if flags & sys::EPOLLERR != 0 {
+        return After::Close;
+    }
+    if flags & sys::EPOLLOUT != 0 {
+        if let After::Close = flush(counters, conn, cfg.write_buf_limit)
+        {
+            return After::Close;
+        }
+    }
+    if flags & (sys::EPOLLHUP | sys::EPOLLRDHUP) != 0 {
+        // Read once more below (there may be final buffered bytes),
+        // then stop reading for good.
+        conn.draining = true;
+    }
+    if flags & (sys::EPOLLIN | sys::EPOLLHUP | sys::EPOLLRDHUP) != 0 {
+        loop {
+            let n = match conn.sock.read(rbuf) {
+                Ok(0) => {
+                    conn.draining = true;
+                    break;
+                }
+                Ok(n) => n,
+                Err(ref e) if wouldblock(e) => break,
+                Err(ref e) if interrupted(e) => continue,
+                Err(_) => return After::Close,
+            };
+            counters.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+            conn.dec.extend(&rbuf[..n]);
+            loop {
+                match conn.dec.next() {
+                    Ok(Some(wire::Frame::Request(req))) => {
+                        counters
+                            .frames_in
+                            .fetch_add(1, Ordering::Relaxed);
+                        conn.acct_frames += 1;
+                        conn.inflight += 1;
+                        let t_ingress = clock.now_ns();
+                        // Sheds complete through the sink too, so
+                        // every submit is exactly one completion —
+                        // the return value is informational here.
+                        let sink_dyn: Arc<dyn CompletionSink> =
+                            sink.clone();
+                        let _ = coord.submit_sink(
+                            &req.model,
+                            req.x,
+                            sink_dyn,
+                            submit_token(slot, req.corr),
+                            t_ingress,
+                        );
+                    }
+                    Ok(Some(wire::Frame::Response(_))) => {
+                        // Clients do not send responses.
+                        counters
+                            .protocol_errors
+                            .fetch_add(1, Ordering::Relaxed);
+                        return After::Close;
+                    }
+                    Ok(None) => break,
+                    Err(_proto) => {
+                        counters
+                            .protocol_errors
+                            .fetch_add(1, Ordering::Relaxed);
+                        return After::Close;
+                    }
+                }
+            }
+            // Per-connection write backpressure: a client that sends
+            // faster than it reads responses gets its reads paused
+            // (resumed by `flush` at half the cap).
+            if conn.out.len() - conn.out_at > cfg.write_buf_limit {
+                conn.local_paused = true;
+                break;
+            }
+        }
+    }
+    After::Keep
+}
+
+/// Write as much pending output as the socket accepts; lifts a
+/// write-cap pause once the backlog falls to half `write_buf_limit`.
+fn flush(
+    counters: &Counters,
+    conn: &mut Conn,
+    write_buf_limit: usize,
+) -> After {
+    while conn.out_at < conn.out.len() {
+        match conn.sock.write(&conn.out[conn.out_at..]) {
+            Ok(0) => return After::Close,
+            Ok(n) => {
+                conn.out_at += n;
+                counters
+                    .bytes_out
+                    .fetch_add(n as u64, Ordering::Relaxed);
+            }
+            Err(ref e) if wouldblock(e) => break,
+            Err(ref e) if interrupted(e) => continue,
+            Err(_) => return After::Close,
+        }
+    }
+    if conn.out_at == conn.out.len() {
+        conn.out.clear();
+        conn.out_at = 0;
+    } else if conn.out_at >= 64 * 1024 {
+        conn.out.drain(..conn.out_at);
+        conn.out_at = 0;
+    }
+    if conn.local_paused
+        && conn.out.len() - conn.out_at <= write_buf_limit / 2
+    {
+        conn.local_paused = false;
+    }
+    After::Keep
+}
+
+/// Tear down one connection. If completions are still in flight the
+/// slot becomes a zombie so its token stays reserved; otherwise it
+/// returns to the free list immediately.
+fn close_slot(
+    epoll: &sys::Epoll,
+    counters: &Counters,
+    slab: &mut [Option<Slot>],
+    free: &mut Vec<usize>,
+    slot: usize,
+) {
+    let entry = match slab.get_mut(slot) {
+        Some(e) => e,
+        None => return,
+    };
+    match entry.take() {
+        Some(Slot::Open(conn)) => {
+            let _ = epoll.delete(conn.fd);
+            counters.active.fetch_sub(1, Ordering::Relaxed);
+            if conn.counted_paused {
+                counters.paused.fetch_sub(1, Ordering::Relaxed);
+            }
+            if conn.inflight > 0 {
+                *entry = Some(Slot::Zombie { inflight: conn.inflight });
+            } else {
+                free.push(slot);
+            }
+            // `conn.sock` drops here, closing the fd.
+        }
+        // Already a zombie (or empty): put it back untouched.
+        other => *entry = other,
+    }
+}

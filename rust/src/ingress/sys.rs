@@ -1,0 +1,266 @@
+//! Minimal raw Linux bindings for the ingress event loop.
+//!
+//! The workspace vendors no `libc` crate (offline-build policy), so the
+//! handful of syscalls the readiness loop needs — epoll, eventfd and
+//! the fd rlimit — are declared here directly against the C ABI that
+//! `std` already links. Everything is wrapped in safe RAII types; raw
+//! `unsafe` never leaks past this module.
+
+use std::io;
+use std::os::raw::{c_int, c_void};
+use std::os::unix::io::RawFd;
+
+// Readiness flags (bits of `epoll_event.events`).
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+/// Peer closed its write half (half-close seen without a read).
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_DEL: c_int = 2;
+const EPOLL_CTL_MOD: c_int = 3;
+
+const EPOLL_CLOEXEC: c_int = 0o2000000;
+const EFD_CLOEXEC: c_int = 0o2000000;
+const EFD_NONBLOCK: c_int = 0o4000;
+
+const RLIMIT_NOFILE: c_int = 7;
+
+/// `struct epoll_event`. Packed on x86_64 (the kernel ABI packs it
+/// there), naturally aligned elsewhere. Fields are read by copy only —
+/// taking a reference into a packed struct is undefined layout.
+#[derive(Clone, Copy)]
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+pub struct EpollEvent {
+    pub events: u32,
+    pub data: u64,
+}
+
+/// `struct rlimit` (64-bit Linux: two unsigned longs).
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+struct CRlimit {
+    cur: u64,
+    max: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(
+        epfd: c_int,
+        op: c_int,
+        fd: c_int,
+        event: *mut EpollEvent,
+    ) -> c_int;
+    fn epoll_wait(
+        epfd: c_int,
+        events: *mut EpollEvent,
+        maxevents: c_int,
+        timeout: c_int,
+    ) -> c_int;
+    fn eventfd(initval: u32, flags: c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    fn close(fd: c_int) -> c_int;
+    fn getrlimit(resource: c_int, rlim: *mut CRlimit) -> c_int;
+    fn setrlimit(resource: c_int, rlim: *const CRlimit) -> c_int;
+}
+
+fn cvt(ret: c_int) -> io::Result<c_int> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+/// RAII epoll instance.
+pub struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    pub fn new() -> io::Result<Epoll> {
+        let fd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(
+        &self,
+        op: c_int,
+        fd: RawFd,
+        events: u32,
+        token: u64,
+    ) -> io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        cvt(unsafe { epoll_ctl(self.fd, op, fd, &mut ev) })?;
+        Ok(())
+    }
+
+    /// Register `fd` with an interest mask; `token` comes back on
+    /// every readiness event for it.
+    pub fn add(&self, fd: RawFd, token: u64, events: u32) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    /// Change an existing registration's interest mask. This is the
+    /// backpressure primitive: dropping `EPOLLIN` deregisters read
+    /// interest without touching the connection.
+    pub fn modify(
+        &self,
+        fd: RawFd,
+        token: u64,
+        events: u32,
+    ) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    /// Deregister `fd` entirely.
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Block up to `timeout_ms` (-1 = forever) for readiness; fills
+    /// `events` and returns how many entries are valid.
+    pub fn wait(
+        &self,
+        events: &mut [EpollEvent],
+        timeout_ms: i32,
+    ) -> io::Result<usize> {
+        let n = cvt(unsafe {
+            epoll_wait(
+                self.fd,
+                events.as_mut_ptr(),
+                events.len() as c_int,
+                timeout_ms,
+            )
+        })?;
+        Ok(n as usize)
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.fd);
+        }
+    }
+}
+
+/// Cross-thread wakeup: completion sinks signal it from worker
+/// threads; the event loop keeps it registered for `EPOLLIN` and
+/// drains it on wake.
+pub struct EventFd {
+    fd: RawFd,
+}
+
+impl EventFd {
+    pub fn new() -> io::Result<EventFd> {
+        let fd = cvt(unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) })?;
+        Ok(EventFd { fd })
+    }
+
+    pub fn raw(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Add one to the counter, waking the poller. Infallible by
+    /// design: a saturated counter (EAGAIN) is still readable, which
+    /// is all a wakeup needs.
+    pub fn signal(&self) {
+        let one: u64 = 1;
+        unsafe {
+            write(self.fd, (&one as *const u64).cast::<c_void>(), 8);
+        }
+    }
+
+    /// Reset the counter after a wake (nonblocking; a no-op when the
+    /// counter is already zero).
+    pub fn drain(&self) {
+        let mut v: u64 = 0;
+        unsafe {
+            read(self.fd, (&mut v as *mut u64).cast::<c_void>(), 8);
+        }
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.fd);
+        }
+    }
+}
+
+/// Soft and hard `RLIMIT_NOFILE` (open-fd budget).
+#[derive(Clone, Copy, Debug)]
+pub struct FdLimit {
+    pub soft: u64,
+    pub hard: u64,
+}
+
+/// Current fd limits for this process.
+pub fn fd_limit() -> io::Result<FdLimit> {
+    let mut r = CRlimit { cur: 0, max: 0 };
+    cvt(unsafe { getrlimit(RLIMIT_NOFILE, &mut r) })?;
+    Ok(FdLimit { soft: r.cur, hard: r.max })
+}
+
+/// Raise the soft fd limit to the hard limit and return the result —
+/// what a 10k-connection bench needs on runners whose default soft
+/// limit is 1024.
+pub fn raise_fd_limit() -> io::Result<FdLimit> {
+    let l = fd_limit()?;
+    if l.soft < l.hard {
+        let r = CRlimit { cur: l.hard, max: l.hard };
+        cvt(unsafe { setrlimit(RLIMIT_NOFILE, &r) })?;
+    }
+    fd_limit()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eventfd_signals_epoll_and_drains() {
+        let ep = Epoll::new().unwrap();
+        let ev = EventFd::new().unwrap();
+        ep.add(ev.raw(), 7, EPOLLIN).unwrap();
+        let mut buf = [EpollEvent { events: 0, data: 0 }; 8];
+
+        // Idle: nothing ready.
+        assert_eq!(ep.wait(&mut buf, 0).unwrap(), 0);
+
+        // Signaled: readable with our token.
+        ev.signal();
+        assert_eq!(ep.wait(&mut buf, 100).unwrap(), 1);
+        let tok = buf[0].data;
+        let flags = buf[0].events;
+        assert_eq!(tok, 7);
+        assert_ne!(flags & EPOLLIN, 0);
+
+        // Drained: quiet again (level-triggered, so this proves the
+        // counter actually reset).
+        ev.drain();
+        assert_eq!(ep.wait(&mut buf, 0).unwrap(), 0);
+
+        // Interest can be dropped and restored.
+        ev.signal();
+        ep.modify(ev.raw(), 7, 0).unwrap();
+        assert_eq!(ep.wait(&mut buf, 0).unwrap(), 0);
+        ep.modify(ev.raw(), 7, EPOLLIN).unwrap();
+        assert_eq!(ep.wait(&mut buf, 100).unwrap(), 1);
+        ep.delete(ev.raw()).unwrap();
+    }
+
+    #[test]
+    fn fd_limit_is_sane() {
+        let l = fd_limit().unwrap();
+        assert!(l.soft >= 8, "soft fd limit {} absurdly low", l.soft);
+        assert!(l.soft <= l.hard);
+    }
+}

@@ -1,0 +1,580 @@
+//! Length-prefixed binary wire protocol for socket ingress.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! | u32 len | u8 type | payload (len - 1 bytes) |
+//! ```
+//!
+//! `len` counts the type byte plus the payload, so a zero-length frame
+//! is malformed by construction. Frame types:
+//!
+//! | type | name     | payload |
+//! |------|----------|---------|
+//! | 1    | request  | `u32 corr`, `u8 model_len`, model (utf-8), `u8 kind` (0 = f32, 1 = i32), `u32 n`, `n` 4-byte elements |
+//! | 2    | response | `u32 corr`, `u8 status` ([`ShedReason`] wire code), `i32 pred`, `u32 latency_us`, `u32 batch_size`, `f64 energy`, `u32 device`, `u32 n_logits`, `n_logits` f32 |
+//!
+//! `corr` is a client-chosen correlation id echoed verbatim on the
+//! response, so clients may pipeline requests on one connection and
+//! match completions out of order. `status` is `0` for a served
+//! response and a [`ShedReason`] wire code for a typed shed — shed
+//! *status frames*, not closed connections, are how overload reads to
+//! a remote client.
+//!
+//! Every malformed input maps to a typed [`ProtoError`] (never a
+//! panic): the server counts it, closes that connection, and keeps
+//! serving the rest.
+
+use crate::coordinator::request::{InferResponse, ShedReason};
+use crate::data::Features;
+
+/// Hard cap on one frame's `len` field. Bounds per-connection decode
+/// memory: a malicious 4 GiB length prefix is rejected before any
+/// buffering happens.
+pub const MAX_FRAME: usize = 1 << 20;
+
+pub const FRAME_REQUEST: u8 = 1;
+pub const FRAME_RESPONSE: u8 = 2;
+
+/// Typed wire-protocol violation. Each variant is a distinct client
+/// bug; the server closes the offending connection and increments
+/// `protocol_errors`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProtoError {
+    /// Length prefix exceeds [`MAX_FRAME`].
+    Oversize { len: usize },
+    /// Length prefix of zero (no type byte).
+    EmptyFrame,
+    /// Type byte names no known frame.
+    UnknownFrameType(u8),
+    /// Response status byte names no [`ShedReason`].
+    UnknownStatus(u8),
+    /// Feature kind byte names no [`Features`] variant.
+    UnknownFeatureKind(u8),
+    /// Payload ended before its declared fields did.
+    Truncated,
+    /// Payload continued past its declared fields.
+    TrailingBytes,
+    /// Model name is not valid UTF-8.
+    BadModelName,
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Oversize { len } => {
+                write!(f, "frame length {len} exceeds {MAX_FRAME}")
+            }
+            ProtoError::EmptyFrame => write!(f, "zero-length frame"),
+            ProtoError::UnknownFrameType(t) => {
+                write!(f, "unknown frame type {t}")
+            }
+            ProtoError::UnknownStatus(s) => {
+                write!(f, "unknown shed status {s}")
+            }
+            ProtoError::UnknownFeatureKind(k) => {
+                write!(f, "unknown feature kind {k}")
+            }
+            ProtoError::Truncated => write!(f, "truncated frame payload"),
+            ProtoError::TrailingBytes => {
+                write!(f, "trailing bytes after frame payload")
+            }
+            ProtoError::BadModelName => {
+                write!(f, "model name is not utf-8")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// A decoded request frame.
+#[derive(Clone, Debug)]
+pub struct WireRequest {
+    pub corr: u32,
+    pub model: String,
+    pub x: Features,
+}
+
+/// A decoded response frame.
+#[derive(Clone, Debug)]
+pub struct WireResponse {
+    pub corr: u32,
+    /// `ShedReason::None` for a served response, the typed cause for a
+    /// shed-status frame.
+    pub status: ShedReason,
+    pub pred: i32,
+    pub latency_us: u32,
+    pub batch_size: u32,
+    pub energy: f64,
+    pub device: u32,
+    pub logits: Vec<f32>,
+}
+
+impl WireResponse {
+    /// Project a coordinator [`InferResponse`] onto the wire (the
+    /// typed `reason` becomes the status byte; latency saturates at
+    /// `u32::MAX` microseconds).
+    pub fn from_infer(corr: u32, r: &InferResponse) -> WireResponse {
+        WireResponse {
+            corr,
+            status: r.reason,
+            pred: r.pred,
+            latency_us: r.latency_us.min(u32::MAX as u64) as u32,
+            batch_size: r.batch_size.min(u32::MAX as usize) as u32,
+            energy: r.energy,
+            device: r.device,
+            logits: r.logits.clone(),
+        }
+    }
+}
+
+/// Any decoded frame.
+#[derive(Clone, Debug)]
+pub enum Frame {
+    Request(WireRequest),
+    Response(WireResponse),
+}
+
+fn frame(out: &mut Vec<u8>, ty: u8, body: impl FnOnce(&mut Vec<u8>)) {
+    let at = out.len();
+    out.extend_from_slice(&[0u8; 4]);
+    out.push(ty);
+    body(out);
+    let len = (out.len() - at - 4) as u32;
+    out[at..at + 4].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Append one request frame. Model names longer than 255 bytes are
+/// truncated (the length rides in one byte).
+pub fn encode_request(
+    out: &mut Vec<u8>,
+    corr: u32,
+    model: &str,
+    x: &Features,
+) {
+    frame(out, FRAME_REQUEST, |o| {
+        o.extend_from_slice(&corr.to_le_bytes());
+        let m = &model.as_bytes()[..model.len().min(255)];
+        o.push(m.len() as u8);
+        o.extend_from_slice(m);
+        match x {
+            Features::F32(v) => {
+                o.push(0);
+                o.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for e in v {
+                    o.extend_from_slice(&e.to_le_bytes());
+                }
+            }
+            Features::I32(v) => {
+                o.push(1);
+                o.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for e in v {
+                    o.extend_from_slice(&e.to_le_bytes());
+                }
+            }
+        }
+    });
+}
+
+/// Append one response frame.
+pub fn encode_response(out: &mut Vec<u8>, r: &WireResponse) {
+    frame(out, FRAME_RESPONSE, |o| {
+        o.extend_from_slice(&r.corr.to_le_bytes());
+        o.push(r.status.wire_code());
+        o.extend_from_slice(&r.pred.to_le_bytes());
+        o.extend_from_slice(&r.latency_us.to_le_bytes());
+        o.extend_from_slice(&r.batch_size.to_le_bytes());
+        o.extend_from_slice(&r.energy.to_bits().to_le_bytes());
+        o.extend_from_slice(&r.device.to_le_bytes());
+        o.extend_from_slice(&(r.logits.len() as u32).to_le_bytes());
+        for l in &r.logits {
+            o.extend_from_slice(&l.to_le_bytes());
+        }
+    });
+}
+
+/// Bounded cursor over one frame's payload.
+struct Rd<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.b.len() - self.i < n {
+            return Err(ProtoError::Truncated);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32, ProtoError> {
+        Ok(self.u32()? as i32)
+    }
+
+    fn f64(&mut self) -> Result<f64, ProtoError> {
+        let raw = u64::from_le_bytes(self.take(8)?.try_into().unwrap());
+        Ok(f64::from_bits(raw))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, ProtoError> {
+        let raw = self.take(n.checked_mul(4).ok_or(ProtoError::Truncated)?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn i32s(&mut self, n: usize) -> Result<Vec<i32>, ProtoError> {
+        let raw = self.take(n.checked_mul(4).ok_or(ProtoError::Truncated)?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn done(&self) -> Result<(), ProtoError> {
+        if self.i == self.b.len() {
+            Ok(())
+        } else {
+            Err(ProtoError::TrailingBytes)
+        }
+    }
+}
+
+fn parse_frame(p: &[u8]) -> Result<Frame, ProtoError> {
+    let mut rd = Rd { b: p, i: 1 };
+    match p[0] {
+        FRAME_REQUEST => {
+            let corr = rd.u32()?;
+            let mlen = rd.u8()? as usize;
+            let model = std::str::from_utf8(rd.take(mlen)?)
+                .map_err(|_| ProtoError::BadModelName)?
+                .to_string();
+            let kind = rd.u8()?;
+            let n = rd.u32()? as usize;
+            let x = match kind {
+                0 => Features::F32(rd.f32s(n)?),
+                1 => Features::I32(rd.i32s(n)?),
+                k => return Err(ProtoError::UnknownFeatureKind(k)),
+            };
+            rd.done()?;
+            Ok(Frame::Request(WireRequest { corr, model, x }))
+        }
+        FRAME_RESPONSE => {
+            let corr = rd.u32()?;
+            let code = rd.u8()?;
+            let status = ShedReason::from_wire(code)
+                .ok_or(ProtoError::UnknownStatus(code))?;
+            let pred = rd.i32()?;
+            let latency_us = rd.u32()?;
+            let batch_size = rd.u32()?;
+            let energy = rd.f64()?;
+            let device = rd.u32()?;
+            let n = rd.u32()? as usize;
+            let logits = rd.f32s(n)?;
+            rd.done()?;
+            Ok(Frame::Response(WireResponse {
+                corr,
+                status,
+                pred,
+                latency_us,
+                batch_size,
+                energy,
+                device,
+                logits,
+            }))
+        }
+        t => Err(ProtoError::UnknownFrameType(t)),
+    }
+}
+
+/// Incremental frame decoder: feed it raw socket bytes in whatever
+/// pieces `read` returns; it yields complete frames as they reassemble
+/// and reports any protocol violation as a typed error.
+#[derive(Default)]
+pub struct Decoder {
+    buf: Vec<u8>,
+    at: usize,
+}
+
+impl Decoder {
+    pub fn new() -> Decoder {
+        Decoder::default()
+    }
+
+    /// Buffer more bytes from the socket.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed by a complete frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.at
+    }
+
+    /// Pop the next complete frame. `Ok(None)` means more bytes are
+    /// needed; an `Err` poisons the stream (the caller closes the
+    /// connection, so no resynchronization is attempted).
+    pub fn next(&mut self) -> Result<Option<Frame>, ProtoError> {
+        // Reclaim consumed prefix lazily, so a long-lived connection
+        // does not grow its buffer without bound.
+        if self.at > 0 && (self.at == self.buf.len() || self.at >= 65_536) {
+            self.buf.drain(..self.at);
+            self.at = 0;
+        }
+        let avail = self.buf.len() - self.at;
+        if avail < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(
+            self.buf[self.at..self.at + 4].try_into().unwrap(),
+        ) as usize;
+        if len == 0 {
+            return Err(ProtoError::EmptyFrame);
+        }
+        if len > MAX_FRAME {
+            return Err(ProtoError::Oversize { len });
+        }
+        if avail < 4 + len {
+            return Ok(None);
+        }
+        let frame = parse_frame(&self.buf[self.at + 4..self.at + 4 + len]);
+        self.at += 4 + len;
+        frame.map(Some)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decode_all(bytes: &[u8]) -> Vec<Frame> {
+        let mut d = Decoder::new();
+        d.extend(bytes);
+        let mut out = Vec::new();
+        while let Some(f) = d.next().unwrap() {
+            out.push(f);
+        }
+        assert_eq!(d.buffered(), 0);
+        out
+    }
+
+    #[test]
+    fn request_roundtrips_both_feature_kinds() {
+        let mut bytes = Vec::new();
+        encode_request(
+            &mut bytes,
+            7,
+            "synth",
+            &Features::F32(vec![1.5, -2.0, 0.25]),
+        );
+        encode_request(&mut bytes, 8, "tok", &Features::I32(vec![3, -4]));
+        let frames = decode_all(&bytes);
+        assert_eq!(frames.len(), 2);
+        match &frames[0] {
+            Frame::Request(r) => {
+                assert_eq!(r.corr, 7);
+                assert_eq!(r.model, "synth");
+                match &r.x {
+                    Features::F32(v) => {
+                        assert_eq!(v, &[1.5, -2.0, 0.25])
+                    }
+                    Features::I32(_) => panic!("wrong feature kind"),
+                }
+            }
+            Frame::Response(_) => panic!("expected request"),
+        }
+        match &frames[1] {
+            Frame::Request(r) => {
+                assert_eq!(r.corr, 8);
+                match &r.x {
+                    Features::I32(v) => assert_eq!(v, &[3, -4]),
+                    Features::F32(_) => panic!("wrong feature kind"),
+                }
+            }
+            Frame::Response(_) => panic!("expected request"),
+        }
+    }
+
+    #[test]
+    fn response_roundtrips_every_status() {
+        for reason in ShedReason::ALL {
+            let resp = WireResponse {
+                corr: 42,
+                status: reason,
+                pred: -1,
+                latency_us: 1234,
+                batch_size: 8,
+                energy: 32_000.5,
+                device: 3,
+                logits: vec![0.1, 0.9],
+            };
+            let mut bytes = Vec::new();
+            encode_response(&mut bytes, &resp);
+            let frames = decode_all(&bytes);
+            assert_eq!(frames.len(), 1);
+            match &frames[0] {
+                Frame::Response(r) => {
+                    assert_eq!(r.corr, 42);
+                    assert_eq!(r.status, reason);
+                    assert_eq!(r.pred, -1);
+                    assert_eq!(r.latency_us, 1234);
+                    assert_eq!(r.batch_size, 8);
+                    assert_eq!(r.energy, 32_000.5);
+                    assert_eq!(r.device, 3);
+                    assert_eq!(r.logits, vec![0.1, 0.9]);
+                }
+                Frame::Request(_) => panic!("expected response"),
+            }
+        }
+    }
+
+    #[test]
+    fn split_reads_reassemble_byte_by_byte() {
+        let mut bytes = Vec::new();
+        encode_request(&mut bytes, 1, "m", &Features::F32(vec![1.0; 16]));
+        encode_request(&mut bytes, 2, "m", &Features::F32(vec![2.0; 16]));
+        let mut d = Decoder::new();
+        let mut got = Vec::new();
+        // Worst-case fragmentation: one byte per read.
+        for b in &bytes {
+            d.extend(&[*b]);
+            while let Some(f) = d.next().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got.len(), 2);
+        match &got[1] {
+            Frame::Request(r) => assert_eq!(r.corr, 2),
+            Frame::Response(_) => panic!("expected request"),
+        }
+    }
+
+    #[test]
+    fn from_infer_carries_the_typed_reason() {
+        let shed =
+            InferResponse::rejected_for(9, ShedReason::QueueHardLimit);
+        let w = WireResponse::from_infer(77, &shed);
+        assert_eq!(w.corr, 77);
+        assert_eq!(w.status, ShedReason::QueueHardLimit);
+        assert!(w.logits.is_empty());
+        let ok = InferResponse::from_logits(3, vec![0.2, 0.8], 150, 4, 9.0, 1);
+        let w = WireResponse::from_infer(78, &ok);
+        assert_eq!(w.status, ShedReason::None);
+        assert_eq!(w.pred, 1);
+        assert_eq!(w.latency_us, 150);
+    }
+
+    #[test]
+    fn malformed_frames_are_typed_errors() {
+        // Oversize length prefix: rejected before buffering the body.
+        let mut d = Decoder::new();
+        d.extend(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        assert_eq!(
+            d.next().unwrap_err(),
+            ProtoError::Oversize { len: MAX_FRAME + 1 }
+        );
+
+        // Zero-length frame.
+        let mut d = Decoder::new();
+        d.extend(&0u32.to_le_bytes());
+        assert_eq!(d.next().unwrap_err(), ProtoError::EmptyFrame);
+
+        // Unknown frame type.
+        let mut d = Decoder::new();
+        d.extend(&1u32.to_le_bytes());
+        d.extend(&[9]);
+        assert_eq!(d.next().unwrap_err(), ProtoError::UnknownFrameType(9));
+
+        // Truncated payload: type says request, body is empty.
+        let mut d = Decoder::new();
+        d.extend(&1u32.to_le_bytes());
+        d.extend(&[FRAME_REQUEST]);
+        assert_eq!(d.next().unwrap_err(), ProtoError::Truncated);
+
+        // Trailing bytes after a complete request body.
+        let mut good = Vec::new();
+        encode_request(&mut good, 1, "m", &Features::F32(vec![]));
+        let mut bad = good.clone();
+        bad.push(0xFF);
+        let len =
+            u32::from_le_bytes(bad[0..4].try_into().unwrap()) + 1;
+        bad[0..4].copy_from_slice(&len.to_le_bytes());
+        let mut d = Decoder::new();
+        d.extend(&bad);
+        assert_eq!(d.next().unwrap_err(), ProtoError::TrailingBytes);
+
+        // Unknown status byte in a response.
+        let mut resp = Vec::new();
+        encode_response(
+            &mut resp,
+            &WireResponse {
+                corr: 1,
+                status: ShedReason::None,
+                pred: 0,
+                latency_us: 0,
+                batch_size: 0,
+                energy: 0.0,
+                device: 0,
+                logits: vec![],
+            },
+        );
+        resp[9] = 200; // status byte: 4 len + 1 type + 4 corr
+        let mut d = Decoder::new();
+        d.extend(&resp);
+        assert_eq!(d.next().unwrap_err(), ProtoError::UnknownStatus(200));
+
+        // Unknown feature kind in a request.
+        let mut req = Vec::new();
+        encode_request(&mut req, 1, "m", &Features::F32(vec![]));
+        // kind byte: 4 len + 1 type + 4 corr + 1 mlen + 1 model byte.
+        req[11] = 7;
+        let mut d = Decoder::new();
+        d.extend(&req);
+        assert_eq!(d.next().unwrap_err(), ProtoError::UnknownFeatureKind(7));
+
+        // Bad UTF-8 model name.
+        let mut req = Vec::new();
+        encode_request(&mut req, 1, "mm", &Features::F32(vec![]));
+        req[10] = 0xFF; // first model byte
+        let mut d = Decoder::new();
+        d.extend(&req);
+        assert_eq!(d.next().unwrap_err(), ProtoError::BadModelName);
+    }
+
+    #[test]
+    fn long_model_names_truncate_to_one_length_byte() {
+        let name = "x".repeat(300);
+        let mut bytes = Vec::new();
+        encode_request(&mut bytes, 1, &name, &Features::F32(vec![]));
+        match &decode_all(&bytes)[0] {
+            Frame::Request(r) => assert_eq!(r.model.len(), 255),
+            Frame::Response(_) => panic!("expected request"),
+        }
+    }
+
+    #[test]
+    fn decoder_reclaims_consumed_prefix() {
+        let mut d = Decoder::new();
+        let mut bytes = Vec::new();
+        encode_request(&mut bytes, 1, "m", &Features::F32(vec![0.0; 64]));
+        for _ in 0..2_000 {
+            d.extend(&bytes);
+            assert!(d.next().unwrap().is_some());
+        }
+        // 2000 × ~280-byte frames passed through; the buffer must stay
+        // bounded by the compaction threshold, not grow to ~560 KB.
+        assert!(d.buf.capacity() < 300_000, "cap {}", d.buf.capacity());
+    }
+}

@@ -21,6 +21,7 @@ pub mod control;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod ingress;
 pub mod obs;
 pub mod ops;
 pub mod optim;

@@ -55,7 +55,7 @@ pub struct ObsSnapshot {
     /// Per-phase durations (us) from sampled request spans, indexed by
     /// [`Phase`] discriminant — fleet p99 decomposed by lifecycle
     /// phase.
-    pub phase_us: [HistSnapshot; 7],
+    pub phase_us: [HistSnapshot; 8],
     /// Per-sample aJ attributed to the digital execution plane.
     pub plane_digital_aj: HistSnapshot,
     /// Per-sample aJ attributed to the analog execution plane.
@@ -89,6 +89,33 @@ impl ObsSnapshot {
     }
 }
 
+/// Socket-ingress counters, carried on [`MetricsSnapshot`] when the
+/// snapshot came through a serving front-end (`None` from the bare
+/// `Coordinator::metrics_snapshot`, which has no socket layer — the
+/// front-end fills the field in from its event-loop state).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IngressCounters {
+    /// Connections accepted over the listener's lifetime.
+    pub accepted: u64,
+    /// Currently open connections.
+    pub active: u64,
+    /// Connections whose read interest is currently deregistered by
+    /// the admission backpressure coupling.
+    pub paused: u64,
+    /// Request frames fully decoded off sockets.
+    pub frames_in: u64,
+    /// Served response frames written back.
+    pub responses_out: u64,
+    /// Typed shed-status frames written back.
+    pub sheds_out: u64,
+    /// Connections closed on a typed protocol error.
+    pub protocol_errors: u64,
+    /// Bytes read from client sockets.
+    pub bytes_in: u64,
+    /// Bytes written to client sockets.
+    pub bytes_out: u64,
+}
+
 /// Everything `Coordinator::metrics_snapshot` captures.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
@@ -98,6 +125,8 @@ pub struct MetricsSnapshot {
     pub inflight: u64,
     /// Capture time, microseconds since the coordinator clock's epoch.
     pub t_us: u64,
+    /// Socket-ingress counters (`None` when serving in-process only).
+    pub ingress: Option<IngressCounters>,
 }
 
 fn hist_json(h: &HistSnapshot, scale: f64) -> Json {
@@ -338,6 +367,44 @@ impl MetricsSnapshot {
             "telemetry_dropped_reads".to_string(),
             Json::Num(s.obs.telemetry_dropped_reads as f64),
         );
+        m.insert(
+            "ingress".to_string(),
+            match &self.ingress {
+                None => Json::Null,
+                Some(i) => Json::Obj(BTreeMap::from([
+                    (
+                        "accepted".to_string(),
+                        Json::Num(i.accepted as f64),
+                    ),
+                    ("active".to_string(), Json::Num(i.active as f64)),
+                    ("paused".to_string(), Json::Num(i.paused as f64)),
+                    (
+                        "frames_in".to_string(),
+                        Json::Num(i.frames_in as f64),
+                    ),
+                    (
+                        "responses_out".to_string(),
+                        Json::Num(i.responses_out as f64),
+                    ),
+                    (
+                        "sheds_out".to_string(),
+                        Json::Num(i.sheds_out as f64),
+                    ),
+                    (
+                        "protocol_errors".to_string(),
+                        Json::Num(i.protocol_errors as f64),
+                    ),
+                    (
+                        "bytes_in".to_string(),
+                        Json::Num(i.bytes_in as f64),
+                    ),
+                    (
+                        "bytes_out".to_string(),
+                        Json::Num(i.bytes_out as f64),
+                    ),
+                ])),
+            },
+        );
         Json::Obj(m)
     }
 
@@ -540,6 +607,64 @@ impl MetricsSnapshot {
                 d.id, d.served
             );
         }
+        if let Some(i) = &self.ingress {
+            let mut ing = |name: &str, help: &str, ty: &str, v: u64| {
+                let _ =
+                    writeln!(out, "# HELP dynaprec_ingress_{name} {help}");
+                let _ = writeln!(out, "# TYPE dynaprec_ingress_{name} {ty}");
+                let _ = writeln!(out, "dynaprec_ingress_{name} {v}");
+            };
+            ing(
+                "accepted_total",
+                "Connections accepted over the listener lifetime",
+                "counter",
+                i.accepted,
+            );
+            ing("connections", "Open connections", "gauge", i.active);
+            ing(
+                "paused_connections",
+                "Connections with read interest deregistered by \
+                 admission backpressure",
+                "gauge",
+                i.paused,
+            );
+            ing(
+                "frames_in_total",
+                "Request frames decoded off sockets",
+                "counter",
+                i.frames_in,
+            );
+            ing(
+                "responses_out_total",
+                "Served response frames written back",
+                "counter",
+                i.responses_out,
+            );
+            ing(
+                "sheds_out_total",
+                "Typed shed-status frames written back",
+                "counter",
+                i.sheds_out,
+            );
+            ing(
+                "protocol_errors_total",
+                "Connections closed on a typed protocol error",
+                "counter",
+                i.protocol_errors,
+            );
+            ing(
+                "bytes_in_total",
+                "Bytes read from client sockets",
+                "counter",
+                i.bytes_in,
+            );
+            ing(
+                "bytes_out_total",
+                "Bytes written to client sockets",
+                "counter",
+                i.bytes_out,
+            );
+        }
         out
     }
 
@@ -620,10 +745,11 @@ pub fn stats_text(s: &ServerStats) -> String {
         let p99 = |p: Phase| s.obs.phase_us[p as usize].quantile(0.99);
         let _ = writeln!(
             out,
-            "phase p99 (us): admission={:.0} queue={:.0} \
+            "phase p99 (us): ingress={:.0} admission={:.0} queue={:.0} \
              assembly={:.0} dispatch={:.0} execute={:.0} decode={:.0} \
              respond={:.0}; plane aJ/sample p50: digital={:.0} \
              analog={:.0}; faults masked: {}",
+            p99(Phase::Ingress),
             p99(Phase::Admission),
             p99(Phase::Queue),
             p99(Phase::Assembly),
@@ -671,6 +797,7 @@ mod tests {
             fleet: FleetStats::default(),
             inflight: 2,
             t_us: 1_000_000,
+            ingress: None,
         }
     }
 
@@ -722,6 +849,7 @@ mod tests {
                 "energy_total",
                 "faults_masked",
                 "inflight",
+                "ingress",
                 "latency_us",
                 "out_err",
                 "phases",
@@ -757,6 +885,40 @@ mod tests {
         let spans = back.field("spans").unwrap();
         assert!(spans.str_field("digest").unwrap().starts_with("0x"));
         assert_eq!(spans.f64_field("events").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn ingress_counters_render_in_json_and_prometheus() {
+        let mut m = snapshot_with_data();
+        // Bare coordinator snapshots carry no socket layer.
+        assert_eq!(m.to_json().field("ingress").unwrap(), &Json::Null);
+        m.ingress = Some(IngressCounters {
+            accepted: 10,
+            active: 4,
+            paused: 1,
+            frames_in: 100,
+            responses_out: 90,
+            sheds_out: 10,
+            protocol_errors: 2,
+            bytes_in: 5_000,
+            bytes_out: 9_000,
+        });
+        let j = m.to_json();
+        let ing = j.field("ingress").unwrap();
+        assert_eq!(ing.f64_field("frames_in").unwrap(), 100.0);
+        assert_eq!(ing.f64_field("paused").unwrap(), 1.0);
+        // Conservation at the metrics level: every decoded frame is
+        // answered exactly once, served or typed-shed.
+        assert_eq!(
+            ing.f64_field("responses_out").unwrap()
+                + ing.f64_field("sheds_out").unwrap(),
+            ing.f64_field("frames_in").unwrap()
+        );
+        let p = m.to_prometheus();
+        assert!(p.contains("dynaprec_ingress_connections 4"));
+        assert!(p.contains("dynaprec_ingress_frames_in_total 100"));
+        assert!(p.contains("dynaprec_ingress_paused_connections 1"));
+        assert_prometheus_parses(&p);
     }
 
     #[test]

@@ -42,7 +42,7 @@ pub use alert::{
 };
 pub use histogram::{HistSnapshot, Histogram};
 pub use metrics::{
-    DeviceObsSnapshot, MetricsSnapshot, ObsSnapshot,
+    DeviceObsSnapshot, IngressCounters, MetricsSnapshot, ObsSnapshot,
 };
 pub use span::{Phase, RequestSpan, SpanConfig, SpanRecord, SpanRing};
 pub use trace::{DecisionTrace, TraceEvent, TraceKind};
@@ -84,7 +84,7 @@ pub struct ObsHub {
     pub batch_fill: Histogram,
     /// Per-phase durations (us) from completed sampled spans, indexed
     /// by [`Phase`] discriminant — the fleet p99 decomposition.
-    pub phase_us: [Histogram; 7],
+    pub phase_us: [Histogram; 8],
     /// Per-sample aJ attributed to the digital plane (sampled spans).
     pub plane_digital_aj: Histogram,
     /// Per-sample aJ attributed to the analog plane (sampled spans).

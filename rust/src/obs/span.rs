@@ -3,8 +3,9 @@
 //! PR 6's histograms answer *what* the latency tails are; spans answer
 //! *where* a sampled request spent its time and energy. Each sampled
 //! request carries a [`RequestSpan`] through the whole lifecycle
-//! (`admission -> queue -> batch-assembly -> dispatch -> kernel
-//! execute -> redundancy decode -> respond`), stamped at every phase
+//! (`ingress -> admission -> queue -> batch-assembly -> dispatch ->
+//! kernel execute -> redundancy decode -> respond`), stamped at every
+//! phase
 //! boundary with the coordinator's `ClockRef` — so under a
 //! `VirtualClock` every stamp, and therefore the whole exported trace,
 //! replays bit-identically. The execute phase additionally attributes
@@ -32,32 +33,37 @@ use crate::util::rng::{fnv1a_word, FNV_OFFSET};
 
 /// One phase of the request lifecycle, in causal order. Each phase's
 /// duration is the difference of two adjacent [`RequestSpan`] stamps,
-/// so the seven durations telescope: they sum *exactly* to the
+/// so the eight durations telescope: they sum *exactly* to the
 /// end-to-end span duration (no rounding, no double counting).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
 pub enum Phase {
+    /// Socket ingress: frame decoded on the event loop until the
+    /// coordinator `submit` entry. Zero-width for in-process callers
+    /// (they have no network leg).
+    Ingress = 0,
     /// Coordinator `submit`: admission-gate verdict and handoff to the
     /// dispatcher channel.
-    Admission = 0,
+    Admission = 1,
     /// Waiting in the dispatcher channel for the batcher to pick the
     /// request up.
-    Queue = 1,
+    Queue = 2,
     /// Sitting in a partial batch until size or deadline flushes it.
-    Assembly = 2,
+    Assembly = 3,
     /// Flushed batch in the fleet: device pick and worker queue.
-    Dispatch = 3,
+    Dispatch = 4,
     /// Backend kernel execution (digital + analog planes).
-    Execute = 4,
+    Execute = 5,
     /// Redundancy decode, classification and ledger accounting.
-    Decode = 5,
+    Decode = 6,
     /// Response channel send back to the caller.
-    Respond = 6,
+    Respond = 7,
 }
 
 impl Phase {
     /// Every phase, lifecycle order.
-    pub const ALL: [Phase; 7] = [
+    pub const ALL: [Phase; 8] = [
+        Phase::Ingress,
         Phase::Admission,
         Phase::Queue,
         Phase::Assembly,
@@ -69,6 +75,7 @@ impl Phase {
 
     pub fn label(&self) -> &'static str {
         match self {
+            Phase::Ingress => "ingress",
             Phase::Admission => "admission",
             Phase::Queue => "queue",
             Phase::Assembly => "assembly",
@@ -80,7 +87,7 @@ impl Phase {
     }
 }
 
-/// Per-request lifecycle record: eight nanosecond stamps (one per
+/// Per-request lifecycle record: nine nanosecond stamps (one per
 /// phase boundary) plus the execute phase's digital/analog plane
 /// attribution. Created at `submit` for sampled requests, stamped
 /// progressively as the request moves through the stack, finalized and
@@ -93,6 +100,10 @@ pub struct RequestSpan {
     pub model: u32,
     /// Fleet device id that executed the batch.
     pub device: u32,
+    /// Span start: the ingress event loop finished decoding the frame
+    /// (socket path), or equal to `t_submit` for in-process callers —
+    /// the `Ingress` phase is their zero-width network leg.
+    pub t_ingress: u64,
     /// `submit` entry (ns since the clock epoch).
     pub t_submit: u64,
     /// Admitted and handed to the dispatcher channel.
@@ -127,6 +138,7 @@ impl RequestSpan {
     /// The stamp that opens `phase`.
     fn start_of(&self, phase: Phase) -> u64 {
         match phase {
+            Phase::Ingress => self.t_ingress,
             Phase::Admission => self.t_submit,
             Phase::Queue => self.t_enqueue,
             Phase::Assembly => self.t_assemble,
@@ -140,6 +152,7 @@ impl RequestSpan {
     /// The stamp that closes `phase`.
     fn end_of(&self, phase: Phase) -> u64 {
         match phase {
+            Phase::Ingress => self.t_submit,
             Phase::Admission => self.t_enqueue,
             Phase::Queue => self.t_assemble,
             Phase::Assembly => self.t_dispatch,
@@ -157,10 +170,10 @@ impl RequestSpan {
     }
 
     /// End-to-end span duration in ns. Because adjacent phases share
-    /// their boundary stamp, this *equals* the sum of the seven
+    /// their boundary stamp, this *equals* the sum of the eight
     /// [`Self::phase_ns`] values exactly.
     pub fn total_ns(&self) -> u64 {
-        self.t_respond.saturating_sub(self.t_submit)
+        self.t_respond.saturating_sub(self.t_ingress)
     }
 
     /// Execute-phase ns attributed to the analog plane (the exact
@@ -220,9 +233,9 @@ pub struct SpanRecord {
     pub span: RequestSpan,
 }
 
-/// Packed span width: id, seq, ids word, eight stamps, digital_ns and
+/// Packed span width: id, seq, ids word, nine stamps, digital_ns and
 /// three f64 payloads.
-const WORDS: usize = 15;
+const WORDS: usize = 16;
 
 fn pack(r: &SpanRecord) -> [u64; WORDS] {
     let s = &r.span;
@@ -230,6 +243,7 @@ fn pack(r: &SpanRecord) -> [u64; WORDS] {
         s.id,
         r.seq,
         ((s.model as u64) << 32) | s.device as u64,
+        s.t_ingress,
         s.t_submit,
         s.t_enqueue,
         s.t_assemble,
@@ -252,18 +266,19 @@ fn unpack(w: &[u64; WORDS]) -> SpanRecord {
             id: w[0],
             model: (w[2] >> 32) as u32,
             device: w[2] as u32,
-            t_submit: w[3],
-            t_enqueue: w[4],
-            t_assemble: w[5],
-            t_dispatch: w[6],
-            t_execute: w[7],
-            t_kernel: w[8],
-            t_decode: w[9],
-            t_respond: w[10],
-            digital_ns: w[11],
-            digital_aj: f64::from_bits(w[12]),
-            analog_aj: f64::from_bits(w[13]),
-            k_total: f64::from_bits(w[14]),
+            t_ingress: w[3],
+            t_submit: w[4],
+            t_enqueue: w[5],
+            t_assemble: w[6],
+            t_dispatch: w[7],
+            t_execute: w[8],
+            t_kernel: w[9],
+            t_decode: w[10],
+            t_respond: w[11],
+            digital_ns: w[12],
+            digital_aj: f64::from_bits(w[13]),
+            analog_aj: f64::from_bits(w[14]),
+            k_total: f64::from_bits(w[15]),
         },
     }
 }
@@ -492,6 +507,7 @@ mod tests {
             id,
             model: 0,
             device: 1,
+            t_ingress: 400,
             t_submit: 1_000,
             t_enqueue: 1_000,
             t_assemble: 3_000,
@@ -512,6 +528,7 @@ mod tests {
         let s = span(7);
         let sum: u64 = Phase::ALL.iter().map(|&p| s.phase_ns(p)).sum();
         assert_eq!(sum, s.total_ns());
+        assert_eq!(s.phase_ns(Phase::Ingress), 600);
         assert_eq!(s.phase_ns(Phase::Queue), 2_000);
         assert_eq!(s.phase_ns(Phase::Execute), 40_000);
         assert_eq!(s.analog_ns(), 32_000);
@@ -573,9 +590,10 @@ mod tests {
             Json::Arr(v) => v.clone(),
             other => panic!("traceEvents not an array: {other:?}"),
         };
-        // Non-zero phases: queue, assembly, dispatch, execute — plus
-        // the two plane sub-spans (admission/decode/respond are 0 ns).
-        assert_eq!(events.len(), 6);
+        // Non-zero phases: ingress, queue, assembly, dispatch, execute
+        // — plus the two plane sub-spans (admission/decode/respond are
+        // 0 ns).
+        assert_eq!(events.len(), 7);
         let named = |n: &str| {
             events
                 .iter()

@@ -19,8 +19,47 @@
 //! measured output error came within the configured SLO (error-SLO
 //! convergence — scenarios assert "converged within T virtual
 //! seconds").
+//!
+//! Socket ingress adds a fourth, per-connection form of conservation:
+//! every request frame a client writes must come back as exactly one
+//! response frame — served or a typed shed status — once the stream
+//! drains. The load generator fills a [`ConnAccounting`] per
+//! connection and [`check_connection_conservation`] audits the set.
 
 use crate::coordinator::Coordinator;
+
+/// One connection's request/response ledger, as seen from the client
+/// side of the socket (filled by `ingress::loadgen`).
+#[derive(Clone, Debug, Default)]
+pub struct ConnAccounting {
+    /// Connection index within the load generator.
+    pub conn: usize,
+    /// Request frames fully written to the socket.
+    pub frames_sent: u64,
+    /// Served response frames received (`ShedReason::None` status).
+    pub responses: u64,
+    /// Typed shed-status frames received.
+    pub typed_sheds: u64,
+}
+
+/// Per-connection conservation over sockets: after a connection's
+/// stream drains, `responses + typed_sheds == frames_sent` — the wire
+/// never swallows a request or answers one twice. Returns one
+/// violation string per broken connection (empty = invariant holds).
+pub fn check_connection_conservation(
+    conns: &[ConnAccounting],
+) -> Vec<String> {
+    let mut violations = Vec::new();
+    for c in conns {
+        if c.responses + c.typed_sheds != c.frames_sent {
+            violations.push(format!(
+                "conn {}: responses {} + typed sheds {} != frames sent {}",
+                c.conn, c.responses, c.typed_sheds, c.frames_sent
+            ));
+        }
+    }
+    violations
+}
 
 /// What to check (derived by the scenario engine from the coordinator
 /// config it was handed).
@@ -112,5 +151,59 @@ impl InvariantChecker {
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connection_conservation_accepts_balanced_ledgers() {
+        let conns = vec![
+            ConnAccounting {
+                conn: 0,
+                frames_sent: 10,
+                responses: 7,
+                typed_sheds: 3,
+            },
+            ConnAccounting {
+                conn: 1,
+                frames_sent: 0,
+                responses: 0,
+                typed_sheds: 0,
+            },
+        ];
+        assert!(check_connection_conservation(&conns).is_empty());
+    }
+
+    #[test]
+    fn connection_conservation_flags_lost_and_duplicated_frames() {
+        let conns = vec![
+            // A swallowed request: one frame never answered.
+            ConnAccounting {
+                conn: 0,
+                frames_sent: 5,
+                responses: 4,
+                typed_sheds: 0,
+            },
+            // A double answer: more completions than frames.
+            ConnAccounting {
+                conn: 1,
+                frames_sent: 2,
+                responses: 2,
+                typed_sheds: 1,
+            },
+            ConnAccounting {
+                conn: 2,
+                frames_sent: 3,
+                responses: 3,
+                typed_sheds: 0,
+            },
+        ];
+        let v = check_connection_conservation(&conns);
+        assert_eq!(v.len(), 2);
+        assert!(v[0].contains("conn 0"), "{}", v[0]);
+        assert!(v[1].contains("conn 1"), "{}", v[1]);
     }
 }

@@ -35,7 +35,10 @@ pub mod traffic;
 pub use clock::{
     Clock, ClockRef, SlotId, VirtualClock, WaitOutcome, WallClock,
 };
-pub use invariants::{InvariantChecker, InvariantConfig};
+pub use invariants::{
+    check_connection_conservation, ConnAccounting, InvariantChecker,
+    InvariantConfig,
+};
 pub use scenario::{run_scenario, Scenario, SimEvent, SimReport};
 pub use traffic::{
     diurnal, heavy_tail, merge, multi_model, steady, TrafficSpec,

@@ -137,6 +137,7 @@ fn autotuner_degrades_under_overload_and_recovers() {
             queue_soft_limit: 500_000,
             queue_hard_limit: 1_000_000,
         },
+        ..Default::default()
     };
     let clock = Arc::new(VirtualClock::new());
     let cfg = CoordinatorConfig {

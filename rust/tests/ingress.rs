@@ -1,0 +1,516 @@
+//! Socket ingress integration tests — no artifacts required.
+//!
+//! These run real TCP clients against the epoll event loop in front of
+//! the real coordinator stack (native backend, synthetic bundle):
+//!
+//! - wire robustness: frames round-trip over a socket, split/partial
+//!   reads reassemble, malformed input yields a typed protocol error
+//!   and a closed connection — never a panic or a stuck worker;
+//! - backpressure ordering end-to-end: under a seeded heavy-tail burst
+//!   against a tiny fleet, reads are paused (kernel-buffered, not
+//!   process-buffered), precision degrades *before* the first shed
+//!   frame, and paused connections resume after the queue drains;
+//! - conservation over sockets: per connection,
+//!   `responses + typed_sheds == frames_sent`.
+//!
+//! Everything runs on the wall clock: ingress is real I/O, so these
+//! tests bound *ordering* and *conservation* (robust on a loaded
+//! runner), never absolute timing.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dynaprec::analog::{AveragingMode, DeviceModel, HardwareConfig};
+use dynaprec::backend::BackendKind;
+use dynaprec::control::{
+    AdmissionConfig, AutotunerConfig, ControlConfig,
+};
+use dynaprec::coordinator::scheduler::ModelPrecision;
+use dynaprec::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, EnergyPolicy,
+    PrecisionScheduler, ShedReason,
+};
+use dynaprec::data::Features;
+use dynaprec::ingress::{
+    run_load, wire, IngressConfig, IngressServer, LoadgenConfig,
+};
+use dynaprec::obs::TraceKind;
+use dynaprec::runtime::artifact::{ModelBundle, ModelMeta};
+use dynaprec::sim::{check_connection_conservation, heavy_tail, TrafficSpec};
+
+fn synthetic_bundle() -> ModelBundle {
+    ModelBundle::synthetic(ModelMeta::synthetic("synth", 8, 2, 4, 64, 250.0))
+}
+
+fn scheduler_with_policy() -> PrecisionScheduler {
+    let mut s = PrecisionScheduler::new();
+    s.set(
+        "synth",
+        ModelPrecision {
+            noise: "shot".into(),
+            policy: EnergyPolicy::PerLayer(vec![16.0, 16.0]),
+        },
+    );
+    s
+}
+
+fn hw(cycle_ns: f64) -> HardwareConfig {
+    HardwareConfig {
+        array_rows: 256,
+        array_cols: 256,
+        cycle_ns,
+        base_energy_aj: 1.0,
+        model: DeviceModel::Homodyne,
+    }
+}
+
+/// Fast serving stack (no simulated device time, no control plane) —
+/// for wire-level tests where timing is irrelevant.
+fn fast_stack() -> (Arc<Coordinator>, IngressServer) {
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: 8,
+            max_wait: Duration::from_millis(1),
+        },
+        hw: hw(100.0),
+        averaging: AveragingMode::Time,
+        backend: BackendKind::NativeAnalog { simulate_time: false },
+        ..Default::default()
+    };
+    let coord = Arc::new(
+        Coordinator::start(
+            vec![synthetic_bundle()],
+            scheduler_with_policy(),
+            cfg,
+        )
+        .unwrap(),
+    );
+    let ingress =
+        IngressServer::start(coord.clone(), IngressConfig::default())
+            .unwrap();
+    (coord, ingress)
+}
+
+/// Read exactly one frame off a blocking socket.
+fn read_frame(sock: &mut TcpStream) -> Option<wire::Frame> {
+    let mut dec = wire::Decoder::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        if let Some(f) = dec.next().unwrap() {
+            return Some(f);
+        }
+        match sock.read(&mut buf) {
+            Ok(0) => return None,
+            Ok(n) => dec.extend(&buf[..n]),
+            Err(_) => return None,
+        }
+    }
+}
+
+#[test]
+fn frames_roundtrip_over_socket_even_byte_by_byte() {
+    let (_coord, ingress) = fast_stack();
+    let mut sock = TcpStream::connect(ingress.local_addr()).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // Two pipelined requests, written in the most hostile
+    // fragmentation possible: one byte per write.
+    let mut bytes = Vec::new();
+    wire::encode_request(
+        &mut bytes,
+        101,
+        "synth",
+        &Features::F32(vec![0.25; 4]),
+    );
+    wire::encode_request(
+        &mut bytes,
+        102,
+        "synth",
+        &Features::F32(vec![0.75; 4]),
+    );
+    for b in &bytes {
+        sock.write_all(&[*b]).unwrap();
+    }
+
+    let mut corrs = Vec::new();
+    for _ in 0..2 {
+        match read_frame(&mut sock).expect("server closed early") {
+            wire::Frame::Response(r) => {
+                assert_eq!(r.status, ShedReason::None);
+                assert_eq!(r.logits.len(), 4, "native logits");
+                assert!(r.batch_size >= 1);
+                corrs.push(r.corr);
+            }
+            wire::Frame::Request(_) => panic!("server sent a request"),
+        }
+    }
+    corrs.sort_unstable();
+    assert_eq!(corrs, vec![101, 102], "correlation ids echo back");
+
+    let c = ingress.counters();
+    assert_eq!(c.frames_in, 2);
+    assert_eq!(c.responses_out, 2);
+    assert_eq!(c.sheds_out, 0);
+    assert_eq!(c.protocol_errors, 0);
+    assert!(c.bytes_in >= bytes.len() as u64);
+}
+
+#[test]
+fn malformed_frames_close_the_connection_and_nothing_else() {
+    let (_coord, ingress) = fast_stack();
+
+    // A zoo of malformed streams, each on its own connection: every
+    // one must close that connection (typed protocol error) without
+    // taking the server down.
+    let mut evil: Vec<Vec<u8>> = Vec::new();
+    // Oversize length prefix.
+    evil.push((wire::MAX_FRAME as u32 + 1).to_le_bytes().to_vec());
+    // Zero-length frame.
+    evil.push(0u32.to_le_bytes().to_vec());
+    // Unknown frame type.
+    let mut v = 1u32.to_le_bytes().to_vec();
+    v.push(0xEE);
+    evil.push(v);
+    // A response frame: clients must not send those.
+    let mut v = Vec::new();
+    wire::encode_response(
+        &mut v,
+        &wire::WireResponse {
+            corr: 1,
+            status: ShedReason::None,
+            pred: 0,
+            latency_us: 0,
+            batch_size: 0,
+            energy: 0.0,
+            device: 0,
+            logits: vec![],
+        },
+    );
+    evil.push(v);
+    // Internally truncated request: the frame arrives whole (len 3)
+    // but its body ends mid-field (corr needs 4 bytes).
+    let mut v = 3u32.to_le_bytes().to_vec();
+    v.push(1); // FRAME_REQUEST
+    v.extend_from_slice(&[0, 0]);
+    evil.push(v);
+
+    let n_evil = evil.len() as u64;
+    for bad in evil {
+        let mut sock =
+            TcpStream::connect(ingress.local_addr()).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        sock.write_all(&bad).unwrap();
+        // The server's only valid move is to close on us.
+        let mut buf = [0u8; 256];
+        let mut closed = false;
+        loop {
+            match sock.read(&mut buf) {
+                Ok(0) => {
+                    closed = true;
+                    break;
+                }
+                // Skip whatever is in flight; only the close matters.
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        assert!(closed, "connection must be closed, not left hanging");
+    }
+
+    // Wait for the counters to reflect every close.
+    let t0 = Instant::now();
+    while ingress.counters().protocol_errors < n_evil {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "protocol errors never counted: {:?}",
+            ingress.counters()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // And the server still serves a healthy client afterwards.
+    let mut sock = TcpStream::connect(ingress.local_addr()).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut bytes = Vec::new();
+    wire::encode_request(
+        &mut bytes,
+        7,
+        "synth",
+        &Features::F32(vec![0.0; 4]),
+    );
+    sock.write_all(&bytes).unwrap();
+    match read_frame(&mut sock).expect("healthy conn must be served") {
+        wire::Frame::Response(r) => {
+            assert_eq!(r.corr, 7);
+            assert_eq!(r.status, ShedReason::None);
+        }
+        wire::Frame::Request(_) => panic!("server sent a request"),
+    }
+    let c = ingress.counters();
+    assert_eq!(c.protocol_errors, n_evil);
+    assert_eq!(c.responses_out, 1);
+}
+
+#[test]
+fn unknown_model_sheds_with_a_typed_status_frame() {
+    let (_coord, ingress) = fast_stack();
+    let mut sock = TcpStream::connect(ingress.local_addr()).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut bytes = Vec::new();
+    wire::encode_request(
+        &mut bytes,
+        55,
+        "no-such-model",
+        &Features::F32(vec![0.0; 4]),
+    );
+    sock.write_all(&bytes).unwrap();
+    match read_frame(&mut sock).expect("shed must still answer") {
+        wire::Frame::Response(r) => {
+            assert_eq!(r.corr, 55);
+            assert_eq!(r.status, ShedReason::UnknownModel);
+            assert!(r.logits.is_empty());
+        }
+        wire::Frame::Request(_) => panic!("server sent a request"),
+    }
+    let c = ingress.counters();
+    assert_eq!(c.sheds_out, 1);
+    assert_eq!(c.responses_out, 0);
+    assert_eq!(c.protocol_errors, 0, "a shed is not a protocol error");
+}
+
+#[test]
+fn overload_degrades_pauses_reads_then_sheds_then_recovers() {
+    // Tiny fleet: one device at 4us/cycle, so a full-precision sample
+    // costs 128us of simulated device time. The soft queue limit is 4
+    // and the hard limit is unreachable, so the *only* shed cause
+    // available is PrecisionFloor — which by construction requires the
+    // autotuner to have stepped scale down to the floor first. The
+    // test then checks the ordering end-to-end over real sockets.
+    let control = ControlConfig {
+        enabled: true,
+        tick: Duration::from_millis(2),
+        telemetry_capacity: 512,
+        window: 32,
+        max_sample_age: Duration::from_millis(500),
+        autotuner: AutotunerConfig {
+            slo_p95_us: 2_000.0,
+            floor_scale: 0.25,
+            step_down: 0.5,
+            step_up: 1.2,
+            headroom: 0.5,
+            cooldown_ticks: 1,
+            min_batches: 2,
+            ..Default::default()
+        },
+        admission: AdmissionConfig {
+            queue_soft_limit: 4,
+            queue_hard_limit: 1_000_000,
+        },
+        ..Default::default()
+    };
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            batch_size: 8,
+            max_wait: Duration::from_millis(1),
+        },
+        hw: hw(4_000.0),
+        averaging: AveragingMode::Time,
+        seed: 7,
+        control,
+        backend: BackendKind::NativeAnalog { simulate_time: true },
+        ..Default::default()
+    };
+    let coord = Arc::new(
+        Coordinator::start(
+            vec![synthetic_bundle()],
+            scheduler_with_policy(),
+            cfg,
+        )
+        .unwrap(),
+    );
+    let ingress =
+        IngressServer::start(coord.clone(), IngressConfig::default())
+            .unwrap();
+    let addr = ingress.local_addr();
+
+    // An extra idle connection held open across the storm: it must
+    // still be served once the flood drains (reads resumed).
+    let mut idle = TcpStream::connect(addr).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+
+    // Seeded heavy-tail storm, replayed closed-loop as fast as the
+    // server completes (time_scale collapses the schedule).
+    let spec = TrafficSpec::new("synth", Duration::from_secs(5))
+        .with_seed(11);
+    let events = heavy_tail(
+        &spec,
+        400.0,
+        4_000.0,
+        Duration::from_millis(500),
+        1.3,
+    );
+    let total: u64 = events
+        .iter()
+        .map(|e| match e {
+            dynaprec::sim::SimEvent::Submit { n, .. } => *n as u64,
+            _ => 0,
+        })
+        .sum();
+    assert!(total > 1_500, "storm too small to trip the floor: {total}");
+
+    let loadgen = std::thread::spawn(move || {
+        run_load(
+            addr,
+            &events,
+            &LoadgenConfig {
+                conns: 8,
+                max_outstanding_per_conn: 64,
+                time_scale: 1e12,
+                feature_len: 4,
+                timeout: Duration::from_secs(120),
+            },
+        )
+        .unwrap()
+    });
+
+    // Backpressure must become *observable*: at some point during the
+    // storm, connections sit with read interest deregistered.
+    let t0 = Instant::now();
+    let mut saw_pause = false;
+    while t0.elapsed() < Duration::from_secs(60) {
+        if ingress.counters().paused > 0 {
+            saw_pause = true;
+            break;
+        }
+        if loadgen.is_finished() {
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(300));
+    }
+    let report = loadgen.join().unwrap();
+    assert!(
+        saw_pause,
+        "admission backpressure never paused a connection"
+    );
+    assert!(!report.timed_out, "storm failed to drain");
+
+    // Conservation over sockets: every frame sent came back exactly
+    // once — served or typed shed — per connection.
+    let violations = check_connection_conservation(&report.per_conn);
+    assert!(violations.is_empty(), "{violations:?}");
+    assert_eq!(report.served + report.shed, report.sent);
+
+    // Degrade-before-shed: sheds happened, every one was typed
+    // PrecisionFloor (never the hard limit), and the trace shows the
+    // first ShedStart strictly after a ScaleStep.
+    assert!(report.shed > 0, "storm never shed: {report:?}");
+    assert_eq!(
+        report.sheds_by_reason
+            [ShedReason::QueueHardLimit.wire_code() as usize],
+        0,
+        "hard limit must be unreachable here"
+    );
+    assert!(
+        report.sheds_by_reason
+            [ShedReason::PrecisionFloor.wire_code() as usize]
+            > 0
+    );
+    let trace = coord.trace();
+    let first_step = trace
+        .iter()
+        .filter(|e| e.kind == TraceKind::ScaleStep)
+        .map(|e| e.seq)
+        .min()
+        .expect("overload must step precision down");
+    let first_shed = trace
+        .iter()
+        .filter(|e| e.kind == TraceKind::ShedStart)
+        .map(|e| e.seq)
+        .min()
+        .expect("sheds must trace ShedStart");
+    assert!(
+        first_step < first_shed,
+        "precision must degrade (seq {first_step}) before the first \
+         shed (seq {first_shed})"
+    );
+
+    // After the drain, reads resume: the paused gauge returns to zero
+    // and the idle connection held through the storm is still served.
+    let t0 = Instant::now();
+    loop {
+        let c = ingress.counters();
+        if c.paused == 0 && coord.inflight() == 0 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "reads never resumed: {c:?}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let mut bytes = Vec::new();
+    wire::encode_request(
+        &mut bytes,
+        9_000,
+        "synth",
+        &Features::F32(vec![0.0; 4]),
+    );
+    idle.write_all(&bytes).unwrap();
+    match read_frame(&mut idle).expect("idle conn must resume") {
+        wire::Frame::Response(r) => {
+            assert_eq!(r.corr, 9_000);
+            assert!(
+                r.status == ShedReason::None
+                    || r.status == ShedReason::PrecisionFloor,
+                "unexpected status {:?}",
+                r.status
+            );
+        }
+        wire::Frame::Request(_) => panic!("server sent a request"),
+    }
+
+    // Server-side accounting agrees with the client ledger.
+    let c = ingress.counters();
+    assert_eq!(c.frames_in, c.responses_out + c.sheds_out);
+    assert_eq!(c.protocol_errors, 0);
+}
+
+#[test]
+fn loadgen_smoke_conserves_and_reports_metrics() {
+    let (coord, ingress) = fast_stack();
+    let spec = TrafficSpec::new("synth", Duration::from_secs(2))
+        .with_seed(3);
+    let events = dynaprec::sim::steady(&spec, 400.0);
+    let report = run_load(
+        ingress.local_addr(),
+        &events,
+        &LoadgenConfig {
+            conns: 4,
+            max_outstanding_per_conn: 8,
+            time_scale: 1e12,
+            feature_len: 4,
+            timeout: Duration::from_secs(60),
+        },
+    )
+    .unwrap();
+    assert!(!report.timed_out);
+    assert!(report.sent >= 700, "steady 400/s x 2s: {}", report.sent);
+    assert_eq!(report.served, report.sent, "no control plane, no sheds");
+    assert_eq!(report.shed, 0);
+    assert!(
+        check_connection_conservation(&report.per_conn).is_empty()
+    );
+    assert!(report.p50_us() > 0);
+    assert!(report.p99_us() >= report.p50_us());
+    assert!(report.energy_per_request_aj() > 0.0);
+
+    // The snapshot path carries the ingress counters.
+    let m = ingress.metrics_snapshot(&coord);
+    let ic = m.ingress.expect("listener stamps ingress counters");
+    assert_eq!(ic.frames_in, report.sent);
+    assert_eq!(ic.responses_out, report.sent);
+    let prom = m.to_prometheus();
+    assert!(prom.contains("dynaprec_ingress_frames_in_total"));
+}
